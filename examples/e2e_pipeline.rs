@@ -1,0 +1,128 @@
+//! END-TO-END DRIVER — the full system on a real workload.
+//!
+//! This is the repository's E2E validation (EXPERIMENTS.md §E2E): it
+//! exercises every layer together on the paper's Problem-3 scenario:
+//!
+//!   1. a producer thread streams edge batches (the RAPIDS-style online
+//!      setting) through the backpressured ingest channel;
+//!   2. the coordinator assembles the COO, reorders with parallel BOBA
+//!      (Algorithm 3), converts to CSR — all stages timed;
+//!   3. all four paper workloads (SpMV, PageRank, TC, SSSP) run on both
+//!      the random-labeled and BOBA-reordered graphs (native kernels);
+//!   4. PageRank additionally runs through the AOT PJRT artifacts (L2
+//!      jnp graph — the L1 Pallas variant is validated in pjrt_spmv),
+//!      proving the three-layer stack composes: Rust → PJRT → XLA-compiled
+//!      JAX/Pallas compute, Python absent at runtime;
+//!   5. prints the headline metric: end-to-end speedup including
+//!      reordering cost (paper: up to 3.45×, median ~2.35× for SpMV).
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_pipeline`
+//! (BOBA_SCALE=full for the paper-scale version.)
+
+use boba::convert;
+use boba::coordinator::datasets;
+use boba::coordinator::pipeline::{App, Pipeline, ReorderStage, StreamingIngest};
+use boba::reorder::{boba::Boba, Reorderer};
+use boba::runtime::{ell::EllPlan, Engine};
+use boba::util::timer::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    // ── workload: a PA-web-like graph, randomized labels ─────────────
+    // Sized so the dense working set exceeds LLC (the regime the paper
+    // targets; cache-resident graphs have nothing to gain from
+    // reordering). BOBA_SCALE=full doubles it again.
+    let dataset = datasets::by_name("pa_c8").unwrap();
+    let n = match datasets::Scale::from_env() {
+        datasets::Scale::Quick => 500_000,
+        datasets::Scale::Full => 2_000_000,
+    };
+    let raw = boba::graph::gen::preferential_attachment(n, 8, 42);
+    let graph = raw.randomized(7);
+    println!(
+        "workload: pa n={} m={} (stands in for {})",
+        graph.n(),
+        graph.m(),
+        dataset.stands_in_for,
+    );
+
+    // ── stage 0: streaming ingestion with backpressure ───────────────
+    let sw = Stopwatch::start();
+    let (producer, stream) = StreamingIngest::from_coo(graph.clone(), 1 << 15, 4);
+    let (assembled, batches) = stream.collect();
+    producer.join().ok();
+    println!("ingest: {batches} batches in {:.2} ms", sw.ms());
+    assert_eq!(assembled.m(), graph.m());
+
+    // ── stages 1–3 for each app, Random vs BOBA ──────────────────────
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    println!("\n{:<6} {:>12} {:>12} {:>9}  breakdown (BOBA)", "app", "rand ms", "boba ms", "speedup");
+    for app in App::all() {
+        let pipe = Pipeline::new(app);
+        let rand = pipe.run(&assembled, &ReorderStage::None);
+        let boba_run = pipe.run(&assembled, &ReorderStage::Scheme(Box::new(Boba::parallel())));
+        // Cross-scheme correctness: digests must agree (f32 reduction
+        // order differs under relabeling, hence the loose tolerance).
+        let tol = 1e-3 * rand.digest.abs().max(1.0);
+        assert!(
+            (rand.digest - boba_run.digest).abs() <= tol,
+            "{}: digest {} vs {}",
+            app.name(),
+            rand.digest,
+            boba_run.digest
+        );
+        let speedup = rand.total_ms() / boba_run.total_ms();
+        println!(
+            "{:<6} {:>12.2} {:>12.2} {:>8.2}x  [{}]",
+            app.name(),
+            rand.total_ms(),
+            boba_run.total_ms(),
+            speedup,
+            boba_run.stages.summary()
+        );
+        speedups.push((app.name().to_string(), speedup));
+    }
+
+    // ── the PJRT path: PageRank through the AOT artifacts ────────────
+    // Validation-sized (the tile-pass launch overhead of the CPU-PJRT
+    // engine at 500k vertices would dominate the example; pjrt perf is
+    // profiled separately in EXPERIMENTS.md §Perf).
+    println!("\nPJRT (AOT jax→HLO→xla) PageRank:");
+    let engine = Engine::load_default()?;
+    let small = boba::graph::gen::preferential_attachment(40_000, 6, 43).randomized(5);
+    let (_, reordered) = Boba::parallel().reorder_relabel(&small);
+    let csr = convert::coo_to_csr(&reordered);
+    let plan = EllPlan::pack_pagerank(&csr, engine.meta)?;
+    let pr_iters = 15;
+    let sw = Stopwatch::start();
+    let (ranks, iters) = engine.pagerank(&plan, csr.n(), 0.85, pr_iters, 0.0)?;
+    let pjrt_ms = sw.ms();
+    // Validate against the native kernel.
+    let native = boba::algos::pagerank::pagerank(
+        &csr,
+        boba::algos::pagerank::PrParams { max_iters: pr_iters, tol: 0.0, ..Default::default() },
+    );
+    let max_diff = ranks
+        .iter()
+        .zip(&native.ranks)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!(
+        "  {} tile passes/iter, {iters} iters in {pjrt_ms:.1} ms on {}, max |Δrank| vs native = {max_diff:.2e}",
+        plan.passes(),
+        engine.platform()
+    );
+    anyhow::ensure!(max_diff < 1e-4, "PJRT PageRank diverged from native");
+
+    // ── headline ─────────────────────────────────────────────────────
+    let best = speedups
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    println!(
+        "\nheadline: best end-to-end speedup (incl. reorder cost) = {:.2}x on {} \
+         (paper: up to 3.45x)",
+        best.1, best.0
+    );
+    println!("E2E OK — all layers composed, all digests matched.");
+    Ok(())
+}

@@ -1,0 +1,26 @@
+//! §Perf probe: two-stage (relabel → convert) vs fused relabel-convert.
+use boba::convert;
+use boba::graph::gen;
+use boba::reorder::{boba::Boba, Reorderer};
+use std::time::Instant;
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(8_000_000);
+    let g = gen::preferential_attachment(n, 8, 42).randomized(7);
+    let t = Instant::now();
+    let csr0 = convert::coo_to_csr(&g);
+    println!("rand convert:      {:.0} ms", t.elapsed().as_secs_f64()*1e3);
+    let t = Instant::now();
+    let p = Boba::parallel().reorder(&g);
+    println!("reorder (perm):    {:.0} ms", t.elapsed().as_secs_f64()*1e3);
+    let t = Instant::now();
+    let relab = g.relabeled(p.new_of_old());
+    println!("relabel:           {:.0} ms", t.elapsed().as_secs_f64()*1e3);
+    let t = Instant::now();
+    let csr1 = convert::coo_to_csr(&relab);
+    println!("convert (boba):    {:.0} ms", t.elapsed().as_secs_f64()*1e3);
+    let t = Instant::now();
+    let csr2 = convert::coo_to_csr_relabeled(&g, p.new_of_old());
+    println!("fused:             {:.0} ms", t.elapsed().as_secs_f64()*1e3);
+    assert_eq!(csr1, csr2);
+    std::hint::black_box((csr0, csr1, csr2));
+}

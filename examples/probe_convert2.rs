@@ -1,0 +1,45 @@
+//! §Perf probe: COO→CSR with prefetched histogram + scatter.
+use boba::graph::gen;
+use boba::graph::Csr;
+use std::time::Instant;
+
+fn convert_pf(coo: &boba::graph::Coo, dist: usize) -> Csr {
+    let n = coo.n();
+    let m = coo.m();
+    let src = &coo.src;
+    let mut row_ptr = vec![0u64; n + 1];
+    for e in 0..m {
+        if e + dist < m {
+            unsafe { core::arch::x86_64::_mm_prefetch(
+                row_ptr.as_ptr().add(src[e + dist] as usize + 1) as *const i8,
+                core::arch::x86_64::_MM_HINT_T0) };
+        }
+        row_ptr[src[e] as usize + 1] += 1;
+    }
+    for i in 0..n { row_ptr[i + 1] += row_ptr[i]; }
+    let mut cursor = row_ptr.clone();
+    let mut col_idx = vec![0u32; m];
+    for e in 0..m {
+        if e + dist < m {
+            unsafe { core::arch::x86_64::_mm_prefetch(
+                cursor.as_ptr().add(src[e + dist] as usize) as *const i8,
+                core::arch::x86_64::_MM_HINT_T0) };
+        }
+        let s = src[e] as usize;
+        let pos = cursor[s] as usize;
+        cursor[s] += 1;
+        col_idx[pos] = coo.dst[e];
+    }
+    Csr { row_ptr, col_idx, vals: None }
+}
+
+fn main() {
+    let g = gen::preferential_attachment(8_000_000, 8, 42).randomized(7);
+    let base = boba::convert::coo_to_csr(&g);
+    for dist in [0usize, 16, 32, 64] {
+        let t = Instant::now();
+        let c = if dist == 0 { boba::convert::coo_to_csr(&g) } else { convert_pf(&g, dist) };
+        println!("dist={dist:>3}: {:.0} ms", t.elapsed().as_secs_f64() * 1e3);
+        assert_eq!(c, base);
+    }
+}

@@ -1,0 +1,41 @@
+//! §Perf probe: SpMV gather with/without software prefetch.
+use boba::convert::coo_to_csr;
+use boba::graph::gen;
+use std::time::Instant;
+
+fn spmv_prefetch(csr: &boba::graph::Csr, x: &[f32], dist: usize) -> Vec<f32> {
+    let mut y = vec![0f32; csr.n()];
+    let cols = &csr.col_idx;
+    for v in 0..csr.n() {
+        let (lo, hi) = (csr.row_ptr[v] as usize, csr.row_ptr[v + 1] as usize);
+        let mut acc = 0f32;
+        for e in lo..hi {
+            let pf = e + dist;
+            if pf < cols.len() {
+                unsafe {
+                    #[cfg(target_arch = "x86_64")]
+                    core::arch::x86_64::_mm_prefetch(
+                        x.as_ptr().add(cols[pf] as usize) as *const i8,
+                        core::arch::x86_64::_MM_HINT_T0,
+                    );
+                }
+            }
+            acc += x[cols[e] as usize];
+        }
+        y[v] = acc;
+    }
+    y
+}
+
+fn main() {
+    let g = gen::preferential_attachment(8_000_000, 8, 42).randomized(7);
+    let csr = coo_to_csr(&g);
+    let x = vec![1.0f32; csr.n()];
+    let base = boba::algos::spmv::spmv_pull(&csr, &x);
+    for dist in [0usize, 8, 16, 32, 64] {
+        let t = Instant::now();
+        let y = if dist == 0 { boba::algos::spmv::spmv_pull(&csr, &x) } else { spmv_prefetch(&csr, &x, dist) };
+        println!("dist={dist:>3}: {:.0} ms", t.elapsed().as_secs_f64() * 1e3);
+        assert_eq!(y, base);
+    }
+}

@@ -1,0 +1,80 @@
+//! §Perf instrumentation harness: times each phase of parallel BOBA
+//! (records pass, rank compaction, relabel) separately, across thread
+//! counts. Used to drive the EXPERIMENTS.md §Perf iteration log.
+//!
+//! Run: `cargo run --release --example profile_boba`
+
+use boba::graph::gen::{self, GenParams};
+use boba::parallel::{self, atomic::AtomicU32Array, ThreadGuard};
+use boba::reorder::{boba::Boba, Reorderer};
+use std::time::Instant;
+
+fn time_ms(iters: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warm
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t.elapsed().as_secs_f64() * 1e3 / iters as f64
+}
+
+fn main() {
+    let g = gen::rmat(&GenParams::rmat(18, 16), 1).randomized(2);
+    let (n, m) = (g.n(), g.m());
+    println!("rmat18: n={n} m={m}");
+
+    // Phase 1: records pass (racy min over I++J).
+    let records_pass = || {
+        let records = AtomicU32Array::new(n, u32::MAX);
+        let chunk = parallel::default_chunk(2 * m);
+        let src = &g.src;
+        let dst = &g.dst;
+        parallel::par_for_chunks(2 * m, chunk, |lo, hi| {
+            let (i_lo, i_hi) = (lo.min(m), hi.min(m));
+            for i in i_lo..i_hi {
+                records.racy_min(src[i] as usize, i as u32);
+            }
+            for i in lo.max(m)..hi.max(m) {
+                records.racy_min(dst[i - m] as usize, i as u32);
+            }
+        });
+        records
+    };
+    println!(
+        "records pass:   {:.2} ms",
+        time_ms(10, || {
+            std::hint::black_box(records_pass());
+        })
+    );
+
+    // Phase 2: rank compaction (sort of (record, v) keys).
+    let records = records_pass().into_vec();
+    println!(
+        "rank compact:   {:.2} ms",
+        time_ms(10, || {
+            let mut keyed: Vec<u64> =
+                (0..n).map(|v| ((records[v] as u64) << 32) | v as u64).collect();
+            keyed.sort_unstable();
+            std::hint::black_box(keyed);
+        })
+    );
+
+    // Phase 3: relabel (2m gathers through the permutation).
+    let p = Boba::parallel().reorder(&g);
+    let perm = p.new_of_old().to_vec();
+    println!(
+        "relabel:        {:.2} ms",
+        time_ms(10, || {
+            std::hint::black_box(g.relabeled(&perm));
+        })
+    );
+
+    // Whole algorithm across threads.
+    for t in [1usize, 2, 4, 8, 16] {
+        let _guard = ThreadGuard::pin(t);
+        let ms = time_ms(10, || {
+            std::hint::black_box(Boba::parallel().reorder(&g));
+        });
+        println!("BOBA total (t={t:>2}): {ms:.2} ms");
+    }
+}

@@ -1,0 +1,124 @@
+//! Figure 2 reproduction: spy-plot visualizations of the adjacency
+//! matrix under five orderings — original, randomized, BOBA, RCM, Gorder.
+//!
+//! Writes one PGM image per (dataset, ordering) into `spy_plots/` plus a
+//! coarse ASCII rendering to stdout. As in the paper's Figure 2, BOBA's
+//! plot visibly restores the original structure on PA-generated graphs
+//! and keeps band structure on meshes, while the randomized plot is
+//! uniform noise.
+//!
+//! Run: `cargo run --release --example spy_plot`
+
+use boba::graph::{gen, Coo};
+use boba::metrics;
+use boba::reorder::{boba::Boba, gorder::Gorder, rcm::Rcm, Reorderer};
+use std::io::Write;
+use std::path::Path;
+
+const RES: usize = 256; // spy-plot resolution (RES × RES density bins)
+
+fn density(coo: &Coo) -> Vec<u32> {
+    let n = coo.n().max(1);
+    let mut bins = vec![0u32; RES * RES];
+    for (u, v) in coo.edges() {
+        let bu = (u as usize * RES) / n;
+        let bv = (v as usize * RES) / n;
+        bins[bu * RES + bv] += 1;
+    }
+    bins
+}
+
+fn write_pgm(bins: &[u32], path: &Path) -> std::io::Result<()> {
+    let max = *bins.iter().max().unwrap_or(&1) as f64;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "P2\n{RES} {RES}\n255")?;
+    for r in 0..RES {
+        let row: Vec<String> = (0..RES)
+            .map(|c| {
+                // log-scale density -> darkness (255 = empty, 0 = dense)
+                let v = bins[r * RES + c] as f64;
+                let shade = if v == 0.0 {
+                    255
+                } else {
+                    (255.0 * (1.0 - (1.0 + v).ln() / (1.0 + max).ln())) as u32
+                };
+                shade.to_string()
+            })
+            .collect();
+        writeln!(f, "{}", row.join(" "))?;
+    }
+    Ok(())
+}
+
+fn ascii(bins: &[u32]) -> String {
+    const W: usize = 48;
+    let max = *bins.iter().max().unwrap_or(&1) as f64;
+    let mut out = String::new();
+    for r in 0..W {
+        for c in 0..W {
+            // Downsample RES -> W.
+            let mut acc = 0u64;
+            for rr in r * RES / W..(r + 1) * RES / W {
+                for cc in c * RES / W..(c + 1) * RES / W {
+                    acc += bins[rr * RES + cc] as u64;
+                }
+            }
+            let shades = [' ', '.', ':', '+', '#', '@'];
+            let idx = if acc == 0 {
+                0
+            } else {
+                (((acc as f64).ln() / (max * 4.0 + 1.0).ln()) * 5.0).ceil().min(5.0) as usize
+            };
+            out.push(shades[idx]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    std::fs::create_dir_all("spy_plots")?;
+    let cases: Vec<(&str, Coo)> = vec![
+        // Fig 2a: simulated power-law graph.
+        ("pa", gen::preferential_attachment(8_000, 6, 3)),
+        // Fig 2c: regular uniform graph (delaunay-like mesh).
+        ("delaunay", gen::delaunay_mesh(90, 90, 3).symmetrized()),
+    ];
+    for (name, original) in cases {
+        let randomized = original.randomized(11);
+        let schemes: Vec<(&str, Coo)> = vec![
+            ("original", original.clone()),
+            ("random", randomized.clone()),
+            ("boba", {
+                let p = Boba::parallel().reorder(&randomized);
+                randomized.relabeled(p.new_of_old())
+            }),
+            ("rcm", {
+                let p = Rcm::new().reorder(&randomized);
+                randomized.relabeled(p.new_of_old())
+            }),
+            ("gorder", {
+                let p = Gorder::new(5).reorder(&randomized);
+                randomized.relabeled(p.new_of_old())
+            }),
+        ];
+        println!("=== {name} (n={} m={}) ===", original.n(), original.m());
+        for (scheme, graph) in &schemes {
+            let bins = density(graph);
+            let path = format!("spy_plots/{name}_{scheme}.pgm");
+            write_pgm(&bins, Path::new(&path))?;
+            println!(
+                "{scheme:>9}: NBR {:.3}, avg |p(u)-p(v)| {:>10.1}  -> {path}",
+                metrics::nbr_coo(graph),
+                metrics::avg_edge_distance(graph),
+            );
+        }
+        // ASCII for the most instructive pair, like the paper's side-by-side.
+        println!("\n{name}/random:");
+        println!("{}", ascii(&density(&schemes[1].1)));
+        println!("{name}/boba:");
+        println!("{}", ascii(&density(&schemes[2].1)));
+    }
+    println!("wrote spy_plots/*.pgm (viewable with any image tool)");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+"""AOT pipeline: lower the L2/L1 compute graphs to HLO text artifacts.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via ``make artifacts`` → ``python -m compile.aot --out-dir ../artifacts``.
+Emits:
+  spmv_ell.hlo.txt         — plain-jnp ELL SpMV          (N_TILE × K)
+  spmv_ell_pallas.hlo.txt  — Pallas-kernel ELL SpMV      (N_TILE × K)
+  pagerank_step.hlo.txt    — rank update + L1 delta      (N_TILE)
+  meta.json                — tile geometry the Rust runtime reads
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Tile geometry baked into the artifacts (PJRT executables have static
+# shapes). The Rust runtime pads/splits CSR matrices to these tiles.
+N_TILE = 8192  # rows per tile (multiple of the kernel's ROWS_TILE=512)
+K = 16         # ELL slots per pass
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(n_tile=N_TILE, k=K):
+    """Lower every artifact; returns {name: hlo_text}."""
+    cols = jax.ShapeDtypeStruct((n_tile, k), jnp.int32)
+    vals = jax.ShapeDtypeStruct((n_tile, k), jnp.float32)
+    x = jax.ShapeDtypeStruct((n_tile,), jnp.float32)
+    vec = jax.ShapeDtypeStruct((n_tile,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    out = {}
+    out["spmv_ell"] = to_hlo_text(jax.jit(model.spmv_ell).lower(cols, vals, x))
+    out["spmv_ell_pallas"] = to_hlo_text(
+        jax.jit(model.spmv_ell_pallas).lower(cols, vals, x)
+    )
+    out["pagerank_step"] = to_hlo_text(
+        jax.jit(model.pagerank_step).lower(vec, vec, scalar, scalar)
+    )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n-tile", type=int, default=N_TILE)
+    ap.add_argument("--k", type=int, default=K)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    artifacts = lower_all(args.n_tile, args.k)
+    for name, text in artifacts.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = {
+        "n_tile": args.n_tile,
+        "k": args.k,
+        "artifacts": sorted(artifacts),
+        "interchange": "hlo-text",
+        "jax": jax.__version__,
+    }
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this
+package must match its oracle bit-for-bit structure-wise (allclose for
+floats) across the pytest shape/dtype sweep in ``python/tests``.
+
+The compute is the paper's SpMV hot spot over a padded **ELL** layout:
+``cols[n, k]`` holds up to ``k`` neighbor/column IDs per row, ``vals`` the
+matching weights (0.0 in padding slots, whose col id is 0 by convention —
+the zero weight annihilates the bogus gather). The gather ``x[cols]`` is
+the paper's cache-critical access (Algorithm 1 line 4).
+"""
+
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(cols, vals, x):
+    """Reference ELL SpMV: y[i] = sum_j vals[i, j] * x[cols[i, j]].
+
+    Args:
+      cols: int32[n, k] column indices (padding slots must carry val 0).
+      vals: f32[n, k] weights.
+      x: f32[m] dense input vector (m = number of columns).
+
+    Returns:
+      f32[n] output vector.
+    """
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def pagerank_step_ref(y, damping, base):
+    """Reference PageRank update: rank' = base + damping * y.
+
+    ``y`` is the pull-SpMV of the weighted graph against the current rank
+    vector; ``base`` folds the teleport term and dangling mass (computed
+    by the L3 coordinator, which owns graph-global scalars).
+    """
+    return base + damping * y
+
+
+def degree_ref(cols, vals):
+    """Reference row-degree: counts non-padding slots (val != 0)."""
+    return jnp.sum((vals != 0.0).astype(jnp.int32), axis=1)

@@ -1,0 +1,79 @@
+"""L1 — the Pallas SpMV-ELL kernel (the paper's compute hot spot).
+
+Hardware adaptation (DESIGN.md §3): the paper's CUDA concern is
+*coalescing* the gather ``x[cols]`` — one warp reads one row's neighbor
+values, and BOBA's reordering makes those reads land in few cache lines.
+On TPU the analogous resource is VMEM block granularity: the kernel tiles
+rows into ``(ROWS_TILE, k)`` VMEM blocks (cols + vals) while keeping the
+dense vector ``x`` VMEM-resident, so one block fetch per neighborhood is
+the TPU translation of "one cache line per neighborhood" — exactly the
+NBR objective the paper optimizes.
+
+The kernel MUST run with ``interpret=True``: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Numerics are
+validated against ``ref.spmv_ell_ref`` by ``python/tests/test_kernel.py``;
+TPU performance is *estimated* analytically in DESIGN.md §8 (interpret
+mode's wallclock is CPU-numpy and meaningless as a TPU proxy).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-tile height. 512 rows × 32 slots × 4 B ≈ 64 KiB per operand
+# block — comfortably inside a TPU core's ~16 MiB VMEM alongside x.
+ROWS_TILE = 512
+
+
+def _spmv_ell_kernel(cols_ref, vals_ref, x_ref, y_ref):
+    """One row-tile: gather + rowwise reduce.
+
+    cols_ref: int32[R, k] VMEM block of column ids.
+    vals_ref: f32[R, k] matching weights (0 in padding).
+    x_ref:    f32[m] the full dense vector (VMEM-resident).
+    y_ref:    f32[R] output block.
+    """
+    cols = cols_ref[...]
+    vals = vals_ref[...]
+    x = x_ref[...]
+    # The gather the whole paper is about. On TPU this lowers to a VMEM
+    # dynamic-gather; its locality (VMEM bank conflicts / HBM refills for
+    # bigger-than-VMEM x) is what BOBA's label clustering improves.
+    gathered = jnp.take(x, cols, axis=None, mode="clip")
+    y_ref[...] = jnp.sum(vals * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("rows_tile",))
+def spmv_ell(cols, vals, x, rows_tile=ROWS_TILE):
+    """Pallas ELL SpMV: y[i] = Σ_j vals[i,j] · x[cols[i,j]].
+
+    Shapes: cols int32[n, k], vals f32[n, k], x f32[m] → f32[n].
+    ``n`` must be a multiple of ``rows_tile`` (the AOT wrapper pads).
+    """
+    n, k = cols.shape
+    assert vals.shape == (n, k), (vals.shape, (n, k))
+    assert n % rows_tile == 0, f"n={n} not a multiple of rows_tile={rows_tile}"
+    grid = (n // rows_tile,)
+    return pl.pallas_call(
+        _spmv_ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((rows_tile, k), lambda i: (i, 0)),
+            pl.BlockSpec(x.shape, lambda i: (0,)),  # x resident per step
+        ],
+        out_specs=pl.BlockSpec((rows_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(cols, vals, x)
+
+
+def vmem_footprint_bytes(rows_tile, k, m):
+    """Analytic VMEM footprint of one grid step (DESIGN.md §8).
+
+    cols + vals blocks, the resident x, and the y block. Used by the
+    docs/benches to report the TPU estimate; no runtime effect.
+    """
+    return rows_tile * k * 4 * 2 + m * 4 + rows_tile * 4

@@ -1,0 +1,48 @@
+"""L2 — JAX compute graphs for the AOT artifacts.
+
+Build-time only: these functions are lowered once by ``aot.py`` into HLO
+text that the Rust runtime (``rust/src/runtime``) loads through PJRT.
+Python never runs at request time.
+
+Two SpMV variants are exported — the plain jnp formulation and the
+Pallas-kernel formulation (L1) — lowered to *separate artifacts* so the
+Rust side can A/B them (they must agree numerically; the runtime tests
+assert it), plus the PageRank update step.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.spmv_ell import spmv_ell as spmv_ell_pallas_kernel
+
+
+def spmv_ell(cols, vals, x):
+    """Plain-jnp ELL SpMV (the L2 graph without the Pallas kernel)."""
+    return (ref.spmv_ell_ref(cols, vals, x),)
+
+
+def spmv_ell_pallas(cols, vals, x):
+    """ELL SpMV through the L1 Pallas kernel (interpret-mode lowering)."""
+    return (spmv_ell_pallas_kernel(cols, vals, x),)
+
+
+def pagerank_step(y, rank_old, damping, base):
+    """One PageRank update on a padded tile.
+
+    rank' = base + damping · y ; also emits the L1 delta Σ|rank' - rank_old|
+    so the Rust loop can test convergence without a second pass.
+    """
+    rank_new = base + damping * y
+    delta = jnp.sum(jnp.abs(rank_new - rank_old))
+    return (rank_new, delta)
+
+
+def degree_count(cols, vals):
+    """Row degrees of an ELL tile (non-padding slot count).
+
+    Exported to let the runtime cross-check tile packing; also the
+    paper's remark "its runtime is comparable to that of computing
+    degrees" gets an artifact-level analogue.
+    """
+    del cols  # degree is defined by the padding convention on vals
+    return (ref.degree_ref(jnp.zeros_like(vals, dtype=jnp.int32), vals),)

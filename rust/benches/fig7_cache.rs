@@ -1,0 +1,18 @@
+//! Bench target regenerating the paper's **Figure 7** (L1/L2 hit rates
+//! and DRAM-served fraction per application × scheme, via the
+//! trace-driven cache simulator standing in for nvprof).
+//!
+//! Run: `cargo bench --bench fig7_cache`
+
+use boba::coordinator::experiments;
+
+fn main() {
+    let seed = std::env::var("BOBA_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42);
+    let t = experiments::fig7(seed);
+    println!("{}", t.render());
+    println!(
+        "paper shape check: BOBA's hit rates track the heavyweight schemes\n\
+         (not the lightweight ones) on every application; TC shows the highest\n\
+         L1 rates (high data reuse), SSSP the least improvement."
+    );
+}

@@ -1,0 +1,43 @@
+//! Micro-benchmarks of the COO→CSR conversion stage — the pipeline cost
+//! the paper's Problem 3 centres on — under each labeling, plus the
+//! sequential/parallel converter ablation and the PJRT ELL pack/pass
+//! counts.
+//!
+//! Run: `cargo bench --bench micro_convert`
+
+use boba::bench::{Bench, Report};
+use boba::convert;
+use boba::graph::gen::{self, GenParams};
+use boba::reorder::{boba::Boba, Reorderer};
+
+fn main() {
+    let mut report = Report::new("micro: COO→CSR conversion");
+    let b = Bench::default();
+
+    let g = gen::rmat(&GenParams::rmat(18, 16), 42).randomized(7);
+    let m = g.m() as u64;
+    let perm = Boba::parallel().reorder(&g);
+    let boba_g = g.relabeled(perm.new_of_old());
+
+    report.push(b.run_with_items("rmat18/random/seq", m, || convert::coo_to_csr(&g)));
+    report.push(b.run_with_items("rmat18/BOBA/seq", m, || convert::coo_to_csr(&boba_g)));
+    report.push(b.run_with_items("rmat18/random/par", m, || convert::coo_to_csr_parallel(&g)));
+    report.push(b.run_with_items("rmat18/BOBA/par", m, || convert::coo_to_csr_parallel(&boba_g)));
+
+    // The sort stage TC charges (paper: ~10x the conversion cost).
+    report.push(b.run_with_items("rmat18/random/sort", m, || convert::sort_coo_by_src(&g)));
+    report.push(b.run_with_items("rmat18/BOBA/sort", m, || convert::sort_coo_by_src(&boba_g)));
+
+    report.print();
+
+    // ELL pack pass counts (runtime launch cost proxy; no PJRT needed).
+    let meta = boba::runtime::Meta { n_tile: 8192, k: 16 };
+    let plan_r = boba::runtime::ell::EllPlan::pack(&convert::coo_to_csr(&g), meta).unwrap();
+    let plan_b = boba::runtime::ell::EllPlan::pack(&convert::coo_to_csr(&boba_g), meta).unwrap();
+    println!(
+        "ELL tile passes (8192x16): random={} BOBA={} ({}% fewer launches)",
+        plan_r.passes(),
+        plan_b.passes(),
+        (100.0 * (1.0 - plan_b.passes() as f64 / plan_r.passes() as f64)) as i32
+    );
+}

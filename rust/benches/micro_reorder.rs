@@ -1,0 +1,57 @@
+//! Micro-benchmarks of the reordering algorithms themselves (the §5.4
+//! "Reordering time" comparison, plus BOBA-variant ablations: sequential
+//! vs racy-parallel vs atomic-parallel, and thread scaling).
+//!
+//! Run: `cargo bench --bench micro_reorder`
+
+use boba::bench::{Bench, Report};
+use boba::coordinator::datasets;
+use boba::graph::gen::{self, GenParams};
+use boba::parallel::ThreadGuard;
+use boba::reorder::{
+    boba::Boba, degree::DegreeSort, gorder::Gorder, hub::HubSort, rcm::Rcm, Reorderer,
+};
+
+fn main() {
+    let seed = 42;
+    let mut report = Report::new("micro: reordering algorithms");
+    let b = Bench::default();
+
+    // §5.4-style lineup on one scale-free and one uniform dataset.
+    for name in ["pa_c8", "delaunay_s"] {
+        let g = datasets::by_name(name).unwrap().build(seed).randomized(seed + 1);
+        let m = g.m() as u64;
+        let light: Vec<Box<dyn Reorderer>> = vec![
+            Box::new(Boba::sequential()),
+            Box::new(Boba::parallel()),
+            Box::new(Boba::parallel_atomic()),
+            Box::new(HubSort::new()),
+            Box::new(DegreeSort::new()),
+        ];
+        for s in light {
+            report.push(b.run_with_items(&format!("{name}/{}", s.name()), m, || s.reorder(&g)));
+        }
+        if boba::coordinator::experiments::include_heavy() {
+            let heavy: Vec<Box<dyn Reorderer>> =
+                vec![Box::new(Rcm::new()), Box::new(Gorder::new(5))];
+            let once = Bench::once();
+            for s in heavy {
+                report.push(once.run_with_items(&format!("{name}/{}", s.name()), m, || {
+                    s.reorder(&g)
+                }));
+            }
+        }
+    }
+
+    // Thread scaling of parallel BOBA (the paper's "highly parallelizable"
+    // claim, measured).
+    let g = gen::rmat(&GenParams::rmat(18, 16), seed).randomized(1);
+    let m = g.m() as u64;
+    for t in [1usize, 2, 4, 8, 16] {
+        let _guard = ThreadGuard::pin(t);
+        let s = Boba::parallel();
+        report.push(b.run_with_items(&format!("rmat18/BOBA/threads={t}"), m, || s.reorder(&g)));
+    }
+
+    report.print();
+}

@@ -1,0 +1,18 @@
+//! Bench target regenerating the paper's **Table 1** (NBR spatial-
+//! locality metric over CSR for every dataset × reordering scheme).
+//!
+//! Run: `cargo bench --bench table1_nbr`
+//! Env: BOBA_SCALE=quick|full, BOBA_HEAVY=0 to skip Gorder/RCM,
+//!      BOBA_SEED to change the seed.
+
+use boba::coordinator::experiments;
+
+fn main() {
+    let seed = std::env::var("BOBA_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42);
+    let t = experiments::table1(seed);
+    println!("{}", t.render());
+    println!(
+        "paper shape check: Gorder best, BOBA ≈ RCM and ≪ random on uniform graphs,\n\
+         Hub/Degree ≈ random on road-like datasets (cf. paper Table 1)."
+    );
+}

@@ -1,0 +1,20 @@
+//! The paper's four evaluation workloads (§5.1): SpMV, PageRank, triangle
+//! counting, and SSSP — "each featuring a different type of graph
+//! traversal".
+//!
+//! Every kernel comes in two flavours:
+//! * a plain, fast version used by the timing experiments (Fig. 4/5/6,
+//!   Table 3);
+//! * a `*_traced` version that reports every data-dependent memory read
+//!   to a [`trace::Tracer`] — the cache simulator implements `Tracer`, and
+//!   that pairing reproduces the paper's Fig. 7 profiler numbers (we trace
+//!   reads only, matching the paper: "We only measure the hit rates for
+//!   the read operations").
+
+pub mod trace;
+pub mod spmv;
+pub mod pagerank;
+pub mod tc;
+pub mod sssp;
+
+pub use trace::{NoTrace, Tracer};

@@ -1,0 +1,273 @@
+//! PageRank — the paper's iterate-until-convergence workload. Matches the
+//! paper's GPU formulation (§5.1): push-based, "each edge's source
+//! propagates its weight to its neighbor vertices" — the cache-critical
+//! access is the scatter into `rank_next[dst]`, which clusters iff
+//! destination labels cluster.
+
+use super::trace::{Region, Tracer};
+use crate::graph::Csr;
+use crate::parallel::{self, SendPtr};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// PageRank parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct PrParams {
+    /// Damping factor (0.85 standard).
+    pub damping: f32,
+    /// Maximum iterations.
+    pub max_iters: usize,
+    /// L1 convergence tolerance.
+    pub tol: f32,
+}
+
+impl Default for PrParams {
+    fn default() -> Self {
+        Self { damping: 0.85, max_iters: 100, tol: 1e-6 }
+    }
+}
+
+/// Result: ranks and the iteration count actually run.
+#[derive(Clone, Debug)]
+pub struct PrResult {
+    /// Final rank vector (sums to ~1).
+    pub ranks: Vec<f32>,
+    /// Iterations executed.
+    pub iters: usize,
+}
+
+/// Sequential push-based PageRank.
+pub fn pagerank(csr: &Csr, p: PrParams) -> PrResult {
+    let n = csr.n();
+    let mut rank = vec![1.0f32 / n as f32; n];
+    let mut next = vec![0f32; n];
+    let mut iters = 0;
+    for _ in 0..p.max_iters {
+        iters += 1;
+        next.fill(0.0);
+        let mut dangling = 0f32;
+        for v in 0..n {
+            let deg = csr.degree(v);
+            if deg == 0 {
+                dangling += rank[v];
+                continue;
+            }
+            let share = rank[v] / deg as f32;
+            for &u in csr.neighbors(v) {
+                next[u as usize] += share;
+            }
+        }
+        let base = (1.0 - p.damping) / n as f32 + p.damping * dangling / n as f32;
+        let mut delta = 0f32;
+        for v in 0..n {
+            let nv = base + p.damping * next[v];
+            delta += (nv - rank[v]).abs();
+            rank[v] = nv;
+        }
+        if delta < p.tol {
+            break;
+        }
+    }
+    PrResult { ranks: rank, iters }
+}
+
+/// Parallel push-based PageRank with atomic f32 accumulation (CAS loop on
+/// `AtomicU32` bits — the CPU analogue of the paper's GPU `atomicAdd`).
+pub fn pagerank_parallel(csr: &Csr, p: PrParams) -> PrResult {
+    let n = csr.n();
+    if n < 1 << 14 {
+        return pagerank(csr, p);
+    }
+    let mut rank = vec![1.0f32 / n as f32; n];
+    let next: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+    let mut iters = 0;
+    let chunk = parallel::default_chunk(n);
+    for _ in 0..p.max_iters {
+        iters += 1;
+        for a in &next {
+            a.store(0, Ordering::Relaxed);
+        }
+        let rank_ref = &rank;
+        let dangling = parallel::par_reduce(
+            n,
+            chunk,
+            0f64,
+            |acc, lo, hi| {
+                let mut d = acc;
+                for v in lo..hi {
+                    let deg = csr.degree(v);
+                    if deg == 0 {
+                        d += rank_ref[v] as f64;
+                        continue;
+                    }
+                    let share = rank_ref[v] / deg as f32;
+                    for &u in csr.neighbors(v) {
+                        atomic_add_f32(&next[u as usize], share);
+                    }
+                }
+                d
+            },
+            |a, b| a + b,
+        ) as f32;
+        let base = (1.0 - p.damping) / n as f32 + p.damping * dangling / n as f32;
+        // Update + delta reduction.
+        let rank_ptr = SendPtr(rank.as_mut_ptr());
+        let delta = parallel::par_reduce(
+            n,
+            chunk,
+            0f64,
+            |acc, lo, hi| {
+                let mut d = acc;
+                for v in lo..hi {
+                    let nv = base + p.damping * f32::from_bits(next[v].load(Ordering::Relaxed));
+                    // SAFETY: disjoint chunks.
+                    unsafe {
+                        let slot = rank_ptr.get().add(v);
+                        d += (nv - *slot).abs() as f64;
+                        *slot = nv;
+                    }
+                }
+                d
+            },
+            |a, b| a + b,
+        );
+        if (delta as f32) < p.tol {
+            break;
+        }
+    }
+    PrResult { ranks: rank, iters }
+}
+
+#[inline]
+fn atomic_add_f32(cell: &AtomicU32, v: f32) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let newv = (f32::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, newv, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// Traced sequential PageRank (one traced power iteration is
+/// representative; Fig. 7 traces `iters` of them). Reads: `rank[v]`
+/// (stream), `row_ptr`, `col_idx` (stream), and the scatter target
+/// `next[dst]` — counted as a read because the += is a read-modify-write.
+pub fn pagerank_traced<T: Tracer>(csr: &Csr, p: PrParams, iters: usize, tracer: &mut T) -> PrResult {
+    let n = csr.n();
+    let mut rank = vec![1.0f32 / n as f32; n];
+    let mut next = vec![0f32; n];
+    let mut done = 0;
+    for _ in 0..iters.min(p.max_iters) {
+        done += 1;
+        next.fill(0.0);
+        let mut dangling = 0f32;
+        for v in 0..n {
+            tracer.read4(Region::VectorX, v);
+            tracer.read8(Region::RowPtr, v);
+            tracer.read8(Region::RowPtr, v + 1);
+            let deg = csr.degree(v);
+            if deg == 0 {
+                dangling += rank[v];
+                continue;
+            }
+            let share = rank[v] / deg as f32;
+            let (lo, hi) = (csr.row_ptr[v] as usize, csr.row_ptr[v + 1] as usize);
+            for e in lo..hi {
+                tracer.read4(Region::ColIdx, e);
+                let u = csr.col_idx[e] as usize;
+                tracer.read4(Region::VectorY, u);
+                next[u] += share;
+            }
+        }
+        let base = (1.0 - p.damping) / n as f32 + p.damping * dangling / n as f32;
+        for v in 0..n {
+            rank[v] = base + p.damping * next[v];
+        }
+    }
+    PrResult { ranks: rank, iters: done }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convert::coo_to_csr;
+    use crate::graph::gen::{self, GenParams};
+    use crate::graph::Coo;
+
+    #[test]
+    fn ranks_sum_to_one() {
+        let g = gen::preferential_attachment(500, 3, 1);
+        let csr = coo_to_csr(&g);
+        let r = pagerank(&csr, PrParams::default());
+        let s: f32 = r.ranks.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "sum {s}");
+    }
+
+    #[test]
+    fn cycle_is_uniform() {
+        let n = 10u32;
+        let src: Vec<u32> = (0..n).collect();
+        let dst: Vec<u32> = (0..n).map(|i| (i + 1) % n).collect();
+        let csr = coo_to_csr(&Coo::new(n as usize, src, dst));
+        let r = pagerank(&csr, PrParams::default());
+        for &v in &r.ranks {
+            assert!((v - 0.1).abs() < 1e-4, "rank {v}");
+        }
+    }
+
+    #[test]
+    fn hub_outranks_leaves() {
+        // Star pointing at center: leaves -> 0.
+        let src = vec![1, 2, 3, 4];
+        let dst = vec![0, 0, 0, 0];
+        let csr = coo_to_csr(&Coo::new(5, src, dst));
+        let r = pagerank(&csr, PrParams::default());
+        assert!(r.ranks[0] > 4.0 * r.ranks[1]);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_approximately() {
+        let g = gen::rmat(&GenParams::rmat(11, 8), 9);
+        let csr = coo_to_csr(&g);
+        let p = PrParams { max_iters: 30, ..Default::default() };
+        let a = pagerank(&csr, p);
+        // Force the parallel path despite small n by inlining its body —
+        // easier: just check it agrees through the public API on a big
+        // enough graph.
+        let g2 = gen::rmat(&GenParams::rmat(15, 8), 9);
+        let csr2 = coo_to_csr(&g2);
+        let s = pagerank(&csr2, p);
+        let q = pagerank_parallel(&csr2, p);
+        let dmax = s
+            .ranks
+            .iter()
+            .zip(&q.ranks)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(dmax < 1e-5, "max diff {dmax}");
+        assert!(a.iters > 0);
+    }
+
+    #[test]
+    fn traced_one_iter_matches_untraced_one_iter() {
+        let g = gen::uniform_random(300, 2000, 4);
+        let csr = coo_to_csr(&g);
+        let p = PrParams { max_iters: 1, tol: 0.0, ..Default::default() };
+        let a = pagerank(&csr, p);
+        let mut t = super::super::trace::VecTrace::default();
+        let b = pagerank_traced(&csr, PrParams::default(), 1, &mut t);
+        assert_eq!(a.ranks, b.ranks);
+        assert!(!t.addrs.is_empty());
+    }
+
+    #[test]
+    fn dangling_mass_redistributed() {
+        // 0 -> 1, 1 dangling.
+        let csr = coo_to_csr(&Coo::new(2, vec![0], vec![1]));
+        let r = pagerank(&csr, PrParams::default());
+        let s: f32 = r.ranks.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3);
+        assert!(r.ranks[1] > r.ranks[0]);
+    }
+}

@@ -1,0 +1,211 @@
+//! Single-source shortest path — the paper's sparse-frontier workload
+//! (§5.1): "sparse frontiers of vertices, atomic updates to destination
+//! vertices' distances, and traversal of neighbor vertices".
+//!
+//! Two implementations:
+//! * [`dijkstra`] — binary-heap Dijkstra, the correctness oracle;
+//! * [`sssp_frontier`] — frontier-relaxation (Bellman-Ford with an active
+//!   queue), the GPU-style algorithm the paper's benchmarks run, with a
+//!   traced variant for Fig. 7.
+//!
+//! Weights come from `csr.vals` (all-ones when absent, making SSSP = BFS
+//! hop counts).
+
+use super::trace::{Region, Tracer};
+use crate::graph::Csr;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Distance array result (f32::INFINITY ⇒ unreachable).
+pub type Distances = Vec<f32>;
+
+/// Binary-heap Dijkstra from `source`. Requires non-negative weights.
+pub fn dijkstra(csr: &Csr, source: u32) -> Distances {
+    let n = csr.n();
+    let mut dist = vec![f32::INFINITY; n];
+    dist[source as usize] = 0.0;
+    // (ordered-bits distance, vertex) — f32 bits of non-negative floats
+    // compare like the floats themselves.
+    let mut heap: BinaryHeap<(Reverse<u32>, u32)> = BinaryHeap::new();
+    heap.push((Reverse(0f32.to_bits()), source));
+    while let Some((Reverse(dbits), v)) = heap.pop() {
+        let d = f32::from_bits(dbits);
+        if d > dist[v as usize] {
+            continue;
+        }
+        let (lo, hi) = (csr.row_ptr[v as usize] as usize, csr.row_ptr[v as usize + 1] as usize);
+        for e in lo..hi {
+            let u = csr.col_idx[e] as usize;
+            let w = csr.vals.as_ref().map_or(1.0, |vv| vv[e]);
+            let nd = d + w;
+            if nd < dist[u] {
+                dist[u] = nd;
+                heap.push((Reverse(nd.to_bits()), u as u32));
+            }
+        }
+    }
+    dist
+}
+
+/// Frontier-based relaxation (the GPU pattern): repeatedly relax all
+/// edges out of the active frontier until no distance changes.
+pub fn sssp_frontier(csr: &Csr, source: u32) -> Distances {
+    let n = csr.n();
+    let mut dist = vec![f32::INFINITY; n];
+    dist[source as usize] = 0.0;
+    let mut frontier = vec![source];
+    let mut in_next = vec![false; n];
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            let dv = dist[v as usize];
+            let (lo, hi) =
+                (csr.row_ptr[v as usize] as usize, csr.row_ptr[v as usize + 1] as usize);
+            for e in lo..hi {
+                let u = csr.col_idx[e] as usize;
+                let w = csr.vals.as_ref().map_or(1.0, |vv| vv[e]);
+                let nd = dv + w;
+                if nd < dist[u] {
+                    dist[u] = nd;
+                    if !in_next[u] {
+                        in_next[u] = true;
+                        next.push(u as u32);
+                    }
+                }
+            }
+        }
+        for &u in &next {
+            in_next[u as usize] = false;
+        }
+        frontier = next;
+    }
+    dist
+}
+
+/// Traced frontier SSSP. Reads: frontier vertex distances (`VectorX`),
+/// `row_ptr`, `col_idx` stream, weights, and the relaxation target
+/// `dist[u]` (`VectorY`) — the label-sensitive random access.
+pub fn sssp_frontier_traced<T: Tracer>(csr: &Csr, source: u32, tracer: &mut T) -> Distances {
+    let n = csr.n();
+    let mut dist = vec![f32::INFINITY; n];
+    dist[source as usize] = 0.0;
+    let mut frontier = vec![source];
+    let mut in_next = vec![false; n];
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            tracer.read4(Region::VectorX, v as usize);
+            tracer.read8(Region::RowPtr, v as usize);
+            tracer.read8(Region::RowPtr, v as usize + 1);
+            let dv = dist[v as usize];
+            let (lo, hi) =
+                (csr.row_ptr[v as usize] as usize, csr.row_ptr[v as usize + 1] as usize);
+            for e in lo..hi {
+                tracer.read4(Region::ColIdx, e);
+                let u = csr.col_idx[e] as usize;
+                let w = match csr.vals.as_ref() {
+                    Some(vv) => {
+                        tracer.read4(Region::Vals, e);
+                        vv[e]
+                    }
+                    None => 1.0,
+                };
+                tracer.read4(Region::VectorY, u);
+                let nd = dv + w;
+                if nd < dist[u] {
+                    dist[u] = nd;
+                    if !in_next[u] {
+                        in_next[u] = true;
+                        next.push(u as u32);
+                    }
+                }
+            }
+        }
+        for &u in &next {
+            in_next[u as usize] = false;
+        }
+        frontier = next;
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convert::coo_to_csr;
+    use crate::graph::gen;
+    use crate::graph::Coo;
+    use crate::util::prng::Xoshiro256;
+
+    fn weighted_csr(n: usize, m: usize, seed: u64) -> Csr {
+        let mut g = gen::uniform_random(n, m, seed);
+        let mut rng = Xoshiro256::new(seed + 1);
+        g.vals = Some((0..m).map(|_| rng.next_f32() + 0.01).collect());
+        coo_to_csr(&g)
+    }
+
+    #[test]
+    fn line_graph_distances() {
+        let g = Coo::new(4, vec![0, 1, 2], vec![1, 2, 3]);
+        let csr = coo_to_csr(&g);
+        assert_eq!(dijkstra(&csr, 0), vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(sssp_frontier(&csr, 0), vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn unreachable_is_infinite() {
+        let g = Coo::new(3, vec![0], vec![1]);
+        let csr = coo_to_csr(&g);
+        let d = dijkstra(&csr, 0);
+        assert!(d[2].is_infinite());
+    }
+
+    #[test]
+    fn frontier_matches_dijkstra_weighted() {
+        for seed in 0..4 {
+            let csr = weighted_csr(200, 1500, seed);
+            let a = dijkstra(&csr, 0);
+            let b = sssp_frontier(&csr, 0);
+            for (x, y) in a.iter().zip(&b) {
+                if x.is_finite() {
+                    assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+                } else {
+                    assert!(y.is_infinite());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn traced_matches_untraced() {
+        let csr = weighted_csr(150, 800, 9);
+        let mut t = super::super::trace::VecTrace::default();
+        let a = sssp_frontier(&csr, 3);
+        let b = sssp_frontier_traced(&csr, 3, &mut t);
+        assert_eq!(a, b);
+        assert!(!t.addrs.is_empty());
+    }
+
+    #[test]
+    fn distances_invariant_under_relabeling() {
+        let g = gen::grid_road(20, 20, 2);
+        let csr = coo_to_csr(&g);
+        let d0 = sssp_frontier(&csr, 0);
+        let perm = {
+            let mut rng = Xoshiro256::new(5);
+            rng.permutation(g.n())
+        };
+        let h = g.relabeled(&perm);
+        let csr2 = coo_to_csr(&h);
+        let d1 = sssp_frontier(&csr2, perm[0]);
+        for v in 0..g.n() {
+            let x = d0[v];
+            let y = d1[perm[v] as usize];
+            if x.is_finite() {
+                assert!((x - y).abs() < 1e-4);
+            } else {
+                assert!(y.is_infinite());
+            }
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! Triangle counting — the paper's set-intersection workload (§5.1):
+//! "for each edge in the graph, we perform a set-intersection operation
+//! between the adjacency lists of the edge source and destination".
+//!
+//! The standard forward/degree-ordered algorithm: orient each undirected
+//! edge from lower to higher ID, then for every directed edge `(u, v)`
+//! intersect `N⁺(u)` and `N⁺(v)`. Requires sorted adjacency lists — which
+//! is why the paper's TC pipeline (Fig. 4) charges a COO sort before
+//! conversion.
+
+use super::trace::{Region, Tracer};
+use crate::graph::Csr;
+use crate::parallel;
+
+/// Build the DAG orientation (lower ID → higher ID) of an undirected
+/// graph given as a (possibly directed, possibly duplicated) CSR. Rows
+/// must be sorted ascending.
+pub fn orient_for_tc(csr: &Csr) -> Csr {
+    assert!(csr.rows_sorted(), "TC requires sorted adjacency lists");
+    let n = csr.n();
+    let mut row_ptr = vec![0u64; n + 1];
+    for v in 0..n {
+        let mut cnt = 0u64;
+        let mut prev = u32::MAX;
+        for &u in csr.neighbors(v) {
+            if u as usize > v && u != prev {
+                cnt += 1;
+            }
+            prev = u;
+        }
+        row_ptr[v + 1] = cnt;
+    }
+    for i in 0..n {
+        row_ptr[i + 1] += row_ptr[i];
+    }
+    let mut col_idx = vec![0u32; *row_ptr.last().unwrap() as usize];
+    for v in 0..n {
+        let mut pos = row_ptr[v] as usize;
+        let mut prev = u32::MAX;
+        for &u in csr.neighbors(v) {
+            if u as usize > v && u != prev {
+                col_idx[pos] = u;
+                pos += 1;
+            }
+            prev = u;
+        }
+    }
+    Csr { row_ptr, col_idx, vals: None }
+}
+
+/// Count triangles in the oriented DAG (output of [`orient_for_tc`]).
+pub fn triangle_count(dag: &Csr) -> u64 {
+    let n = dag.n();
+    let mut total = 0u64;
+    for u in 0..n {
+        for &v in dag.neighbors(u) {
+            total += intersect_count(dag.neighbors(u), dag.neighbors(v as usize));
+        }
+    }
+    total
+}
+
+/// Parallel triangle count (row-parallel over the DAG).
+pub fn triangle_count_parallel(dag: &Csr) -> u64 {
+    let n = dag.n();
+    parallel::par_reduce(
+        n,
+        parallel::default_chunk(n).max(64),
+        0u64,
+        |acc, lo, hi| {
+            let mut t = acc;
+            for u in lo..hi {
+                for &v in dag.neighbors(u) {
+                    t += intersect_count(dag.neighbors(u), dag.neighbors(v as usize));
+                }
+            }
+            t
+        },
+        |a, b| a + b,
+    )
+}
+
+/// Traced triangle count: the source adjacency list is "already in the
+/// cache" (paper §5.1), so we trace reads of the *destination* vertex's
+/// list (region `Adj2`) plus the edge stream (`ColIdx`) — the accesses
+/// whose locality reordering changes.
+pub fn triangle_count_traced<T: Tracer>(dag: &Csr, tracer: &mut T) -> u64 {
+    let n = dag.n();
+    let mut total = 0u64;
+    for u in 0..n {
+        tracer.read8(Region::RowPtr, u);
+        tracer.read8(Region::RowPtr, u + 1);
+        let (lo_u, hi_u) = (dag.row_ptr[u] as usize, dag.row_ptr[u + 1] as usize);
+        for e in lo_u..hi_u {
+            tracer.read4(Region::ColIdx, e);
+            let v = dag.col_idx[e] as usize;
+            tracer.read8(Region::RowPtr, v);
+            let (lo_v, hi_v) = (dag.row_ptr[v] as usize, dag.row_ptr[v + 1] as usize);
+            for ev in lo_v..hi_v {
+                tracer.read4(Region::Adj2, ev);
+            }
+            total += intersect_count(dag.neighbors(u), dag.neighbors(v));
+        }
+    }
+    total
+}
+
+/// Degree rank: position of each vertex in the (total-degree, id)
+/// ascending order. Orienting every edge from lower to higher rank bounds
+/// out-degrees by O(√m) on any graph (the standard arboricity argument),
+/// which keeps TC tractable on skew graphs where ID orientation explodes
+/// at the hubs.
+pub fn degree_rank(csr: &Csr) -> Vec<u32> {
+    let n = csr.n();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_unstable_by_key(|&v| (csr.degree(v as usize), v));
+    let mut rank = vec![0u32; n];
+    for (r, &v) in order.iter().enumerate() {
+        rank[v as usize] = r as u32;
+    }
+    rank
+}
+
+/// Orient each (deduped) edge from lower to higher `rank`, emitting each
+/// row's survivors sorted by rank (so ranked merge-intersection works).
+pub fn orient_by_rank(csr: &Csr, rank: &[u32]) -> Csr {
+    let n = csr.n();
+    let mut row_ptr = vec![0u64; n + 1];
+    let mut rows: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for v in 0..n {
+        let rv = rank[v];
+        let row = &mut rows[v];
+        for &u in csr.neighbors(v) {
+            if rank[u as usize] > rv {
+                row.push(u);
+            }
+        }
+        row.sort_unstable_by_key(|&u| rank[u as usize]);
+        row.dedup();
+        row_ptr[v + 1] = row_ptr[v] + row.len() as u64;
+    }
+    let mut col_idx = Vec::with_capacity(*row_ptr.last().unwrap() as usize);
+    for row in rows {
+        col_idx.extend(row);
+    }
+    Csr { row_ptr, col_idx, vals: None }
+}
+
+/// Triangle count over a rank-oriented DAG (rows sorted by rank).
+pub fn triangle_count_ranked(dag: &Csr, rank: &[u32]) -> u64 {
+    let n = dag.n();
+    let mut total = 0u64;
+    for u in 0..n {
+        for &v in dag.neighbors(u) {
+            total += intersect_count_ranked(dag.neighbors(u), dag.neighbors(v as usize), rank);
+        }
+    }
+    total
+}
+
+/// Traced ranked triangle count (same trace regions as
+/// [`triangle_count_traced`]).
+pub fn triangle_count_ranked_traced<T: Tracer>(dag: &Csr, rank: &[u32], tracer: &mut T) -> u64 {
+    let n = dag.n();
+    let mut total = 0u64;
+    for u in 0..n {
+        tracer.read8(Region::RowPtr, u);
+        tracer.read8(Region::RowPtr, u + 1);
+        let (lo_u, hi_u) = (dag.row_ptr[u] as usize, dag.row_ptr[u + 1] as usize);
+        for e in lo_u..hi_u {
+            tracer.read4(Region::ColIdx, e);
+            let v = dag.col_idx[e] as usize;
+            tracer.read8(Region::RowPtr, v);
+            let (lo_v, hi_v) = (dag.row_ptr[v] as usize, dag.row_ptr[v + 1] as usize);
+            for ev in lo_v..hi_v {
+                tracer.read4(Region::Adj2, ev);
+            }
+            total += intersect_count_ranked(dag.neighbors(u), dag.neighbors(v), rank);
+        }
+    }
+    total
+}
+
+/// Ranked merge |A ∩ B| (slices sorted by `rank`).
+#[inline]
+fn intersect_count_ranked(a: &[u32], b: &[u32], rank: &[u32]) -> u64 {
+    let (mut i, mut j, mut c) = (0usize, 0usize, 0u64);
+    while i < a.len() && j < b.len() {
+        match rank[a[i] as usize].cmp(&rank[b[j] as usize]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                c += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    c
+}
+
+/// Merge-style |A ∩ B| for sorted slices.
+#[inline]
+fn intersect_count(a: &[u32], b: &[u32]) -> u64 {
+    let (mut i, mut j, mut c) = (0usize, 0usize, 0u64);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                c += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convert::{coo_to_csr, sort_coo_by_src};
+    use crate::graph::gen;
+    use crate::graph::Coo;
+
+    fn count(coo: &Coo) -> u64 {
+        let und = coo.symmetrized().deduped();
+        let csr = coo_to_csr(&sort_coo_by_src(&und));
+        triangle_count(&orient_for_tc(&csr))
+    }
+
+    #[test]
+    fn triangle_graph_has_one() {
+        let g = Coo::new(3, vec![0, 1, 2], vec![1, 2, 0]);
+        assert_eq!(count(&g), 1);
+    }
+
+    #[test]
+    fn square_has_none_k4_has_four() {
+        let square = Coo::new(4, vec![0, 1, 2, 3], vec![1, 2, 3, 0]);
+        assert_eq!(count(&square), 0);
+        let mut src = Vec::new();
+        let mut dst = Vec::new();
+        for u in 0..4u32 {
+            for v in (u + 1)..4 {
+                src.push(u);
+                dst.push(v);
+            }
+        }
+        let k4 = Coo::new(4, src, dst);
+        assert_eq!(count(&k4), 4);
+    }
+
+    #[test]
+    fn duplicate_edges_do_not_inflate() {
+        let g = Coo::new(3, vec![0, 0, 1, 2], vec![1, 1, 2, 0]);
+        assert_eq!(count(&g), 1);
+    }
+
+    #[test]
+    fn relabeling_is_invariant() {
+        let g = gen::preferential_attachment(300, 4, 6);
+        let c0 = count(&g);
+        let c1 = count(&g.randomized(17));
+        assert_eq!(c0, c1);
+        assert!(c0 > 0, "PA graph should close triangles");
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let g = gen::rmat(&gen::GenParams::rmat(12, 8), 2);
+        let und = g.symmetrized().deduped();
+        let dag = orient_for_tc(&coo_to_csr(&sort_coo_by_src(&und)));
+        assert_eq!(triangle_count(&dag), triangle_count_parallel(&dag));
+    }
+
+    #[test]
+    fn traced_matches_plain() {
+        let g = gen::uniform_random(120, 900, 8);
+        let und = g.symmetrized().deduped();
+        let dag = orient_for_tc(&coo_to_csr(&sort_coo_by_src(&und)));
+        let mut t = super::super::trace::VecTrace::default();
+        assert_eq!(triangle_count_traced(&dag, &mut t), triangle_count(&dag));
+        assert!(!t.addrs.is_empty());
+    }
+
+    #[test]
+    fn mesh_triangles_positive() {
+        let g = gen::delaunay_mesh(10, 10, 1);
+        assert!(count(&g) > 50); // every diagonal closes 2 triangles
+    }
+
+    #[test]
+    fn ranked_matches_id_orientation() {
+        for seed in 0..3 {
+            let g = gen::rmat(&gen::GenParams::rmat(10, 8), seed);
+            let und = g.symmetrized().deduped();
+            let csr = coo_to_csr(&sort_coo_by_src(&und));
+            let id_count = triangle_count(&orient_for_tc(&csr));
+            let rank = degree_rank(&csr);
+            let dag = orient_by_rank(&csr, &rank);
+            assert_eq!(triangle_count_ranked(&dag, &rank), id_count, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn ranked_dag_outdegree_bounded() {
+        // Degree orientation must shrink hub out-degrees dramatically.
+        let g = gen::preferential_attachment(2000, 8, 3);
+        let und = g.symmetrized().deduped();
+        let csr = coo_to_csr(&sort_coo_by_src(&und));
+        let rank = degree_rank(&csr);
+        let dag = orient_by_rank(&csr, &rank);
+        assert!(dag.max_degree() * 4 < csr.max_degree(),
+            "dag {} vs graph {}", dag.max_degree(), csr.max_degree());
+    }
+
+    #[test]
+    fn ranked_traced_matches() {
+        let g = gen::uniform_random(150, 1000, 5);
+        let und = g.symmetrized().deduped();
+        let csr = coo_to_csr(&sort_coo_by_src(&und));
+        let rank = degree_rank(&csr);
+        let dag = orient_by_rank(&csr, &rank);
+        let mut t = super::super::trace::VecTrace::default();
+        assert_eq!(
+            triangle_count_ranked_traced(&dag, &rank, &mut t),
+            triangle_count_ranked(&dag, &rank)
+        );
+        assert!(!t.addrs.is_empty());
+    }
+}

@@ -1,0 +1,222 @@
+//! A criterion-like benchmark harness (criterion does not resolve
+//! offline). Provides warmup, repeated timed iterations, robust summary
+//! statistics (median + MAD), throughput reporting, and aligned table
+//! output — everything the paper-table benches in `rust/benches/` need.
+//!
+//! Benches are ordinary binaries with `harness = false`; each builds a
+//! [`Bench`] per measurement and prints rows via [`Report`].
+
+use crate::util::human;
+use std::time::{Duration, Instant};
+
+/// One measured quantity.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Label (e.g. "BOBA/kron18/reorder").
+    pub name: String,
+    /// Median time per iteration, milliseconds.
+    pub median_ms: f64,
+    /// Median absolute deviation, milliseconds.
+    pub mad_ms: f64,
+    /// Iterations measured.
+    pub iters: usize,
+    /// Optional throughput item count (edges, rows...) per iteration.
+    pub items: Option<u64>,
+}
+
+impl Measurement {
+    /// Items per second, if an item count was attached.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items.map(|it| it as f64 / (self.median_ms / 1e3))
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bench {
+    /// Warmup iterations (not recorded).
+    pub warmup: usize,
+    /// Recorded iterations.
+    pub iters: usize,
+    /// Hard cap on total measurement time; stops early if exceeded.
+    pub max_total: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 1, iters: 5, max_total: Duration::from_secs(60) }
+    }
+}
+
+impl Bench {
+    /// Quick preset for cheap micro-measurements.
+    pub fn quick() -> Self {
+        Self { warmup: 2, iters: 9, max_total: Duration::from_secs(20) }
+    }
+
+    /// One-shot preset for expensive end-to-end runs.
+    pub fn once() -> Self {
+        Self { warmup: 0, iters: 1, max_total: Duration::from_secs(600) }
+    }
+
+    /// Run `f` under this configuration and summarize. The closure's
+    /// return value is black-boxed to keep the optimizer honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let started = Instant::now();
+        for _ in 0..self.iters.max(1) {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed().as_secs_f64() * 1e3);
+            if started.elapsed() > self.max_total {
+                break;
+            }
+        }
+        let (median, mad) = median_mad(&mut samples);
+        Measurement {
+            name: name.to_string(),
+            median_ms: median,
+            mad_ms: mad,
+            iters: samples.len(),
+            items: None,
+        }
+    }
+
+    /// Like [`Bench::run`] with a throughput item count.
+    pub fn run_with_items<T>(
+        &self,
+        name: &str,
+        items: u64,
+        f: impl FnMut() -> T,
+    ) -> Measurement {
+        let mut m = self.run(name, f);
+        m.items = Some(items);
+        m
+    }
+}
+
+/// Median and median-absolute-deviation of samples (sorts in place).
+pub fn median_mad(samples: &mut [f64]) -> (f64, f64) {
+    if samples.is_empty() {
+        return (0.0, 0.0);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut dev: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (median, dev[dev.len() / 2])
+}
+
+/// Identity function the optimizer must assume has side effects.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Collects measurements and renders the final table.
+#[derive(Debug, Default)]
+pub struct Report {
+    rows: Vec<Measurement>,
+    title: String,
+}
+
+impl Report {
+    /// New report with a title banner.
+    pub fn new(title: &str) -> Self {
+        Self { rows: Vec::new(), title: title.to_string() }
+    }
+
+    /// Add a measurement.
+    pub fn push(&mut self, m: Measurement) {
+        self.rows.push(m);
+    }
+
+    /// Access rows (drivers post-process them, e.g. speedup columns).
+    pub fn rows(&self) -> &[Measurement] {
+        &self.rows
+    }
+
+    /// Render as an aligned table.
+    pub fn render(&self) -> String {
+        let mut rows = Vec::new();
+        for m in &self.rows {
+            let thr = m
+                .throughput()
+                .map(|t| format!("{}/s", human::count_compact(t as u64)))
+                .unwrap_or_default();
+            rows.push(vec![
+                m.name.clone(),
+                human::ms(m.median_ms),
+                format!("±{}", human::ms(m.mad_ms)),
+                format!("n={}", m.iters),
+                thr,
+            ]);
+        }
+        format!(
+            "\n== {} ==\n{}",
+            self.title,
+            human::table(&["benchmark", "median", "mad", "iters", "throughput"], &rows)
+        )
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_measures_and_counts() {
+        let b = Bench { warmup: 1, iters: 3, max_total: Duration::from_secs(5) };
+        let m = b.run("spin", || {
+            std::thread::sleep(Duration::from_millis(2));
+        });
+        assert_eq!(m.iters, 3);
+        assert!(m.median_ms >= 1.5, "median {}", m.median_ms);
+    }
+
+    #[test]
+    fn median_mad_basic() {
+        let mut s = vec![1.0, 100.0, 2.0, 3.0, 2.5];
+        let (med, mad) = median_mad(&mut s);
+        assert_eq!(med, 2.5);
+        assert!(mad <= 1.5); // robust to the 100.0 outlier
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let b = Bench { warmup: 0, iters: 1, max_total: Duration::from_secs(5) };
+        let m =
+            b.run_with_items("x", 1_000_000, || std::thread::sleep(Duration::from_millis(10)));
+        let thr = m.throughput().unwrap();
+        assert!(thr < 2e8 && thr > 1e6, "thr {thr}");
+    }
+
+    #[test]
+    fn report_renders_rows() {
+        let mut r = Report::new("T");
+        r.push(Measurement {
+            name: "a".into(),
+            median_ms: 1.0,
+            mad_ms: 0.1,
+            iters: 5,
+            items: Some(100),
+        });
+        let s = r.render();
+        assert!(s.contains("== T ==") && s.contains('a'));
+    }
+
+    #[test]
+    fn bench_respects_time_cap() {
+        let b = Bench { warmup: 0, iters: 1000, max_total: Duration::from_millis(30) };
+        let m = b.run("slow", || std::thread::sleep(Duration::from_millis(10)));
+        assert!(m.iters < 10, "iters {}", m.iters);
+    }
+}

@@ -1,0 +1,259 @@
+//! The dataset suite — synthetic stand-ins for the paper's Table 2
+//! corpus (SuiteSparse/SNAP are unreachable offline; DESIGN.md §2 defends
+//! each substitution). Scales are reduced so the full experiment sweep
+//! finishes on CPU; set `BOBA_SCALE=full` for larger instances, or
+//! `quick` (default for tests) for CI-sized ones.
+
+use crate::graph::gen::{self, GenParams};
+use crate::graph::Coo;
+
+/// Degree-structure family, the axis the paper's evaluation splits on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// Skew / power-law (kron, soc-*, hollywood, arabic, PA).
+    ScaleFree,
+    /// Uniform / road-like (road_usa, osm, delaunay, rgg).
+    Uniform,
+}
+
+/// Suite scale knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// CI-sized (≈0.1–0.5M edges): every experiment in seconds.
+    Quick,
+    /// Benchmark-sized (≈2–8M edges): minutes per figure.
+    Full,
+}
+
+impl Scale {
+    /// Read from `BOBA_SCALE` (default Quick).
+    pub fn from_env() -> Scale {
+        match std::env::var("BOBA_SCALE").as_deref() {
+            Ok("full") | Ok("FULL") => Scale::Full,
+            _ => Scale::Quick,
+        }
+    }
+}
+
+/// A dataset recipe (name + generator + family).
+#[derive(Clone)]
+pub struct Dataset {
+    /// Table-row name, styled after the paper's corpus.
+    pub name: &'static str,
+    /// Paper dataset this one stands in for.
+    pub stands_in_for: &'static str,
+    /// Degree family.
+    pub family: Family,
+    build: fn(Scale, u64) -> Coo,
+}
+
+impl Dataset {
+    /// Build the graph (deterministic per seed).
+    pub fn build(&self, seed: u64) -> Coo {
+        (self.build)(Scale::from_env(), seed)
+    }
+
+    /// Build at an explicit scale.
+    pub fn build_at(&self, scale: Scale, seed: u64) -> Coo {
+        (self.build)(scale, seed)
+    }
+}
+
+fn kron(scale: Scale, seed: u64) -> Coo {
+    let s = match scale {
+        Scale::Quick => 14,
+        Scale::Full => 18,
+    };
+    gen::rmat(&GenParams::rmat(s, 16), seed)
+}
+
+fn soc(scale: Scale, seed: u64) -> Coo {
+    let s = match scale {
+        Scale::Quick => 14,
+        Scale::Full => 18,
+    };
+    gen::rmat(&GenParams::rmat_social(s, 12), seed)
+}
+
+fn pa(scale: Scale, seed: u64) -> Coo {
+    let n = match scale {
+        Scale::Quick => 20_000,
+        Scale::Full => 400_000,
+    };
+    gen::preferential_attachment(n, 8, seed)
+}
+
+fn hollywood(scale: Scale, seed: u64) -> Coo {
+    // hollywood-2009: small n, very high average degree (~100),
+    // symmetric (co-starring is undirected).
+    let n = match scale {
+        Scale::Quick => 4_000,
+        Scale::Full => 60_000,
+    };
+    gen::preferential_attachment(n, 48, seed).symmetrized()
+}
+
+// The paper's road/delaunay/rgg matrices are SYMMETRIC (SuiteSparse
+// stores them as undirected graphs); the builders symmetrize so
+// out-neighborhoods match the paper's — this matters to NBR, which can
+// only drop below 1 when a vertex has multiple neighbors per cache line.
+
+fn road(scale: Scale, seed: u64) -> Coo {
+    let (w, h) = match scale {
+        Scale::Quick => (400, 300),
+        Scale::Full => (2_000, 1_500),
+    };
+    gen::grid_road(w, h, seed).symmetrized()
+}
+
+fn delaunay(scale: Scale, seed: u64) -> Coo {
+    let (w, h) = match scale {
+        Scale::Quick => (360, 360),
+        Scale::Full => (1_600, 1_600),
+    };
+    gen::delaunay_mesh(w, h, seed).symmetrized()
+}
+
+fn rgg(scale: Scale, seed: u64) -> Coo {
+    let s = match scale {
+        Scale::Quick => 17,
+        Scale::Full => 21,
+    };
+    gen::rgg(s, 12, seed).symmetrized()
+}
+
+/// The scale-free suite (paper Fig. 5's row of datasets).
+pub fn scale_free_suite() -> Vec<Dataset> {
+    vec![
+        Dataset {
+            name: "kron_s",
+            stands_in_for: "kron_g500-logn20/21",
+            family: Family::ScaleFree,
+            build: kron,
+        },
+        Dataset {
+            name: "soc_s",
+            stands_in_for: "soc-LiveJournal/soc-orkut",
+            family: Family::ScaleFree,
+            build: soc,
+        },
+        Dataset {
+            name: "pa_c8",
+            stands_in_for: "ljournal-2008 / arabic-2005 (PA-like web)",
+            family: Family::ScaleFree,
+            build: pa,
+        },
+        Dataset {
+            name: "hollywood_s",
+            stands_in_for: "hollywood-2009",
+            family: Family::ScaleFree,
+            build: hollywood,
+        },
+    ]
+}
+
+/// The uniform/road suite (paper Fig. 6's datasets).
+pub fn uniform_suite() -> Vec<Dataset> {
+    vec![
+        Dataset {
+            name: "road_grid",
+            stands_in_for: "road_usa / great-britain_osm",
+            family: Family::Uniform,
+            build: road,
+        },
+        Dataset {
+            name: "delaunay_s",
+            stands_in_for: "delaunay_n22/23/24",
+            family: Family::Uniform,
+            build: delaunay,
+        },
+        Dataset {
+            name: "rgg_s",
+            stands_in_for: "rgg_n_2_22/23/24_s0",
+            family: Family::Uniform,
+            build: rgg,
+        },
+    ]
+}
+
+/// All datasets (Table 1 / Table 2 order: uniform first, like the paper).
+pub fn full_suite() -> Vec<Dataset> {
+    let mut v = uniform_suite();
+    v.extend(scale_free_suite());
+    v
+}
+
+/// Look a dataset up by name.
+pub fn by_name(name: &str) -> Option<Dataset> {
+    full_suite().into_iter().find(|d| d.name == name)
+}
+
+/// Table 2 analogue: the dataset inventory with |V|, |E| and CSR sizes.
+pub fn inventory(seed: u64) -> String {
+    use crate::convert::coo_to_csr;
+    use crate::util::human;
+    let mut rows = Vec::new();
+    for d in full_suite() {
+        let g = d.build(seed);
+        let csr = coo_to_csr(&g);
+        rows.push(vec![
+            d.name.to_string(),
+            human::count_compact(g.n() as u64),
+            human::count_compact(g.m() as u64),
+            human::mb_decimal(csr.bytes_offsets()),
+            human::mb_decimal(csr.bytes_indices()),
+            d.stands_in_for.to_string(),
+        ]);
+    }
+    human::table(
+        &["dataset", "|V|", "|E|", "offsets MB", "indices MB", "stands in for"],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_nonempty_and_distinct() {
+        let names: Vec<_> = full_suite().iter().map(|d| d.name).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+        assert!(names.len() >= 7);
+    }
+
+    #[test]
+    fn builds_are_deterministic() {
+        let d = by_name("road_grid").unwrap();
+        assert_eq!(d.build_at(Scale::Quick, 1), d.build_at(Scale::Quick, 1));
+    }
+
+    #[test]
+    fn families_assigned() {
+        for d in scale_free_suite() {
+            assert_eq!(d.family, Family::ScaleFree);
+        }
+        for d in uniform_suite() {
+            assert_eq!(d.family, Family::Uniform);
+        }
+    }
+
+    #[test]
+    fn quick_scale_bounded() {
+        for d in full_suite() {
+            let g = d.build_at(Scale::Quick, 3);
+            assert!(g.m() < 2_000_000, "{} too big for quick: {}", d.name, g.m());
+            assert!(g.m() > 50_000, "{} too small: {}", d.name, g.m());
+            g.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn inventory_renders() {
+        let s = inventory(1);
+        assert!(s.contains("kron_s") && s.contains("delaunay_s"));
+    }
+}

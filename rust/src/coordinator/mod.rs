@@ -1,0 +1,15 @@
+//! L3 coordinator — the paper's pragmatic graph-creation pipeline
+//! (Problem 3) and the experiment drivers that regenerate every table and
+//! figure of the evaluation section.
+//!
+//! * [`datasets`] — the synthetic dataset suite standing in for the
+//!   paper's Table 2 corpus (recipes + deterministic builds).
+//! * [`pipeline`] — the ingest → reorder → convert → compute pipeline
+//!   with streaming/batched ingestion and per-stage timing (Fig. 4's
+//!   stacked bars come from these records).
+//! * [`experiments`] — one driver per paper table/figure (Table 1,
+//!   Table 3, Fig. 4–7), shared by the CLI and the benches.
+
+pub mod datasets;
+pub mod pipeline;
+pub mod experiments;

@@ -1,0 +1,314 @@
+//! COO (coordinate / edge-list) graph representation — the paper's input
+//! format and the representation BOBA operates on directly.
+
+use crate::util::prng::Xoshiro256;
+
+/// A directed graph as parallel source/destination arrays, `COO(G) = (I, J)`
+/// in the paper's notation, with an optional edge-value array for SpMV.
+///
+/// Vertex IDs are `u32` (the paper's datasets top out at 23.9M vertices);
+/// edge counts are `usize`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Coo {
+    /// Number of vertices `n = |V(G)|`. IDs in `src`/`dst` are `< n`.
+    pub n: usize,
+    /// Edge sources, `I`.
+    pub src: Vec<u32>,
+    /// Edge destinations, `J`.
+    pub dst: Vec<u32>,
+    /// Optional edge weights (SpMV values); `None` ⇒ unweighted (1.0).
+    pub vals: Option<Vec<f32>>,
+}
+
+impl Coo {
+    /// Build an unweighted COO; panics in debug if an endpoint is out of
+    /// range or the arrays disagree in length.
+    pub fn new(n: usize, src: Vec<u32>, dst: Vec<u32>) -> Self {
+        debug_assert_eq!(src.len(), dst.len());
+        debug_assert!(src.iter().chain(dst.iter()).all(|&v| (v as usize) < n));
+        Self { n, src, dst, vals: None }
+    }
+
+    /// Build a weighted COO.
+    pub fn with_vals(n: usize, src: Vec<u32>, dst: Vec<u32>, vals: Vec<f32>) -> Self {
+        debug_assert_eq!(src.len(), vals.len());
+        let mut c = Self::new(n, src, dst);
+        c.vals = Some(vals);
+        c
+    }
+
+    /// Number of edges `m = |E(G)|`.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.src.len()
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Validate structural invariants (every endpoint `< n`, lengths
+    /// agree). Returns an error naming the first violation.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.src.len() != self.dst.len() {
+            anyhow::bail!("src/dst length mismatch: {} vs {}", self.src.len(), self.dst.len());
+        }
+        if let Some(v) = &self.vals {
+            if v.len() != self.src.len() {
+                anyhow::bail!("vals length mismatch: {} vs {}", v.len(), self.src.len());
+            }
+        }
+        for (i, (&s, &d)) in self.src.iter().zip(&self.dst).enumerate() {
+            if s as usize >= self.n || d as usize >= self.n {
+                anyhow::bail!("edge {i} = ({s},{d}) out of range n={}", self.n);
+            }
+        }
+        Ok(())
+    }
+
+    /// Out-degrees of every vertex (one linear pass over `I`).
+    pub fn out_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.n];
+        for &s in &self.src {
+            deg[s as usize] += 1;
+        }
+        deg
+    }
+
+    /// Total degrees (in + out), the degree notion BOBA's preferential-
+    /// attachment intuition uses (appearances in `I++J`).
+    pub fn total_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.n];
+        for &s in &self.src {
+            deg[s as usize] += 1;
+        }
+        for &d in &self.dst {
+            deg[d as usize] += 1;
+        }
+        deg
+    }
+
+    /// Apply a vertex relabeling: edge `(u, v)` becomes
+    /// `(new_of_old[u], new_of_old[v])`. Edge order and values are
+    /// preserved (reordering relabels vertices, it does not permute the
+    /// edge list).
+    pub fn relabeled(&self, new_of_old: &[u32]) -> Coo {
+        assert_eq!(new_of_old.len(), self.n);
+        let src = self.src.iter().map(|&s| new_of_old[s as usize]).collect();
+        let dst = self.dst.iter().map(|&d| new_of_old[d as usize]).collect();
+        Coo { n: self.n, src, dst, vals: self.vals.clone() }
+    }
+
+    /// Randomize vertex labels with a uniform permutation — the paper's
+    /// input model (§5: "We assume that input labels are already
+    /// randomized"); destroys any structure in the original IDs.
+    pub fn randomized(&self, seed: u64) -> Coo {
+        let mut rng = Xoshiro256::new(seed);
+        let perm = rng.permutation(self.n);
+        self.relabeled(&perm)
+    }
+
+    /// Append the reverse of every edge (used to view a directed dataset
+    /// as undirected, e.g. for triangle counting).
+    pub fn symmetrized(&self) -> Coo {
+        let mut src = Vec::with_capacity(self.m() * 2);
+        let mut dst = Vec::with_capacity(self.m() * 2);
+        src.extend_from_slice(&self.src);
+        dst.extend_from_slice(&self.dst);
+        src.extend_from_slice(&self.dst);
+        dst.extend_from_slice(&self.src);
+        let vals = self.vals.as_ref().map(|v| {
+            let mut vv = Vec::with_capacity(v.len() * 2);
+            vv.extend_from_slice(v);
+            vv.extend_from_slice(v);
+            vv
+        });
+        Coo { n: self.n, src, dst, vals }
+    }
+
+    /// Remove self-loops and duplicate edges (stable; keeps the first
+    /// occurrence). Needed before triangle counting.
+    pub fn deduped(&self) -> Coo {
+        let mut seen = std::collections::HashSet::with_capacity(self.m());
+        let mut src = Vec::with_capacity(self.m());
+        let mut dst = Vec::with_capacity(self.m());
+        let mut vals = self.vals.as_ref().map(|_| Vec::with_capacity(self.m()));
+        for i in 0..self.m() {
+            let (s, d) = (self.src[i], self.dst[i]);
+            if s == d {
+                continue;
+            }
+            if seen.insert(((s as u64) << 32) | d as u64) {
+                src.push(s);
+                dst.push(d);
+                if let (Some(v), Some(orig)) = (vals.as_mut(), self.vals.as_ref()) {
+                    v.push(orig[i]);
+                }
+            }
+        }
+        Coo { n: self.n, src, dst, vals }
+    }
+
+    /// Iterator over `(src, dst)` pairs.
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.src.iter().copied().zip(self.dst.iter().copied())
+    }
+
+    /// Sort edges by `(dst, src)` — the "sorted by destination" input
+    /// Proposition 10 assumes, and §5.6's recommended pre-pass for
+    /// randomly ordered edge lists.
+    pub fn sorted_by_dst(&self) -> Coo {
+        let mut idx: Vec<usize> = (0..self.m()).collect();
+        idx.sort_by_key(|&i| ((self.dst[i] as u64) << 32) | self.src[i] as u64);
+        self.gathered(&idx)
+    }
+
+    /// Sort edges by `(src, dst)` — needed by TC's CSR build so adjacency
+    /// lists come out sorted.
+    pub fn sorted_by_src(&self) -> Coo {
+        let mut idx: Vec<usize> = (0..self.m()).collect();
+        idx.sort_by_key(|&i| ((self.src[i] as u64) << 32) | self.dst[i] as u64);
+        self.gathered(&idx)
+    }
+
+    /// Permute the *edge list* (not vertex labels) by `idx`.
+    pub fn gathered(&self, idx: &[usize]) -> Coo {
+        let src = idx.iter().map(|&i| self.src[i]).collect();
+        let dst = idx.iter().map(|&i| self.dst[i]).collect();
+        let vals = self.vals.as_ref().map(|v| idx.iter().map(|&i| v[i]).collect());
+        Coo { n: self.n, src, dst, vals }
+    }
+
+    /// Shuffle the edge list order (the adversarial §5.6 scenario).
+    pub fn edge_shuffled(&self, seed: u64) -> Coo {
+        let mut rng = Xoshiro256::new(seed);
+        let mut idx: Vec<usize> = (0..self.m()).collect();
+        rng.shuffle(&mut idx);
+        self.gathered(&idx)
+    }
+
+    /// Bytes this COO occupies in memory (for Table 2-style inventory).
+    pub fn bytes(&self) -> u64 {
+        (self.src.len() * 4 + self.dst.len() * 4
+            + self.vals.as_ref().map_or(0, |v| v.len() * 4)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Coo {
+        // 0→1, 1→2, 2→0, 0→2
+        Coo::new(3, vec![0, 1, 2, 0], vec![1, 2, 0, 2])
+    }
+
+    #[test]
+    fn construction_and_counts() {
+        let g = tiny();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 4);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_out_of_range() {
+        let g = Coo { n: 2, src: vec![0, 3], dst: vec![1, 1], vals: None };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_length_mismatch() {
+        let g = Coo { n: 2, src: vec![0], dst: vec![1, 0], vals: None };
+        assert!(g.validate().is_err());
+        let g2 = Coo { n: 2, src: vec![0], dst: vec![1], vals: Some(vec![1.0, 2.0]) };
+        assert!(g2.validate().is_err());
+    }
+
+    #[test]
+    fn degrees() {
+        let g = tiny();
+        assert_eq!(g.out_degrees(), vec![2, 1, 1]);
+        assert_eq!(g.total_degrees(), vec![3, 2, 3]);
+    }
+
+    #[test]
+    fn relabel_is_involutive_with_inverse() {
+        let g = tiny();
+        let perm = vec![2u32, 0, 1]; // old->new
+        let h = g.relabeled(&perm);
+        assert_eq!(h.src, vec![2, 0, 1, 2]);
+        assert_eq!(h.dst, vec![0, 1, 2, 1]);
+        // Inverse permutation restores the original.
+        let mut inv = vec![0u32; 3];
+        for (old, &new) in perm.iter().enumerate() {
+            inv[new as usize] = old as u32;
+        }
+        assert_eq!(h.relabeled(&inv), g);
+    }
+
+    #[test]
+    fn randomized_preserves_structure() {
+        let g = tiny();
+        let r = g.randomized(99);
+        assert_eq!(r.m(), g.m());
+        assert_eq!(r.n(), g.n());
+        // Degree multiset is invariant under relabeling.
+        let mut d0 = g.total_degrees();
+        let mut d1 = r.total_degrees();
+        d0.sort_unstable();
+        d1.sort_unstable();
+        assert_eq!(d0, d1);
+    }
+
+    #[test]
+    fn symmetrize_doubles_edges() {
+        let g = tiny();
+        let s = g.symmetrized();
+        assert_eq!(s.m(), 8);
+        // Every reversed edge present.
+        let set: std::collections::HashSet<_> = s.edges().collect();
+        for (u, v) in g.edges() {
+            assert!(set.contains(&(v, u)));
+        }
+    }
+
+    #[test]
+    fn dedup_removes_loops_and_dupes() {
+        let g = Coo::new(3, vec![0, 0, 1, 1], vec![0, 1, 2, 2]);
+        let d = g.deduped();
+        assert_eq!(d.m(), 2);
+        assert_eq!(d.src, vec![0, 1]);
+        assert_eq!(d.dst, vec![1, 2]);
+    }
+
+    #[test]
+    fn sort_by_dst_orders() {
+        let g = tiny().sorted_by_dst();
+        for i in 1..g.m() {
+            let prev = ((g.dst[i - 1] as u64) << 32) | g.src[i - 1] as u64;
+            let cur = ((g.dst[i] as u64) << 32) | g.src[i] as u64;
+            assert!(prev <= cur);
+        }
+    }
+
+    #[test]
+    fn edge_shuffle_preserves_multiset() {
+        let g = tiny();
+        let s = g.edge_shuffled(4);
+        let mut a: Vec<_> = g.edges().collect();
+        let mut b: Vec<_> = s.edges().collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn weighted_roundtrip() {
+        let g = Coo::with_vals(2, vec![0, 1], vec![1, 0], vec![0.5, 2.5]);
+        let r = g.relabeled(&[1, 0]);
+        assert_eq!(r.vals.unwrap(), vec![0.5, 2.5]);
+    }
+}

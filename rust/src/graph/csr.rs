@@ -1,0 +1,236 @@
+//! CSR (compressed sparse row) representation — "the most popular format
+//! for computation" [Filippone et al. 2017], target of the paper's
+//! Problem-3 conversion stage and input of every graph kernel here.
+
+/// Compressed sparse row graph/matrix.
+///
+/// Row `v`'s neighbors (out-neighbors of vertex `v`, non-zero columns of
+/// row `v`) are `col_idx[row_ptr[v] .. row_ptr[v+1]]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    /// `n + 1` row offsets.
+    pub row_ptr: Vec<u64>,
+    /// `m` column indices.
+    pub col_idx: Vec<u32>,
+    /// Optional `m` values (`None` ⇒ unweighted / all-ones).
+    pub vals: Option<Vec<f32>>,
+}
+
+impl Csr {
+    /// Number of vertices/rows.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    /// Number of edges/non-zeros.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Neighbor slice of `v` (`N^out(v)` in the paper's notation).
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.col_idx[self.row_ptr[v] as usize..self.row_ptr[v + 1] as usize]
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        (self.row_ptr[v + 1] - self.row_ptr[v]) as usize
+    }
+
+    /// Values slice of `v`'s row, if weighted.
+    #[inline]
+    pub fn row_vals(&self, v: usize) -> Option<&[f32]> {
+        self.vals
+            .as_ref()
+            .map(|vv| &vv[self.row_ptr[v] as usize..self.row_ptr[v + 1] as usize])
+    }
+
+    /// Maximum out-degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.n()).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Structural validation: monotone `row_ptr`, terminal offset == m,
+    /// all columns `< n`.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.row_ptr.is_empty() {
+            anyhow::bail!("row_ptr must have n+1 entries");
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() as usize != self.m() {
+            anyhow::bail!("row_ptr endpoints wrong");
+        }
+        for w in self.row_ptr.windows(2) {
+            if w[0] > w[1] {
+                anyhow::bail!("row_ptr not monotone");
+            }
+        }
+        let n = self.n() as u32;
+        if let Some(&bad) = self.col_idx.iter().find(|&&c| c >= n) {
+            anyhow::bail!("column {bad} out of range n={n}");
+        }
+        if let Some(v) = &self.vals {
+            if v.len() != self.col_idx.len() {
+                anyhow::bail!("vals length mismatch");
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether every adjacency list is sorted ascending (required by the
+    /// TC set-intersection kernel).
+    pub fn rows_sorted(&self) -> bool {
+        (0..self.n()).all(|v| self.neighbors(v).windows(2).all(|w| w[0] <= w[1]))
+    }
+
+    /// Sort every adjacency list in place (values follow their columns).
+    pub fn sort_rows(&mut self) {
+        let n = self.n();
+        match &mut self.vals {
+            None => {
+                for v in 0..n {
+                    let (lo, hi) = (self.row_ptr[v] as usize, self.row_ptr[v + 1] as usize);
+                    self.col_idx[lo..hi].sort_unstable();
+                }
+            }
+            Some(vals) => {
+                for v in 0..n {
+                    let (lo, hi) = (self.row_ptr[v] as usize, self.row_ptr[v + 1] as usize);
+                    let mut pairs: Vec<(u32, f32)> = self.col_idx[lo..hi]
+                        .iter()
+                        .copied()
+                        .zip(vals[lo..hi].iter().copied())
+                        .collect();
+                    pairs.sort_unstable_by_key(|p| p.0);
+                    for (k, (c, w)) in pairs.into_iter().enumerate() {
+                        self.col_idx[lo + k] = c;
+                        vals[lo + k] = w;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The transpose (CSC view of the same matrix, materialized as CSR of
+    /// the reverse graph). Pull-mode kernels over in-neighborhoods use
+    /// this.
+    pub fn transposed(&self) -> Csr {
+        let n = self.n();
+        let mut counts = vec![0u64; n + 1];
+        for &c in &self.col_idx {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let row_ptr = counts.clone();
+        let mut cursor = counts;
+        let mut col_idx = vec![0u32; self.m()];
+        let mut vals = self.vals.as_ref().map(|_| vec![0f32; self.m()]);
+        for v in 0..n {
+            let (lo, hi) = (self.row_ptr[v] as usize, self.row_ptr[v + 1] as usize);
+            for e in lo..hi {
+                let c = self.col_idx[e] as usize;
+                let pos = cursor[c] as usize;
+                cursor[c] += 1;
+                col_idx[pos] = v as u32;
+                if let (Some(out), Some(inp)) = (vals.as_mut(), self.vals.as_ref()) {
+                    out[pos] = inp[e];
+                }
+            }
+        }
+        Csr { row_ptr, col_idx, vals }
+    }
+
+    /// Bytes occupied (offsets + indices + values), for Table-2 style
+    /// inventory rows.
+    pub fn bytes_offsets(&self) -> u64 {
+        (self.row_ptr.len() * 8) as u64
+    }
+
+    /// Bytes of the index array.
+    pub fn bytes_indices(&self) -> u64 {
+        (self.col_idx.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Csr {
+        // 0: [1,2]  1: [2]  2: [0]
+        Csr { row_ptr: vec![0, 2, 3, 4], col_idx: vec![1, 2, 2, 0], vals: None }
+    }
+
+    #[test]
+    fn accessors() {
+        let g = tiny();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.degree(1), 1);
+        assert_eq!(g.max_degree(), 2);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_colidx() {
+        let g = Csr { row_ptr: vec![0, 1], col_idx: vec![5], vals: None };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_nonmonotone() {
+        let g = Csr { row_ptr: vec![0, 2, 1], col_idx: vec![0, 0], vals: None };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let g = tiny();
+        let t = g.transposed();
+        // Transpose twice (with sorted rows) gives back the original
+        // structure.
+        let mut tt = t.transposed();
+        tt.sort_rows();
+        let mut gg = g.clone();
+        gg.sort_rows();
+        assert_eq!(tt, gg);
+    }
+
+    #[test]
+    fn transpose_reverses_edges() {
+        let g = tiny();
+        let t = g.transposed();
+        // Edge 0→1 in g implies 1→0 in t.
+        assert!(t.neighbors(1).contains(&0));
+        assert!(t.neighbors(2).contains(&0));
+        assert!(t.neighbors(2).contains(&1));
+        assert!(t.neighbors(0).contains(&2));
+        assert_eq!(t.m(), g.m());
+    }
+
+    #[test]
+    fn sort_rows_with_vals_keeps_pairing() {
+        let mut g = Csr {
+            row_ptr: vec![0, 3],
+            col_idx: vec![2, 0, 1],
+            vals: Some(vec![2.0, 0.0, 1.0]),
+        };
+        g.sort_rows();
+        assert_eq!(g.col_idx, vec![0, 1, 2]);
+        assert_eq!(g.vals.unwrap(), vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn rows_sorted_detects() {
+        let g = tiny();
+        assert!(g.rows_sorted());
+        let bad = Csr { row_ptr: vec![0, 2], col_idx: vec![1, 0], vals: None };
+        assert!(!bad.rows_sorted());
+    }
+}

@@ -1,0 +1,262 @@
+//! Graph file I/O: Matrix Market (`.mtx`) and plain edge lists (`.el`) —
+//! the formats the paper identifies as the dominant entry points to graph
+//! pipelines (SuiteSparse, SNAP, networkrepository all ship them).
+//!
+//! Matching the paper's workflow observation, `read_*` functions return
+//! **COO** — conversion to CSR is an explicit, measured pipeline stage
+//! (`crate::convert`), never hidden inside the reader.
+
+use super::coo::Coo;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Read a Matrix Market coordinate file into COO.
+///
+/// Supports `matrix coordinate (pattern|real|integer) (general|symmetric)`.
+/// Symmetric files get their mirrored edges materialized (like SciPy's
+/// `mmread` + `coo_matrix`). 1-based indices are converted to 0-based.
+pub fn read_matrix_market(path: &Path) -> anyhow::Result<Coo> {
+    let f = std::fs::File::open(path)?;
+    let mut lines = std::io::BufReader::new(f).lines();
+
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty file"))??;
+    let h: Vec<&str> = header.split_whitespace().collect();
+    if h.len() < 5 || !h[0].starts_with("%%MatrixMarket") {
+        anyhow::bail!("not a MatrixMarket file: {header:?}");
+    }
+    if h[1] != "matrix" || h[2] != "coordinate" {
+        anyhow::bail!("only 'matrix coordinate' supported, got {header:?}");
+    }
+    let field = h[3]; // pattern | real | integer
+    let symmetry = h[4]; // general | symmetric
+    if !matches!(field, "pattern" | "real" | "integer") {
+        anyhow::bail!("unsupported field type {field}");
+    }
+    if !matches!(symmetry, "general" | "symmetric") {
+        anyhow::bail!("unsupported symmetry {symmetry}");
+    }
+
+    // Skip comments; first data line is "rows cols nnz".
+    let mut dims: Option<(usize, usize, usize)> = None;
+    let mut src = Vec::new();
+    let mut dst = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        if dims.is_none() {
+            let r: usize = it.next().unwrap().parse()?;
+            let c: usize = it.next().unwrap().parse()?;
+            let nnz: usize = it.next().unwrap().parse()?;
+            dims = Some((r, c, nnz));
+            src.reserve(nnz);
+            dst.reserve(nnz);
+            continue;
+        }
+        let i: u64 = it.next().ok_or_else(|| anyhow::anyhow!("short line"))?.parse()?;
+        let j: u64 = it.next().ok_or_else(|| anyhow::anyhow!("short line"))?.parse()?;
+        if i == 0 || j == 0 {
+            anyhow::bail!("MatrixMarket indices are 1-based; found 0");
+        }
+        src.push((i - 1) as u32);
+        dst.push((j - 1) as u32);
+        if field != "pattern" {
+            let v: f32 = it.next().map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+            vals.push(v);
+        }
+        if symmetry == "symmetric" && i != j {
+            src.push((j - 1) as u32);
+            dst.push((i - 1) as u32);
+            if field != "pattern" {
+                vals.push(*vals.last().unwrap());
+            }
+        }
+    }
+    let (r, c, _) = dims.ok_or_else(|| anyhow::anyhow!("missing size line"))?;
+    let n = r.max(c);
+    let mut coo = Coo::new(n, src, dst);
+    if field != "pattern" {
+        coo.vals = Some(vals);
+    }
+    coo.validate()?;
+    Ok(coo)
+}
+
+/// Write COO as MatrixMarket `matrix coordinate real general`.
+pub fn write_matrix_market(coo: &Coo, path: &Path) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    let field = if coo.vals.is_some() { "real" } else { "pattern" };
+    writeln!(w, "%%MatrixMarket matrix coordinate {field} general")?;
+    writeln!(w, "% written by boba (BOBA reproduction)")?;
+    writeln!(w, "{} {} {}", coo.n(), coo.n(), coo.m())?;
+    match &coo.vals {
+        Some(v) => {
+            for i in 0..coo.m() {
+                writeln!(w, "{} {} {}", coo.src[i] + 1, coo.dst[i] + 1, v[i])?;
+            }
+        }
+        None => {
+            for i in 0..coo.m() {
+                writeln!(w, "{} {}", coo.src[i] + 1, coo.dst[i] + 1)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read a whitespace-separated edge list (`u v` per line, `#` comments),
+/// SNAP style. IDs need not be dense: they are *relabeled to a dense
+/// 0..n range in first-appearance order* — which is exactly a sequential
+/// BOBA pass (the paper's observation that pipelines that must renumber
+/// anyway get BOBA for free). Set `preserve_ids = true` to instead keep
+/// numeric IDs (n = max + 1).
+pub fn read_edge_list(path: &Path, preserve_ids: bool) -> anyhow::Result<Coo> {
+    let f = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(f);
+    let mut raw: Vec<(u64, u64)> = Vec::new();
+    for line in reader.lines() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let u: u64 = it.next().unwrap().parse()?;
+        let v: u64 = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("edge line with one endpoint: {t:?}"))?
+            .parse()?;
+        raw.push((u, v));
+    }
+    if preserve_ids {
+        let n = raw.iter().map(|&(u, v)| u.max(v)).max().map_or(0, |x| x + 1) as usize;
+        let src = raw.iter().map(|&(u, _)| u as u32).collect();
+        let dst = raw.iter().map(|&(_, v)| v as u32).collect();
+        return Ok(Coo::new(n, src, dst));
+    }
+    // Dense relabel in first-appearance order over I++J — BOBA order.
+    let mut map = std::collections::HashMap::new();
+    let mut next = 0u32;
+    let mut id = |x: u64, map: &mut std::collections::HashMap<u64, u32>| {
+        *map.entry(x).or_insert_with(|| {
+            let v = next;
+            next += 1;
+            v
+        })
+    };
+    let mut src = Vec::with_capacity(raw.len());
+    let mut dst = Vec::with_capacity(raw.len());
+    for &(u, _) in &raw {
+        src.push(id(u, &mut map));
+    }
+    for &(_, v) in &raw {
+        dst.push(id(v, &mut map));
+    }
+    Ok(Coo::new(next as usize, src, dst))
+}
+
+/// Write a plain `u v` edge list.
+pub fn write_edge_list(coo: &Coo, path: &Path) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# boba edge list: n={} m={}", coo.n(), coo.m())?;
+    for i in 0..coo.m() {
+        writeln!(w, "{} {}", coo.src[i], coo.dst[i])?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("boba_io_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn mtx_roundtrip_pattern() {
+        let g = Coo::new(4, vec![0, 1, 2, 3], vec![1, 2, 3, 0]);
+        let p = tmp("rt.mtx");
+        write_matrix_market(&g, &p).unwrap();
+        let h = read_matrix_market(&p).unwrap();
+        assert_eq!(g, h);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mtx_roundtrip_real() {
+        let g = Coo::with_vals(3, vec![0, 2], vec![1, 0], vec![1.5, -2.0]);
+        let p = tmp("rtv.mtx");
+        write_matrix_market(&g, &p).unwrap();
+        let h = read_matrix_market(&p).unwrap();
+        assert_eq!(h.vals.as_ref().unwrap(), &vec![1.5, -2.0]);
+        assert_eq!(h.src, g.src);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mtx_symmetric_mirrors() {
+        let p = tmp("sym.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate pattern symmetric\n3 3 2\n2 1\n3 3\n",
+        )
+        .unwrap();
+        let g = read_matrix_market(&p).unwrap();
+        // (2,1) mirrored to (1,2); diagonal (3,3) not mirrored.
+        assert_eq!(g.m(), 3);
+        let set: std::collections::HashSet<_> = g.edges().collect();
+        assert!(set.contains(&(1, 0)) && set.contains(&(0, 1)) && set.contains(&(2, 2)));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mtx_rejects_garbage() {
+        let p = tmp("bad.mtx");
+        std::fs::write(&p, "hello world\n1 1 1\n").unwrap();
+        assert!(read_matrix_market(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn edge_list_dense_relabel_is_first_appearance() {
+        let p = tmp("el.txt");
+        std::fs::write(&p, "# comment\n100 7\n7 100\n500 100\n").unwrap();
+        let g = read_edge_list(&p, false).unwrap();
+        // First appearances scanning I then J: 100→0, 7→1, 500→2.
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.src, vec![0, 1, 2]);
+        assert_eq!(g.dst, vec![1, 0, 0]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn edge_list_preserved_ids() {
+        let p = tmp("el2.txt");
+        std::fs::write(&p, "0 5\n2 3\n").unwrap();
+        let g = read_edge_list(&p, true).unwrap();
+        assert_eq!(g.n(), 6);
+        assert_eq!(g.src, vec![0, 2]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = Coo::new(3, vec![0, 1, 2], vec![1, 2, 0]);
+        let p = tmp("rt.el");
+        write_edge_list(&g, &p).unwrap();
+        let h = read_edge_list(&p, true).unwrap();
+        assert_eq!(g, h);
+        std::fs::remove_file(&p).ok();
+    }
+}

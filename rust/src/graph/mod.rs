@@ -1,0 +1,15 @@
+//! Graph representations and data sources.
+//!
+//! The paper's pipeline starts from a **COO edge list** ([`Coo`]) — the
+//! dominant on-disk format (Matrix Market, SNAP `.el`) — and converts to
+//! **CSR** ([`Csr`]) for computation. [`gen`] provides the synthetic
+//! dataset families standing in for the paper's SuiteSparse/SNAP corpus
+//! (see DESIGN.md §2), and [`io`] reads/writes the interchange formats.
+
+pub mod coo;
+pub mod csr;
+pub mod gen;
+pub mod io;
+
+pub use coo::Coo;
+pub use csr::Csr;

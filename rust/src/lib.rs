@@ -1,0 +1,64 @@
+//! # BOBA — Batched Order By Attachment
+//!
+//! A production-quality reproduction of *"BOBA: A Parallel Lightweight
+//! Graph Reordering Algorithm with Heavyweight Implications"* (Drescher,
+//! Porumbescu, Awad, Owens — UC Davis, 2023).
+//!
+//! The library implements the paper's lightweight reordering algorithm
+//! (sequential Algorithm 2 and parallel Algorithm 3), every baseline the
+//! paper compares against (random relabeling, full degree sort, hub sort,
+//! Reverse Cuthill–McKee, Gorder), the pragmatic graph-creation pipeline
+//! of the paper's Problem 3 (COO ingest → reorder → CSR conversion →
+//! graph algorithm), the four evaluation workloads (SpMV, PageRank,
+//! triangle counting, SSSP), the paper's locality metrics (NBR, NScore,
+//! GScore, bandwidth), and a trace-driven cache simulator standing in for
+//! the paper's GPU profiler counters.
+//!
+//! ## Three-layer architecture
+//!
+//! * **L3 (this crate)** — the coordinator: reordering, conversion,
+//!   algorithms, metrics, experiment drivers, CLI.
+//! * **L2 (python/compile/model.py)** — JAX compute graphs (SpMV over a
+//!   padded ELL layout; a PageRank iteration) AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — the Pallas gather-reduce kernel
+//!   that L2 calls; verified against a pure-jnp oracle at build time.
+//!
+//! Python never runs at request time: [`runtime`] loads the AOT HLO
+//! artifacts through PJRT (the `xla` crate) and executes them natively.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use boba::graph::gen::{self, GenParams};
+//! use boba::reorder::{Reorderer, boba::Boba};
+//! use boba::convert;
+//! use boba::algos::spmv;
+//!
+//! // Generate an R-MAT graph with randomized labels (the paper's input
+//! // model: a COO edge list whose vertex IDs carry no structure).
+//! let coo = gen::rmat(&GenParams::rmat(16, 16), 42).randomized(7);
+//! // Reorder with parallel BOBA (Algorithm 3).
+//! let perm = Boba::parallel().reorder(&coo);
+//! let coo2 = coo.relabeled(perm.new_of_old());
+//! // Convert and run SpMV.
+//! let csr = convert::coo_to_csr(&coo2);
+//! let x = vec![1.0f32; csr.n()];
+//! let y = spmv::spmv_pull(&csr, &x);
+//! assert_eq!(y.len(), csr.n());
+//! ```
+
+pub mod util;
+pub mod parallel;
+pub mod graph;
+pub mod convert;
+pub mod reorder;
+pub mod algos;
+pub mod cachesim;
+pub mod metrics;
+pub mod coordinator;
+pub mod runtime;
+pub mod bench;
+pub mod testing;
+
+/// Crate-wide result type (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,219 @@
+//! `boba` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   datasets                         print the Table-2 style inventory
+//!   generate  --dataset N --out F    build a dataset and write .mtx/.el
+//!   reorder   --algo S [--in F | --dataset N] [--out F]
+//!   convert   [--in F | --dataset N]             time COO→CSR
+//!   run       --app A [--algo S] [--in F | --dataset N]
+//!   pipeline  --app A --algo S [--dataset N]     full Problem-3 pipeline
+//!   table1 | table3 | fig4 | fig5 | fig6 | fig7  regenerate a paper table/figure
+//!   spmv-pjrt [--dataset N] [--pallas]           SpMV through the AOT artifacts
+//!
+//! Common options: --seed (default 42), --scale quick|full (or BOBA_SCALE),
+//! --heavy false (or BOBA_HEAVY=0) to skip Gorder/RCM in figure drivers.
+
+use boba::algos::spmv;
+use boba::convert;
+use boba::coordinator::{datasets, experiments, pipeline};
+use boba::graph::{gen, io, Coo};
+use boba::reorder::{
+    boba::Boba, degree::DegreeSort, gorder::Gorder, hub::HubSort, random::RandomOrder, rcm::Rcm,
+    Reorderer,
+};
+use boba::runtime::{Engine, SpmvKind};
+use boba::util::args::Args;
+use boba::util::timer::Stopwatch;
+use std::path::Path;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> anyhow::Result<()> {
+    if let Some(scale) = args.get("scale") {
+        std::env::set_var("BOBA_SCALE", scale);
+    }
+    if let Some(h) = args.get("heavy") {
+        std::env::set_var("BOBA_HEAVY", if h == "false" || h == "0" { "0" } else { "1" });
+    }
+    let seed: u64 = args.get_parse("seed", 42);
+    match args.command.as_deref() {
+        Some("datasets") => {
+            println!("{}", datasets::inventory(seed));
+        }
+        Some("generate") => {
+            let g = load_graph(args, seed)?;
+            let out = args.get_or("out", "graph.mtx");
+            if out.ends_with(".mtx") {
+                io::write_matrix_market(&g, Path::new(&out))?;
+            } else {
+                io::write_edge_list(&g, Path::new(&out))?;
+            }
+            println!("wrote {} (n={} m={})", out, g.n(), g.m());
+        }
+        Some("reorder") => {
+            let g = load_graph(args, seed)?.randomized(seed + 1);
+            let scheme = scheme_by_name(&args.get_or("algo", "boba"), seed)?;
+            let sw = Stopwatch::start();
+            let perm = scheme.reorder(&g);
+            let ms = sw.ms();
+            let h = g.relabeled(perm.new_of_old());
+            println!(
+                "{}: reordered n={} m={} in {:.2} ms (NBR {:.3} -> {:.3})",
+                scheme.name(),
+                g.n(),
+                g.m(),
+                ms,
+                boba::metrics::nbr_coo(&g),
+                boba::metrics::nbr_coo(&h),
+            );
+            if let Some(out) = args.get("out") {
+                io::write_matrix_market(&h, Path::new(out))?;
+                println!("wrote {out}");
+            }
+        }
+        Some("convert") => {
+            let g = load_graph(args, seed)?.randomized(seed + 1);
+            let sw = Stopwatch::start();
+            let csr = convert::coo_to_csr(&g);
+            println!("COO→CSR: n={} m={} in {:.2} ms", csr.n(), csr.m(), sw.ms());
+        }
+        Some("run") => {
+            let g = load_graph(args, seed)?.randomized(seed + 1);
+            let app = app_by_name(&args.get_or("app", "spmv"))?;
+            let stage = match args.get("algo") {
+                None => pipeline::ReorderStage::None,
+                Some(name) => pipeline::ReorderStage::Scheme(scheme_by_name(name, seed)?),
+            };
+            let report = pipeline::Pipeline::new(app).run(&g, &stage);
+            println!(
+                "{} via {}: total {:.2} ms [{}] digest={:.6e}",
+                report.app,
+                report.scheme,
+                report.total_ms(),
+                report.stages.summary(),
+                report.digest,
+            );
+        }
+        Some("pipeline") => {
+            // The full online scenario: streaming ingest + reorder +
+            // convert + app, with stage timings.
+            let g = load_graph(args, seed)?.randomized(seed + 1);
+            let app = app_by_name(&args.get_or("app", "spmv"))?;
+            let batch: usize = args.get_parse("batch", 1 << 16);
+            let sw = Stopwatch::start();
+            let (producer, stream) = pipeline::StreamingIngest::from_coo(g.clone(), batch, 4);
+            let (assembled, batches) = stream.collect();
+            producer.join().ok();
+            let ingest_ms = sw.ms();
+            let stage = match args.get("algo") {
+                None => pipeline::ReorderStage::Scheme(Box::new(Boba::parallel())),
+                Some(name) => pipeline::ReorderStage::Scheme(scheme_by_name(name, seed)?),
+            };
+            let report = pipeline::Pipeline::new(app).run(&assembled, &stage);
+            println!(
+                "pipeline: ingest {batches} batches in {:.2} ms; {} via {}: {:.2} ms [{}]",
+                ingest_ms,
+                report.app,
+                report.scheme,
+                report.total_ms(),
+                report.stages.summary(),
+            );
+        }
+        Some("table1") => println!("{}", experiments::table1(seed).render()),
+        Some("table3") => println!("{}", experiments::table3(seed).render()),
+        Some("fig4") => println!("{}", experiments::fig4(seed).render()),
+        Some("fig5") => println!("{}", experiments::fig5(seed).render()),
+        Some("fig6") => println!("{}", experiments::fig6(seed).render()),
+        Some("fig7") => println!("{}", experiments::fig7(seed).render()),
+        Some("spmv-pjrt") => {
+            let g = load_graph(args, seed)?.randomized(seed + 1);
+            let csr = convert::coo_to_csr(&g);
+            let engine = Engine::load_default()?;
+            let kind = if args.flag("pallas") { SpmvKind::Pallas } else { SpmvKind::Jnp };
+            let x = vec![1.0f32; csr.n()];
+            let sw = Stopwatch::start();
+            let y = engine.spmv_csr(kind, &csr, &x)?;
+            let pjrt_ms = sw.ms();
+            let y_native = spmv::spmv_pull(&csr, &x);
+            let max_diff = y
+                .iter()
+                .zip(&y_native)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            println!(
+                "PJRT SpMV ({kind:?}) on {}: n={} m={} in {:.2} ms; max |Δ| vs native = {max_diff:e}",
+                engine.platform(),
+                csr.n(),
+                csr.m(),
+                pjrt_ms,
+            );
+        }
+        _ => {
+            eprintln!(
+                "usage: boba <datasets|generate|reorder|convert|run|pipeline|\
+                 table1|table3|fig4|fig5|fig6|fig7|spmv-pjrt> [options]\n\
+                 (see rust/src/main.rs header for options)"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Load a graph from `--in FILE` or build `--dataset NAME` (default
+/// pa_c8).
+fn load_graph(args: &Args, seed: u64) -> anyhow::Result<Coo> {
+    if let Some(path) = args.get("in") {
+        let p = Path::new(path);
+        return if path.ends_with(".mtx") {
+            io::read_matrix_market(p)
+        } else {
+            io::read_edge_list(p, args.flag("preserve-ids"))
+        };
+    }
+    if let Some(name) = args.get("dataset") {
+        if let Some(d) = datasets::by_name(name) {
+            return Ok(d.build(seed));
+        }
+        // Ad-hoc recipes: rmat:scale:ef, pa:n:c, grid:w:h
+        let parts: Vec<&str> = name.split(':').collect();
+        match parts.as_slice() {
+            ["rmat", s, ef] => {
+                return Ok(gen::rmat(&gen::GenParams::rmat(s.parse()?, ef.parse()?), seed))
+            }
+            ["pa", n, c] => return Ok(gen::preferential_attachment(n.parse()?, c.parse()?, seed)),
+            ["grid", w, h] => return Ok(gen::grid_road(w.parse()?, h.parse()?, seed)),
+            _ => anyhow::bail!("unknown dataset {name}"),
+        }
+    }
+    Ok(datasets::by_name("pa_c8").unwrap().build(seed))
+}
+
+fn scheme_by_name(name: &str, seed: u64) -> anyhow::Result<Box<dyn Reorderer + Send + Sync>> {
+    Ok(match name.to_lowercase().as_str() {
+        "boba" => Box::new(Boba::parallel()),
+        "boba-seq" => Box::new(Boba::sequential()),
+        "boba-atomic" => Box::new(Boba::parallel_atomic()),
+        "degree" => Box::new(DegreeSort::new()),
+        "hub" => Box::new(HubSort::new()),
+        "rcm" => Box::new(Rcm::new()),
+        "gorder" => Box::new(Gorder::new(5)),
+        "random" => Box::new(RandomOrder::new(seed)),
+        other => anyhow::bail!("unknown scheme {other}"),
+    })
+}
+
+fn app_by_name(name: &str) -> anyhow::Result<pipeline::App> {
+    Ok(match name.to_lowercase().as_str() {
+        "spmv" => pipeline::App::Spmv,
+        "pr" | "pagerank" => pipeline::App::PageRank,
+        "tc" => pipeline::App::Tc,
+        "sssp" => pipeline::App::Sssp,
+        other => anyhow::bail!("unknown app {other}"),
+    })
+}

@@ -1,0 +1,234 @@
+//! Locality metrics from the paper: NBR (§5.2, Table 1), NScore (Model 7),
+//! GScore (Model 6, Wei et al.), and matrix bandwidth (§3.1.1).
+//!
+//! All metrics are functions of the *labeled* graph — apply a reordering
+//! first ([`crate::graph::Coo::relabeled`]) and compare metric values
+//! across schemes, as Table 1 does.
+
+use crate::convert::coo_to_csr;
+use crate::graph::{Coo, Csr};
+use std::collections::HashSet;
+
+/// Cache line size (in vertex IDs) used by NBR: 128-byte GPU cache lines
+/// over 4-byte IDs, the paper's setting.
+pub const IDS_PER_LINE: u64 = 32;
+
+/// NBR(G) — the paper's spatial-locality metric (§5.2): the expected
+/// ratio of cache lines spanned by a vertex's neighborhood to its size,
+/// averaged over vertices with at least one neighbor. Lower is better.
+///
+/// "Lines spanned" counts *distinct* cache lines touched by the
+/// neighborhood's IDs with a 128-byte line (32 × u32 IDs).
+pub fn nbr(csr: &Csr) -> f64 {
+    nbr_lines(csr, IDS_PER_LINE)
+}
+
+/// NBR with an explicit line size (in IDs per line).
+pub fn nbr_lines(csr: &Csr, ids_per_line: u64) -> f64 {
+    let n = csr.n();
+    let mut total = 0.0;
+    let mut counted = 0usize;
+    let mut lines: HashSet<u64> = HashSet::new();
+    for v in 0..n {
+        let nb = csr.neighbors(v);
+        if nb.is_empty() {
+            continue;
+        }
+        lines.clear();
+        for &u in nb {
+            lines.insert(u as u64 / ids_per_line);
+        }
+        total += lines.len() as f64 / nb.len() as f64;
+        counted += 1;
+    }
+    if counted == 0 {
+        0.0
+    } else {
+        total / counted as f64
+    }
+}
+
+/// NBR straight from a COO (converts internally; Table 1 reports "NBR
+/// over CSR").
+pub fn nbr_coo(coo: &Coo) -> f64 {
+    nbr(&coo_to_csr(coo))
+}
+
+/// NScore(G, p) for the *current* labeling (Model 7): sum over
+/// consecutive vertex IDs of shared out-neighbor counts,
+/// `Σ_{i=1}^{n-1} |N(i) ∩ N(i+1)|`.
+pub fn nscore(coo: &Coo) -> u64 {
+    nscore_csr(&coo_to_csr(coo))
+}
+
+/// NScore over a prebuilt CSR (rows need not be sorted; sorting is done
+/// on local copies).
+pub fn nscore_csr(csr: &Csr) -> u64 {
+    let n = csr.n();
+    if n < 2 {
+        return 0;
+    }
+    let mut total = 0u64;
+    let mut a: Vec<u32> = Vec::new();
+    let mut b: Vec<u32> = Vec::new();
+    for i in 0..n - 1 {
+        a.clear();
+        a.extend_from_slice(csr.neighbors(i));
+        a.sort_unstable();
+        a.dedup();
+        b.clear();
+        b.extend_from_slice(csr.neighbors(i + 1));
+        b.sort_unstable();
+        b.dedup();
+        total += sorted_intersection_count(&a, &b);
+    }
+    total
+}
+
+/// GScore(G, w) (Model 6): windowed generalization —
+/// `Σ_i Σ_{j=max(1,i-w)}^{i-1} s(v_i, v_j)` with
+/// `s(u,v) = |N(u) ∩ N(v)| + |{uv,vu} ∩ E|`.
+pub fn gscore(coo: &Coo, w: usize) -> u64 {
+    let csr = {
+        let mut c = coo_to_csr(&coo.deduped());
+        c.sort_rows();
+        c
+    };
+    let n = csr.n();
+    let mut total = 0u64;
+    for i in 0..n {
+        for j in i.saturating_sub(w)..i {
+            let shared =
+                sorted_intersection_count(csr.neighbors(i), csr.neighbors(j));
+            let uv = csr.neighbors(i).binary_search(&(j as u32)).is_ok() as u64;
+            let vu = csr.neighbors(j).binary_search(&(i as u32)).is_ok() as u64;
+            total += shared + uv + vu;
+        }
+    }
+    total
+}
+
+/// Matrix bandwidth (§3.1.1): `max_{uv ∈ E} |p(u) - p(v)|` under the
+/// current labeling.
+pub fn bandwidth(coo: &Coo) -> u64 {
+    coo.edges()
+        .map(|(u, v)| (u as i64 - v as i64).unsigned_abs())
+        .max()
+        .unwrap_or(0)
+}
+
+/// Average per-edge label distance — a smoother locality signal than the
+/// max; used by the spy-plot example's captions.
+pub fn avg_edge_distance(coo: &Coo) -> f64 {
+    if coo.m() == 0 {
+        return 0.0;
+    }
+    let s: u64 = coo
+        .edges()
+        .map(|(u, v)| (u as i64 - v as i64).unsigned_abs())
+        .sum();
+    s as f64 / coo.m() as f64
+}
+
+/// |A ∩ B| for sorted, deduped slices.
+fn sorted_intersection_count(a: &[u32], b: &[u32]) -> u64 {
+    let (mut i, mut j, mut c) = (0usize, 0usize, 0u64);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                c += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    c
+}
+
+/// Lemma 8's upper bound: NScore(G, p*) ≤ m. Exposed so property tests
+/// and the theory benches can assert it.
+pub fn nscore_upper_bound(coo: &Coo) -> u64 {
+    coo.m() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn intersection_counts() {
+        assert_eq!(sorted_intersection_count(&[1, 3, 5], &[2, 3, 5, 9]), 2);
+        assert_eq!(sorted_intersection_count(&[], &[1]), 0);
+        assert_eq!(sorted_intersection_count(&[7], &[7]), 1);
+    }
+
+    #[test]
+    fn bandwidth_path_identity() {
+        let n = 10u32;
+        let g = Coo::new(10, (0..n - 1).collect(), (1..n).collect());
+        assert_eq!(bandwidth(&g), 1);
+        let r = g.randomized(3);
+        assert!(bandwidth(&r) > 1);
+    }
+
+    #[test]
+    fn nscore_of_shared_neighbor_pair() {
+        // 0 and 1 both point to 2 and 3; consecutive labels 0,1 share 2.
+        let g = Coo::new(4, vec![0, 0, 1, 1], vec![2, 3, 2, 3]);
+        assert_eq!(nscore(&g), 2);
+    }
+
+    #[test]
+    fn nscore_respects_lemma8() {
+        for seed in 0..5 {
+            let g = gen::uniform_random(100, 600, seed);
+            assert!(nscore(&g) <= nscore_upper_bound(&g));
+        }
+    }
+
+    #[test]
+    fn gscore_window_contains_nscore_pairs() {
+        // GScore(w=1) >= NScore because s() adds the edge indicator.
+        let g = gen::preferential_attachment(200, 3, 1).randomized(2);
+        assert!(gscore(&g, 1) >= nscore(&g.deduped()));
+    }
+
+    #[test]
+    fn nbr_identity_mesh_beats_random() {
+        // Row-major mesh labels are spatially local: NBR must beat the
+        // randomized labeling clearly (this is Table 1's core contrast).
+        let g = gen::delaunay_mesh(40, 40, 2);
+        let nat = nbr_coo(&g);
+        let rnd = nbr_coo(&g.randomized(5));
+        assert!(nat < 0.8 * rnd, "natural {nat} vs random {rnd}");
+    }
+
+    #[test]
+    fn nbr_perfect_locality_low() {
+        // Every vertex's neighbors in one line -> NBR = 1/deg ... with
+        // deg 4 inside one line: lines=1, |N|=4 -> 0.25.
+        let g = Coo::new(
+            8,
+            vec![0, 0, 0, 0],
+            vec![1, 2, 3, 4],
+        );
+        let csr = coo_to_csr(&g);
+        assert!((nbr(&csr) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nbr_range() {
+        let g = gen::rmat(&gen::GenParams::rmat(10, 8), 3).randomized(1);
+        let v = nbr_coo(&g);
+        assert!(v > 0.0 && v <= 1.0, "nbr {v}");
+    }
+
+    #[test]
+    fn avg_edge_distance_path() {
+        let g = Coo::new(5, vec![0, 1, 2, 3], vec![1, 2, 3, 4]);
+        assert!((avg_edge_distance(&g) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,290 @@
+//! The parallel-execution substrate — this crate's stand-in for the
+//! paper's GPU.
+//!
+//! The paper runs BOBA (Algorithm 3) and the graph kernels on a V100 with
+//! tens of thousands of hardware threads; offline, neither `rayon` nor
+//! `tokio` resolve, so the crate carries a small deterministic data-parallel
+//! runtime built on `std::thread::scope`:
+//!
+//! * [`par_for_chunks`] / [`par_map_chunks`] — static+dynamic chunked
+//!   parallel-for over an index range (the moral equivalent of a CUDA grid
+//!   launch: each chunk is a "thread block").
+//! * [`par_reduce`] — tree reduction of per-worker partials.
+//! * [`atomic`] — atomic u32/usize min-arrays used by the atomic-min
+//!   variant of Algorithm 3.
+//!
+//! Worker count defaults to the machine's available parallelism and can be
+//! pinned through [`set_threads`] (used by benches to sweep scaling) or the
+//! `BOBA_THREADS` environment variable.
+
+pub mod atomic;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of worker threads the runtime will use.
+pub fn threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    if let Ok(v) = std::env::var("BOBA_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Pin the worker count (0 restores the default). Returns the previous
+/// override.
+pub fn set_threads(n: usize) -> usize {
+    THREAD_OVERRIDE.swap(n, Ordering::Relaxed)
+}
+
+/// Scope guard that pins the worker count for its lifetime.
+pub struct ThreadGuard(usize);
+
+impl ThreadGuard {
+    /// Pin to `n` threads until the guard drops.
+    pub fn pin(n: usize) -> Self {
+        Self(set_threads(n))
+    }
+}
+
+impl Drop for ThreadGuard {
+    fn drop(&mut self) {
+        set_threads(self.0);
+    }
+}
+
+/// Pick a chunk size for `len` items: large enough to amortize dispatch,
+/// small enough that dynamic scheduling load-balances (~8 chunks/worker).
+pub fn default_chunk(len: usize) -> usize {
+    let t = threads();
+    (len / (t * 8)).max(1024).min(len.max(1))
+}
+
+/// Dynamic chunked parallel-for: `body(lo, hi)` is invoked on disjoint
+/// subranges of `0..len` from multiple threads. `body` must be fine with
+/// any interleaving (the CUDA-kernel contract).
+pub fn par_for_chunks<F>(len: usize, chunk: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if len == 0 {
+        return;
+    }
+    let t = threads().min(len.div_ceil(chunk)).max(1);
+    if t == 1 {
+        body(0, len);
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..t {
+            s.spawn(|| loop {
+                let lo = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if lo >= len {
+                    break;
+                }
+                let hi = (lo + chunk).min(len);
+                body(lo, hi);
+            });
+        }
+    });
+}
+
+/// Parallel map over chunks writing into a fresh `Vec<T>`: `fill(lo, hi,
+/// out_slice)` must fully initialize `out_slice` (length `hi - lo`).
+pub fn par_map_chunks<T, F>(len: usize, chunk: usize, fill: F) -> Vec<T>
+where
+    T: Copy + Default + Send + Sync,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let mut out = vec![T::default(); len];
+    {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        par_for_chunks(len, chunk, |lo, hi| {
+            // SAFETY: chunks are disjoint, so each &mut slice is exclusive.
+            let slice = unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(lo), hi - lo) };
+            fill(lo, hi, slice);
+        });
+    }
+    out
+}
+
+/// Parallel reduction: each worker folds chunks into an accumulator with
+/// `fold`, partials are combined with `merge`.
+pub fn par_reduce<A, F, M>(len: usize, chunk: usize, identity: A, fold: F, merge: M) -> A
+where
+    A: Send + Clone,
+    F: Fn(A, usize, usize) -> A + Sync,
+    M: Fn(A, A) -> A,
+{
+    if len == 0 {
+        return identity;
+    }
+    let t = threads().min(len.div_ceil(chunk)).max(1);
+    if t == 1 {
+        return fold(identity, 0, len);
+    }
+    let cursor = AtomicUsize::new(0);
+    let fold_ref = &fold;
+    let partials: Vec<A> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..t)
+            .map(|_| {
+                let id = identity.clone();
+                let cursor = &cursor;
+                s.spawn(move || {
+                    let mut acc = id;
+                    loop {
+                        let lo = cursor.fetch_add(chunk, Ordering::Relaxed);
+                        if lo >= len {
+                            break;
+                        }
+                        let hi = (lo + chunk).min(len);
+                        acc = fold_ref(acc, lo, hi);
+                    }
+                    acc
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    partials.into_iter().fold(identity, merge)
+}
+
+/// Run `k` independent jobs (one thread each, capped at the worker count),
+/// returning their results in order. The coordinator uses this for
+/// multi-request dispatch.
+pub fn par_jobs<T: Send, F>(jobs: Vec<F>) -> Vec<T>
+where
+    F: FnOnce() -> T + Send,
+{
+    let t = threads();
+    if t == 1 || jobs.len() <= 1 {
+        return jobs.into_iter().map(|j| j()).collect();
+    }
+    // Simple wave scheduling: spawn up to `t` at a time.
+    let mut results: Vec<Option<T>> = Vec::new();
+    for _ in 0..jobs.len() {
+        results.push(None);
+    }
+    let mut jobs: Vec<Option<F>> = jobs.into_iter().map(Some).collect();
+    let n = jobs.len();
+    let mut start = 0;
+    while start < n {
+        let end = (start + t).min(n);
+        let wave: Vec<(usize, F)> =
+            (start..end).map(|i| (i, jobs[i].take().unwrap())).collect();
+        let wave_results: Vec<(usize, T)> = std::thread::scope(|s| {
+            let handles: Vec<_> = wave
+                .into_iter()
+                .map(|(i, job)| s.spawn(move || (i, job())))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (i, r) in wave_results {
+            results[i] = Some(r);
+        }
+        start = end;
+    }
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// A Send+Sync raw-pointer wrapper for disjoint-chunk writes.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> SendPtr<T> {
+    #[inline]
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_covers_every_index_once() {
+        let n = 100_000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        par_for_chunks(n, 1000, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_fills_exactly() {
+        let v = par_map_chunks(10_000, 128, |lo, _hi, out| {
+            for (k, slot) in out.iter_mut().enumerate() {
+                *slot = (lo + k) as u64 * 2;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as u64 * 2);
+        }
+    }
+
+    #[test]
+    fn par_reduce_sums() {
+        let n = 1_000_000usize;
+        let s = par_reduce(n, 4096, 0u64, |acc, lo, hi| {
+            acc + (lo..hi).map(|i| i as u64).sum::<u64>()
+        }, |a, b| a + b);
+        assert_eq!(s, (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn par_reduce_empty_is_identity() {
+        let s = par_reduce(0, 16, 7u64, |a, _, _| a + 1, |a, b| a + b);
+        assert_eq!(s, 7);
+    }
+
+    #[test]
+    fn thread_guard_restores() {
+        let before = threads();
+        {
+            let _g = ThreadGuard::pin(2);
+            assert_eq!(threads(), 2);
+        }
+        assert_eq!(threads(), before);
+    }
+
+    #[test]
+    fn par_jobs_ordered_results() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..17usize).map(|i| Box::new(move || i * i) as _).collect();
+        let out = par_jobs(jobs);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let _g = ThreadGuard::pin(1);
+        let total = AtomicU64::new(0);
+        par_for_chunks(1000, 10, |lo, hi| {
+            total.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn default_chunk_reasonable() {
+        assert!(default_chunk(10) >= 1);
+        assert!(default_chunk(100_000_000) >= 1024);
+    }
+}

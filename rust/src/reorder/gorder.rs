@@ -1,0 +1,210 @@
+//! Gorder (Wei, Yu, Lu, Lin — SIGMOD 2016) — the paper's second
+//! heavyweight baseline (§3.1.2): a greedy 1/(2w)-approximation of the
+//! windowed-TSP objective GScore (Model 6). Vertices are emitted one at a
+//! time; the next vertex is the one with the largest total score
+//! `s(u, v) = |N_in(u) ∩ N_in(v)| + |{uv, vu} ∩ E|` against the last `w`
+//! emitted vertices.
+//!
+//! Implementation follows the Gorder paper's incremental scheme: placing
+//! `ve` bumps the priority of its out/in-neighbors (edge term) and of all
+//! co-children of its in-neighbors (sibling term); when `vb` slides out
+//! of the window the same deltas are subtracted. The priority queue is a
+//! lazy max-heap (stale entries re-validated on pop) standing in for the
+//! paper's unit heap. Runtime `O(w · deg_max · m)` worst case — Gorder is
+//! *the* heavyweight method, and its cost showing up as 2–3 orders above
+//! BOBA's in Fig. 5/6 is part of the reproduction.
+
+use super::perm::Permutation;
+use super::Reorderer;
+use crate::convert::coo_to_csr;
+use crate::graph::{Coo, Csr};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Gorder reorderer with window `w` (the paper of record uses w=5).
+#[derive(Clone, Debug)]
+pub struct Gorder {
+    w: usize,
+    hub_cap: usize,
+}
+
+impl Gorder {
+    /// Create with window size `w` and the default hub relaxation.
+    pub fn new(w: usize) -> Self {
+        assert!(w >= 1);
+        Self { w, hub_cap: 2048 }
+    }
+
+    /// Sibling enumeration skips common in-neighbors with out-degree
+    /// above `cap` — the hub relaxation Gorder's reference implementation
+    /// applies (a mega-hub is an in-neighbor of ~everything, so its
+    /// sibling contribution is near-uniform noise at quadratic cost).
+    /// `usize::MAX` disables the relaxation.
+    pub fn with_hub_cap(w: usize, cap: usize) -> Self {
+        assert!(w >= 1);
+        Self { w, hub_cap: cap }
+    }
+}
+
+impl Reorderer for Gorder {
+    fn name(&self) -> &'static str {
+        "Gorder"
+    }
+
+    fn lightweight(&self) -> bool {
+        false
+    }
+
+    fn reorder(&self, coo: &Coo) -> Permutation {
+        let g = coo.deduped();
+        let out = coo_to_csr(&g);
+        let inn = out.transposed();
+        gorder_greedy(&out, &inn, self.w, self.hub_cap)
+    }
+}
+
+/// The greedy window scan.
+fn gorder_greedy(out: &Csr, inn: &Csr, w: usize, hub_cap: usize) -> Permutation {
+    let n = out.n();
+    if n == 0 {
+        return Permutation::identity(0);
+    }
+    let mut key = vec![0i64; n]; // current window score per candidate
+    let mut placed = vec![false; n];
+    let mut order: Vec<u32> = Vec::with_capacity(n);
+    // Lazy max-heap of (key, vertex); entries go stale when key changes.
+    let mut heap: BinaryHeap<(i64, Reverse<u32>)> = BinaryHeap::new();
+
+    // Start from the max-total-degree vertex (Gorder's choice: max
+    // in-degree; total degree is equivalent for the symmetric datasets and
+    // more robust on directed ones).
+    let seed = (0..n)
+        .max_by_key(|&v| out.degree(v) + inn.degree(v))
+        .unwrap() as u32;
+
+    // Apply the score delta of vertex `ve` entering (+1) / leaving (-1)
+    // the window, updating candidate keys and pushing fresh heap entries.
+    let apply = |ve: u32,
+                     sign: i64,
+                     key: &mut Vec<i64>,
+                     heap: &mut BinaryHeap<(i64, Reverse<u32>)>,
+                     placed: &Vec<bool>| {
+        let bump = |u: u32, key: &mut Vec<i64>, heap: &mut BinaryHeap<(i64, Reverse<u32>)>| {
+            if !placed[u as usize] {
+                key[u as usize] += sign;
+                if sign > 0 {
+                    heap.push((key[u as usize], Reverse(u)));
+                }
+            }
+        };
+        // Edge term: uv or vu in E.
+        for &u in out.neighbors(ve as usize) {
+            bump(u, key, heap);
+        }
+        for &u in inn.neighbors(ve as usize) {
+            bump(u, key, heap);
+        }
+        // Sibling term: common in-neighbor x (x -> ve and x -> u).
+        for &x in inn.neighbors(ve as usize) {
+            if out.degree(x as usize) > hub_cap {
+                continue; // hub relaxation (see Gorder::with_hub_cap)
+            }
+            for &u in out.neighbors(x as usize) {
+                if u != ve {
+                    bump(u, key, heap);
+                }
+            }
+        }
+    };
+
+    // Place the seed.
+    placed[seed as usize] = true;
+    order.push(seed);
+    apply(seed, 1, &mut key, &mut heap, &placed);
+
+    let mut next_fallback = 0u32; // ID scan for empty-heap (new component)
+    while order.len() < n {
+        // Window slide-out.
+        if order.len() > w {
+            let vb = order[order.len() - 1 - w];
+            apply(vb, -1, &mut key, &mut heap, &placed);
+        }
+        // Pop until a fresh entry surfaces.
+        let ve = loop {
+            match heap.pop() {
+                Some((k, Reverse(v))) => {
+                    if placed[v as usize] {
+                        continue;
+                    }
+                    if k > key[v as usize] {
+                        // Stale (a decrement happened); re-insert at the
+                        // true priority and keep looking.
+                        heap.push((key[v as usize], Reverse(v)));
+                        continue;
+                    }
+                    break v;
+                }
+                None => {
+                    // Disconnected leftover: take the next unplaced ID.
+                    while placed[next_fallback as usize] {
+                        next_fallback += 1;
+                    }
+                    break next_fallback;
+                }
+            }
+        };
+        placed[ve as usize] = true;
+        order.push(ve);
+        apply(ve, 1, &mut key, &mut heap, &placed);
+    }
+    Permutation::from_order(&order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::metrics::{gscore, nscore};
+
+    #[test]
+    fn valid_permutation() {
+        let g = gen::preferential_attachment(300, 3, 2).randomized(4);
+        let p = Gorder::new(5).reorder(&g);
+        p.validate(g.n()).unwrap();
+    }
+
+    #[test]
+    fn valid_on_disconnected() {
+        let g = Coo::new(7, vec![0, 1, 4, 5], vec![1, 2, 5, 6]); // vertex 3 isolated
+        let p = Gorder::new(3).reorder(&g);
+        p.validate(7).unwrap();
+    }
+
+    #[test]
+    fn improves_gscore_over_random() {
+        let g = gen::preferential_attachment(600, 4, 5).randomized(11);
+        let p = Gorder::new(5).reorder(&g);
+        let h = g.relabeled(p.new_of_old());
+        let sc_rand = gscore(&g, 5);
+        let sc_gord = gscore(&h, 5);
+        assert!(
+            sc_gord as f64 > 1.5 * sc_rand as f64,
+            "gorder {sc_gord} vs rand {sc_rand}"
+        );
+    }
+
+    #[test]
+    fn improves_nscore_on_mesh() {
+        let g = gen::delaunay_mesh(16, 16, 3).randomized(6);
+        let p = Gorder::new(5).reorder(&g);
+        let h = g.relabeled(p.new_of_old());
+        assert!(nscore(&h) > nscore(&g), "{} vs {}", nscore(&h), nscore(&g));
+    }
+
+    #[test]
+    fn window_one_still_works() {
+        let g = gen::grid_road(10, 10, 1).randomized(2);
+        let p = Gorder::new(1).reorder(&g);
+        p.validate(g.n()).unwrap();
+    }
+}

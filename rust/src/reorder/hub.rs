@@ -1,0 +1,97 @@
+//! Hub sort (frequency-based sorting, Zhang et al. 2017) — the partial
+//! variant of degree sorting the paper benchmarks: only *hub* vertices
+//! (degree above the average) are sorted to the front; all other vertices
+//! keep their relative order. Cheaper than a full sort and preserves
+//! whatever structure the non-hub labels already carry.
+
+use super::perm::Permutation;
+use super::Reorderer;
+use crate::graph::Coo;
+
+/// Hub-sort reorderer.
+#[derive(Clone, Debug, Default)]
+pub struct HubSort;
+
+impl HubSort {
+    /// Create with the standard avg-degree hub threshold.
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Reorderer for HubSort {
+    fn name(&self) -> &'static str {
+        "Hub"
+    }
+
+    fn reorder(&self, coo: &Coo) -> Permutation {
+        let deg = coo.total_degrees();
+        let n = coo.n();
+        if n == 0 {
+            return Permutation::identity(0);
+        }
+        let avg = (2 * coo.m()) as f64 / n as f64;
+        // Hubs sorted by degree descending (ID tiebreak); non-hubs follow
+        // in original ID order.
+        let mut hubs: Vec<u32> = (0..n as u32)
+            .filter(|&v| deg[v as usize] as f64 > avg)
+            .collect();
+        hubs.sort_by_key(|&v| (u32::MAX - deg[v as usize], v));
+        let mut order = hubs;
+        for v in 0..n as u32 {
+            if !(deg[v as usize] as f64 > avg) {
+                order.push(v);
+            }
+        }
+        Permutation::from_order(&order)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn hubs_precede_nonhubs() {
+        let g = gen::preferential_attachment(500, 4, 1).randomized(7);
+        let p = HubSort::new().reorder(&g);
+        let deg = g.total_degrees();
+        let avg = (2 * g.m()) as f64 / g.n() as f64;
+        let order = p.order();
+        let boundary = order
+            .iter()
+            .position(|&v| !(deg[v as usize] as f64 > avg))
+            .unwrap();
+        assert!(order[boundary..].iter().all(|&v| deg[v as usize] as f64 <= avg));
+        // Hubs sorted descending by degree.
+        for w in order[..boundary].windows(2) {
+            assert!(deg[w[0] as usize] >= deg[w[1] as usize]);
+        }
+    }
+
+    #[test]
+    fn nonhubs_keep_relative_order() {
+        let g = gen::grid_road(20, 20, 3);
+        let p = HubSort::new().reorder(&g);
+        let deg = g.total_degrees();
+        let avg = (2 * g.m()) as f64 / g.n() as f64;
+        let order = p.order();
+        let nonhubs: Vec<u32> = order
+            .iter()
+            .copied()
+            .filter(|&v| deg[v as usize] as f64 <= avg)
+            .collect();
+        // Original ID order preserved.
+        for w in nonhubs.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn valid_on_uniform_graph() {
+        let g = gen::uniform_random(200, 800, 2);
+        let p = HubSort::new().reorder(&g);
+        p.validate(200).unwrap();
+    }
+}

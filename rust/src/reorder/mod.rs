@@ -1,0 +1,101 @@
+//! Vertex reordering algorithms: BOBA (the paper's contribution) and
+//! every baseline its evaluation compares against.
+//!
+//! | Scheme | Class | Paper section | Module |
+//! |---|---|---|---|
+//! | BOBA (seq Alg. 2, par Alg. 3) | lightweight | §4 | [`boba`] |
+//! | Random relabeling | baseline | §5.1 | [`random`] |
+//! | Full sort by degree | lightweight | §3.2 | [`degree`] |
+//! | Hub sort (frequency sort) | lightweight | §3.2 [Zhang et al. 2017] | [`hub`] |
+//! | Reverse Cuthill–McKee | heavyweight | §3.1.1 [Cuthill & McKee 1969] | [`rcm`] |
+//! | Gorder (window-w greedy) | heavyweight | §3.1.2 [Wei et al. 2016] | [`gorder`] |
+//!
+//! All reorderers consume a COO (the paper's pragmatic pipeline input) and
+//! produce a [`Permutation`] mapping old vertex IDs to new ones; apply it
+//! with [`crate::graph::Coo::relabeled`].
+
+pub mod perm;
+pub mod boba;
+pub mod random;
+pub mod degree;
+pub mod hub;
+pub mod rcm;
+pub mod gorder;
+
+pub use perm::Permutation;
+
+use crate::graph::Coo;
+
+/// A vertex-reordering algorithm.
+pub trait Reorderer {
+    /// Short name used in tables ("BOBA", "Gorder", ...).
+    fn name(&self) -> &'static str;
+
+    /// Compute the permutation for `coo` (old ID → new ID).
+    fn reorder(&self, coo: &Coo) -> Permutation;
+
+    /// Compute the permutation AND the relabeled COO.
+    ///
+    /// The default is reorder-then-relabel (two passes). BOBA overrides
+    /// it with a single fused pass: assigning labels *is* scanning the
+    /// edge list, so the relabeled arrays can be emitted for free — this
+    /// matches the paper's GPU kernel, whose output is the reordered
+    /// edge list, and is the §Perf accounting used by the pipeline
+    /// ("reorder" = produce the relabeled COO).
+    fn reorder_relabel(&self, coo: &Coo) -> (Permutation, Coo) {
+        let p = self.reorder(coo);
+        let relabeled = coo.relabeled(p.new_of_old());
+        (p, relabeled)
+    }
+
+    /// Whether the method is lightweight in the paper's taxonomy
+    /// (affects which experiments include it).
+    fn lightweight(&self) -> bool {
+        true
+    }
+}
+
+/// Every scheme of the paper's §5 benches, in table order:
+/// Random is implicit (the input is pre-randomized), so this returns
+/// Gorder, RCM, BOBA, Hub, Degree.
+pub fn all_schemes(seed: u64) -> Vec<Box<dyn Reorderer + Send + Sync>> {
+    vec![
+        Box::new(gorder::Gorder::new(5)),
+        Box::new(rcm::Rcm::new()),
+        Box::new(boba::Boba::parallel()),
+        Box::new(hub::HubSort::new()),
+        Box::new(degree::DegreeSort::new()),
+        Box::new(random::RandomOrder::new(seed)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn every_scheme_produces_valid_permutation() {
+        let g = gen::preferential_attachment(500, 4, 3).randomized(9);
+        for scheme in all_schemes(1) {
+            let p = scheme.reorder(&g);
+            p.validate(g.n()).unwrap_or_else(|e| {
+                panic!("{} produced invalid permutation: {e}", scheme.name())
+            });
+        }
+    }
+
+    #[test]
+    fn relabeled_graph_preserves_degree_multiset() {
+        let g = gen::grid_road(30, 30, 2).randomized(5);
+        for scheme in all_schemes(2) {
+            let p = scheme.reorder(&g);
+            let h = g.relabeled(p.new_of_old());
+            let mut d0 = g.total_degrees();
+            let mut d1 = h.total_degrees();
+            d0.sort_unstable();
+            d1.sort_unstable();
+            assert_eq!(d0, d1, "{}", scheme.name());
+        }
+    }
+}

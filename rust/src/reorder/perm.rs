@@ -1,0 +1,138 @@
+//! Vertex permutations: the output type of every reorderer.
+//!
+//! Two equivalent encodings appear in the paper: the *order* form
+//! `p = p_1 p_2 ... p_n` (Algorithm 2's output — `p[k]` is the old ID of
+//! the vertex placed at new position `k`) and the *mapping* form
+//! (`new_of_old[v]` = new ID of old vertex `v`), which is what
+//! [`crate::graph::Coo::relabeled`] consumes. [`Permutation`] stores the
+//! mapping form and converts from either.
+
+/// A bijection on `0..n` vertex IDs, stored as `old → new`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Permutation {
+    new_of_old: Vec<u32>,
+}
+
+impl Permutation {
+    /// Identity permutation.
+    pub fn identity(n: usize) -> Self {
+        Self { new_of_old: (0..n as u32).collect() }
+    }
+
+    /// From the mapping form (`new_of_old[old] = new`).
+    pub fn from_new_of_old(new_of_old: Vec<u32>) -> Self {
+        Self { new_of_old }
+    }
+
+    /// From the order form (`order[k] = old ID at new position k`, the
+    /// paper's `p`).
+    pub fn from_order(order: &[u32]) -> Self {
+        let mut new_of_old = vec![u32::MAX; order.len()];
+        for (new, &old) in order.iter().enumerate() {
+            new_of_old[old as usize] = new as u32;
+        }
+        Self { new_of_old }
+    }
+
+    /// The mapping slice (`old → new`).
+    pub fn new_of_old(&self) -> &[u32] {
+        &self.new_of_old
+    }
+
+    /// Number of vertices.
+    pub fn len(&self) -> usize {
+        self.new_of_old.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.new_of_old.is_empty()
+    }
+
+    /// The order form (`new → old`), i.e. the inverse mapping.
+    pub fn order(&self) -> Vec<u32> {
+        let mut order = vec![u32::MAX; self.len()];
+        for (old, &new) in self.new_of_old.iter().enumerate() {
+            order[new as usize] = old as u32;
+        }
+        order
+    }
+
+    /// Inverse permutation.
+    pub fn inverse(&self) -> Permutation {
+        Permutation { new_of_old: self.order() }
+    }
+
+    /// Compose: apply `self` first, then `after` (`(after ∘ self)(v)`).
+    pub fn then(&self, after: &Permutation) -> Permutation {
+        assert_eq!(self.len(), after.len());
+        let new_of_old = self
+            .new_of_old
+            .iter()
+            .map(|&mid| after.new_of_old[mid as usize])
+            .collect();
+        Permutation { new_of_old }
+    }
+
+    /// Check bijectivity over `0..n`.
+    pub fn validate(&self, n: usize) -> anyhow::Result<()> {
+        if self.len() != n {
+            anyhow::bail!("permutation has {} entries, expected {n}", self.len());
+        }
+        let mut seen = vec![false; n];
+        for (old, &new) in self.new_of_old.iter().enumerate() {
+            let idx = new as usize;
+            if idx >= n {
+                anyhow::bail!("vertex {old} maps to {new} ≥ n={n}");
+            }
+            if seen[idx] {
+                anyhow::bail!("new ID {new} assigned twice");
+            }
+            seen[idx] = true;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_maps_to_self() {
+        let p = Permutation::identity(5);
+        assert_eq!(p.new_of_old(), &[0, 1, 2, 3, 4]);
+        p.validate(5).unwrap();
+    }
+
+    #[test]
+    fn order_mapping_roundtrip() {
+        // order: position 0 holds old vertex 2, etc.
+        let order = vec![2u32, 0, 1];
+        let p = Permutation::from_order(&order);
+        assert_eq!(p.new_of_old(), &[1, 2, 0]);
+        assert_eq!(p.order(), order);
+    }
+
+    #[test]
+    fn inverse_composes_to_identity() {
+        let p = Permutation::from_new_of_old(vec![3, 1, 0, 2]);
+        let composed = p.then(&p.inverse());
+        assert_eq!(composed, Permutation::identity(4));
+    }
+
+    #[test]
+    fn validate_catches_duplicates_and_range() {
+        assert!(Permutation::from_new_of_old(vec![0, 0]).validate(2).is_err());
+        assert!(Permutation::from_new_of_old(vec![0, 5]).validate(2).is_err());
+        assert!(Permutation::from_new_of_old(vec![0]).validate(2).is_err());
+        assert!(Permutation::from_new_of_old(vec![1, 0]).validate(2).is_ok());
+    }
+
+    #[test]
+    fn then_applies_in_sequence() {
+        let a = Permutation::from_new_of_old(vec![1, 2, 0]); // v -> v+1 mod 3
+        let b = Permutation::from_new_of_old(vec![2, 0, 1]); // v -> v-1 mod 3
+        assert_eq!(a.then(&b), Permutation::identity(3));
+    }
+}

@@ -1,0 +1,228 @@
+//! CSR → fixed-shape ELL tile packing for the AOT artifacts.
+//!
+//! The artifacts are compiled for a static `(N_TILE, K)` tile whose
+//! column ids index a length-`N_TILE` vector segment. An arbitrary CSR is
+//! therefore decomposed along both axes:
+//!
+//! * rows are split into **row tiles** of `N_TILE`;
+//! * the column space is split into **column segments** of `N_TILE`
+//!   (each segment sees its own slice of `x`);
+//! * within a (row-tile, segment) block, rows holding more than `K`
+//!   entries spill into additional **passes**.
+//!
+//! Execution accumulates `y[tile] += artifact(cols, vals, x[segment])`
+//! over all passes. Padding slots carry `col = 0, val = 0.0`, which the
+//! kernel's multiply annihilates.
+//!
+//! BOBA's effect is visible here too: clustered column labels concentrate
+//! a row's entries into fewer segments, producing fewer passes (the
+//! pass count is reported by [`EllPlan::passes`] and benchmarked in
+//! EXPERIMENTS.md).
+
+use super::{Engine, Meta, SpmvKind};
+use crate::graph::Csr;
+use anyhow::Result;
+
+/// One executable tile pass.
+#[derive(Clone, Debug)]
+struct TilePass {
+    row_tile: usize,
+    col_seg: usize,
+    cols: Vec<i32>,
+    vals: Vec<f32>,
+}
+
+/// A packed execution plan for one CSR matrix.
+#[derive(Clone, Debug)]
+pub struct EllPlan {
+    meta: Meta,
+    n_rows: usize,
+    n_cols: usize,
+    passes: Vec<TilePass>,
+    /// Vertices with zero out-degree in the *original* orientation —
+    /// needed by PageRank's dangling-mass correction.
+    pub dangling: Vec<u32>,
+}
+
+impl EllPlan {
+    /// Pack a CSR into tile passes for `meta`'s geometry.
+    pub fn pack(csr: &Csr, meta: Meta) -> Result<EllPlan> {
+        let n = csr.n();
+        let nt = meta.n_tile;
+        let k = meta.k;
+        let row_tiles = n.div_ceil(nt).max(1);
+        let col_segs = n.div_ceil(nt).max(1);
+        let mut passes: Vec<TilePass> = Vec::new();
+        // Per (row_tile, col_seg): a vector of per-local-row entry lists.
+        // Built tile-by-tile to bound peak memory.
+        for rt in 0..row_tiles {
+            let r0 = rt * nt;
+            let r1 = ((rt + 1) * nt).min(n);
+            // entries[seg][local_row] -> (local_col, val)
+            let mut entries: Vec<Vec<Vec<(i32, f32)>>> = Vec::new();
+            entries.resize_with(col_segs, || vec![Vec::new(); r1 - r0]);
+            for r in r0..r1 {
+                let (lo, hi) = (csr.row_ptr[r] as usize, csr.row_ptr[r + 1] as usize);
+                for e in lo..hi {
+                    let c = csr.col_idx[e] as usize;
+                    let seg = c / nt;
+                    let val = csr.vals.as_ref().map_or(1.0, |v| v[e]);
+                    entries[seg][r - r0].push(((c - seg * nt) as i32, val));
+                }
+            }
+            for (seg, rows) in entries.into_iter().enumerate() {
+                let max_deg = rows.iter().map(|r| r.len()).max().unwrap_or(0);
+                if max_deg == 0 {
+                    continue;
+                }
+                let npass = max_deg.div_ceil(k);
+                for p in 0..npass {
+                    let mut cols = vec![0i32; nt * k];
+                    let mut vals = vec![0f32; nt * k];
+                    let mut used = false;
+                    for (lr, row) in rows.iter().enumerate() {
+                        let start = p * k;
+                        if start >= row.len() {
+                            continue;
+                        }
+                        for (slot, &(c, v)) in
+                            row[start..row.len().min(start + k)].iter().enumerate()
+                        {
+                            cols[lr * k + slot] = c;
+                            vals[lr * k + slot] = v;
+                            used = true;
+                        }
+                    }
+                    if used {
+                        passes.push(TilePass { row_tile: rt, col_seg: seg, cols, vals });
+                    }
+                }
+            }
+        }
+        let dangling =
+            (0..n).filter(|&v| csr.degree(v) == 0).map(|v| v as u32).collect();
+        Ok(EllPlan { meta, n_rows: n, n_cols: n, passes, dangling })
+    }
+
+    /// Pack the *pull* (transposed, 1/outdeg-weighted) matrix of a graph
+    /// for PageRank: `y[v] = Σ_{u→v} rank[u] / outdeg(u)`.
+    pub fn pack_pagerank(csr: &Csr, meta: Meta) -> Result<EllPlan> {
+        let n = csr.n();
+        let mut weighted = csr.clone();
+        let mut vals = vec![0f32; csr.m()];
+        for v in 0..n {
+            let deg = csr.degree(v);
+            if deg == 0 {
+                continue;
+            }
+            let w = 1.0 / deg as f32;
+            for e in csr.row_ptr[v] as usize..csr.row_ptr[v + 1] as usize {
+                vals[e] = w;
+            }
+        }
+        weighted.vals = Some(vals);
+        let mut plan = Self::pack(&weighted.transposed(), meta)?;
+        // Dangling = zero out-degree in the ORIGINAL orientation.
+        plan.dangling = (0..n).filter(|&v| csr.degree(v) == 0).map(|v| v as u32).collect();
+        Ok(plan)
+    }
+
+    /// Number of tile passes (the PJRT launch count for one SpMV).
+    pub fn passes(&self) -> usize {
+        self.passes.len()
+    }
+
+    /// Rows of the packed matrix.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Execute the plan: `y = A·x` with `x` of length ≥ n (padded
+    /// internally).
+    pub fn execute(&self, engine: &Engine, kind: SpmvKind, x: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            x.len() >= self.n_cols,
+            "x has {} entries, matrix has {} columns",
+            x.len(),
+            self.n_cols
+        );
+        let nt = self.meta.n_tile;
+        let padded_rows = self.n_rows.div_ceil(nt) * nt;
+        let padded_cols = self.n_cols.div_ceil(nt) * nt;
+        let mut xp = x[..self.n_cols].to_vec();
+        xp.resize(padded_cols, 0.0);
+        let mut y = vec![0f32; padded_rows];
+        for pass in &self.passes {
+            let seg = &xp[pass.col_seg * nt..(pass.col_seg + 1) * nt];
+            let part = engine.spmv_tile(kind, &pass.cols, &pass.vals, seg)?;
+            let y_slice = &mut y[pass.row_tile * nt..(pass.row_tile + 1) * nt];
+            for (acc, p) in y_slice.iter_mut().zip(&part) {
+                *acc += p;
+            }
+        }
+        y.truncate(self.n_rows);
+        Ok(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convert::coo_to_csr;
+    use crate::graph::gen;
+
+    fn meta() -> Meta {
+        Meta { n_tile: 512, k: 4 }
+    }
+
+    #[test]
+    fn pack_counts_passes() {
+        // A single row with 10 entries in one segment: ceil(10/4)=3 passes.
+        let mut src = Vec::new();
+        let mut dst = Vec::new();
+        for i in 0..10u32 {
+            src.push(0);
+            dst.push(i);
+        }
+        let csr = coo_to_csr(&crate::graph::Coo::new(20, src, dst));
+        let plan = EllPlan::pack(&csr, meta()).unwrap();
+        assert_eq!(plan.passes(), 3);
+    }
+
+    #[test]
+    fn pack_splits_column_segments() {
+        // n = 1000 > 512: edges crossing the segment boundary get their
+        // own passes.
+        let coo = crate::graph::Coo::new(1000, vec![0, 0], vec![10, 700]);
+        let csr = coo_to_csr(&coo);
+        let plan = EllPlan::pack(&csr, meta()).unwrap();
+        assert_eq!(plan.passes(), 2); // one per segment
+    }
+
+    #[test]
+    fn pack_dangling_detected() {
+        let coo = crate::graph::Coo::new(5, vec![0], vec![1]);
+        let csr = coo_to_csr(&coo);
+        let plan = EllPlan::pack(&csr, meta()).unwrap();
+        assert_eq!(plan.dangling, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn boba_reduces_pass_count_vs_random() {
+        // Pass count is a pure function of packing, testable without PJRT:
+        // clustered labels → fewer (row-tile, segment) crossings.
+        use crate::reorder::{boba::Boba, Reorderer};
+        let g = gen::preferential_attachment(3000, 4, 5);
+        let rand = g.randomized(7);
+        let p = Boba::parallel().reorder(&rand);
+        let reord = rand.relabeled(p.new_of_old());
+        let plan_rand = EllPlan::pack(&coo_to_csr(&rand), meta()).unwrap();
+        let plan_boba = EllPlan::pack(&coo_to_csr(&reord), meta()).unwrap();
+        assert!(
+            plan_boba.passes() <= plan_rand.passes(),
+            "boba {} vs rand {}",
+            plan_boba.passes(),
+            plan_rand.passes()
+        );
+    }
+}

@@ -1,0 +1,260 @@
+//! PJRT runtime — loads the AOT HLO artifacts (`make artifacts`) and
+//! executes them from the Rust hot path. Python never runs here.
+//!
+//! Pipeline per artifact: `HloModuleProto::from_text_file` → wrap as
+//! `XlaComputation` → `PjRtClient::compile` (once, cached) → `execute`
+//! per request. HLO *text* is the interchange format because the crate's
+//! xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-id serialized protos.
+//!
+//! [`ell`] packs CSR matrices into the fixed `(N_TILE × K)` ELL tiles the
+//! artifacts were compiled for; [`Engine`] stitches tile executions into
+//! whole-graph SpMV and PageRank.
+
+pub mod ell;
+
+use crate::graph::Csr;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Artifact tile geometry, read from `artifacts/meta.json`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Meta {
+    /// Rows per tile (static artifact shape).
+    pub n_tile: usize,
+    /// ELL slots per pass.
+    pub k: usize,
+}
+
+impl Meta {
+    /// Parse the (tiny, known-shape) meta.json without a JSON crate.
+    pub fn parse(text: &str) -> Result<Meta> {
+        let grab = |key: &str| -> Result<usize> {
+            let pat = format!("\"{key}\":");
+            let at = text
+                .find(&pat)
+                .with_context(|| format!("meta.json missing {key}"))?;
+            let rest = &text[at + pat.len()..];
+            let digits: String = rest
+                .chars()
+                .skip_while(|c| c.is_whitespace())
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            digits.parse().with_context(|| format!("bad {key} in meta.json"))
+        };
+        Ok(Meta { n_tile: grab("n_tile")?, k: grab("k")? })
+    }
+
+    /// Read from a directory's meta.json.
+    pub fn load(dir: &Path) -> Result<Meta> {
+        let text = std::fs::read_to_string(dir.join("meta.json")).with_context(|| {
+            format!("reading {}/meta.json — run `make artifacts`", dir.display())
+        })?;
+        Self::parse(&text)
+    }
+}
+
+/// Which SpMV artifact to execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpmvKind {
+    /// `spmv_ell.hlo.txt` — plain-jnp L2 graph.
+    Jnp,
+    /// `spmv_ell_pallas.hlo.txt` — the L1 Pallas kernel's lowering.
+    Pallas,
+}
+
+/// A compiled-and-loaded artifact set on the CPU PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    spmv_jnp: xla::PjRtLoadedExecutable,
+    spmv_pallas: xla::PjRtLoadedExecutable,
+    pagerank_step: xla::PjRtLoadedExecutable,
+    /// Tile geometry the artifacts were compiled for.
+    pub meta: Meta,
+}
+
+impl Engine {
+    /// Default artifact directory (`$BOBA_ARTIFACTS` or the nearest
+    /// ancestor `artifacts/`, so tests and benches work from target
+    /// directories).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("BOBA_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let mut d = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            if d.join("artifacts/meta.json").exists() {
+                return d.join("artifacts");
+            }
+            if !d.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    /// Load and compile every artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let meta = Meta::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto =
+                xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+                    .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))
+        };
+        Ok(Engine {
+            spmv_jnp: compile("spmv_ell")?,
+            spmv_pallas: compile("spmv_ell_pallas")?,
+            pagerank_step: compile("pagerank_step")?,
+            client,
+            meta,
+        })
+    }
+
+    /// Load from the default directory.
+    pub fn load_default() -> Result<Engine> {
+        Self::load(&Self::default_dir())
+    }
+
+    /// Platform name of the underlying PJRT client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute one ELL tile pass: returns this pass's partial
+    /// `y[i] = Σ_j vals[i,j] · x_tilevec[cols[i,j]]` (accumulation across
+    /// passes happens in the caller's buffer).
+    ///
+    /// NOTE: `cols` index into `x`, which is the *whole padded vector for
+    /// this tile's column space* — the artifacts are compiled with
+    /// `m == n_tile`, so the plan splits the column space into tile-sized
+    /// segments (see [`ell::EllPlan`]).
+    pub fn spmv_tile(
+        &self,
+        kind: SpmvKind,
+        cols: &[i32],
+        vals: &[f32],
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
+        let (nt, k) = (self.meta.n_tile, self.meta.k);
+        anyhow::ensure!(cols.len() == nt * k, "cols len {} != {}", cols.len(), nt * k);
+        anyhow::ensure!(vals.len() == nt * k, "vals len mismatch");
+        anyhow::ensure!(x.len() == nt, "x len {} != n_tile {}", x.len(), nt);
+        let cols_l = xla::Literal::vec1(cols).reshape(&[nt as i64, k as i64])?;
+        let vals_l = xla::Literal::vec1(vals).reshape(&[nt as i64, k as i64])?;
+        let x_l = xla::Literal::vec1(x);
+        let exe = match kind {
+            SpmvKind::Jnp => &self.spmv_jnp,
+            SpmvKind::Pallas => &self.spmv_pallas,
+        };
+        let result =
+            exe.execute::<xla::Literal>(&[cols_l, vals_l, x_l])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute the PageRank update artifact on one padded tile:
+    /// returns `(rank_new, l1_delta)`.
+    pub fn pagerank_step_tile(
+        &self,
+        y: &[f32],
+        rank_old: &[f32],
+        damping: f32,
+        base: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let nt = self.meta.n_tile;
+        anyhow::ensure!(y.len() == nt && rank_old.len() == nt);
+        let y_l = xla::Literal::vec1(y);
+        let r_l = xla::Literal::vec1(rank_old);
+        let d_l = xla::Literal::scalar(damping);
+        let b_l = xla::Literal::scalar(base);
+        let result = self
+            .pagerank_step
+            .execute::<xla::Literal>(&[y_l, r_l, d_l, b_l])?[0][0]
+            .to_literal_sync()?;
+        let (rank, delta) = result.to_tuple2()?;
+        Ok((rank.to_vec::<f32>()?, delta.get_first_element::<f32>()?))
+    }
+
+    /// Whole-graph SpMV through the tiled artifacts.
+    pub fn spmv_csr(&self, kind: SpmvKind, csr: &Csr, x: &[f32]) -> Result<Vec<f32>> {
+        let plan = ell::EllPlan::pack(csr, self.meta)?;
+        plan.execute(self, kind, x)
+    }
+
+    /// Full PageRank through the artifacts: SpMV over the weighted
+    /// transpose plan + the pagerank_step artifact per tile per
+    /// iteration. `plan` must be built from the *pull* matrix
+    /// (`ell::EllPlan::pack_pagerank`).
+    pub fn pagerank(
+        &self,
+        plan: &ell::EllPlan,
+        n: usize,
+        damping: f32,
+        max_iters: usize,
+        tol: f32,
+    ) -> Result<(Vec<f32>, usize)> {
+        let nt = self.meta.n_tile;
+        let padded = n.div_ceil(nt) * nt;
+        let mut rank = vec![1.0 / n as f32; n];
+        rank.resize(padded, 0.0);
+        let mut iters = 0;
+        for _ in 0..max_iters {
+            iters += 1;
+            let mut y = plan.execute(self, SpmvKind::Jnp, &rank)?;
+            y.resize(padded, 0.0); // execute() truncates to n rows
+            // Dangling + teleport base (L3 owns graph-global scalars).
+            let dangling_mass: f32 =
+                plan.dangling.iter().map(|&v| rank[v as usize]).sum();
+            let base = (1.0 - damping) / n as f32 + damping * dangling_mass / n as f32;
+            let mut delta_total = 0f32;
+            let mut next = vec![0f32; padded];
+            for t in 0..padded / nt {
+                let (tile_rank, delta) = self.pagerank_step_tile(
+                    &y[t * nt..(t + 1) * nt],
+                    &rank[t * nt..(t + 1) * nt],
+                    damping,
+                    base,
+                )?;
+                next[t * nt..(t + 1) * nt].copy_from_slice(&tile_rank);
+                delta_total += delta;
+            }
+            // Zero the padding rows so they never accumulate teleport mass.
+            for v in next[n..].iter_mut() {
+                *v = 0.0;
+            }
+            rank = next;
+            if delta_total < tol {
+                break;
+            }
+        }
+        rank.truncate(n);
+        Ok((rank, iters))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses() {
+        let m = Meta::parse(r#"{"n_tile": 8192, "k": 16, "artifacts": []}"#).unwrap();
+        assert_eq!(m, Meta { n_tile: 8192, k: 16 });
+    }
+
+    #[test]
+    fn meta_rejects_missing_keys() {
+        assert!(Meta::parse(r#"{"n_tile": 8192}"#).is_err());
+        assert!(Meta::parse("{}").is_err());
+    }
+
+    #[test]
+    fn meta_parses_unspaced() {
+        let m = Meta::parse(r#"{"k":4,"n_tile":512}"#).unwrap();
+        assert_eq!(m, Meta { n_tile: 512, k: 4 });
+    }
+}

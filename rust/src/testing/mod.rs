@@ -1,0 +1,200 @@
+//! A small property-based testing framework (proptest does not resolve
+//! offline). Deterministic generation from seeds, configurable case
+//! counts, and greedy input shrinking on failure.
+//!
+//! Properties are closures receiving a [`Gen`]; on failure the harness
+//! retries the failing seed at smaller size scales to report a smaller
+//! counterexample, then panics with the seed so the case can be replayed
+//! exactly.
+
+use crate::util::prng::Xoshiro256;
+
+/// Property-run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed (cases derive from it).
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 100, seed: 0xB0BA }
+    }
+}
+
+impl Config {
+    /// Set the case count.
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Set the base seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Value source handed to properties.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Scale factor in (0, 1] applied to requested ranges while
+    /// shrinking; 1.0 during normal generation.
+    scale: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, scale: f64) -> Self {
+        Self { rng: Xoshiro256::new(seed), scale }
+    }
+
+    /// u64 in `range` (half-open). Shrinking narrows toward the lower
+    /// bound.
+    pub fn u64(&mut self, range: std::ops::Range<u64>) -> u64 {
+        let span = range.end - range.start;
+        if span == 0 {
+            return range.start;
+        }
+        let scaled = ((span as f64 * self.scale).ceil() as u64).max(1);
+        range.start + self.rng.below(scaled.min(span))
+    }
+
+    /// usize in `range`.
+    pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    /// f64 in [0,1).
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// f32 in [0,1).
+    pub fn f32(&mut self) -> f32 {
+        self.rng.next_f32()
+    }
+
+    /// bool with probability `p` of true.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// Vector of `len` values drawn by `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element of a non-empty slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below_usize(xs.len())]
+    }
+
+    /// Draw a fresh seed (for crate generators that take seeds).
+    pub fn seed(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases.
+pub fn check<F>(cfg: Config, name: &str, prop: F)
+where
+    F: Fn(&mut Gen) -> anyhow::Result<()> + std::panic::RefUnwindSafe,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ ((case as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        if let Err(msg) = run_case(&prop, case_seed, 1.0) {
+            // Greedy shrink: smaller scales, same seed.
+            let mut best: (f64, String) = (1.0, msg);
+            for &scale in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                if let Err(m) = run_case(&prop, case_seed, scale) {
+                    best = (scale, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, \
+                 minimal scale {}):\n{}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+fn run_case<F>(prop: &F, seed: u64, scale: f64) -> Result<(), String>
+where
+    F: Fn(&mut Gen) -> anyhow::Result<()> + std::panic::RefUnwindSafe,
+{
+    let outcome = std::panic::catch_unwind(|| {
+        let mut g = Gen::new(seed, scale);
+        prop(&mut g)
+    });
+    match outcome {
+        Ok(Ok(())) => Ok(()),
+        Ok(Err(e)) => Err(format!("returned error: {e:#}")),
+        Err(p) => {
+            let msg = p
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "panic (non-string payload)".into());
+            Err(format!("panicked: {msg}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(Config::default().cases(50), "sort idempotent", |g| {
+            let len = g.usize(0..50);
+            let mut v = g.vec(len, |g| g.u64(0..100));
+            v.sort_unstable();
+            let w = {
+                let mut w = v.clone();
+                w.sort_unstable();
+                w
+            };
+            anyhow::ensure!(v == w);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check(Config::default().cases(3), "always fails", |g| {
+            let v = g.u64(0..10);
+            anyhow::ensure!(v > 100, "v was {v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn panicking_property_reported() {
+        check(Config::default().cases(2), "panics", |_g| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn shrink_scales_reduce_sizes() {
+        let mut g_small = Gen::new(1, 0.01);
+        let b = g_small.usize(0..10_000);
+        assert!(b <= 100);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Gen::new(9, 1.0);
+        let mut b = Gen::new(9, 1.0);
+        for _ in 0..10 {
+            assert_eq!(a.u64(0..1000), b.u64(0..1000));
+        }
+    }
+}

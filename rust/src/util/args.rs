@@ -1,0 +1,132 @@
+//! A small CLI argument parser (`clap` does not resolve offline).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with typed getters and auto-generated usage.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// The first non-flag token, if any (the subcommand).
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an iterator of tokens.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Self {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    out.opts.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.opts.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option (any FromStr) with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            Some(v) => v.parse().unwrap_or(default),
+            None => default,
+        }
+    }
+
+    /// Typed option, erroring with a message naming the key on failure.
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<T> {
+        let v = self
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{key}"))?;
+        v.parse()
+            .map_err(|_| anyhow::anyhow!("option --{key}={v} failed to parse"))
+    }
+
+    /// Boolean flag presence (`--verbose`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.get(key).map_or(false, |v| v == "true")
+    }
+
+    /// Positional arguments (after the subcommand).
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("reorder --algo boba --scale 18 input.mtx");
+        assert_eq!(a.command.as_deref(), Some("reorder"));
+        assert_eq!(a.get("algo"), Some("boba"));
+        assert_eq!(a.get_parse::<u32>("scale", 0), 18);
+        assert_eq!(a.positional(), &["input.mtx".to_string()]);
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse("run --algo=spmv --verbose --iters=3");
+        assert_eq!(a.get("algo"), Some("spmv"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get_parse::<usize>("iters", 1), 3);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("x --check");
+        assert!(a.flag("check"));
+    }
+
+    #[test]
+    fn require_errors() {
+        let a = parse("x");
+        assert!(a.require::<u32>("scale").is_err());
+        let b = parse("x --scale nope");
+        assert!(b.require::<u32>("scale").is_err());
+        let c = parse("x --scale 7");
+        assert_eq!(c.require::<u32>("scale").unwrap(), 7);
+    }
+
+    #[test]
+    fn default_when_missing() {
+        let a = parse("x");
+        assert_eq!(a.get_or("name", "dflt"), "dflt");
+        assert_eq!(a.get_parse::<f64>("eps", 0.5), 0.5);
+    }
+}

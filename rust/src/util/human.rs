@@ -1,0 +1,144 @@
+//! Human-readable formatting helpers for reports and tables.
+
+/// Format a byte count: `1.5 GiB`, `340.4 MB`-style (paper's Table 2 uses
+/// decimal MB for dataset sizes, so both are provided).
+pub fn bytes_binary(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Decimal megabytes with one decimal, as in the paper's Table 2.
+pub fn mb_decimal(b: u64) -> String {
+    format!("{:.1}", b as f64 / 1e6)
+}
+
+/// Format a count: `1.1M`, `89M`, `57.7M` (Table 2 style).
+pub fn count_compact(n: u64) -> String {
+    if n >= 1_000_000_000 {
+        format!("{:.1}B", n as f64 / 1e9)
+    } else if n >= 1_000_000 {
+        format!("{:.1}M", n as f64 / 1e6)
+    } else if n >= 1_000 {
+        format!("{:.1}K", n as f64 / 1e3)
+    } else {
+        n.to_string()
+    }
+}
+
+/// Milliseconds with adaptive precision.
+pub fn ms(v: f64) -> String {
+    if v < 0.1 {
+        format!("{:.4} ms", v)
+    } else if v < 10.0 {
+        format!("{:.2} ms", v)
+    } else {
+        format!("{:.1} ms", v)
+    }
+}
+
+/// Left-pad to a fixed width (simple table layout helper).
+pub fn pad(s: &str, w: usize) -> String {
+    if s.len() >= w {
+        s.to_string()
+    } else {
+        format!("{}{}", " ".repeat(w - s.len()), s)
+    }
+}
+
+/// Right-pad to a fixed width.
+pub fn pad_right(s: &str, w: usize) -> String {
+    if s.len() >= w {
+        s.to_string()
+    } else {
+        format!("{}{}", s, " ".repeat(w - s.len()))
+    }
+}
+
+/// Render an aligned text table: header row + data rows.
+pub fn table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<String>, widths: &[usize]| -> String {
+        let mut line = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            if i > 0 {
+                line.push_str("  ");
+            }
+            if i == 0 {
+                line.push_str(&pad_right(c, widths[i]));
+            } else {
+                line.push_str(&pad(c, widths[i]));
+            }
+        }
+        line
+    };
+    out.push_str(&fmt_row(header.iter().map(|s| s.to_string()).collect(), &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row.clone(), &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes_binary(512), "512 B");
+        assert_eq!(bytes_binary(2048), "2.0 KiB");
+        assert_eq!(bytes_binary(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(count_compact(999), "999");
+        assert_eq!(count_compact(4_200_000), "4.2M");
+        assert_eq!(count_compact(1_500), "1.5K");
+        assert_eq!(count_compact(2_000_000_000), "2.0B");
+    }
+
+    #[test]
+    fn ms_precision() {
+        assert_eq!(ms(0.01234), "0.0123 ms");
+        assert_eq!(ms(5.678), "5.68 ms");
+        assert_eq!(ms(123.4), "123.4 ms");
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = table(
+            &["name", "v"],
+            &[vec!["a".into(), "1".into()], vec!["longer".into(), "22".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[3].contains("22"));
+    }
+
+    #[test]
+    fn mb_matches_paper_style() {
+        assert_eq!(mb_decimal(340_400_000), "340.4");
+    }
+}

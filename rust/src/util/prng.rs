@@ -1,0 +1,206 @@
+//! Deterministic pseudo-random number generators.
+//!
+//! The `rand` crate does not resolve offline, so the crate carries its own
+//! generators: [`SplitMix64`] (seed expansion / cheap streams) and
+//! [`Xoshiro256`] (xoshiro256**, the workhorse). Both are tiny,
+//! well-studied, and — crucially for the experiment drivers — fully
+//! deterministic across runs and threads, so every table and figure in
+//! EXPERIMENTS.md is exactly reproducible from its seed.
+
+/// SplitMix64 — Steele, Lea & Flood's 64-bit mixer.
+///
+/// Primarily used to expand a user seed into the state of a larger
+/// generator and to derive independent per-thread streams.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a generator from a seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64 uniformly distributed bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** by Blackman & Vigna — fast, 256-bit state, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 expansion (the construction the authors
+    /// recommend; guarantees a non-zero state).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
+    }
+
+    /// Derive the i-th independent stream from this seed. Used by the
+    /// parallel runtime to hand each worker its own generator.
+    pub fn stream(seed: u64, i: u64) -> Self {
+        // Mix the stream index through SplitMix64 so adjacent indices
+        // yield uncorrelated states.
+        let mut sm = SplitMix64::new(seed ^ (i.wrapping_mul(0xA076_1D64_78BD_642F)));
+        Self { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
+    }
+
+    /// Next 64 uniformly distributed bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform u32.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Unbiased uniform integer in `[0, bound)` (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in `[0, bound)`.
+    #[inline]
+    pub fn below_usize(&mut self, bound: usize) -> usize {
+        self.below(bound as u64) as usize
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            v.swap(i, j);
+        }
+    }
+
+    /// A uniformly random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut p: Vec<u32> = (0..n as u32).collect();
+        self.shuffle(&mut p);
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference values from the public-domain C implementation,
+        // seed = 1234567.
+        let mut sm = SplitMix64::new(1234567);
+        let v: Vec<u64> = (0..3).map(|_| sm.next_u64()).collect();
+        assert_eq!(v[0], 6457827717110365317);
+        assert_eq!(v[1], 3203168211198807973);
+        assert_eq!(v[2], 9817491932198370423);
+    }
+
+    #[test]
+    fn xoshiro_deterministic_and_stream_independent() {
+        let mut a = Xoshiro256::new(42);
+        let mut b = Xoshiro256::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut s0 = Xoshiro256::stream(42, 0);
+        let mut s1 = Xoshiro256::stream(42, 1);
+        // Streams must differ immediately.
+        assert_ne!(s0.next_u64(), s1.next_u64());
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut rng = Xoshiro256::new(7);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            let v = rng.below(10) as usize;
+            counts[v] += 1;
+        }
+        for &c in &counts {
+            // Each bucket expects 10_000; allow 10%.
+            assert!((9_000..=11_000).contains(&c), "bucket {c}");
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..10_000 {
+            let v = rng.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn permutation_is_valid() {
+        let mut rng = Xoshiro256::new(11);
+        let p = rng.permutation(1000);
+        let mut seen = vec![false; 1000];
+        for &v in &p {
+            assert!(!seen[v as usize]);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let mut rng = Xoshiro256::new(5);
+        let mut v: Vec<u32> = (0..100).map(|i| i % 7).collect();
+        let mut sorted_before = v.clone();
+        sorted_before.sort_unstable();
+        rng.shuffle(&mut v);
+        let mut sorted_after = v.clone();
+        sorted_after.sort_unstable();
+        assert_eq!(sorted_before, sorted_after);
+    }
+}

@@ -1,0 +1,119 @@
+//! Wall-clock timing utilities for pipeline stages and experiment drivers.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start a new stopwatch.
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed milliseconds as f64.
+    pub fn ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Restart and return the elapsed time of the lap that ended.
+    pub fn lap(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates named stage timings for pipeline reports (the Fig. 4
+/// stacked-bar data is produced from these records).
+#[derive(Debug, Default, Clone)]
+pub struct StageTimer {
+    stages: Vec<(String, Duration)>,
+}
+
+impl StageTimer {
+    /// New empty timer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and record it under `name`. Returns the closure's
+    /// value.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let sw = Stopwatch::start();
+        let out = f();
+        self.stages.push((name.to_string(), sw.elapsed()));
+        out
+    }
+
+    /// Record an externally measured duration.
+    pub fn record(&mut self, name: &str, d: Duration) {
+        self.stages.push((name.to_string(), d));
+    }
+
+    /// Stage records in insertion order.
+    pub fn stages(&self) -> &[(String, Duration)] {
+        &self.stages
+    }
+
+    /// Milliseconds for a named stage (sums duplicates), if present.
+    pub fn ms(&self, name: &str) -> Option<f64> {
+        let mut total = 0.0;
+        let mut found = false;
+        for (n, d) in &self.stages {
+            if n == name {
+                total += d.as_secs_f64() * 1e3;
+                found = true;
+            }
+        }
+        found.then_some(total)
+    }
+
+    /// Total of all stages in milliseconds.
+    pub fn total_ms(&self) -> f64 {
+        self.stages.iter().map(|(_, d)| d.as_secs_f64() * 1e3).sum()
+    }
+
+    /// Render a one-line summary: `reorder=1.2ms convert=88.0ms ...`.
+    pub fn summary(&self) -> String {
+        let mut parts = Vec::new();
+        for (n, d) in &self.stages {
+            parts.push(format!("{}={:.2}ms", n, d.as_secs_f64() * 1e3));
+        }
+        parts.join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_measures_something() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.ms() >= 4.0);
+    }
+
+    #[test]
+    fn stage_timer_records_and_sums() {
+        let mut t = StageTimer::new();
+        let v = t.time("a", || 21 * 2);
+        assert_eq!(v, 42);
+        t.record("b", Duration::from_millis(10));
+        t.record("a", Duration::from_millis(5));
+        assert!(t.ms("a").unwrap() >= 5.0);
+        assert_eq!(t.stages().len(), 3);
+        assert!(t.ms("missing").is_none());
+        assert!(t.total_ms() >= 15.0);
+        assert!(t.summary().contains("b="));
+    }
+}

@@ -1,0 +1,104 @@
+//! Coordinator-level integration: dataset suite coherence, CLI-style
+//! dispatch paths (via the library surface the binary uses), concurrent
+//! pipeline jobs through the parallel substrate, and failure injection on
+//! the I/O boundary.
+
+use boba::coordinator::datasets::{self, Family, Scale};
+use boba::coordinator::pipeline::{App, Pipeline, ReorderStage};
+use boba::graph::io;
+use boba::parallel;
+use boba::reorder::boba::Boba;
+
+#[test]
+fn dataset_suite_families_partition() {
+    let all = datasets::full_suite();
+    assert!(all.iter().any(|d| d.family == Family::ScaleFree));
+    assert!(all.iter().any(|d| d.family == Family::Uniform));
+    for d in &all {
+        assert!(datasets::by_name(d.name).is_some());
+    }
+    assert!(datasets::by_name("nope").is_none());
+}
+
+#[test]
+fn scale_knob_changes_size() {
+    let d = datasets::by_name("kron_s").unwrap();
+    let q = d.build_at(Scale::Quick, 1);
+    let f = d.build_at(Scale::Full, 1);
+    assert!(f.m() > 4 * q.m(), "full {} vs quick {}", f.m(), q.m());
+}
+
+#[test]
+fn concurrent_pipelines_share_nothing() {
+    // The coordinator dispatches independent requests via par_jobs; the
+    // pipelines must not interfere (no global state).
+    let g = datasets::by_name("pa_c8").unwrap().build_at(Scale::Quick, 2).randomized(3);
+    let jobs: Vec<Box<dyn FnOnce() -> f64 + Send>> = App::all()
+        .into_iter()
+        .map(|app| {
+            let g = g.clone();
+            Box::new(move || {
+                Pipeline::new(app)
+                    .run(&g, &ReorderStage::Scheme(Box::new(Boba::parallel())))
+                    .digest
+            }) as _
+        })
+        .collect();
+    let digests = parallel::par_jobs(jobs);
+    // Same digests as running serially.
+    for (app, d) in App::all().into_iter().zip(&digests) {
+        let serial = Pipeline::new(app)
+            .run(&g, &ReorderStage::Scheme(Box::new(Boba::parallel())))
+            .digest;
+        let tol = 1e-6 * serial.abs().max(1.0);
+        assert!((d - serial).abs() <= tol, "{}: {d} vs {serial}", app.name());
+    }
+}
+
+#[test]
+fn io_failure_paths_are_errors_not_panics() {
+    let missing = std::path::Path::new("/nonexistent/boba/file.mtx");
+    assert!(io::read_matrix_market(missing).is_err());
+    assert!(io::read_edge_list(missing, false).is_err());
+
+    // Malformed content.
+    let mut p = std::env::temp_dir();
+    p.push(format!("boba_bad_{}.mtx", std::process::id()));
+    std::fs::write(&p, "%%MatrixMarket matrix coordinate real general\n2 2 1\nnot numbers\n")
+        .unwrap();
+    assert!(io::read_matrix_market(&p).is_err());
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn runtime_engine_load_failure_is_graceful() {
+    // Pointing at an empty dir must error with a make-artifacts hint.
+    let dir = std::env::temp_dir().join(format!("boba_empty_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let Err(err) = boba::runtime::Engine::load(&dir) else {
+        panic!("load from empty dir must fail");
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn inventory_lists_every_dataset() {
+    let inv = datasets::inventory(1);
+    for d in datasets::full_suite() {
+        assert!(inv.contains(d.name), "inventory missing {}", d.name);
+    }
+}
+
+#[test]
+fn reorderers_are_send_sync_boxable() {
+    // The coordinator moves schemes across worker threads; this must
+    // compile and run.
+    fn takes_send_sync<T: Send + Sync>(_: &T) {}
+    let schemes = boba::reorder::all_schemes(1);
+    for s in &schemes {
+        takes_send_sync(s);
+    }
+    assert_eq!(schemes.len(), 6);
+}

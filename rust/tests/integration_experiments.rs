@@ -1,0 +1,169 @@
+//! End-to-end runs of the experiment drivers at reduced scale, asserting
+//! the *paper-shape* properties each table/figure claims (not absolute
+//! numbers — DESIGN.md §6 defines what must hold).
+//!
+//! These run with BOBA_HEAVY honored; they use the lightweight-only
+//! lineup plus targeted heavyweight spot-checks to stay CI-sized.
+
+use boba::convert;
+use boba::coordinator::experiments;
+use boba::graph::gen;
+use boba::metrics;
+use boba::reorder::{boba::Boba, gorder::Gorder, hub::HubSort, rcm::Rcm, Reorderer};
+
+fn light_only() {
+    std::env::set_var("BOBA_HEAVY", "0");
+    std::env::set_var("BOBA_SCALE", "quick");
+}
+
+/// Timing-based shape assertions are noisy when the test harness runs
+/// suites concurrently: retry up to 3 times and fail only if every
+/// attempt violates the shape.
+fn retry_timing(name: &str, attempts: usize, f: impl Fn() -> Result<(), String>) {
+    let mut last = String::new();
+    for _ in 0..attempts {
+        match f() {
+            Ok(()) => return,
+            Err(e) => last = e,
+        }
+    }
+    panic!("{name}: failed {attempts} attempts; last: {last}");
+}
+
+#[test]
+fn table1_boba_beats_random_on_uniform_suite() {
+    light_only();
+    let t = experiments::table1(11);
+    for ds in ["delaunay_s", "rgg_s"] {
+        let rand = t.get(ds, "Rand").unwrap();
+        let boba = t.get(ds, "BOBA").unwrap();
+        let hub = t.get(ds, "Hub").unwrap();
+        assert!(boba < 0.85 * rand, "{ds}: BOBA {boba} vs rand {rand}");
+        // Degree-based methods ≈ random on uniform graphs (paper Fig 3/6).
+        assert!(hub > 0.95 * rand, "{ds}: Hub {hub} should ≈ rand {rand}");
+    }
+}
+
+#[test]
+fn table1_heavyweight_spot_check() {
+    // Gorder best, BOBA between heavyweight and random (paper Table 1) on
+    // one uniform dataset, computed directly (not via the full driver).
+    let g = gen::delaunay_mesh(120, 120, 3).symmetrized().randomized(7);
+    let rand_nbr = metrics::nbr_coo(&g);
+    let nbr_of = |s: &dyn Reorderer| {
+        let p = s.reorder(&g);
+        metrics::nbr_coo(&g.relabeled(p.new_of_old()))
+    };
+    let gorder = nbr_of(&Gorder::new(5));
+    let rcm = nbr_of(&Rcm::new());
+    let boba = nbr_of(&Boba::parallel());
+    let hub = nbr_of(&HubSort::new());
+    assert!(gorder < boba, "Gorder {gorder} must beat BOBA {boba}");
+    assert!(boba < 0.9 * rand_nbr, "BOBA {boba} vs rand {rand_nbr}");
+    assert!(boba < hub, "BOBA {boba} must beat Hub {hub} on uniform");
+    assert!(rcm < rand_nbr, "RCM {rcm} vs rand {rand_nbr}");
+}
+
+#[test]
+fn table3_shapes() {
+    light_only();
+    retry_timing("table3", 2, || {
+        let t = experiments::table3(5);
+        // Scale-free rows: BOBA conversion ≤ random conversion (the
+        // paper's central conversion-speedup claim).
+        for ds in ["arabic_like", "copapers_like"] {
+            let rc = t.get(ds, "rand_conv").unwrap();
+            let bc = t.get(ds, "boba_conv").unwrap();
+            if bc > rc * 1.15 {
+                return Err(format!("{ds}: conv {bc} vs {rc}"));
+            }
+        }
+        // delaunay: bounded either way (the paper's null-result row; our
+        // generator's natural edge order lets BOBA recover more — see
+        // EXPERIMENTS.md Table 3 note).
+        let rc = t.get("delaunay_like", "rand_conv").unwrap();
+        let bc = t.get("delaunay_like", "boba_conv").unwrap();
+        if !(bc < rc * 1.5 && bc > rc * 0.2) {
+            return Err(format!("delaunay conv {bc} vs {rc}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fig7_boba_tracks_heavyweight_not_random() {
+    light_only();
+    let t = experiments::fig7(3);
+    // On the scale-free dataset, BOBA's SpMV L1 rate must beat Random's.
+    let rand_l1 = t.get("kron18/SpMV/Random", "l1").unwrap();
+    let boba_l1 = t.get("kron18/SpMV/BOBA", "l1").unwrap();
+    assert!(boba_l1 > rand_l1, "BOBA {boba_l1} vs random {rand_l1}");
+    // DRAM-served fraction must shrink.
+    let rand_dram = t.get("kron18/SpMV/Random", "dram").unwrap();
+    let boba_dram = t.get("kron18/SpMV/BOBA", "dram").unwrap();
+    assert!(boba_dram < rand_dram, "{boba_dram} vs {rand_dram}");
+    // TC has the highest L1 rates of all apps (high data reuse — §5.5).
+    let tc_l1 = t.get("kron18/TC/Random", "l1").unwrap();
+    for app in ["SpMV", "PR", "SSSP"] {
+        let other = t.get(&format!("kron18/{app}/Random"), "l1").unwrap();
+        assert!(tc_l1 > other, "TC {tc_l1} vs {app} {other}");
+    }
+}
+
+#[test]
+fn reorder_cost_ordering_boba_fastest() {
+    // §5.4's cost hierarchy on one dataset: BOBA < degree-based
+    // lightweight < heavyweight (RCM here; Gorder is covered by the bench
+    // where its long runtime is the point).
+    use boba::util::timer::Stopwatch;
+    let g = gen::preferential_attachment(100_000, 6, 2).randomized(3);
+    let time = |s: &dyn Reorderer| {
+        let mut samples: Vec<f64> = (0..3)
+            .map(|_| {
+                let sw = Stopwatch::start();
+                std::hint::black_box(s.reorder(&g));
+                sw.ms()
+            })
+            .collect();
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples[1]
+    };
+    retry_timing("reorder cost hierarchy", 3, || {
+        let boba = time(&Boba::parallel());
+        let hub = time(&HubSort::new());
+        let rcm = time(&Rcm::new());
+        if boba >= hub * 2.0 {
+            return Err(format!("BOBA {boba} vs Hub {hub}"));
+        }
+        if boba * 2.0 >= rcm {
+            return Err(format!("BOBA {boba} vs RCM {rcm}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn conversion_speedup_on_big_scale_free_graph() {
+    // The Problem-3 headline on a graph whose counter array breaks cache:
+    // BOBA-relabeled conversion must be faster than random-labeled.
+    use boba::util::timer::Stopwatch;
+    let g = gen::preferential_attachment(400_000, 6, 4).randomized(9);
+    let p = Boba::parallel().reorder(&g);
+    let b = g.relabeled(p.new_of_old());
+    retry_timing("conversion speedup", 3, || {
+        let t_rand = {
+            let sw = Stopwatch::start();
+            std::hint::black_box(convert::coo_to_csr(&g));
+            sw.ms()
+        };
+        let t_boba = {
+            let sw = Stopwatch::start();
+            std::hint::black_box(convert::coo_to_csr(&b));
+            sw.ms()
+        };
+        if t_boba >= t_rand {
+            return Err(format!("BOBA conv {t_boba:.1}ms vs random {t_rand:.1}ms"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,167 @@
+//! Property tests over the graph kernels: label-invariance (the keystone
+//! of the whole reordering story — f(G) must not change when labels do),
+//! oracle agreement, and parallel/sequential equivalence.
+
+use boba::algos::{pagerank, spmv, sssp, tc};
+use boba::convert::{coo_to_csr, sort_coo_by_src};
+use boba::graph::{gen, Coo};
+use boba::testing::{check, Config, Gen};
+use boba::util::prng::Xoshiro256;
+
+fn arb_graph(g: &mut Gen) -> Coo {
+    let n = g.usize(4..500);
+    let m = g.usize(4..3000);
+    gen::uniform_random(n, m, g.seed())
+}
+
+fn arb_perm(g: &mut Gen, n: usize) -> Vec<u32> {
+    Xoshiro256::new(g.seed()).permutation(n)
+}
+
+#[test]
+fn spmv_commutes_with_relabeling() {
+    check(Config::default().cases(40), "spmv label-invariance", |g| {
+        let coo = arb_graph(g);
+        let perm = arb_perm(g, coo.n());
+        let x: Vec<f32> = (0..coo.n()).map(|_| g.f32()).collect();
+        // y on original labels.
+        let y0 = spmv::spmv_pull(&coo_to_csr(&coo), &x);
+        // relabel graph AND x, run, un-relabel y.
+        let h = coo.relabeled(&perm);
+        let mut xp = vec![0f32; coo.n()];
+        for v in 0..coo.n() {
+            xp[perm[v] as usize] = x[v];
+        }
+        let yp = spmv::spmv_pull(&coo_to_csr(&h), &xp);
+        for v in 0..coo.n() {
+            let a = y0[v];
+            let b = yp[perm[v] as usize];
+            anyhow::ensure!((a - b).abs() <= 1e-4 * a.abs().max(1.0), "{a} vs {b}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn spmv_parallel_equals_sequential() {
+    check(Config::default().cases(15), "spmv par == seq", |g| {
+        let n = g.usize(100..3000);
+        let m = g.usize(20_000..60_000);
+        let coo = gen::uniform_random(n, m, g.seed());
+        let csr = coo_to_csr(&coo);
+        let x: Vec<f32> = (0..n).map(|_| g.f32()).collect();
+        let a = spmv::spmv_pull(&csr, &x);
+        let b = spmv::spmv_pull_parallel(&csr, &x);
+        anyhow::ensure!(a == b, "parallel SpMV must be bitwise identical");
+        Ok(())
+    });
+}
+
+#[test]
+fn pagerank_mass_conserved_any_graph() {
+    check(Config::default().cases(25), "pagerank mass", |g| {
+        let coo = arb_graph(g);
+        let csr = coo_to_csr(&coo);
+        let r = pagerank::pagerank(&csr, pagerank::PrParams::default());
+        let s: f64 = r.ranks.iter().map(|&v| v as f64).sum();
+        anyhow::ensure!((s - 1.0).abs() < 1e-2, "mass {s}");
+        anyhow::ensure!(r.ranks.iter().all(|&v| v >= 0.0));
+        Ok(())
+    });
+}
+
+#[test]
+fn pagerank_invariant_under_relabeling() {
+    check(Config::default().cases(20), "pagerank label-invariance", |g| {
+        let coo = arb_graph(g);
+        let perm = arb_perm(g, coo.n());
+        let p = pagerank::PrParams { max_iters: 20, tol: 0.0, ..Default::default() };
+        let r0 = pagerank::pagerank(&coo_to_csr(&coo), p);
+        let r1 = pagerank::pagerank(&coo_to_csr(&coo.relabeled(&perm)), p);
+        for v in 0..coo.n() {
+            let a = r0.ranks[v];
+            let b = r1.ranks[perm[v] as usize];
+            anyhow::ensure!((a - b).abs() < 1e-4, "rank({v}): {a} vs {b}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tc_invariant_under_relabeling_and_orientation() {
+    check(Config::default().cases(25), "tc invariance", |g| {
+        let coo = arb_graph(g);
+        let count = |c: &Coo| {
+            let und = c.symmetrized().deduped();
+            let csr = coo_to_csr(&sort_coo_by_src(&und));
+            let rank = tc::degree_rank(&csr);
+            tc::triangle_count_ranked(&tc::orient_by_rank(&csr, &rank), &rank)
+        };
+        let id_count = {
+            let und = coo.symmetrized().deduped();
+            let csr = coo_to_csr(&sort_coo_by_src(&und));
+            tc::triangle_count(&tc::orient_for_tc(&csr))
+        };
+        let perm = arb_perm(g, coo.n());
+        anyhow::ensure!(count(&coo) == id_count, "rank vs id orientation");
+        anyhow::ensure!(count(&coo.relabeled(&perm)) == id_count, "relabeling changed count");
+        Ok(())
+    });
+}
+
+#[test]
+fn sssp_frontier_equals_dijkstra() {
+    check(Config::default().cases(25), "sssp oracle", |g| {
+        let n = g.usize(4..400);
+        let m = g.usize(4..2500);
+        let mut coo = gen::uniform_random(n, m, g.seed());
+        coo.vals = Some((0..m).map(|_| g.f32() + 0.001).collect());
+        let csr = coo_to_csr(&coo);
+        let src = g.usize(0..n) as u32;
+        let a = sssp::dijkstra(&csr, src);
+        let b = sssp::sssp_frontier(&csr, src);
+        for v in 0..n {
+            if a[v].is_finite() {
+                anyhow::ensure!((a[v] - b[v]).abs() < 1e-3, "v={v}: {} vs {}", a[v], b[v]);
+            } else {
+                anyhow::ensure!(b[v].is_infinite());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn traced_kernels_equal_untraced() {
+    check(Config::default().cases(20), "traced == plain", |g| {
+        let coo = arb_graph(g);
+        let csr = coo_to_csr(&coo);
+        let x: Vec<f32> = (0..coo.n()).map(|_| g.f32()).collect();
+        let mut t = boba::algos::trace::VecTrace::default();
+        anyhow::ensure!(
+            spmv::spmv_pull_traced(&csr, &x, &mut t) == spmv::spmv_pull(&csr, &x)
+        );
+        let mut t2 = boba::algos::trace::VecTrace::default();
+        anyhow::ensure!(
+            sssp::sssp_frontier_traced(&csr, 0, &mut t2) == sssp::sssp_frontier(&csr, 0)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn cache_sim_counts_match_trace_length() {
+    check(Config::default().cases(15), "sim read accounting", |g| {
+        let coo = arb_graph(g);
+        let csr = coo_to_csr(&coo);
+        let x = vec![1.0f32; coo.n()];
+        let mut vt = boba::algos::trace::VecTrace::default();
+        spmv::spmv_pull_traced(&csr, &x, &mut vt);
+        let mut hier = boba::cachesim::Hierarchy::v100_like();
+        for &a in &vt.addrs {
+            hier.access(a);
+        }
+        anyhow::ensure!(hier.rates().reads == vt.addrs.len() as u64);
+        Ok(())
+    });
+}

@@ -1,0 +1,137 @@
+//! Property tests over the conversion substrate: COO→CSR (sequential and
+//! parallel), radix sort, and transposition — the pipeline stages whose
+//! cache behaviour the paper's Problem 3 measures, so their *correctness*
+//! must be beyond doubt under every labeling.
+
+use boba::convert::{coo_to_csr, coo_to_csr_parallel, csr_to_coo, sort_coo_by_src};
+use boba::graph::{gen, Coo};
+use boba::testing::{check, Config, Gen};
+
+fn arb_coo(g: &mut Gen) -> Coo {
+    let n = g.usize(1..1000);
+    let m = g.usize(0..6000);
+    gen::uniform_random(n, m, g.seed())
+}
+
+#[test]
+fn csr_structure_matches_coo() {
+    check(Config::default().cases(50), "csr == coo", |g| {
+        let coo = arb_coo(g);
+        let csr = coo_to_csr(&coo);
+        csr.validate()?;
+        anyhow::ensure!(csr.m() == coo.m());
+        anyhow::ensure!(csr.n() == coo.n());
+        // Every COO edge appears exactly once in the CSR.
+        let mut count_coo = std::collections::HashMap::new();
+        for e in coo.edges() {
+            *count_coo.entry(e).or_insert(0u32) += 1;
+        }
+        let mut count_csr = std::collections::HashMap::new();
+        for v in 0..csr.n() {
+            for &u in csr.neighbors(v) {
+                *count_csr.entry((v as u32, u)).or_insert(0u32) += 1;
+            }
+        }
+        anyhow::ensure!(count_coo == count_csr, "edge multisets differ");
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_converter_matches_sequential() {
+    check(Config::default().cases(25), "par == seq (up to row order)", |g| {
+        // Force sizes across the parallel threshold.
+        let n = g.usize(10..2000);
+        let m = g.usize(30_000..80_000);
+        let coo = gen::uniform_random(n, m, g.seed());
+        let a = coo_to_csr(&coo);
+        let mut b = coo_to_csr_parallel(&coo);
+        anyhow::ensure!(a.row_ptr == b.row_ptr, "row_ptr differs");
+        let mut a2 = a.clone();
+        a2.sort_rows();
+        b.sort_rows();
+        anyhow::ensure!(a2.col_idx == b.col_idx, "col multisets differ");
+        Ok(())
+    });
+}
+
+#[test]
+fn roundtrip_csr_coo_csr() {
+    check(Config::default().cases(40), "csr->coo->csr fixpoint", |g| {
+        let coo = arb_coo(g);
+        let csr = coo_to_csr(&coo);
+        let back = csr_to_coo(&csr);
+        let csr2 = coo_to_csr(&back);
+        anyhow::ensure!(csr == csr2);
+        Ok(())
+    });
+}
+
+#[test]
+fn radix_sort_is_sorted_and_permutation() {
+    check(Config::default().cases(40), "radix sort", |g| {
+        let coo = arb_coo(g);
+        let s = sort_coo_by_src(&coo);
+        for i in 1..s.m() {
+            let prev = ((s.src[i - 1] as u64) << 32) | s.dst[i - 1] as u64;
+            let cur = ((s.src[i] as u64) << 32) | s.dst[i] as u64;
+            anyhow::ensure!(prev <= cur, "not sorted at {i}");
+        }
+        let mut a: Vec<_> = coo.edges().collect();
+        let mut b: Vec<_> = s.edges().collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        anyhow::ensure!(a == b, "edge multiset changed");
+        Ok(())
+    });
+}
+
+#[test]
+fn radix_sort_stable_on_dst() {
+    // sort_coo_by_src sorts by (src, dst): within a src, dst ascending.
+    check(Config::default().cases(30), "within-row sorted", |g| {
+        let coo = arb_coo(g);
+        let csr = coo_to_csr(&sort_coo_by_src(&coo));
+        anyhow::ensure!(csr.rows_sorted());
+        Ok(())
+    });
+}
+
+#[test]
+fn transpose_preserves_edge_count_and_reverses() {
+    check(Config::default().cases(40), "transpose", |g| {
+        let coo = arb_coo(g);
+        let csr = coo_to_csr(&coo);
+        let t = csr.transposed();
+        anyhow::ensure!(t.m() == csr.m());
+        // (u,v) in csr <=> (v,u) in t (as multisets).
+        let mut fwd = std::collections::HashMap::new();
+        for v in 0..csr.n() {
+            for &u in csr.neighbors(v) {
+                *fwd.entry((v as u32, u)).or_insert(0u32) += 1;
+            }
+        }
+        let mut rev = std::collections::HashMap::new();
+        for v in 0..t.n() {
+            for &u in t.neighbors(v) {
+                *rev.entry((u, v as u32)).or_insert(0u32) += 1;
+            }
+        }
+        anyhow::ensure!(fwd == rev);
+        Ok(())
+    });
+}
+
+#[test]
+fn weighted_conversion_keeps_value_sum() {
+    check(Config::default().cases(30), "weighted sum", |g| {
+        let mut coo = arb_coo(g);
+        let vals: Vec<f32> = (0..coo.m()).map(|_| g.f32()).collect();
+        let total: f64 = vals.iter().map(|&v| v as f64).sum();
+        coo.vals = Some(vals);
+        let csr = coo_to_csr(&coo);
+        let total2: f64 = csr.vals.as_ref().unwrap().iter().map(|&v| v as f64).sum();
+        anyhow::ensure!((total - total2).abs() < 1e-3 * total.abs().max(1.0));
+        Ok(())
+    });
+}

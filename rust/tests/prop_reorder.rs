@@ -1,0 +1,199 @@
+//! Property tests over the reordering algorithms — the core L3
+//! invariants: every scheme yields a bijection, relabeling preserves
+//! graph structure, BOBA's variants relate as specified, and the
+//! locality metrics respond the way the paper claims.
+
+use boba::graph::{gen, Coo};
+use boba::metrics;
+use boba::parallel::ThreadGuard;
+use boba::reorder::{
+    boba::Boba, degree::DegreeSort, gorder::Gorder, hub::HubSort, random::RandomOrder, rcm::Rcm,
+    Reorderer,
+};
+use boba::testing::{check, Config, Gen};
+
+/// Random COO with every vertex in ≥1 edge not guaranteed — exercising
+/// the isolated-vertex path too.
+fn arb_coo(g: &mut Gen) -> Coo {
+    let n = g.usize(2..800);
+    let m = g.usize(1..4000);
+    let kind = g.usize(0..4);
+    let seed = g.seed();
+    match kind {
+        0 => gen::uniform_random(n, m, seed),
+        1 => gen::preferential_attachment(n.max(4), (m / n.max(1)).clamp(1, 8), seed),
+        2 => {
+            let w = (n as f64).sqrt() as usize + 2;
+            gen::grid_road(w, w, seed)
+        }
+        _ => gen::rmat(&gen::GenParams::rmat(10, 4), seed),
+    }
+}
+
+#[test]
+fn all_schemes_produce_bijections() {
+    check(Config::default().cases(40), "bijection", |g| {
+        let coo = arb_coo(g);
+        let schemes: Vec<Box<dyn Reorderer>> = vec![
+            Box::new(Boba::sequential()),
+            Box::new(Boba::parallel()),
+            Box::new(Boba::parallel_atomic()),
+            Box::new(DegreeSort::new()),
+            Box::new(HubSort::new()),
+            Box::new(RandomOrder::new(7)),
+            Box::new(Rcm::new()),
+            Box::new(Gorder::new(3)),
+        ];
+        for s in schemes {
+            let p = s.reorder(&coo);
+            p.validate(coo.n())
+                .map_err(|e| anyhow::anyhow!("{}: {e}", s.name()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn relabeling_preserves_structure() {
+    check(Config::default().cases(30), "structure invariants", |g| {
+        let coo = arb_coo(g);
+        let p = Boba::parallel().reorder(&coo);
+        let h = coo.relabeled(p.new_of_old());
+        anyhow::ensure!(h.m() == coo.m());
+        anyhow::ensure!(h.n() == coo.n());
+        // Degree multiset invariant.
+        let mut d0 = coo.total_degrees();
+        let mut d1 = h.total_degrees();
+        d0.sort_unstable();
+        d1.sort_unstable();
+        anyhow::ensure!(d0 == d1, "degree multiset changed");
+        // NScore upper bound (Lemma 8) holds for any labeling.
+        anyhow::ensure!(metrics::nscore(&h) <= metrics::nscore_upper_bound(&h));
+        Ok(())
+    });
+}
+
+#[test]
+fn boba_atomic_equals_sequential_always() {
+    check(Config::default().cases(40), "atomic == sequential", |g| {
+        let coo = arb_coo(g);
+        let a = Boba::sequential().reorder(&coo);
+        let b = Boba::parallel_atomic().reorder(&coo);
+        anyhow::ensure!(a == b, "atomic-min parallel must equal Algorithm 2");
+        Ok(())
+    });
+}
+
+#[test]
+fn boba_racy_single_thread_equals_sequential() {
+    check(Config::default().cases(20), "racy@1thread == sequential", |g| {
+        let coo = arb_coo(g);
+        let _t = ThreadGuard::pin(1);
+        let a = Boba::sequential().reorder(&coo);
+        let b = Boba::parallel().reorder(&coo);
+        anyhow::ensure!(a == b);
+        Ok(())
+    });
+}
+
+#[test]
+fn boba_first_appearance_is_minimal() {
+    // For the sequential algorithm: if u's first appearance in I++J
+    // precedes v's, then new(u) < new(v) (among non-isolated vertices).
+    check(Config::default().cases(30), "first-appearance order", |g| {
+        let coo = arb_coo(g);
+        let p = Boba::sequential().reorder(&coo);
+        let map = p.new_of_old();
+        let mut first = vec![usize::MAX; coo.n()];
+        for (i, &v) in coo.src.iter().chain(coo.dst.iter()).enumerate() {
+            if first[v as usize] == usize::MAX {
+                first[v as usize] = i;
+            }
+        }
+        let mut seen: Vec<(usize, u32)> = (0..coo.n())
+            .filter(|&v| first[v] != usize::MAX)
+            .map(|v| (first[v], map[v]))
+            .collect();
+        seen.sort_unstable();
+        for w in seen.windows(2) {
+            anyhow::ensure!(w[0].1 < w[1].1, "appearance order violated");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn boba_improves_or_matches_nbr_on_structured_inputs() {
+    // On generator-natural edge orders with randomized labels, BOBA's NBR
+    // must not be (much) worse than random's — the paper's "safe to apply
+    // indiscriminately" claim. Allow 5% slack for tiny graphs.
+    check(Config::default().cases(15), "nbr safety", |g| {
+        let coo = arb_coo(g);
+        if coo.m() < 50 {
+            return Ok(());
+        }
+        let rand = coo.randomized(g.seed());
+        let p = Boba::parallel().reorder(&rand);
+        let reord = rand.relabeled(p.new_of_old());
+        let nbr_rand = metrics::nbr_coo(&rand);
+        let nbr_boba = metrics::nbr_coo(&reord);
+        anyhow::ensure!(
+            nbr_boba <= nbr_rand * 1.05 + 0.05,
+            "BOBA made NBR worse: {nbr_boba} vs {nbr_rand}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn hub_sort_places_max_degree_first() {
+    check(Config::default().cases(30), "hub first", |g| {
+        let coo = arb_coo(g);
+        if coo.m() == 0 {
+            return Ok(());
+        }
+        let deg = coo.total_degrees();
+        let maxdeg = *deg.iter().max().unwrap();
+        let avg = (2 * coo.m()) as f64 / coo.n() as f64;
+        if (maxdeg as f64) <= avg {
+            return Ok(()); // perfectly regular: no hubs
+        }
+        let p = HubSort::new().reorder(&coo);
+        let order = p.order();
+        anyhow::ensure!(
+            deg[order[0] as usize] == maxdeg,
+            "hub sort must place a max-degree vertex first"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn rcm_never_increases_bandwidth_on_paths() {
+    check(Config::default().cases(15), "rcm path bandwidth", |g| {
+        let n = g.usize(4..400);
+        let src: Vec<u32> = (0..n as u32 - 1).collect();
+        let dst: Vec<u32> = (1..n as u32).collect();
+        let path = Coo::new(n, src, dst).randomized(g.seed());
+        let p = Rcm::new().reorder(&path);
+        let h = path.relabeled(p.new_of_old());
+        anyhow::ensure!(
+            metrics::bandwidth(&h) == 1,
+            "RCM must recover optimal bandwidth on paths, got {}",
+            metrics::bandwidth(&h)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn permutation_composition_roundtrip() {
+    check(Config::default().cases(40), "perm algebra", |g| {
+        let coo = arb_coo(g);
+        let p = Boba::parallel().reorder(&coo);
+        let h = coo.relabeled(p.new_of_old());
+        let back = h.relabeled(p.inverse().new_of_old());
+        anyhow::ensure!(back == coo, "inverse relabel must round-trip");
+        Ok(())
+    });
+}

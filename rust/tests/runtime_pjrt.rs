@@ -1,0 +1,156 @@
+//! PJRT runtime integration: load the AOT artifacts, execute both SpMV
+//! variants and PageRank, validate against native kernels. Requires
+//! `make artifacts` (tests are skipped with a notice when artifacts are
+//! absent, e.g. in a fresh checkout).
+
+use boba::algos::{pagerank, spmv};
+use boba::convert::coo_to_csr;
+use boba::graph::gen;
+use boba::runtime::{ell::EllPlan, Engine, SpmvKind};
+
+/// Fresh engine per test — `Engine` is deliberately not Send/Sync (the
+/// xla crate's PJRT handles are Rc-based), and each test runs on its own
+/// thread.
+fn engine() -> Option<Engine> {
+    match Engine::load_default() {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping PJRT test (run `make artifacts`): {err:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn spmv_jnp_matches_native() {
+    let Some(engine) = engine() else { return };
+    let engine = &engine;
+    let g = gen::preferential_attachment(5000, 4, 1).randomized(2);
+    let csr = coo_to_csr(&g);
+    let x: Vec<f32> = (0..csr.n()).map(|i| (i % 13) as f32 * 0.5).collect();
+    let y_pjrt = engine.spmv_csr(SpmvKind::Jnp, &csr, &x).unwrap();
+    let y_native = spmv::spmv_pull(&csr, &x);
+    for (a, b) in y_pjrt.iter().zip(&y_native) {
+        assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn spmv_pallas_matches_jnp() {
+    let Some(engine) = engine() else { return };
+    let engine = &engine;
+    let g = gen::uniform_random(3000, 20_000, 3);
+    let csr = coo_to_csr(&g);
+    let x: Vec<f32> = (0..csr.n()).map(|i| 1.0 + (i % 7) as f32).collect();
+    let plan = EllPlan::pack(&csr, engine.meta).unwrap();
+    let a = plan.execute(engine, SpmvKind::Jnp, &x).unwrap();
+    let b = plan.execute(engine, SpmvKind::Pallas, &x).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x0, x1) in a.iter().zip(&b) {
+        assert!((x0 - x1).abs() <= 1e-4 * x0.abs().max(1.0), "{x0} vs {x1}");
+    }
+}
+
+#[test]
+fn spmv_weighted_matches_native() {
+    let Some(engine) = engine() else { return };
+    let engine = &engine;
+    let mut g = gen::uniform_random(2000, 12_000, 5);
+    g.vals = Some((0..g.m()).map(|i| (i % 5) as f32 - 2.0).collect());
+    let csr = coo_to_csr(&g);
+    let x = vec![1.5f32; csr.n()];
+    let y_pjrt = engine.spmv_csr(SpmvKind::Jnp, &csr, &x).unwrap();
+    let y_native = spmv::spmv_pull(&csr, &x);
+    for (a, b) in y_pjrt.iter().zip(&y_native) {
+        assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0) + 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn spmv_handles_n_larger_than_tile() {
+    let Some(engine) = engine() else { return };
+    let engine = &engine;
+    // n spans multiple tiles AND multiple column segments.
+    let n = engine.meta.n_tile * 2 + 123;
+    let g = gen::uniform_random(n, n * 4, 7);
+    let csr = coo_to_csr(&g);
+    let x = vec![1.0f32; n];
+    let y = engine.spmv_csr(SpmvKind::Jnp, &csr, &x).unwrap();
+    let y_native = spmv::spmv_pull(&csr, &x);
+    assert_eq!(y.len(), n);
+    for (a, b) in y.iter().zip(&y_native) {
+        assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0));
+    }
+}
+
+#[test]
+fn spmv_high_degree_rows_span_passes() {
+    let Some(engine) = engine() else { return };
+    let engine = &engine;
+    // One row with degree 5*k forces multiple ELL passes.
+    let k = engine.meta.k;
+    let deg = 5 * k + 3;
+    let mut src = vec![0u32; deg];
+    let dst: Vec<u32> = (1..=deg as u32).collect();
+    src.push(1);
+    let mut dst = dst;
+    dst.push(0);
+    let n = deg + 2;
+    let g = boba::graph::Coo::new(n, src, dst);
+    let csr = coo_to_csr(&g);
+    let plan = EllPlan::pack(&csr, engine.meta).unwrap();
+    assert!(plan.passes() >= 6, "expected ≥6 passes, got {}", plan.passes());
+    let x = vec![1.0f32; n];
+    let y = plan.execute(engine, SpmvKind::Jnp, &x).unwrap();
+    assert_eq!(y[0], deg as f32);
+}
+
+#[test]
+fn pagerank_pjrt_matches_native() {
+    let Some(engine) = engine() else { return };
+    let engine = &engine;
+    let g = gen::preferential_attachment(4000, 4, 9).randomized(1);
+    let csr = coo_to_csr(&g);
+    let plan = EllPlan::pack_pagerank(&csr, engine.meta).unwrap();
+    let (ranks, iters) = engine.pagerank(&plan, csr.n(), 0.85, 25, 0.0).unwrap();
+    let native = pagerank::pagerank(
+        &csr,
+        pagerank::PrParams { max_iters: 25, tol: 0.0, damping: 0.85 },
+    );
+    assert_eq!(iters, 25);
+    let max_diff = ranks
+        .iter()
+        .zip(&native.ranks)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-5, "max diff {max_diff}");
+    let mass: f32 = ranks.iter().sum();
+    assert!((mass - 1.0).abs() < 1e-3, "mass {mass}");
+}
+
+#[test]
+fn pagerank_pjrt_handles_dangling() {
+    let Some(engine) = engine() else { return };
+    let engine = &engine;
+    // Chain with a dangling tail.
+    let g = boba::graph::Coo::new(4, vec![0, 1, 2], vec![1, 2, 3]);
+    let csr = coo_to_csr(&g);
+    let plan = EllPlan::pack_pagerank(&csr, engine.meta).unwrap();
+    let (ranks, _) = engine.pagerank(&plan, 4, 0.85, 40, 1e-7).unwrap();
+    let native = pagerank::pagerank(
+        &csr,
+        pagerank::PrParams { max_iters: 40, tol: 1e-7 / 4.0, damping: 0.85 },
+    );
+    for (a, b) in ranks.iter().zip(&native.ranks) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn engine_reports_platform() {
+    let Some(engine) = engine() else { return };
+    let engine = &engine;
+    assert_eq!(engine.platform(), "cpu");
+    assert!(engine.meta.n_tile >= 512);
+    assert!(engine.meta.k >= 1);
+}
