@@ -188,6 +188,26 @@ pub fn by_name(name: &str) -> Option<Dataset> {
     full_suite().into_iter().find(|d| d.name == name)
 }
 
+/// Resolve a dataset *spec* to a COO: a suite name from [`full_suite`]
+/// or an ad-hoc generator recipe — `rmat:SCALE:EDGEFACTOR`, `pa:N:C`,
+/// `grid:W:H`. Shared by the CLI dispatcher and the server's graph
+/// registry, so `boba run --dataset X` and `POST /graphs {"dataset":
+/// "X"}` accept exactly the same vocabulary.
+pub fn resolve(spec: &str, seed: u64) -> anyhow::Result<Coo> {
+    if let Some(d) = by_name(spec) {
+        return Ok(d.build(seed));
+    }
+    let parts: Vec<&str> = spec.split(':').collect();
+    match parts.as_slice() {
+        ["rmat", s, ef] => Ok(gen::rmat(&GenParams::rmat(s.parse()?, ef.parse()?), seed)),
+        ["pa", n, c] => Ok(gen::preferential_attachment(n.parse()?, c.parse()?, seed)),
+        ["grid", w, h] => Ok(gen::grid_road(w.parse()?, h.parse()?, seed)),
+        _ => anyhow::bail!(
+            "unknown dataset {spec} (see `boba datasets`, or use rmat:S:EF | pa:N:C | grid:W:H)"
+        ),
+    }
+}
+
 /// Table 2 analogue: the dataset inventory with |V|, |E| and CSR sizes.
 pub fn inventory(seed: u64) -> String {
     use crate::convert::coo_to_csr;

@@ -192,24 +192,41 @@ impl Pipeline {
     }
 }
 
+/// One streamed edge batch: sources, destinations, optional weights.
+type EdgeBatch = (Vec<u32>, Vec<u32>, Option<Vec<f32>>);
+
 /// Streaming/batched edge ingestion with backpressure (bounded channel).
 pub struct StreamingIngest {
-    rx: mpsc::Receiver<(Vec<u32>, Vec<u32>)>,
+    rx: mpsc::Receiver<EdgeBatch>,
     n: usize,
 }
 
 impl StreamingIngest {
-    /// Spawn a producer that chops `coo` into `batch` -edge chunks and
+    /// Spawn a producer that chops `coo` into `batch`-edge chunks and
     /// streams them with a channel capacity of `in_flight` batches.
+    /// Both knobs are exposed on the CLI (`--batch`, `--in-flight`) and
+    /// in the server's registry config. The final chunk is usually
+    /// partial (`m % batch` edges) and is emitted like any other;
+    /// degenerate knob values are clamped (`batch == 0` would otherwise
+    /// spin forever emitting empty chunks).
     pub fn from_coo(coo: Coo, batch: usize, in_flight: usize) -> (std::thread::JoinHandle<()>, Self) {
+        let batch = batch.max(1);
         let (tx, rx) = mpsc::sync_channel(in_flight.max(1));
         let n = coo.n();
         let handle = std::thread::spawn(move || {
             let m = coo.m();
             let mut at = 0;
             while at < m {
+                // min() caps the last batch at the tail length, so a
+                // partial final batch is sent, never dropped.
                 let hi = (at + batch).min(m);
-                let chunk = (coo.src[at..hi].to_vec(), coo.dst[at..hi].to_vec());
+                let chunk = (
+                    coo.src[at..hi].to_vec(),
+                    coo.dst[at..hi].to_vec(),
+                    // Weights ride along so weighted datasets (SpMV
+                    // values) survive batched ingestion.
+                    coo.vals.as_ref().map(|v| v[at..hi].to_vec()),
+                );
                 if tx.send(chunk).is_err() {
                     return; // consumer dropped
                 }
@@ -224,13 +241,19 @@ impl StreamingIngest {
     pub fn collect(self) -> (Coo, usize) {
         let mut src = Vec::new();
         let mut dst = Vec::new();
+        let mut vals: Option<Vec<f32>> = None;
         let mut batches = 0;
-        while let Ok((s, d)) = self.rx.recv() {
+        while let Ok((s, d, v)) = self.rx.recv() {
             src.extend_from_slice(&s);
             dst.extend_from_slice(&d);
+            if let Some(vv) = v {
+                vals.get_or_insert_with(Vec::new).extend_from_slice(&vv);
+            }
             batches += 1;
         }
-        (Coo::new(self.n, src, dst), batches)
+        let mut coo = Coo::new(self.n, src, dst);
+        coo.vals = vals;
+        (coo, batches)
     }
 }
 
@@ -300,6 +323,69 @@ mod tests {
         h.join().unwrap();
         assert_eq!(got, g);
         assert_eq!(batches, g.m().div_ceil(333));
+    }
+
+    #[test]
+    fn streaming_ingest_final_partial_batch_not_dropped() {
+        // 10 edges in batches of 4: two full batches + a 2-edge tail
+        // that must be emitted, not dropped.
+        let g = Coo::new(
+            11,
+            vec![0, 1, 2, 3, 4, 5, 6, 7, 8, 9],
+            vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10],
+        );
+        let (h, stream) = StreamingIngest::from_coo(g.clone(), 4, 2);
+        let (got, batches) = stream.collect();
+        h.join().unwrap();
+        assert_eq!(got.m(), g.m(), "no edges may be dropped");
+        assert_eq!(got, g);
+        assert_eq!(batches, 3);
+    }
+
+    #[test]
+    fn streaming_ingest_preserves_weights() {
+        let g = Coo::with_vals(
+            4,
+            vec![0, 1, 2, 3, 0],
+            vec![1, 2, 3, 0, 2],
+            vec![0.5, -1.0, 2.25, 8.0, 3.5],
+        );
+        let (h, stream) = StreamingIngest::from_coo(g.clone(), 2, 1);
+        let (got, batches) = stream.collect();
+        h.join().unwrap();
+        assert_eq!(got, g, "weights must survive batched ingestion");
+        assert_eq!(batches, 3);
+    }
+
+    #[test]
+    fn streaming_ingest_batch_larger_than_graph() {
+        let g = sample();
+        let (h, stream) = StreamingIngest::from_coo(g.clone(), g.m() * 10, 1);
+        let (got, batches) = stream.collect();
+        h.join().unwrap();
+        assert_eq!(got, g);
+        assert_eq!(batches, 1);
+    }
+
+    #[test]
+    fn streaming_ingest_zero_batch_clamped() {
+        let g = sample();
+        let (h, stream) = StreamingIngest::from_coo(g.clone(), 0, 1);
+        let (got, batches) = stream.collect();
+        h.join().unwrap();
+        assert_eq!(got, g, "batch=0 is clamped to 1, not an infinite loop");
+        assert_eq!(batches, g.m());
+    }
+
+    #[test]
+    fn streaming_ingest_empty_graph() {
+        let g = Coo::new(5, vec![], vec![]);
+        let (h, stream) = StreamingIngest::from_coo(g.clone(), 64, 2);
+        let (got, batches) = stream.collect();
+        h.join().unwrap();
+        assert_eq!(got, g);
+        assert_eq!(got.n(), 5, "vertex count survives an edgeless stream");
+        assert_eq!(batches, 0);
     }
 
     #[test]

@@ -116,15 +116,38 @@ pub fn write_matrix_market(coo: &Coo, path: &Path) -> anyhow::Result<()> {
 /// 0..n range in first-appearance order* — which is exactly a sequential
 /// BOBA pass (the paper's observation that pipelines that must renumber
 /// anyway get BOBA for free). Set `preserve_ids = true` to instead keep
-/// numeric IDs (n = max + 1).
+/// numeric IDs (n = max + 1, or the header's `n=` if larger — so a
+/// [`write_edge_list`] round-trip preserves trailing isolated vertices).
 pub fn read_edge_list(path: &Path, preserve_ids: bool) -> anyhow::Result<Coo> {
     let f = std::fs::File::open(path)?;
     let reader = std::io::BufReader::new(f);
     let mut raw: Vec<(u64, u64)> = Vec::new();
+    let mut header_n: Option<usize> = None;
     for line in reader.lines() {
         let line = line?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            // Our own writer records `n=` in a comment; honor it so
+            // vertex count survives the round-trip. Only a token-
+            // boundary match counts — `min=`/`mean=` in third-party
+            // headers must not be misread as a vertex count.
+            if header_n.is_none() {
+                for (at, _) in t.match_indices("n=") {
+                    let at_boundary = at == 0
+                        || matches!(t.as_bytes()[at - 1], b' ' | b'\t' | b'#' | b':');
+                    if !at_boundary {
+                        continue;
+                    }
+                    let digits: String = t[at + 2..]
+                        .chars()
+                        .take_while(|c| c.is_ascii_digit())
+                        .collect();
+                    if let Ok(v) = digits.parse() {
+                        header_n = Some(v);
+                        break;
+                    }
+                }
+            }
             continue;
         }
         let mut it = t.split_whitespace();
@@ -136,7 +159,8 @@ pub fn read_edge_list(path: &Path, preserve_ids: bool) -> anyhow::Result<Coo> {
         raw.push((u, v));
     }
     if preserve_ids {
-        let n = raw.iter().map(|&(u, v)| u.max(v)).max().map_or(0, |x| x + 1) as usize;
+        let n_ids = raw.iter().map(|&(u, v)| u.max(v)).max().map_or(0, |x| x + 1) as usize;
+        let n = n_ids.max(header_n.unwrap_or(0));
         let src = raw.iter().map(|&(u, _)| u as u32).collect();
         let dst = raw.iter().map(|&(_, v)| v as u32).collect();
         return Ok(Coo::new(n, src, dst));
@@ -247,6 +271,93 @@ mod tests {
         let g = read_edge_list(&p, true).unwrap();
         assert_eq!(g.n(), 6);
         assert_eq!(g.src, vec![0, 2]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// Edge multiset (order-insensitive, multiplicity-sensitive).
+    fn edge_multiset(g: &Coo) -> std::collections::HashMap<(u32, u32), u32> {
+        let mut m = std::collections::HashMap::new();
+        for e in g.edges() {
+            *m.entry(e).or_insert(0u32) += 1;
+        }
+        m
+    }
+
+    #[test]
+    fn mtx_roundtrip_preserves_n_m_and_multiset() {
+        use crate::graph::gen;
+        // Generated graph with duplicate edges kept and an isolated
+        // trailing vertex (n > max id + 1).
+        let mut g = gen::preferential_attachment(500, 4, 11).randomized(12);
+        g.n += 3; // three isolated vertices
+        let p = tmp("full_rt.mtx");
+        write_matrix_market(&g, &p).unwrap();
+        let h = read_matrix_market(&p).unwrap();
+        assert_eq!(h.n(), g.n(), "n survives (dims line)");
+        assert_eq!(h.m(), g.m(), "m survives");
+        assert_eq!(edge_multiset(&h), edge_multiset(&g), "edge multiset survives");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mtx_on_disk_is_one_based() {
+        let g = Coo::new(3, vec![0, 2], vec![1, 0]);
+        let p = tmp("onebased.mtx");
+        write_matrix_market(&g, &p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let data: Vec<&str> = text
+            .lines()
+            .filter(|l| !l.starts_with('%'))
+            .skip(1) // dims line
+            .collect();
+        // Edge (0,1) is stored as "1 2", (2,0) as "3 1" — 1-based.
+        assert_eq!(data, vec!["1 2", "3 1"]);
+        // And reading converts back to 0-based.
+        let h = read_matrix_market(&p).unwrap();
+        assert_eq!(h.src, g.src);
+        assert_eq!(h.dst, g.dst);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mtx_roundtrip_weighted_multiset() {
+        let g = Coo::with_vals(
+            4,
+            vec![0, 1, 1, 3],
+            vec![1, 2, 2, 0],
+            vec![0.5, -1.25, 2.0, 8.0],
+        );
+        let p = tmp("wrt.mtx");
+        write_matrix_market(&g, &p).unwrap();
+        let h = read_matrix_market(&p).unwrap();
+        assert_eq!(h.n(), g.n());
+        assert_eq!(h.m(), g.m());
+        assert_eq!(edge_multiset(&h), edge_multiset(&g));
+        assert_eq!(h.vals, g.vals, "values follow their edges");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn edge_list_roundtrip_preserves_n_via_header() {
+        // n = 9 with max id 5: the trailing isolated vertices are only
+        // recorded in the writer's `n=` header comment.
+        let g = Coo::new(9, vec![0, 5, 2], vec![5, 2, 0]);
+        let p = tmp("hdr.el");
+        write_edge_list(&g, &p).unwrap();
+        let h = read_edge_list(&p, true).unwrap();
+        assert_eq!(h.n(), 9, "n survives via the header");
+        assert_eq!(h.m(), g.m());
+        assert_eq!(edge_multiset(&h), edge_multiset(&g));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn edge_list_header_ignores_non_boundary_matches() {
+        // `mean=` and `min=` contain "n=" but are not a vertex count.
+        let p = tmp("fake_hdr.el");
+        std::fs::write(&p, "# mean=3.5 min=900000\n0 1\n1 0\n").unwrap();
+        let g = read_edge_list(&p, true).unwrap();
+        assert_eq!(g.n(), 2, "no phantom vertices from mean=/min=");
         std::fs::remove_file(&p).ok();
     }
 

@@ -14,8 +14,14 @@
 //! GScore, bandwidth), and a trace-driven cache simulator standing in for
 //! the paper's GPU profiler counters.
 //!
-//! ## Three-layer architecture
+//! ## Architecture: three compute layers plus a service layer
 //!
+//! * **L4 ([`server`])** — the online service: `boba serve` exposes the
+//!   prepared artifacts over HTTP (std-only, multi-threaded), with a
+//!   [`server::registry::GraphRegistry`] LRU that runs the Problem-3
+//!   pipeline once per `(dataset, scheme)` and serves every subsequent
+//!   SpMV/PageRank/SSSP/TC query from the cached reordered CSR;
+//!   `boba loadgen` measures the result as queries/second.
 //! * **L3 (this crate)** — the coordinator: reordering, conversion,
 //!   algorithms, metrics, experiment drivers, CLI.
 //! * **L2 (python/compile/model.py)** — JAX compute graphs (SpMV over a
@@ -24,7 +30,8 @@
 //!   that L2 calls; verified against a pure-jnp oracle at build time.
 //!
 //! Python never runs at request time: [`runtime`] loads the AOT HLO
-//! artifacts through PJRT (the `xla` crate) and executes them natively.
+//! artifacts through PJRT (the `xla` crate, behind the off-by-default
+//! `pjrt` feature) and executes them natively.
 //!
 //! ## Quickstart
 //!
@@ -56,6 +63,7 @@ pub mod algos;
 pub mod cachesim;
 pub mod metrics;
 pub mod coordinator;
+pub mod server;
 pub mod runtime;
 pub mod bench;
 pub mod testing;

@@ -1,4 +1,4 @@
-//! `boba` — the L3 coordinator CLI.
+//! `boba` — the L3 coordinator CLI and the L4 service entry points.
 //!
 //! Subcommands:
 //!   datasets                         print the Table-2 style inventory
@@ -6,22 +6,24 @@
 //!   reorder   --algo S [--in F | --dataset N] [--out F]
 //!   convert   [--in F | --dataset N]             time COO→CSR
 //!   run       --app A [--algo S] [--in F | --dataset N]
-//!   pipeline  --app A --algo S [--dataset N]     full Problem-3 pipeline
+//!   pipeline  --app A --algo S [--dataset N] [--batch B] [--in-flight K]
+//!   serve     [--addr H:P] [--workers W] [--cache C] [--batch B]
+//!             [--in-flight K]        run the graph-analytics service
+//!   loadgen   [--addr H:P] [--conns C] [--requests R] [--dataset N]
+//!             [--scheme S] [--mix spmv:7,pagerank:3] [--pr-iters I]
+//!             [--compare] [--json F] [--spawn]   drive a server
 //!   table1 | table3 | fig4 | fig5 | fig6 | fig7  regenerate a paper table/figure
 //!   spmv-pjrt [--dataset N] [--pallas]           SpMV through the AOT artifacts
+//!                                                (needs the `pjrt` build feature)
 //!
 //! Common options: --seed (default 42), --scale quick|full (or BOBA_SCALE),
 //! --heavy false (or BOBA_HEAVY=0) to skip Gorder/RCM in figure drivers.
 
-use boba::algos::spmv;
 use boba::convert;
 use boba::coordinator::{datasets, experiments, pipeline};
-use boba::graph::{gen, io, Coo};
-use boba::reorder::{
-    boba::Boba, degree::DegreeSort, gorder::Gorder, hub::HubSort, random::RandomOrder, rcm::Rcm,
-    Reorderer,
-};
-use boba::runtime::{Engine, SpmvKind};
+use boba::graph::{io, Coo};
+use boba::reorder::{self, boba::Boba};
+use boba::server::{self, loadgen, ServerConfig};
 use boba::util::args::Args;
 use boba::util::timer::Stopwatch;
 use std::path::Path;
@@ -58,7 +60,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         }
         Some("reorder") => {
             let g = load_graph(args, seed)?.randomized(seed + 1);
-            let scheme = scheme_by_name(&args.get_or("algo", "boba"), seed)?;
+            let scheme = reorder::by_name(&args.get_or("algo", "boba"), seed)?;
             let sw = Stopwatch::start();
             let perm = scheme.reorder(&g);
             let ms = sw.ms();
@@ -88,7 +90,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
             let app = app_by_name(&args.get_or("app", "spmv"))?;
             let stage = match args.get("algo") {
                 None => pipeline::ReorderStage::None,
-                Some(name) => pipeline::ReorderStage::Scheme(scheme_by_name(name, seed)?),
+                Some(name) => pipeline::ReorderStage::Scheme(reorder::by_name(name, seed)?),
             };
             let report = pipeline::Pipeline::new(app).run(&g, &stage);
             println!(
@@ -106,14 +108,15 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
             let g = load_graph(args, seed)?.randomized(seed + 1);
             let app = app_by_name(&args.get_or("app", "spmv"))?;
             let batch: usize = args.get_parse("batch", 1 << 16);
+            let in_flight: usize = args.get_parse("in-flight", 4);
             let sw = Stopwatch::start();
-            let (producer, stream) = pipeline::StreamingIngest::from_coo(g.clone(), batch, 4);
+            let (producer, stream) = pipeline::StreamingIngest::from_coo(g.clone(), batch, in_flight);
             let (assembled, batches) = stream.collect();
             producer.join().ok();
             let ingest_ms = sw.ms();
             let stage = match args.get("algo") {
                 None => pipeline::ReorderStage::Scheme(Box::new(Boba::parallel())),
-                Some(name) => pipeline::ReorderStage::Scheme(scheme_by_name(name, seed)?),
+                Some(name) => pipeline::ReorderStage::Scheme(reorder::by_name(name, seed)?),
             };
             let report = pipeline::Pipeline::new(app).run(&assembled, &stage);
             println!(
@@ -125,38 +128,76 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 report.stages.summary(),
             );
         }
+        Some("serve") => {
+            let cfg = server_config(args, seed);
+            let srv = server::spawn(cfg.clone())?;
+            println!(
+                "boba serve: listening on {} ({} workers, cache {} graphs, \
+                 batch {}, in-flight {})",
+                srv.addr(),
+                cfg.workers,
+                cfg.capacity,
+                cfg.batch,
+                cfg.in_flight,
+            );
+            println!("try: curl -X POST {}/graphs -d '{{\"dataset\": \"rmat:16:16\", \"scheme\": \"boba\"}}'", srv.addr());
+            srv.join();
+        }
+        Some("loadgen") => {
+            let mut cfg = loadgen::LoadgenConfig {
+                addr: args.get_or("addr", "127.0.0.1:7171"),
+                conns: args.get_parse("conns", 4),
+                requests: args.get_parse("requests", 400),
+                dataset: args.get_or("dataset", "rmat:16:16"),
+                scheme: args.get_or("scheme", "boba"),
+                mix: loadgen::parse_mix(&args.get_or("mix", "spmv:7,pagerank:3"))?,
+                pr_iters: args.get_parse("pr-iters", 5),
+                seed,
+            };
+            // --spawn: self-host an ephemeral server for the run (CI's
+            // one-command benchmark mode).
+            let spawned = if args.flag("spawn") {
+                let mut scfg = server_config(args, seed);
+                scfg.addr = "127.0.0.1:0".to_string();
+                let srv = server::spawn(scfg)?;
+                cfg.addr = srv.addr().to_string();
+                Some(srv)
+            } else {
+                None
+            };
+            let doc = if args.flag("compare") {
+                let (reordered, baseline, speedup) = loadgen::compare(&cfg)?;
+                println!("baseline  {}", baseline.render());
+                println!("reordered {}", reordered.render());
+                println!(
+                    "BOBA-prepared serving speedup: {speedup:.2}x queries/second \
+                     ({:.0} vs {:.0} q/s)",
+                    reordered.qps, baseline.qps,
+                );
+                loadgen::comparison_json(&reordered, &baseline, speedup)
+            } else {
+                let report = loadgen::run(&cfg)?;
+                println!("{}", report.render());
+                report.to_json()
+            };
+            if let Some(path) = args.get("json") {
+                std::fs::write(path, doc.render() + "\n")?;
+                println!("wrote {path}");
+            }
+            if let Some(srv) = spawned {
+                srv.shutdown();
+            }
+        }
         Some("table1") => println!("{}", experiments::table1(seed).render()),
         Some("table3") => println!("{}", experiments::table3(seed).render()),
         Some("fig4") => println!("{}", experiments::fig4(seed).render()),
         Some("fig5") => println!("{}", experiments::fig5(seed).render()),
         Some("fig6") => println!("{}", experiments::fig6(seed).render()),
         Some("fig7") => println!("{}", experiments::fig7(seed).render()),
-        Some("spmv-pjrt") => {
-            let g = load_graph(args, seed)?.randomized(seed + 1);
-            let csr = convert::coo_to_csr(&g);
-            let engine = Engine::load_default()?;
-            let kind = if args.flag("pallas") { SpmvKind::Pallas } else { SpmvKind::Jnp };
-            let x = vec![1.0f32; csr.n()];
-            let sw = Stopwatch::start();
-            let y = engine.spmv_csr(kind, &csr, &x)?;
-            let pjrt_ms = sw.ms();
-            let y_native = spmv::spmv_pull(&csr, &x);
-            let max_diff = y
-                .iter()
-                .zip(&y_native)
-                .map(|(a, b)| (a - b).abs())
-                .fold(0f32, f32::max);
-            println!(
-                "PJRT SpMV ({kind:?}) on {}: n={} m={} in {:.2} ms; max |Δ| vs native = {max_diff:e}",
-                engine.platform(),
-                csr.n(),
-                csr.m(),
-                pjrt_ms,
-            );
-        }
+        Some("spmv-pjrt") => spmv_pjrt(args, seed)?,
         _ => {
             eprintln!(
-                "usage: boba <datasets|generate|reorder|convert|run|pipeline|\
+                "usage: boba <datasets|generate|reorder|convert|run|pipeline|serve|loadgen|\
                  table1|table3|fig4|fig5|fig6|fig7|spmv-pjrt> [options]\n\
                  (see rust/src/main.rs header for options)"
             );
@@ -165,8 +206,23 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Shared `serve`/`loadgen --spawn` server configuration from flags.
+fn server_config(args: &Args, seed: u64) -> ServerConfig {
+    let default = ServerConfig::default();
+    ServerConfig {
+        addr: args.get_or("addr", &default.addr),
+        workers: args.get_parse("workers", default.workers),
+        capacity: args.get_parse("cache", default.capacity),
+        batch: args.get_parse("batch", default.batch),
+        in_flight: args.get_parse("in-flight", default.in_flight),
+        seed,
+        read_timeout: default.read_timeout,
+    }
+}
+
 /// Load a graph from `--in FILE` or build `--dataset NAME` (default
-/// pa_c8).
+/// pa_c8). Dataset specs share their vocabulary with the server's
+/// registry (`datasets::resolve`).
 fn load_graph(args: &Args, seed: u64) -> anyhow::Result<Coo> {
     if let Some(path) = args.get("in") {
         let p = Path::new(path);
@@ -176,36 +232,10 @@ fn load_graph(args: &Args, seed: u64) -> anyhow::Result<Coo> {
             io::read_edge_list(p, args.flag("preserve-ids"))
         };
     }
-    if let Some(name) = args.get("dataset") {
-        if let Some(d) = datasets::by_name(name) {
-            return Ok(d.build(seed));
-        }
-        // Ad-hoc recipes: rmat:scale:ef, pa:n:c, grid:w:h
-        let parts: Vec<&str> = name.split(':').collect();
-        match parts.as_slice() {
-            ["rmat", s, ef] => {
-                return Ok(gen::rmat(&gen::GenParams::rmat(s.parse()?, ef.parse()?), seed))
-            }
-            ["pa", n, c] => return Ok(gen::preferential_attachment(n.parse()?, c.parse()?, seed)),
-            ["grid", w, h] => return Ok(gen::grid_road(w.parse()?, h.parse()?, seed)),
-            _ => anyhow::bail!("unknown dataset {name}"),
-        }
+    match args.get("dataset") {
+        Some(name) => datasets::resolve(name, seed),
+        None => Ok(datasets::by_name("pa_c8").unwrap().build(seed)),
     }
-    Ok(datasets::by_name("pa_c8").unwrap().build(seed))
-}
-
-fn scheme_by_name(name: &str, seed: u64) -> anyhow::Result<Box<dyn Reorderer + Send + Sync>> {
-    Ok(match name.to_lowercase().as_str() {
-        "boba" => Box::new(Boba::parallel()),
-        "boba-seq" => Box::new(Boba::sequential()),
-        "boba-atomic" => Box::new(Boba::parallel_atomic()),
-        "degree" => Box::new(DegreeSort::new()),
-        "hub" => Box::new(HubSort::new()),
-        "rcm" => Box::new(Rcm::new()),
-        "gorder" => Box::new(Gorder::new(5)),
-        "random" => Box::new(RandomOrder::new(seed)),
-        other => anyhow::bail!("unknown scheme {other}"),
-    })
 }
 
 fn app_by_name(name: &str) -> anyhow::Result<pipeline::App> {
@@ -216,4 +246,41 @@ fn app_by_name(name: &str) -> anyhow::Result<pipeline::App> {
         "sssp" => pipeline::App::Sssp,
         other => anyhow::bail!("unknown app {other}"),
     })
+}
+
+/// SpMV through the AOT PJRT artifacts (build with `--features pjrt`).
+#[cfg(feature = "pjrt")]
+fn spmv_pjrt(args: &Args, seed: u64) -> anyhow::Result<()> {
+    use boba::algos::spmv;
+    use boba::runtime::{Engine, SpmvKind};
+    let g = load_graph(args, seed)?.randomized(seed + 1);
+    let csr = convert::coo_to_csr(&g);
+    let engine = Engine::load_default()?;
+    let kind = if args.flag("pallas") { SpmvKind::Pallas } else { SpmvKind::Jnp };
+    let x = vec![1.0f32; csr.n()];
+    let sw = Stopwatch::start();
+    let y = engine.spmv_csr(kind, &csr, &x)?;
+    let pjrt_ms = sw.ms();
+    let y_native = spmv::spmv_pull(&csr, &x);
+    let max_diff = y
+        .iter()
+        .zip(&y_native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!(
+        "PJRT SpMV ({kind:?}) on {}: n={} m={} in {:.2} ms; max |Δ| vs native = {max_diff:e}",
+        engine.platform(),
+        csr.n(),
+        csr.m(),
+        pjrt_ms,
+    );
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn spmv_pjrt(_args: &Args, _seed: u64) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "this binary was built without the `pjrt` feature; rebuild with \
+         `cargo build --features pjrt` (requires the xla crate, see Cargo.toml)"
+    )
 }

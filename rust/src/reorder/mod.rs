@@ -55,6 +55,26 @@ pub trait Reorderer {
     }
 }
 
+/// Look up a scheme by its CLI/service name. Accepted names: `boba`,
+/// `boba-seq`, `boba-atomic`, `degree`, `hub`, `rcm`, `gorder`,
+/// `random` (seeded relabeling). Shared by the CLI dispatcher and the
+/// server's [`crate::server::registry::GraphRegistry`].
+pub fn by_name(name: &str, seed: u64) -> anyhow::Result<Box<dyn Reorderer + Send + Sync>> {
+    Ok(match name.to_lowercase().as_str() {
+        "boba" => Box::new(boba::Boba::parallel()),
+        "boba-seq" => Box::new(boba::Boba::sequential()),
+        "boba-atomic" => Box::new(boba::Boba::parallel_atomic()),
+        "degree" => Box::new(degree::DegreeSort::new()),
+        "hub" => Box::new(hub::HubSort::new()),
+        "rcm" => Box::new(rcm::Rcm::new()),
+        "gorder" => Box::new(gorder::Gorder::new(5)),
+        "random" => Box::new(random::RandomOrder::new(seed)),
+        other => anyhow::bail!(
+            "unknown scheme {other} (expected boba|boba-seq|boba-atomic|degree|hub|rcm|gorder|random)"
+        ),
+    })
+}
+
 /// Every scheme of the paper's §5 benches, in table order:
 /// Random is implicit (the input is pre-randomized), so this returns
 /// Gorder, RCM, BOBA, Hub, Degree.

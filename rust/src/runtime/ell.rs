@@ -19,7 +19,9 @@
 //! pass count is reported by [`EllPlan::passes`] and benchmarked in
 //! EXPERIMENTS.md).
 
-use super::{Engine, Meta, SpmvKind};
+use super::Meta;
+#[cfg(feature = "pjrt")]
+use super::{Engine, SpmvKind};
 use crate::graph::Csr;
 use anyhow::Result;
 
@@ -138,7 +140,9 @@ impl EllPlan {
     }
 
     /// Execute the plan: `y = A·x` with `x` of length ≥ n (padded
-    /// internally).
+    /// internally). Only available with the `pjrt` feature (needs a
+    /// compiled [`Engine`]); packing itself is feature-free.
+    #[cfg(feature = "pjrt")]
     pub fn execute(&self, engine: &Engine, kind: SpmvKind, x: &[f32]) -> Result<Vec<f32>> {
         anyhow::ensure!(
             x.len() >= self.n_cols,

@@ -10,11 +10,19 @@
 //! artifacts were compiled for; [`Engine`] stitches tile executions into
 //! whole-graph SpMV and PageRank.
 
+//! The executable engine is compiled only with the **`pjrt` feature**
+//! (it needs the `xla` crate, which does not resolve offline — see
+//! Cargo.toml); [`Meta`] parsing and the [`ell`] packing plan are pure
+//! and always available.
+
 pub mod ell;
 
+#[cfg(feature = "pjrt")]
 use crate::graph::Csr;
 use anyhow::{Context, Result};
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
 /// Artifact tile geometry, read from `artifacts/meta.json`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -63,6 +71,7 @@ pub enum SpmvKind {
 }
 
 /// A compiled-and-loaded artifact set on the CPU PJRT client.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     spmv_jnp: xla::PjRtLoadedExecutable,
@@ -72,6 +81,7 @@ pub struct Engine {
     pub meta: Meta,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Default artifact directory (`$BOBA_ARTIFACTS` or the nearest
     /// ancestor `artifacts/`, so tests and benches work from target

@@ -1,0 +1,379 @@
+//! A minimal HTTP/1.1 layer over std I/O traits — just enough protocol
+//! for the service layer: request-line + headers + `Content-Length`
+//! bodies, persistent (keep-alive) connections, and a tiny client used
+//! by [`super::loadgen`] and the integration tests.
+//!
+//! Deliberately unsupported (a 400 is returned instead): chunked
+//! transfer encoding, HTTP/2, multi-line headers, trailers. The service
+//! speaks only to its own loadgen and to curl-style tools, and both
+//! send simple framed requests.
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Upper bound on the request line + headers (DoS guard).
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Upper bound on a request/response body (DoS guard).
+pub const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Upper-case method (`GET`, `POST`, ...).
+    pub method: String,
+    /// Path component of the target, query string stripped.
+    pub path: String,
+    /// Raw query string ("" when absent).
+    pub query: String,
+    /// Headers with lower-cased names, in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// Request body (empty when no `Content-Length`).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header value by lower-case name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the client asked to drop the connection after this
+    /// exchange (`Connection: close`).
+    pub fn wants_close(&self) -> bool {
+        self.header("connection")
+            .map_or(false, |v| v.eq_ignore_ascii_case("close"))
+    }
+
+    /// Body as UTF-8 (lossy — bodies here are JSON, already ASCII-safe).
+    pub fn body_str(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// Read one request from a buffered stream.
+///
+/// Returns `Ok(None)` when no request is forthcoming — clean EOF, or a
+/// read timeout firing *before the first byte* (an idle keep-alive
+/// connection; answering it would desynchronize the client's
+/// request/response pairing). Errors on malformed or oversized input
+/// and on timeouts mid-request.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>> {
+    let mut line = String::new();
+    match r.read_line(&mut line) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(e)
+            if line.is_empty()
+                && matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+        {
+            return Ok(None)
+        }
+        Err(e) => return Err(e.into()),
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .context("empty request line")?
+        .to_ascii_uppercase();
+    let target = parts.next().context("request line missing target")?;
+    let version = parts.next().context("request line missing version")?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol version {version}");
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+
+    let mut headers = Vec::new();
+    let mut header_bytes = line.len();
+    loop {
+        let mut hl = String::new();
+        if r.read_line(&mut hl)? == 0 {
+            bail!("connection closed mid-headers");
+        }
+        header_bytes += hl.len();
+        if header_bytes > MAX_HEADER_BYTES {
+            bail!("headers exceed {MAX_HEADER_BYTES} bytes");
+        }
+        let t = hl.trim_end_matches(|c| c == '\r' || c == '\n');
+        if t.is_empty() {
+            break;
+        }
+        let (name, value) = t
+            .split_once(':')
+            .with_context(|| format!("malformed header line {t:?}"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    if headers.iter().any(|(k, _)| k == "transfer-encoding") {
+        bail!("chunked transfer encoding not supported");
+    }
+    let len: usize = match headers.iter().find(|(k, _)| k == "content-length") {
+        Some((_, v)) => v.parse().context("bad content-length")?,
+        None => 0,
+    };
+    if len > MAX_BODY_BYTES {
+        bail!("body of {len} bytes exceeds {MAX_BODY_BYTES}");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("reading request body")?;
+
+    Ok(Some(Request { method, path, query, headers, body }))
+}
+
+/// Reason phrase for the status codes the service emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        422 => "Unprocessable Entity",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// An HTTP response ready to serialize.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Status code.
+    pub status: u16,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    /// Response body.
+    pub body: Vec<u8>,
+    /// Whether to close the connection after writing.
+    pub close: bool,
+}
+
+impl Response {
+    /// JSON response.
+    pub fn json(status: u16, body: impl Into<Vec<u8>>) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.into(),
+            close: false,
+        }
+    }
+
+    /// Plain-text response.
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into().into_bytes(),
+            close: false,
+        }
+    }
+
+    /// JSON error envelope: `{"error": "..."}`.
+    pub fn error(status: u16, message: &str) -> Response {
+        Response::json(
+            status,
+            format!(
+                "{{\"error\": {}}}",
+                super::json::Json::Str(message.to_string()).render()
+            ),
+        )
+    }
+
+    /// Serialize status line, framing headers, and body.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len(),
+            if self.close { "close" } else { "keep-alive" },
+        )?;
+        w.write_all(&self.body)
+    }
+}
+
+/// A blocking HTTP/1.1 client over one persistent TCP connection —
+/// the loadgen worker's and the smoke test's view of the server.
+pub struct HttpClient {
+    reader: BufReader<TcpStream>,
+}
+
+impl HttpClient {
+    /// Connect to `addr` (e.g. `127.0.0.1:7171`).
+    pub fn connect(addr: &str) -> Result<HttpClient> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(120)))
+            .ok();
+        Ok(HttpClient { reader: BufReader::new(stream) })
+    }
+
+    /// Issue one request, reusing the connection. Returns
+    /// `(status, body)`.
+    pub fn request(&mut self, method: &str, path: &str, body: &[u8]) -> Result<(u16, Vec<u8>)> {
+        {
+            let mut w = self.reader.get_ref();
+            write!(
+                w,
+                "{method} {path} HTTP/1.1\r\nhost: boba\r\ncontent-length: {}\r\n\r\n",
+                body.len()
+            )?;
+            w.write_all(body)?;
+            w.flush()?;
+        }
+
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            bail!("server closed connection before responding");
+        }
+        let mut parts = line.split_whitespace();
+        let version = parts.next().context("empty status line")?;
+        if !version.starts_with("HTTP/1.") {
+            bail!("unexpected response protocol {version}");
+        }
+        let status: u16 = parts
+            .next()
+            .context("status line missing code")?
+            .parse()
+            .context("bad status code")?;
+
+        let mut content_length: Option<usize> = None;
+        let mut close = false;
+        loop {
+            let mut hl = String::new();
+            if self.reader.read_line(&mut hl)? == 0 {
+                bail!("connection closed mid-response-headers");
+            }
+            let t = hl.trim_end_matches(|c| c == '\r' || c == '\n');
+            if t.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = t.split_once(':') {
+                let name = name.trim().to_ascii_lowercase();
+                let value = value.trim();
+                if name == "content-length" {
+                    content_length = Some(value.parse().context("bad content-length")?);
+                } else if name == "connection" && value.eq_ignore_ascii_case("close") {
+                    close = true;
+                }
+            }
+        }
+
+        let resp_body = match content_length {
+            Some(len) => {
+                anyhow::ensure!(len <= MAX_BODY_BYTES, "response body too large");
+                let mut b = vec![0u8; len];
+                self.reader.read_exact(&mut b).context("reading response body")?;
+                b
+            }
+            None => {
+                // Delimited by connection close (we never send this, but
+                // tolerate it from other servers).
+                let mut b = Vec::new();
+                self.reader.read_to_end(&mut b)?;
+                b
+            }
+        };
+        if close {
+            bail!("server closed connection (status {status})");
+        }
+        Ok((status, resp_body))
+    }
+
+    /// Convenience: issue a request and parse the JSON body.
+    pub fn request_json(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> Result<(u16, super::json::Json)> {
+        let (status, raw) = self.request(method, path, body.as_bytes())?;
+        let text = String::from_utf8_lossy(&raw);
+        let json = super::json::Json::parse(&text)
+            .with_context(|| format!("non-JSON body from {method} {path}: {text:?}"))?;
+        Ok((status, json))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Option<Request>> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let r = parse("GET /stats?format=text HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/stats");
+        assert_eq!(r.query, "format=text");
+        assert_eq!(r.header("host"), Some("x"));
+        assert!(r.body.is_empty());
+        assert!(!r.wants_close());
+    }
+
+    #[test]
+    fn parses_post_body_by_content_length() {
+        let r = parse(
+            "POST /graphs HTTP/1.1\r\nContent-Length: 9\r\nConnection: close\r\n\r\n{\"a\": 1}x",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.body_str(), "{\"a\": 1}x");
+        assert!(r.wants_close());
+    }
+
+    #[test]
+    fn eof_before_request_is_none() {
+        assert!(parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("BANANAS\r\n\r\n").is_err());
+        assert!(parse("GET / SMTP/3\r\n\r\n").is_err());
+        assert!(parse("GET / HTTP/1.1\r\nbroken header\r\n\r\n").is_err());
+        assert!(parse("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").is_err());
+        assert!(parse("POST / HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn response_serializes_with_framing() {
+        let resp = Response::json(200, "{\"ok\": true}");
+        let mut out = Vec::new();
+        resp.write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("content-length: 12\r\n"));
+        assert!(text.contains("connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"ok\": true}"));
+    }
+
+    #[test]
+    fn error_response_is_json() {
+        let resp = Response::error(404, "no such graph \"x\"");
+        let body = String::from_utf8(resp.body).unwrap();
+        assert!(body.starts_with("{\"error\":"));
+        assert!(body.contains("\\\"x\\\""));
+    }
+}

@@ -1,0 +1,368 @@
+//! `boba loadgen` — a closed-loop load generator for the service.
+//!
+//! Each worker owns one persistent connection and issues its next query
+//! the moment the previous response lands (closed-loop), so offered
+//! load tracks service capacity and the reported number is sustained
+//! throughput, not queueing artifacts. The headline experiment is
+//! [`compare`]: the same mixed SpMV/PageRank workload against the same
+//! dataset prepared with BOBA vs served with random labels — the
+//! paper's end-to-end claim (§6) restated as queries/second.
+
+use crate::util::prng::Xoshiro256;
+use crate::util::timer::Stopwatch;
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::http::HttpClient;
+use super::json::Json;
+
+/// Load-generation parameters.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Concurrent closed-loop connections (≤ server workers, or
+    /// connections will queue behind the pool).
+    pub conns: usize,
+    /// Total requests across all connections.
+    pub requests: usize,
+    /// Dataset spec to prepare and query.
+    pub dataset: String,
+    /// Reordering scheme for preparation.
+    pub scheme: String,
+    /// Weighted query mix, e.g. `[("spmv", 7), ("pagerank", 3)]`.
+    pub mix: Vec<(String, u32)>,
+    /// PageRank iterations per query.
+    pub pr_iters: usize,
+    /// PRNG seed for the mix schedule.
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7171".to_string(),
+            conns: 4,
+            requests: 400,
+            dataset: "rmat:16:16".to_string(),
+            scheme: "boba".to_string(),
+            mix: vec![("spmv".to_string(), 7), ("pagerank".to_string(), 3)],
+            pr_iters: 5,
+            seed: 42,
+        }
+    }
+}
+
+/// Parse a `--mix` string: `spmv:7,pagerank:3`.
+pub fn parse_mix(text: &str) -> Result<Vec<(String, u32)>> {
+    let mut mix = Vec::new();
+    for part in text.split(',').filter(|p| !p.is_empty()) {
+        let (name, weight) = match part.split_once(':') {
+            Some((n, w)) => (n.trim().to_string(), w.trim().parse().context("bad mix weight")?),
+            None => (part.trim().to_string(), 1),
+        };
+        if !matches!(name.as_str(), "spmv" | "pagerank" | "pr" | "sssp" | "tc") {
+            bail!("unknown query {name:?} in mix (spmv|pagerank|sssp|tc)");
+        }
+        mix.push((name, weight));
+    }
+    if mix.is_empty() {
+        bail!("empty query mix");
+    }
+    Ok(mix)
+}
+
+/// Result of one loadgen run.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Dataset and scheme the run targeted.
+    pub dataset: String,
+    /// Scheme name.
+    pub scheme: String,
+    /// Prepared-graph id on the server.
+    pub id: String,
+    /// Whether preparation was an LRU hit.
+    pub cached: bool,
+    /// Server-reported preparation time (ms; 0 on cache hits).
+    pub prep_ms: f64,
+    /// Requests attempted (excluding the ingest call).
+    pub requests: usize,
+    /// Requests that failed (non-200 or transport error).
+    pub failed: usize,
+    /// Wall time of the query phase in seconds.
+    pub elapsed_s: f64,
+    /// Sustained throughput (completed queries / second).
+    pub qps: f64,
+    /// Latency mean over completed queries (ms).
+    pub mean_ms: f64,
+    /// Latency p50 (ms).
+    pub p50_ms: f64,
+    /// Latency p99 (ms).
+    pub p99_ms: f64,
+    /// Slowest query (ms).
+    pub max_ms: f64,
+}
+
+impl Report {
+    /// JSON rendering (the `BENCH_serve.json` rows).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("scheme", Json::Str(self.scheme.clone())),
+            ("id", Json::Str(self.id.clone())),
+            ("cached", Json::Bool(self.cached)),
+            ("prep_ms", Json::Num(self.prep_ms)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("elapsed_s", Json::Num(self.elapsed_s)),
+            ("qps", Json::Num(self.qps)),
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("max_ms", Json::Num(self.max_ms)),
+        ])
+    }
+
+    /// One-paragraph human rendering.
+    pub fn render(&self) -> String {
+        format!(
+            "{} via {}: {} requests over {:.2} s → {:.0} q/s \
+             (p50 {:.3} ms, p99 {:.3} ms, max {:.3} ms, mean {:.3} ms), \
+             {} failed; prep {:.1} ms{}",
+            self.dataset,
+            self.scheme,
+            self.requests,
+            self.elapsed_s,
+            self.qps,
+            self.p50_ms,
+            self.p99_ms,
+            self.max_ms,
+            self.mean_ms,
+            self.failed,
+            self.prep_ms,
+            if self.cached { " (cached)" } else { "" },
+        )
+    }
+}
+
+/// Run one closed-loop load generation: prepare the graph, then hammer
+/// it with the query mix from `conns` concurrent connections.
+pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
+    // ── setup: ingest + prepare once ──────────────────────────────
+    let mut setup = HttpClient::connect(&cfg.addr)
+        .with_context(|| format!("loadgen connecting to {}", cfg.addr))?;
+    let ingest_body = Json::obj(vec![
+        ("dataset", Json::Str(cfg.dataset.clone())),
+        ("scheme", Json::Str(cfg.scheme.clone())),
+    ])
+    .render();
+    let (status, body) = setup.request_json("POST", "/graphs", &ingest_body)?;
+    if status != 200 && status != 201 {
+        bail!("ingest failed with {status}: {}", body.render());
+    }
+    let id = body
+        .get("id")
+        .and_then(Json::as_str)
+        .context("ingest response missing id")?
+        .to_string();
+    let cached = body.get("cached").and_then(Json::as_bool).unwrap_or(false);
+    let prep_ms = if cached {
+        0.0
+    } else {
+        body.get("prep")
+            .and_then(|p| p.get("total_ms"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    drop(setup);
+
+    // ── query phase ───────────────────────────────────────────────
+    let conns = cfg.conns.max(1);
+    let remaining = AtomicUsize::new(cfg.requests);
+    let pr_body = format!("{{\"iters\": {}}}", cfg.pr_iters);
+    let total_weight: u32 = cfg.mix.iter().map(|(_, w)| w).sum();
+    anyhow::ensure!(total_weight > 0, "query mix has zero total weight");
+
+    struct WorkerOut {
+        latencies_us: Vec<u64>,
+        failed: usize,
+    }
+
+    let sw = Stopwatch::start();
+    let outs: Vec<WorkerOut> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..conns {
+            let remaining = &remaining;
+            let cfg = &*cfg;
+            let id = &id;
+            let pr_body = &pr_body;
+            handles.push(scope.spawn(move || {
+                let mut out = WorkerOut { latencies_us: Vec::new(), failed: 0 };
+                let mut client = match HttpClient::connect(&cfg.addr) {
+                    Ok(c) => c,
+                    Err(_) => return out, // counted below via remaining
+                };
+                let mut rng = Xoshiro256::stream(cfg.seed, w as u64 + 1);
+                loop {
+                    // Claim one request from the shared budget.
+                    let prev = remaining.fetch_update(
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                        |r| r.checked_sub(1),
+                    );
+                    if prev.is_err() {
+                        return out;
+                    }
+                    // Draw the query from the weighted mix.
+                    let mut pick = rng.below(total_weight as u64) as u32;
+                    let mut query = cfg.mix[0].0.as_str();
+                    for (name, weight) in &cfg.mix {
+                        if pick < *weight {
+                            query = name.as_str();
+                            break;
+                        }
+                        pick -= weight;
+                    }
+                    let body: &str = if matches!(query, "pagerank" | "pr") {
+                        pr_body.as_str()
+                    } else {
+                        ""
+                    };
+                    let path = format!("/graphs/{id}/{query}");
+                    let lap = Stopwatch::start();
+                    match client.request("POST", &path, body.as_bytes()) {
+                        Ok((200, _)) => {
+                            out.latencies_us.push(lap.elapsed().as_micros() as u64)
+                        }
+                        Ok((_, _)) => out.failed += 1,
+                        Err(_) => {
+                            out.failed += 1;
+                            // One reconnect attempt; give up on repeat failure.
+                            match HttpClient::connect(&cfg.addr) {
+                                Ok(c) => client = c,
+                                Err(_) => return out,
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let elapsed_s = sw.elapsed().as_secs_f64();
+
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut failed = 0usize;
+    for o in &outs {
+        latencies.extend_from_slice(&o.latencies_us);
+        failed += o.failed;
+    }
+    // Requests the workers never got to (early bail-outs) count as failed.
+    let attempted = latencies.len() + failed;
+    failed += cfg.requests.saturating_sub(attempted);
+    latencies.sort_unstable();
+
+    let pctl = |q: f64| -> f64 {
+        if latencies.is_empty() {
+            return 0.0;
+        }
+        let idx = ((q * (latencies.len() - 1) as f64).round() as usize)
+            .min(latencies.len() - 1);
+        latencies[idx] as f64 / 1e3
+    };
+    let completed = latencies.len();
+    Ok(Report {
+        dataset: cfg.dataset.clone(),
+        scheme: cfg.scheme.clone(),
+        id,
+        cached,
+        prep_ms,
+        requests: cfg.requests,
+        failed,
+        elapsed_s,
+        qps: if elapsed_s > 0.0 { completed as f64 / elapsed_s } else { 0.0 },
+        mean_ms: if completed == 0 {
+            0.0
+        } else {
+            latencies.iter().sum::<u64>() as f64 / completed as f64 / 1e3
+        },
+        p50_ms: pctl(0.50),
+        p99_ms: pctl(0.99),
+        max_ms: latencies.last().map_or(0.0, |&v| v as f64 / 1e3),
+    })
+}
+
+/// The headline experiment: the same workload against `cfg.scheme`
+/// (BOBA by default) and against the random-labels baseline
+/// ([`super::registry::SCHEME_NONE`]). Returns `(reordered, baseline,
+/// speedup)` where speedup is the throughput ratio.
+pub fn compare(cfg: &LoadgenConfig) -> Result<(Report, Report, f64)> {
+    let mut base_cfg = cfg.clone();
+    base_cfg.scheme = super::registry::SCHEME_NONE.to_string();
+    // Baseline first so the reordered run cannot benefit from warmer
+    // caches on the server side.
+    let baseline = run(&base_cfg)?;
+    let reordered = run(cfg)?;
+    let speedup = if baseline.qps > 0.0 { reordered.qps / baseline.qps } else { 0.0 };
+    Ok((reordered, baseline, speedup))
+}
+
+/// Render the comparison as the `BENCH_serve.json` document.
+pub fn comparison_json(reordered: &Report, baseline: &Report, speedup: f64) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("serve".into())),
+        ("reordered", reordered.to_json()),
+        ("baseline", baseline.to_json()),
+        ("speedup_qps", Json::Num(speedup)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_parses() {
+        let m = parse_mix("spmv:7,pagerank:3").unwrap();
+        assert_eq!(m, vec![("spmv".to_string(), 7), ("pagerank".to_string(), 3)]);
+        let single = parse_mix("tc").unwrap();
+        assert_eq!(single, vec![("tc".to_string(), 1)]);
+        assert!(parse_mix("").is_err());
+        assert!(parse_mix("frobnicate:2").is_err());
+        assert!(parse_mix("spmv:x").is_err());
+    }
+
+    #[test]
+    fn end_to_end_against_in_process_server() {
+        let server = crate::server::spawn(crate::server::ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 3,
+            capacity: 4,
+            batch: 4096,
+            in_flight: 2,
+            seed: 13,
+            read_timeout: std::time::Duration::from_secs(10),
+        })
+        .unwrap();
+        let cfg = LoadgenConfig {
+            addr: server.addr().to_string(),
+            conns: 2,
+            requests: 40,
+            dataset: "pa:3000:4".to_string(),
+            scheme: "boba".to_string(),
+            mix: vec![("spmv".to_string(), 3), ("pagerank".to_string(), 1)],
+            pr_iters: 3,
+            seed: 99,
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.requests, 40);
+        assert_eq!(report.failed, 0, "no request may fail: {report:?}");
+        assert!(report.qps > 0.0);
+        assert!(report.p99_ms >= report.p50_ms);
+        assert!(!report.cached);
+        // A second run hits the artifact cache.
+        let again = run(&cfg).unwrap();
+        assert!(again.cached);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,280 @@
+//! `boba serve` — a std-only graph-analytics service layer.
+//!
+//! The paper frames BOBA as the cheap front stage of a pragmatic
+//! graph-creation pipeline; the ROADMAP's north star is a system that
+//! *serves* that pipeline's output under heavy traffic. This module is
+//! that service: a multi-threaded HTTP/1.1 server (no dependencies —
+//! `std::net` + the same hand-rolled substrate philosophy as
+//! [`crate::parallel`]) in front of a [`registry::GraphRegistry`] that
+//! runs the Problem-3 pipeline once per `(dataset, scheme)` and serves
+//! every subsequent SpMV/PageRank/SSSP/TC query from the cached,
+//! reordered CSR. [`loadgen`] is the matching closed-loop client: it
+//! turns the paper's end-to-end speedups (§6, up to 3.45×) into a
+//! served-queries-per-second number.
+//!
+//! Architecture: a fixed pool of `workers` threads all block in
+//! `accept()` on one shared listener; each accepted connection is
+//! served keep-alive until the peer closes, errors, or idles past the
+//! read timeout. A worker therefore serves one connection at a time —
+//! size the pool to the expected concurrent connection count (the
+//! closed-loop loadgen does exactly that). Shutdown sets a flag and
+//! wakes every blocked `accept()` with a dummy connection, then joins.
+
+pub mod http;
+pub mod json;
+pub mod loadgen;
+pub mod registry;
+pub mod router;
+pub mod stats;
+
+use anyhow::{Context, Result};
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use self::registry::{GraphRegistry, RegistryConfig};
+use self::router::Router;
+use self::stats::ServerStats;
+
+/// Server configuration (CLI flags map 1:1 onto these fields).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests).
+    pub addr: String,
+    /// Worker threads == max concurrent connections.
+    pub workers: usize,
+    /// Prepared-graph LRU capacity.
+    pub capacity: usize,
+    /// Streaming-ingest batch size (edges).
+    pub batch: usize,
+    /// Streaming-ingest batches in flight.
+    pub in_flight: usize,
+    /// Seed for dataset generation/randomization.
+    pub seed: u64,
+    /// Idle keep-alive timeout per connection.
+    pub read_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7171".to_string(),
+            workers: 8,
+            capacity: 8,
+            batch: 1 << 16,
+            in_flight: 4,
+            seed: 42,
+            read_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// A running server: worker threads + shared state. Dropping the handle
+/// does *not* stop the server; call [`Server::shutdown`] (tests) or
+/// [`Server::join`] (the CLI's run-forever mode).
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Shared artifact cache (exposed for in-process inspection).
+    pub registry: Arc<GraphRegistry>,
+    /// Shared latency stats.
+    pub stats: Arc<ServerStats>,
+}
+
+/// Bind and start serving on a fixed worker pool.
+pub fn spawn(cfg: ServerConfig) -> Result<Server> {
+    let listener =
+        TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    let registry = Arc::new(GraphRegistry::new(RegistryConfig {
+        capacity: cfg.capacity,
+        batch: cfg.batch,
+        in_flight: cfg.in_flight,
+        seed: cfg.seed,
+    }));
+    let stats = Arc::new(ServerStats::new());
+    let router = Arc::new(Router::new(registry.clone(), stats.clone()));
+    let shutdown = Arc::new(AtomicBool::new(false));
+
+    let n_workers = cfg.workers.max(1);
+    let mut workers = Vec::with_capacity(n_workers);
+    for w in 0..n_workers {
+        let listener = listener.try_clone().context("cloning listener")?;
+        let router = router.clone();
+        let shutdown = shutdown.clone();
+        let read_timeout = cfg.read_timeout;
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("boba-serve-{w}"))
+                .spawn(move || worker_loop(listener, router, shutdown, read_timeout))
+                .context("spawning worker")?,
+        );
+    }
+    Ok(Server { addr, shutdown, workers, registry, stats })
+}
+
+impl Server {
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block serving until the process dies (the CLI's `serve` mode).
+    pub fn join(self) {
+        for h in self.workers {
+            h.join().ok();
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, wake blocked workers, join.
+    /// Connections currently inside a request finish it first; idle
+    /// keep-alive connections are abandoned to their read timeout.
+    pub fn shutdown(self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for _ in 0..self.workers.len() {
+            // Wake one blocked accept() per worker.
+            if let Ok(s) = TcpStream::connect(self.addr) {
+                drop(s);
+            }
+        }
+        for h in self.workers {
+            h.join().ok();
+        }
+    }
+}
+
+fn worker_loop(
+    listener: TcpListener,
+    router: Arc<Router>,
+    shutdown: Arc<AtomicBool>,
+    read_timeout: Duration,
+) {
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let stream = match listener.accept() {
+            Ok((s, _peer)) => s,
+            Err(_) => continue,
+        };
+        if shutdown.load(Ordering::SeqCst) {
+            return; // the wake-up connection itself
+        }
+        // Errors on one connection never take the worker down.
+        let _ = serve_connection(stream, &router, &shutdown, read_timeout);
+    }
+}
+
+/// Serve one keep-alive connection to completion.
+fn serve_connection(
+    stream: TcpStream,
+    router: &Router,
+    shutdown: &AtomicBool,
+    read_timeout: Duration,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(read_timeout)).ok();
+    let mut writer = stream.try_clone().context("cloning stream")?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let req = match http::read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()), // peer closed cleanly, or idled out
+            Err(e) => {
+                // Malformed/oversized input (idle timeouts surface as
+                // Ok(None) above): answer 400 best-effort and drop the
+                // connection.
+                let mut resp = http::Response::error(400, &format!("{e:#}"));
+                resp.close = true;
+                let _ = resp.write_to(&mut writer);
+                let _ = writer.flush();
+                return Ok(());
+            }
+        };
+        let close = req.wants_close();
+        let mut resp = router.handle(&req);
+        if close {
+            resp.close = true;
+        }
+        resp.write_to(&mut writer)?;
+        writer.flush()?;
+        if resp.close {
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::http::HttpClient;
+    use super::*;
+
+    fn test_server() -> Server {
+        spawn(ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 3,
+            capacity: 4,
+            batch: 2000,
+            in_flight: 2,
+            seed: 11,
+            read_timeout: Duration::from_secs(5),
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn serves_health_and_shuts_down() {
+        let server = test_server();
+        let addr = server.addr().to_string();
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let (status, body) = c.request_json("GET", "/healthz", "").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body.get("status").unwrap().as_str(), Some("ok"));
+        // Keep-alive: a second request on the same connection.
+        let (status, _) = c.request_json("GET", "/healthz", "").unwrap();
+        assert_eq!(status, 200);
+        drop(c);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_are_served() {
+        let server = test_server();
+        let addr = server.addr().to_string();
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut c = HttpClient::connect(&addr).unwrap();
+                for _ in 0..5 {
+                    let (status, _) = c.request("GET", "/healthz", b"").unwrap();
+                    assert_eq!(status, 200);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(server.stats.total_requests() >= 15);
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_request_gets_400_and_close() {
+        let server = test_server();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        s.write_all(b"NOT A REQUEST\r\n\r\n").unwrap();
+        s.flush().unwrap();
+        let mut buf = String::new();
+        use std::io::Read;
+        s.read_to_string(&mut buf).unwrap(); // server closes after 400
+        assert!(buf.starts_with("HTTP/1.1 400"), "{buf}");
+        server.shutdown();
+    }
+}

@@ -1,0 +1,454 @@
+//! The graph registry: ingest a dataset once, run the Problem-3
+//! pipeline (batched COO ingest → reorder → CSR conversion), and cache
+//! the prepared artifact for every subsequent query.
+//!
+//! This is the amortization argument for lightweight reordering made
+//! concrete (Faldu et al.: reordering pays when its one-time cost is
+//! spread over many traversals): the reorder+convert cost is paid at
+//! `POST /graphs` time, and every `POST /graphs/{id}/<query>` after
+//! that runs on the locality-optimized CSR for free.
+//!
+//! Cache policy is LRU keyed by `(dataset, scheme)` — the same dataset
+//! prepared under two schemes is two artifacts, which is exactly what
+//! the BOBA-vs-random serving comparison needs.
+
+use crate::convert;
+use crate::coordinator::datasets;
+use crate::coordinator::pipeline::StreamingIngest;
+use crate::graph::{io, Coo, Csr};
+use crate::reorder::{self, Permutation};
+use crate::util::timer::Stopwatch;
+use anyhow::{Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::json::Json;
+
+/// Scheme name meaning "serve the randomized labels as-is" (the paper's
+/// Random baseline).
+pub const SCHEME_NONE: &str = "none";
+
+/// Stage timings of one preparation run (the served Fig-4 bar).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrepReport {
+    /// Batched-ingest wall time (ms) and batch count.
+    pub ingest_ms: f64,
+    /// Batches consumed from the streaming producer.
+    pub batches: usize,
+    /// Reorder (+fused relabel) wall time, 0 for [`SCHEME_NONE`].
+    pub reorder_ms: f64,
+    /// COO→CSR conversion wall time.
+    pub convert_ms: f64,
+}
+
+impl PrepReport {
+    /// Total preparation time in milliseconds.
+    pub fn total_ms(&self) -> f64 {
+        self.ingest_ms + self.reorder_ms + self.convert_ms
+    }
+
+    /// JSON rendering for ingest responses.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ingest_ms", Json::Num(self.ingest_ms)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("reorder_ms", Json::Num(self.reorder_ms)),
+            ("convert_ms", Json::Num(self.convert_ms)),
+            ("total_ms", Json::Num(self.total_ms())),
+        ])
+    }
+}
+
+/// Lazily built triangle-counting view of a prepared graph
+/// (symmetrized, deduped, degree-rank-oriented — what `pipeline`'s TC
+/// stage builds per run, built here once per artifact).
+pub struct TcView {
+    /// Oriented DAG with sorted adjacency lists.
+    pub dag: Csr,
+    /// Degree rank used for orientation.
+    pub rank: Vec<u32>,
+}
+
+/// One cached, query-ready artifact.
+pub struct PreparedGraph {
+    /// Registry id, `dataset@scheme`.
+    pub id: String,
+    /// Dataset spec it was built from.
+    pub dataset: String,
+    /// Reordering scheme name ([`SCHEME_NONE`] for the baseline).
+    pub scheme: String,
+    /// The CSR every query runs on.
+    pub csr: Arc<Csr>,
+    /// Old→new relabeling applied (None for [`SCHEME_NONE`]).
+    pub perm: Option<Arc<Permutation>>,
+    /// Stage timings of the preparation run.
+    pub prep: PrepReport,
+    /// Queries served from this artifact.
+    pub queries: AtomicU64,
+    /// Label-invariant SSSP default source (max total degree), computed
+    /// on first use.
+    default_source: OnceLock<u32>,
+    /// TC view, computed on first `tc` query.
+    tc: OnceLock<Arc<TcView>>,
+}
+
+impl PreparedGraph {
+    /// Vertices.
+    pub fn n(&self) -> usize {
+        self.csr.n()
+    }
+
+    /// Edges.
+    pub fn m(&self) -> usize {
+        self.csr.m()
+    }
+
+    /// Default SSSP source: the max-total-degree vertex — label
+    /// invariant, so digests compare across schemes (mirrors
+    /// `pipeline::Pipeline::run_app`).
+    pub fn default_source(&self) -> u32 {
+        *self.default_source.get_or_init(|| {
+            let csr = &*self.csr;
+            let mut total: Vec<u64> = (0..csr.n()).map(|v| csr.degree(v) as u64).collect();
+            for &c in &csr.col_idx {
+                total[c as usize] += 1;
+            }
+            (0..csr.n()).max_by_key(|&v| total[v]).unwrap_or(0) as u32
+        })
+    }
+
+    /// The TC view, building it on first use. Reconstructs an edge list
+    /// from the served CSR, then applies the same symmetrize → dedup →
+    /// sort-by-src → convert → orient pipeline the offline TC stage
+    /// runs (`pipeline.rs`), so served counts match the CLI's.
+    pub fn tc_view(&self) -> Arc<TcView> {
+        self.tc
+            .get_or_init(|| {
+                use crate::algos::tc;
+                let und = convert::csr_to_coo(&self.csr).symmetrized().deduped();
+                let sorted = convert::sort_coo_by_src(&und);
+                let csr = convert::coo_to_csr(&sorted);
+                let rank = tc::degree_rank(&csr);
+                let dag = tc::orient_by_rank(&csr, &rank);
+                Arc::new(TcView { dag, rank })
+            })
+            .clone()
+    }
+
+    /// JSON row for `GET /graphs`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("scheme", Json::Str(self.scheme.clone())),
+            ("n", Json::Num(self.n() as f64)),
+            ("m", Json::Num(self.m() as f64)),
+            ("queries", Json::Num(self.queries.load(Ordering::Relaxed) as f64)),
+            ("prep", self.prep.to_json()),
+        ])
+    }
+}
+
+/// Registry configuration.
+#[derive(Clone, Debug)]
+pub struct RegistryConfig {
+    /// LRU capacity in prepared artifacts.
+    pub capacity: usize,
+    /// Streaming-ingest batch size (edges per batch).
+    pub batch: usize,
+    /// Streaming-ingest channel capacity (batches in flight).
+    pub in_flight: usize,
+    /// Seed for dataset generation and label randomization.
+    pub seed: u64,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        Self { capacity: 8, batch: 1 << 16, in_flight: 4, seed: 42 }
+    }
+}
+
+struct Inner {
+    map: HashMap<String, Arc<PreparedGraph>>,
+    /// LRU order: front = coldest, back = hottest.
+    order: VecDeque<String>,
+}
+
+/// The concurrent LRU registry of prepared graphs.
+pub struct GraphRegistry {
+    cfg: RegistryConfig,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl GraphRegistry {
+    /// New registry.
+    pub fn new(cfg: RegistryConfig) -> GraphRegistry {
+        GraphRegistry {
+            cfg,
+            inner: Mutex::new(Inner { map: HashMap::new(), order: VecDeque::new() }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Registry id for a (dataset, scheme) pair.
+    pub fn id_of(dataset: &str, scheme: &str) -> String {
+        format!("{dataset}@{scheme}")
+    }
+
+    /// Cached artifact by id, touching LRU recency. Does not move the
+    /// hit/miss counters — those track *prepare-cache* outcomes (see
+    /// [`Self::get_or_prepare`]), not query lookups.
+    pub fn get(&self, id: &str) -> Option<Arc<PreparedGraph>> {
+        let mut inner = self.inner.lock().unwrap();
+        let found = inner.map.get(id).cloned();
+        if found.is_some() {
+            touch(&mut inner.order, id);
+        }
+        found
+    }
+
+    /// Cached artifact, or prepare-and-insert. Returns `(graph, cached)`
+    /// where `cached` is true on an LRU hit.
+    ///
+    /// The pipeline runs *outside* the registry lock, so slow prepares
+    /// never stall queries against already-cached artifacts. Two racing
+    /// prepares of the same key both run and the later insert wins —
+    /// wasted work, never wrong results (queries hold `Arc`s).
+    pub fn get_or_prepare(&self, dataset: &str, scheme: &str) -> Result<(Arc<PreparedGraph>, bool)> {
+        let id = Self::id_of(dataset, scheme);
+        if let Some(g) = self.get(&id) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((g, true));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let prepared = Arc::new(self.prepare(dataset, scheme)?);
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.insert(id.clone(), prepared.clone()).is_none() {
+            inner.order.push_back(id);
+        } else {
+            touch(&mut inner.order, &id);
+        }
+        while inner.map.len() > self.cfg.capacity.max(1) {
+            if let Some(cold) = inner.order.pop_front() {
+                inner.map.remove(&cold);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            } else {
+                break;
+            }
+        }
+        Ok((prepared, false))
+    }
+
+    /// Snapshot of cached artifacts, hottest last.
+    pub fn list(&self) -> Vec<Arc<PreparedGraph>> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .order
+            .iter()
+            .filter_map(|id| inner.map.get(id).cloned())
+            .collect()
+    }
+
+    /// Cached artifact count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cache counters as JSON (for `/stats`).
+    pub fn stats_json(&self) -> Json {
+        Json::obj(vec![
+            ("graphs", Json::Num(self.len() as f64)),
+            ("capacity", Json::Num(self.cfg.capacity as f64)),
+            ("hits", Json::Num(self.hits.load(Ordering::Relaxed) as f64)),
+            ("misses", Json::Num(self.misses.load(Ordering::Relaxed) as f64)),
+            ("evictions", Json::Num(self.evictions.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+
+    /// Run the Problem-3 pipeline once for `(dataset, scheme)`.
+    fn prepare(&self, dataset: &str, scheme: &str) -> Result<PreparedGraph> {
+        let mut prep = PrepReport::default();
+
+        // ── source + batched ingest ───────────────────────────────
+        // Generated specs get the paper's randomized-label input model;
+        // files are served with the labels they carry.
+        let source = load_source(dataset, self.cfg.seed)
+            .with_context(|| format!("ingesting dataset {dataset:?}"))?;
+        let sw = Stopwatch::start();
+        let (producer, stream) =
+            StreamingIngest::from_coo(source, self.cfg.batch, self.cfg.in_flight);
+        let (coo, batches) = stream.collect();
+        producer.join().ok();
+        prep.ingest_ms = sw.ms();
+        prep.batches = batches;
+
+        // ── reorder (+relabel) ────────────────────────────────────
+        let (perm, working) = if scheme == SCHEME_NONE {
+            (None, coo)
+        } else {
+            let reorderer = reorder::by_name(scheme, self.cfg.seed)?;
+            let sw = Stopwatch::start();
+            let (perm, relabeled) = reorderer.reorder_relabel(&coo);
+            prep.reorder_ms = sw.ms();
+            (Some(Arc::new(perm)), relabeled)
+        };
+
+        // ── convert ───────────────────────────────────────────────
+        let sw = Stopwatch::start();
+        let csr = convert::coo_to_csr(&working);
+        prep.convert_ms = sw.ms();
+
+        Ok(PreparedGraph {
+            id: Self::id_of(dataset, scheme),
+            dataset: dataset.to_string(),
+            scheme: scheme.to_string(),
+            csr: Arc::new(csr),
+            perm,
+            prep,
+            queries: AtomicU64::new(0),
+            default_source: OnceLock::new(),
+            tc: OnceLock::new(),
+        })
+    }
+}
+
+/// Move `id` to the hot end of the LRU order.
+fn touch(order: &mut VecDeque<String>, id: &str) {
+    if let Some(pos) = order.iter().position(|x| x == id) {
+        order.remove(pos);
+    }
+    order.push_back(id.to_string());
+}
+
+/// Load a dataset spec: a `.mtx`/`.el` file path, or a generator spec
+/// resolved through [`datasets::resolve`] and randomized (the paper's
+/// input model — §5: "input labels are already randomized").
+fn load_source(spec: &str, seed: u64) -> Result<Coo> {
+    if spec.ends_with(".mtx") {
+        return io::read_matrix_market(Path::new(spec));
+    }
+    if spec.ends_with(".el") || spec.ends_with(".txt") {
+        // preserve_ids: the dense first-appearance relabel is itself a
+        // sequential BOBA pass, which would silently turn the `none`
+        // baseline into an already-reordered artifact.
+        return io::read_edge_list(Path::new(spec), true);
+    }
+    Ok(datasets::resolve(spec, seed)?.randomized(seed + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::spmv;
+
+    fn registry(capacity: usize) -> GraphRegistry {
+        GraphRegistry::new(RegistryConfig {
+            capacity,
+            batch: 500,
+            in_flight: 2,
+            seed: 7,
+        })
+    }
+
+    #[test]
+    fn prepare_caches_and_hits() {
+        let r = registry(4);
+        let (a, cached_a) = r.get_or_prepare("pa:2000:4", "boba").unwrap();
+        assert!(!cached_a);
+        let (b, cached_b) = r.get_or_prepare("pa:2000:4", "boba").unwrap();
+        assert!(cached_b);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(r.len(), 1);
+        assert_eq!(a.id, "pa:2000:4@boba");
+        assert!(a.perm.is_some());
+        assert!(a.prep.batches >= 1);
+    }
+
+    #[test]
+    fn scheme_none_serves_randomized_labels() {
+        let r = registry(4);
+        let (g, _) = r.get_or_prepare("pa:1500:4", SCHEME_NONE).unwrap();
+        assert!(g.perm.is_none());
+        assert_eq!(g.prep.reorder_ms, 0.0);
+        // Same dataset under boba is a distinct artifact with the same
+        // size and the same label-invariant SpMV digest.
+        let (h, _) = r.get_or_prepare("pa:1500:4", "boba").unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(g.m(), h.m());
+        let digest = |csr: &Csr| -> f64 {
+            let x = vec![1.0f32; csr.n()];
+            spmv::spmv_pull(csr, &x).iter().map(|&v| v as f64).sum()
+        };
+        assert!((digest(&g.csr) - digest(&h.csr)).abs() < 1e-6 * g.m() as f64);
+    }
+
+    #[test]
+    fn lru_evicts_coldest() {
+        let r = registry(2);
+        r.get_or_prepare("pa:1000:4", "boba").unwrap();
+        r.get_or_prepare("pa:1100:4", "boba").unwrap();
+        // Touch the first so the second becomes coldest.
+        assert!(r.get("pa:1000:4@boba").is_some());
+        r.get_or_prepare("pa:1200:4", "boba").unwrap();
+        assert_eq!(r.len(), 2);
+        assert!(r.get("pa:1100:4@boba").is_none(), "coldest entry evicted");
+        assert!(r.get("pa:1000:4@boba").is_some());
+        assert!(r.get("pa:1200:4@boba").is_some());
+    }
+
+    #[test]
+    fn unknown_specs_error() {
+        let r = registry(2);
+        assert!(r.get_or_prepare("nope:13", "boba").is_err());
+        assert!(r.get_or_prepare("pa:1000:4", "definitely-not-a-scheme").is_err());
+        assert_eq!(r.len(), 0, "failed prepares cache nothing");
+    }
+
+    #[test]
+    fn tc_view_counts_triangles_like_pipeline() {
+        use crate::algos::tc;
+        use crate::coordinator::pipeline::{App, Pipeline, ReorderStage};
+        let r = registry(2);
+        let (g, _) = r.get_or_prepare("pa:1200:4", "boba").unwrap();
+        let view = g.tc_view();
+        let served = tc::triangle_count_ranked(&view.dag, &view.rank);
+        // Reference: the offline pipeline on the same randomized COO.
+        let coo = datasets::resolve("pa:1200:4", 7).unwrap().randomized(8);
+        let report = Pipeline::new(App::Tc).run(&coo, &ReorderStage::None);
+        assert_eq!(served as f64, report.digest);
+    }
+
+    #[test]
+    fn default_source_is_stable_and_in_range() {
+        let r = registry(2);
+        let (g, _) = r.get_or_prepare("pa:900:4", "degree").unwrap();
+        let s = g.default_source();
+        assert_eq!(s, g.default_source());
+        assert!((s as usize) < g.n());
+    }
+
+    #[test]
+    fn file_specs_load_edge_lists() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("boba_registry_{}.el", std::process::id()));
+        std::fs::write(&path, "0 1\n1 2\n2 0\n").unwrap();
+        let r = registry(2);
+        let (g, _) = r
+            .get_or_prepare(path.to_str().unwrap(), SCHEME_NONE)
+            .unwrap();
+        assert_eq!(g.m(), 3);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,372 @@
+//! Request routing and query execution: maps the HTTP surface onto the
+//! registry and the `algos::` kernels, recording per-endpoint latency.
+//!
+//! | Route | Effect |
+//! |---|---|
+//! | `GET  /healthz` | liveness + uptime |
+//! | `GET  /stats` | per-endpoint latency histograms + cache counters (`?format=text` for a table) |
+//! | `GET  /graphs` | list cached artifacts |
+//! | `POST /graphs` | `{"dataset": SPEC, "scheme": NAME}` → prepare (201) or cache hit (200) |
+//! | `POST /graphs/{id}/spmv` | one SpMV over the prepared CSR |
+//! | `POST /graphs/{id}/pagerank` | PageRank (`{"iters": N}`, default 20) |
+//! | `POST /graphs/{id}/sssp` | frontier SSSP (`{"source": V}`, default max-degree vertex) |
+//! | `POST /graphs/{id}/tc` | triangle count (lazy oriented view) |
+//!
+//! Query digests are label-invariant (sums / counts), so the same
+//! dataset prepared under different schemes answers identically — the
+//! smoke test asserts this against direct `algos::` calls.
+
+use crate::algos::{pagerank, spmv, sssp, tc};
+use crate::util::timer::Stopwatch;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use super::http::{Request, Response};
+use super::json::Json;
+use super::registry::{GraphRegistry, PreparedGraph};
+use super::stats::{Endpoint, ServerStats};
+
+/// The shared request router.
+pub struct Router {
+    /// Prepared-artifact cache.
+    pub registry: Arc<GraphRegistry>,
+    /// Latency/error accounting.
+    pub stats: Arc<ServerStats>,
+}
+
+impl Router {
+    /// New router over shared registry and stats.
+    pub fn new(registry: Arc<GraphRegistry>, stats: Arc<ServerStats>) -> Router {
+        Router { registry, stats }
+    }
+
+    /// Handle one request, recording latency under its endpoint slot.
+    pub fn handle(&self, req: &Request) -> Response {
+        let sw = Stopwatch::start();
+        let (endpoint, resp) = self.route(req);
+        if let Some(ep) = endpoint {
+            self.stats.record(ep, sw.elapsed(), resp.status < 400);
+        }
+        resp
+    }
+
+    fn route(&self, req: &Request) -> (Option<Endpoint>, Response) {
+        let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+        match (req.method.as_str(), segs.as_slice()) {
+            ("GET", []) => (None, Response::text(200, USAGE)),
+            ("GET", ["healthz"]) => (Some(Endpoint::Healthz), self.healthz()),
+            ("GET", ["stats"]) => (Some(Endpoint::Stats), self.stats_page(req)),
+            ("GET", ["graphs"]) => (Some(Endpoint::List), self.list()),
+            ("POST", ["graphs"]) => (Some(Endpoint::Ingest), self.ingest(req)),
+            ("POST", ["graphs", id, query]) => match Endpoint::query_from(query) {
+                Some(ep) => (Some(ep), self.query(id, ep, req)),
+                None => (
+                    None,
+                    Response::error(404, &format!("unknown query {query:?} (spmv|pagerank|sssp|tc)")),
+                ),
+            },
+            (_, ["healthz" | "stats" | "graphs", ..]) => {
+                (None, Response::error(405, "method not allowed"))
+            }
+            _ => (None, Response::error(404, "no such route")),
+        }
+    }
+
+    fn healthz(&self) -> Response {
+        Response::json(
+            200,
+            Json::obj(vec![
+                ("status", Json::Str("ok".into())),
+                ("uptime_ms", Json::Num(self.stats.uptime_ms())),
+                ("graphs", Json::Num(self.registry.len() as f64)),
+            ])
+            .render(),
+        )
+    }
+
+    fn stats_page(&self, req: &Request) -> Response {
+        if req.query.contains("format=text") {
+            return Response::text(200, self.stats.render_text());
+        }
+        let mut body = match self.stats.to_json() {
+            Json::Obj(pairs) => pairs,
+            _ => unreachable!(),
+        };
+        body.push(("registry".to_string(), self.registry.stats_json()));
+        Response::json(200, Json::Obj(body).render())
+    }
+
+    fn list(&self) -> Response {
+        let rows: Vec<Json> = self.registry.list().iter().map(|g| g.to_json()).collect();
+        Response::json(200, Json::Arr(rows).render())
+    }
+
+    fn ingest(&self, req: &Request) -> Response {
+        let body = if req.body.is_empty() {
+            Json::Obj(Vec::new())
+        } else {
+            match Json::parse(&req.body_str()) {
+                Ok(v) => v,
+                Err(e) => return Response::error(400, &format!("bad JSON body: {e:#}")),
+            }
+        };
+        let dataset = match body.get("dataset").and_then(Json::as_str) {
+            Some(d) => d.to_string(),
+            None => return Response::error(422, "body must carry {\"dataset\": \"...\"}"),
+        };
+        let scheme = body
+            .get("scheme")
+            .and_then(Json::as_str)
+            .unwrap_or("boba")
+            .to_string();
+        match self.registry.get_or_prepare(&dataset, &scheme) {
+            Ok((g, cached)) => {
+                let mut pairs = match g.to_json() {
+                    Json::Obj(p) => p,
+                    _ => unreachable!(),
+                };
+                pairs.push(("cached".to_string(), Json::Bool(cached)));
+                let status = if cached { 200 } else { 201 };
+                Response::json(status, Json::Obj(pairs).render())
+            }
+            Err(e) => Response::error(422, &format!("{e:#}")),
+        }
+    }
+
+    fn query(&self, id: &str, ep: Endpoint, req: &Request) -> Response {
+        let graph = match self.registry.get(id) {
+            Some(g) => g,
+            None => {
+                return Response::error(
+                    404,
+                    &format!("no prepared graph {id:?} (POST /graphs first)"),
+                )
+            }
+        };
+        let body = if req.body.is_empty() {
+            Json::Obj(Vec::new())
+        } else {
+            match Json::parse(&req.body_str()) {
+                Ok(v) => v,
+                Err(e) => return Response::error(400, &format!("bad JSON body: {e:#}")),
+            }
+        };
+        let sw = Stopwatch::start();
+        let mut pairs = match run_query(&graph, ep, &body) {
+            Ok(Json::Obj(p)) => p,
+            Ok(_) => unreachable!("queries return objects"),
+            Err(e) => return Response::error(422, &format!("{e:#}")),
+        };
+        graph.queries.fetch_add(1, Ordering::Relaxed);
+        pairs.insert(0, ("id".to_string(), Json::Str(graph.id.clone())));
+        pairs.insert(1, ("query".to_string(), Json::Str(ep.name().into())));
+        pairs.push(("ms".to_string(), Json::Num(sw.ms())));
+        Response::json(200, Json::Obj(pairs).render())
+    }
+}
+
+/// Execute one query against a prepared artifact. Digests mirror
+/// `pipeline::Pipeline::run_app` so served results can be validated
+/// against the offline pipeline.
+fn run_query(g: &PreparedGraph, ep: Endpoint, body: &Json) -> anyhow::Result<Json> {
+    let csr = &*g.csr;
+    match ep {
+        Endpoint::Spmv => {
+            let x = vec![1.0f32; csr.n()];
+            let y = spmv::spmv_pull(csr, &x);
+            let digest: f64 = y.iter().map(|&v| v as f64).sum();
+            Ok(Json::obj(vec![("digest", Json::Num(digest))]))
+        }
+        Endpoint::Pagerank => {
+            let iters = body.get("iters").and_then(Json::as_u64).unwrap_or(20) as usize;
+            anyhow::ensure!(iters >= 1 && iters <= 10_000, "iters must be in 1..=10000");
+            let p = pagerank::PrParams { max_iters: iters, ..Default::default() };
+            let r = pagerank::pagerank(csr, p);
+            let digest: f64 = r.ranks.iter().map(|&v| v as f64).sum();
+            Ok(Json::obj(vec![
+                ("digest", Json::Num(digest)),
+                ("iters", Json::Num(r.iters as f64)),
+            ]))
+        }
+        Endpoint::Sssp => {
+            let source = match body.get("source").and_then(Json::as_u64) {
+                Some(s) => {
+                    anyhow::ensure!((s as usize) < csr.n(), "source {s} out of range");
+                    s as u32
+                }
+                None => g.default_source(),
+            };
+            let d = sssp::sssp_frontier(csr, source);
+            let reached = d.iter().filter(|v| v.is_finite()).count();
+            let digest: f64 = d
+                .iter()
+                .filter(|v| v.is_finite())
+                .map(|&v| v as f64)
+                .sum();
+            Ok(Json::obj(vec![
+                ("digest", Json::Num(digest)),
+                ("source", Json::Num(source as f64)),
+                ("reached", Json::Num(reached as f64)),
+            ]))
+        }
+        Endpoint::Tc => {
+            let view = g.tc_view();
+            let triangles = tc::triangle_count_ranked(&view.dag, &view.rank);
+            Ok(Json::obj(vec![
+                ("digest", Json::Num(triangles as f64)),
+                ("triangles", Json::Num(triangles as f64)),
+            ]))
+        }
+        _ => anyhow::bail!("not a query endpoint"),
+    }
+}
+
+const USAGE: &str = "boba graph-analytics service\n\
+  GET  /healthz\n\
+  GET  /stats[?format=text]\n\
+  GET  /graphs\n\
+  POST /graphs                       {\"dataset\": \"rmat:16:16\", \"scheme\": \"boba\"}\n\
+  POST /graphs/{id}/spmv\n\
+  POST /graphs/{id}/pagerank         {\"iters\": 20}\n\
+  POST /graphs/{id}/sssp             {\"source\": 0}\n\
+  POST /graphs/{id}/tc\n";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::registry::RegistryConfig;
+
+    fn router() -> Router {
+        Router::new(
+            Arc::new(GraphRegistry::new(RegistryConfig {
+                capacity: 4,
+                batch: 1000,
+                in_flight: 2,
+                seed: 5,
+            })),
+            Arc::new(ServerStats::new()),
+        )
+    }
+
+    fn req(method: &str, path: &str, body: &str) -> Request {
+        Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            query: String::new(),
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn json_of(resp: &Response) -> Json {
+        Json::parse(&String::from_utf8_lossy(&resp.body)).unwrap()
+    }
+
+    #[test]
+    fn health_and_usage() {
+        let r = router();
+        let resp = r.handle(&req("GET", "/healthz", ""));
+        assert_eq!(resp.status, 200);
+        assert_eq!(json_of(&resp).get("status").unwrap().as_str(), Some("ok"));
+        assert_eq!(r.handle(&req("GET", "/", "")).status, 200);
+    }
+
+    #[test]
+    fn ingest_then_query_roundtrip() {
+        let r = router();
+        let resp = r.handle(&req(
+            "POST",
+            "/graphs",
+            "{\"dataset\": \"pa:1500:4\", \"scheme\": \"boba\"}",
+        ));
+        assert_eq!(resp.status, 201, "{}", String::from_utf8_lossy(&resp.body));
+        let id = json_of(&resp)
+            .get("id")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        assert_eq!(id, "pa:1500:4@boba");
+
+        // Re-ingest is a cache hit.
+        let resp2 = r.handle(&req(
+            "POST",
+            "/graphs",
+            "{\"dataset\": \"pa:1500:4\", \"scheme\": \"boba\"}",
+        ));
+        assert_eq!(resp2.status, 200);
+        assert_eq!(json_of(&resp2).get("cached").unwrap().as_bool(), Some(true));
+
+        // SpMV digest over ones = m for an unweighted graph.
+        let q = r.handle(&req("POST", &format!("/graphs/{id}/spmv"), ""));
+        assert_eq!(q.status, 200);
+        let body = json_of(&q);
+        let m = json_of(&resp).get("m").unwrap().as_f64().unwrap();
+        assert!((body.get("digest").unwrap().as_f64().unwrap() - m).abs() < 1e-6 * m);
+
+        // PageRank digest ~ 1.
+        let q = r.handle(&req(
+            "POST",
+            &format!("/graphs/{id}/pagerank"),
+            "{\"iters\": 30}",
+        ));
+        assert_eq!(q.status, 200);
+        let d = json_of(&q).get("digest").unwrap().as_f64().unwrap();
+        assert!((d - 1.0).abs() < 0.05, "pagerank digest {d}");
+
+        // SSSP + TC respond.
+        assert_eq!(
+            r.handle(&req("POST", &format!("/graphs/{id}/sssp"), "")).status,
+            200
+        );
+        assert_eq!(
+            r.handle(&req("POST", &format!("/graphs/{id}/tc"), "")).status,
+            200
+        );
+
+        // Stats saw the traffic.
+        let stats = json_of(&r.handle(&req("GET", "/stats", "")));
+        let eps = stats.get("endpoints").unwrap();
+        assert_eq!(eps.get("ingest").unwrap().get("count").unwrap().as_u64(), Some(2));
+        assert_eq!(eps.get("spmv").unwrap().get("count").unwrap().as_u64(), Some(1));
+        assert!(stats.get("registry").unwrap().get("hits").unwrap().as_u64().unwrap() >= 1);
+
+        // Listing shows the artifact with a query count.
+        let listing = json_of(&r.handle(&req("GET", "/graphs", "")));
+        match listing {
+            Json::Arr(items) => {
+                assert_eq!(items.len(), 1);
+                assert!(items[0].get("queries").unwrap().as_u64().unwrap() >= 4);
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn errors_are_structured() {
+        let r = router();
+        assert_eq!(r.handle(&req("POST", "/graphs", "{not json")).status, 400);
+        assert_eq!(r.handle(&req("POST", "/graphs", "{}")).status, 422);
+        assert_eq!(
+            r.handle(&req("POST", "/graphs/zzz@boba/spmv", "")).status,
+            404
+        );
+        assert_eq!(r.handle(&req("DELETE", "/graphs", "")).status, 405);
+        assert_eq!(r.handle(&req("GET", "/nope", "")).status, 404);
+        let bad_query = r.handle(&req("POST", "/graphs/x@y/frobnicate", ""));
+        assert_eq!(bad_query.status, 404);
+    }
+
+    #[test]
+    fn sssp_validates_source() {
+        let r = router();
+        let resp = r.handle(&req("POST", "/graphs", "{\"dataset\": \"pa:800:4\"}"));
+        let id = json_of(&resp).get("id").unwrap().as_str().unwrap().to_string();
+        let bad = r.handle(&req(
+            "POST",
+            &format!("/graphs/{id}/sssp"),
+            "{\"source\": 99999999}",
+        ));
+        assert_eq!(bad.status, 422);
+    }
+}

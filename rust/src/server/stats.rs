@@ -1,0 +1,350 @@
+//! Lock-free per-endpoint latency statistics: power-of-two bucketed
+//! histograms over microseconds, recorded by worker threads and read by
+//! `GET /stats` — the service-side analogue of the offline bench
+//! harness's median/MAD summaries.
+
+use crate::util::human;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use super::json::Json;
+
+/// Number of log2 buckets: bucket `i` counts samples in
+/// `[2^(i-1), 2^i)` µs (bucket 0 is `< 1 µs`), so the top bucket covers
+/// latencies up to ~2^42 µs ≈ 50 days — effectively unbounded.
+const BUCKETS: usize = 43;
+
+/// A concurrent log2 latency histogram (microsecond domain).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// New empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        ((64 - us.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+
+    /// Upper bound (µs) of bucket `i` — the value reported for samples
+    /// that landed there.
+    fn bucket_upper_us(i: usize) -> u64 {
+        1u64 << i
+    }
+
+    /// Record one sample.
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    /// Record one sample given in microseconds.
+    pub fn record_us(&self, us: u64) {
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in milliseconds (0 when empty).
+    pub fn mean_ms(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64 / 1e3
+        }
+    }
+
+    /// Maximum latency in milliseconds.
+    pub fn max_ms(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Latency quantile in milliseconds, as the upper bound of the
+    /// bucket where the cumulative count crosses `q` (0 when empty).
+    /// Resolution is a factor of two — plenty for p50/p99 dashboards.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return Self::bucket_upper_us(i) as f64 / 1e3;
+            }
+        }
+        self.max_ms()
+    }
+
+    /// JSON snapshot (count/mean/p50/p99/max).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("mean_ms", Json::Num(self.mean_ms())),
+            ("p50_ms", Json::Num(self.quantile_ms(0.50))),
+            ("p99_ms", Json::Num(self.quantile_ms(0.99))),
+            ("max_ms", Json::Num(self.max_ms())),
+        ])
+    }
+}
+
+/// The service's request endpoints (stats slots).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    /// `POST /graphs` — ingest + prepare.
+    Ingest,
+    /// `GET /graphs`.
+    List,
+    /// `POST /graphs/{id}/spmv`.
+    Spmv,
+    /// `POST /graphs/{id}/pagerank`.
+    Pagerank,
+    /// `POST /graphs/{id}/sssp`.
+    Sssp,
+    /// `POST /graphs/{id}/tc`.
+    Tc,
+    /// `GET /healthz`.
+    Healthz,
+    /// `GET /stats`.
+    Stats,
+}
+
+impl Endpoint {
+    /// All endpoints, display order.
+    pub const ALL: [Endpoint; 8] = [
+        Endpoint::Ingest,
+        Endpoint::List,
+        Endpoint::Spmv,
+        Endpoint::Pagerank,
+        Endpoint::Sssp,
+        Endpoint::Tc,
+        Endpoint::Healthz,
+        Endpoint::Stats,
+    ];
+
+    /// Stable name used in /stats keys.
+    pub fn name(self) -> &'static str {
+        match self {
+            Endpoint::Ingest => "ingest",
+            Endpoint::List => "list",
+            Endpoint::Spmv => "spmv",
+            Endpoint::Pagerank => "pagerank",
+            Endpoint::Sssp => "sssp",
+            Endpoint::Tc => "tc",
+            Endpoint::Healthz => "healthz",
+            Endpoint::Stats => "stats",
+        }
+    }
+
+    /// Query endpoint from its URL segment.
+    pub fn query_from(seg: &str) -> Option<Endpoint> {
+        match seg {
+            "spmv" => Some(Endpoint::Spmv),
+            "pagerank" | "pr" => Some(Endpoint::Pagerank),
+            "sssp" => Some(Endpoint::Sssp),
+            "tc" => Some(Endpoint::Tc),
+            _ => None,
+        }
+    }
+}
+
+/// Aggregated per-endpoint stats for one server instance.
+#[derive(Debug)]
+pub struct ServerStats {
+    slots: [(Histogram, AtomicU64); 8], // (latencies, error count)
+    started: std::time::Instant,
+}
+
+impl Default for ServerStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServerStats {
+    /// Fresh stats (uptime starts now).
+    pub fn new() -> ServerStats {
+        ServerStats {
+            slots: std::array::from_fn(|_| (Histogram::new(), AtomicU64::new(0))),
+            started: std::time::Instant::now(),
+        }
+    }
+
+    fn slot(&self, ep: Endpoint) -> &(Histogram, AtomicU64) {
+        let idx = Endpoint::ALL.iter().position(|e| *e == ep).unwrap();
+        &self.slots[idx]
+    }
+
+    /// Record one served request.
+    pub fn record(&self, ep: Endpoint, latency: Duration, ok: bool) {
+        let (hist, errors) = self.slot(ep);
+        hist.record(latency);
+        if !ok {
+            errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Histogram for one endpoint.
+    pub fn histogram(&self, ep: Endpoint) -> &Histogram {
+        &self.slot(ep).0
+    }
+
+    /// Errors recorded for one endpoint.
+    pub fn errors(&self, ep: Endpoint) -> u64 {
+        self.slot(ep).1.load(Ordering::Relaxed)
+    }
+
+    /// Total requests across endpoints.
+    pub fn total_requests(&self) -> u64 {
+        self.slots.iter().map(|(h, _)| h.count()).sum()
+    }
+
+    /// Server uptime in milliseconds.
+    pub fn uptime_ms(&self) -> f64 {
+        self.started.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Full JSON snapshot for `GET /stats`.
+    pub fn to_json(&self) -> Json {
+        let endpoints = Endpoint::ALL
+            .iter()
+            .filter(|ep| self.histogram(**ep).count() > 0 || self.errors(**ep) > 0)
+            .map(|ep| {
+                let mut obj = match self.histogram(*ep).to_json() {
+                    Json::Obj(pairs) => pairs,
+                    _ => unreachable!(),
+                };
+                obj.push(("errors".to_string(), Json::Num(self.errors(*ep) as f64)));
+                (ep.name().to_string(), Json::Obj(obj))
+            })
+            .collect();
+        Json::obj(vec![
+            ("uptime_ms", Json::Num(self.uptime_ms())),
+            ("requests", Json::Num(self.total_requests() as f64)),
+            ("endpoints", Json::Obj(endpoints)),
+        ])
+    }
+
+    /// Aligned text table (for humans: `GET /stats?format=text`).
+    pub fn render_text(&self) -> String {
+        let rows: Vec<Vec<String>> = Endpoint::ALL
+            .iter()
+            .filter(|ep| self.histogram(**ep).count() > 0 || self.errors(**ep) > 0)
+            .map(|ep| {
+                let h = self.histogram(*ep);
+                vec![
+                    ep.name().to_string(),
+                    h.count().to_string(),
+                    human::ms(h.mean_ms()),
+                    human::ms(h.quantile_ms(0.50)),
+                    human::ms(h.quantile_ms(0.99)),
+                    human::ms(h.max_ms()),
+                    self.errors(*ep).to_string(),
+                ]
+            })
+            .collect();
+        human::table(
+            &["endpoint", "count", "mean", "p50", "p99", "max", "errors"],
+            &rows,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::new();
+        for _ in 0..99 {
+            h.record_us(100); // bucket upper bound 128 µs
+        }
+        h.record_us(100_000); // one slow outlier, upper bound 131072 µs
+        assert_eq!(h.count(), 100);
+        assert!((h.quantile_ms(0.5) - 0.128).abs() < 1e-9, "{}", h.quantile_ms(0.5));
+        assert!(h.quantile_ms(0.99) < 1.0); // 99 of 100 are fast
+        assert!(h.quantile_ms(1.0) >= 100.0); // the outlier
+        assert!(h.max_ms() >= 100.0);
+        assert!(h.mean_ms() > 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ms(0.99), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn zero_microsecond_sample_lands_in_first_bucket() {
+        let h = Histogram::new();
+        h.record_us(0);
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile_ms(0.5) <= 0.001);
+    }
+
+    #[test]
+    fn stats_records_and_snapshots() {
+        let s = ServerStats::new();
+        s.record(Endpoint::Spmv, Duration::from_micros(250), true);
+        s.record(Endpoint::Spmv, Duration::from_micros(400), true);
+        s.record(Endpoint::Ingest, Duration::from_millis(30), false);
+        assert_eq!(s.total_requests(), 3);
+        assert_eq!(s.errors(Endpoint::Ingest), 1);
+        assert_eq!(s.errors(Endpoint::Spmv), 0);
+        let j = s.to_json();
+        let eps = j.get("endpoints").unwrap();
+        assert!(eps.get("spmv").is_some());
+        assert!(eps.get("tc").is_none(), "idle endpoints are omitted");
+        assert_eq!(eps.get("spmv").unwrap().get("count").unwrap().as_u64(), Some(2));
+        let text = s.render_text();
+        assert!(text.contains("spmv"));
+        assert!(text.contains("ingest"));
+    }
+
+    #[test]
+    fn concurrent_recording_is_consistent() {
+        let s = std::sync::Arc::new(ServerStats::new());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    s.record(Endpoint::Pagerank, Duration::from_micros(t * 50 + i % 97), true);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.histogram(Endpoint::Pagerank).count(), 4000);
+    }
+}

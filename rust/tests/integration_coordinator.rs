@@ -71,9 +71,24 @@ fn io_failure_paths_are_errors_not_panics() {
 }
 
 #[test]
-fn runtime_engine_load_failure_is_graceful() {
+fn runtime_meta_load_failure_is_graceful() {
     // Pointing at an empty dir must error with a make-artifacts hint.
+    // (Engine::load hits this same path first; Engine itself only
+    // exists under the `pjrt` feature.)
     let dir = std::env::temp_dir().join(format!("boba_empty_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let Err(err) = boba::runtime::Meta::load(&dir) else {
+        panic!("load from empty dir must fail");
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+#[cfg(feature = "pjrt")]
+fn runtime_engine_load_failure_is_graceful() {
+    let dir = std::env::temp_dir().join(format!("boba_empty_eng_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     let Err(err) = boba::runtime::Engine::load(&dir) else {
         panic!("load from empty dir must fail");

@@ -1,0 +1,183 @@
+//! Server smoke test (the service-layer acceptance path): bind an
+//! ephemeral port, ingest a small R-MAT graph, run one SpMV and one
+//! PageRank query over raw `std::net::TcpStream`, assert the served
+//! digests match direct `algos::` calls on the same pipeline output,
+//! then shut down cleanly.
+
+use boba::algos::{pagerank, spmv};
+use boba::convert;
+use boba::coordinator::datasets;
+use boba::server::http::HttpClient;
+use boba::server::json::Json;
+use boba::server::{self, ServerConfig};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+const SEED: u64 = 42;
+const DATASET: &str = "rmat:10:8";
+
+fn spawn_server() -> server::Server {
+    server::spawn(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        capacity: 4,
+        batch: 1 << 12,
+        in_flight: 2,
+        seed: SEED,
+        read_timeout: Duration::from_secs(10),
+    })
+    .expect("server must bind an ephemeral port")
+}
+
+/// One raw HTTP exchange over a bare TcpStream (no client helper):
+/// `connection: close` delimits the response body.
+fn raw_post(addr: &std::net::SocketAddr, path: &str, body: &str) -> (u16, Json) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nhost: smoke\r\nconnection: close\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    s.flush().unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).expect("read response");
+    let text = String::from_utf8_lossy(&raw);
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .expect("status line")
+        .parse()
+        .expect("numeric status");
+    let json_body = text
+        .split("\r\n\r\n")
+        .nth(1)
+        .expect("header/body separator");
+    (status, Json::parse(json_body).expect("JSON body"))
+}
+
+#[test]
+fn smoke_ingest_query_validate_shutdown() {
+    let server = spawn_server();
+    let addr = server.addr();
+
+    // ── ingest + prepare (BOBA scheme) ────────────────────────────
+    let (status, ingest) = raw_post(
+        &addr,
+        "/graphs",
+        &format!("{{\"dataset\": \"{DATASET}\", \"scheme\": \"boba\"}}"),
+    );
+    assert_eq!(status, 201, "fresh prepare must 201: {}", ingest.render());
+    let id = ingest.get("id").unwrap().as_str().unwrap().to_string();
+    assert_eq!(id, format!("{DATASET}@boba"));
+
+    // ── local reference: the same pipeline input, computed directly ──
+    // The registry builds resolve(DATASET, seed).randomized(seed+1);
+    // digests below are label-invariant, so the reference runs on the
+    // un-reordered labels.
+    let coo = datasets::resolve(DATASET, SEED).unwrap().randomized(SEED + 1);
+    assert_eq!(ingest.get("n").unwrap().as_u64(), Some(coo.n() as u64));
+    assert_eq!(ingest.get("m").unwrap().as_u64(), Some(coo.m() as u64));
+    let csr = convert::coo_to_csr(&coo);
+    let ones = vec![1.0f32; csr.n()];
+
+    // ── SpMV over a raw TcpStream ─────────────────────────────────
+    let spmv_ref: f64 = spmv::spmv_pull(&csr, &ones).iter().map(|&v| v as f64).sum();
+    let (status, resp) = raw_post(&addr, &format!("/graphs/{id}/spmv"), "");
+    assert_eq!(status, 200, "{}", resp.render());
+    let served = resp.get("digest").unwrap().as_f64().unwrap();
+    assert!(
+        (served - spmv_ref).abs() <= 1e-6 * spmv_ref.abs().max(1.0),
+        "served SpMV digest {served} != direct algos::spmv digest {spmv_ref}"
+    );
+
+    // ── PageRank over a raw TcpStream ─────────────────────────────
+    let pr_ref: f64 = {
+        let p = pagerank::PrParams { max_iters: 40, ..Default::default() };
+        pagerank::pagerank(&csr, p).ranks.iter().map(|&v| v as f64).sum()
+    };
+    let (status, resp) = raw_post(&addr, &format!("/graphs/{id}/pagerank"), "{\"iters\": 40}");
+    assert_eq!(status, 200, "{}", resp.render());
+    let served = resp.get("digest").unwrap().as_f64().unwrap();
+    assert!(
+        (served - pr_ref).abs() < 1e-3,
+        "served PageRank digest {served} != direct algos::pagerank digest {pr_ref} \
+         (tolerance covers f32 summation-order drift across labelings)"
+    );
+
+    // ── health, stats, listing over the persistent client ─────────
+    let mut client = HttpClient::connect(&addr.to_string()).unwrap();
+    let (status, health) = client.request_json("GET", "/healthz", "").unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(health.get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(health.get("graphs").unwrap().as_u64(), Some(1));
+
+    let (status, stats) = client.request_json("GET", "/stats", "").unwrap();
+    assert_eq!(status, 200);
+    let eps = stats.get("endpoints").unwrap();
+    assert_eq!(eps.get("spmv").unwrap().get("count").unwrap().as_u64(), Some(1));
+    assert_eq!(eps.get("spmv").unwrap().get("errors").unwrap().as_u64(), Some(0));
+    assert_eq!(eps.get("pagerank").unwrap().get("errors").unwrap().as_u64(), Some(0));
+
+    let (status, listing) = client.request_json("GET", "/graphs", "").unwrap();
+    assert_eq!(status, 200);
+    match listing {
+        Json::Arr(items) => {
+            assert_eq!(items.len(), 1);
+            assert_eq!(items[0].get("id").unwrap().as_str(), Some(id.as_str()));
+            assert_eq!(items[0].get("queries").unwrap().as_u64(), Some(2));
+        }
+        other => panic!("expected listing array, got {other:?}"),
+    }
+    drop(client);
+
+    // ── clean shutdown: workers join; the port stops answering ────
+    server.shutdown();
+    assert!(
+        HttpClient::connect(&addr.to_string())
+            .and_then(|mut c| c.request("GET", "/healthz", b""))
+            .is_err(),
+        "server must stop accepting after shutdown"
+    );
+}
+
+#[test]
+fn boba_and_none_schemes_serve_identical_answers() {
+    // The BOBA-vs-random serving comparison must differ only in speed,
+    // never in results: prepare the same dataset both ways and compare
+    // every query digest.
+    let server = spawn_server();
+    let addr = server.addr();
+    let mut ids = Vec::new();
+    for scheme in ["boba", "none"] {
+        let (status, resp) = raw_post(
+            &addr,
+            "/graphs",
+            &format!("{{\"dataset\": \"{DATASET}\", \"scheme\": \"{scheme}\"}}"),
+        );
+        assert_eq!(status, 201);
+        ids.push(resp.get("id").unwrap().as_str().unwrap().to_string());
+    }
+    for (query, body, tol) in [
+        ("spmv", "", 1e-6),
+        ("pagerank", "{\"iters\": 30}", 1e-3),
+        ("sssp", "", 1e-6),
+        ("tc", "", 0.0),
+    ] {
+        let digests: Vec<f64> = ids
+            .iter()
+            .map(|id| {
+                let (status, resp) = raw_post(&addr, &format!("/graphs/{id}/{query}"), body);
+                assert_eq!(status, 200, "{query}: {}", resp.render());
+                resp.get("digest").unwrap().as_f64().unwrap()
+            })
+            .collect();
+        assert!(
+            (digests[0] - digests[1]).abs() <= tol * digests[0].abs().max(1.0),
+            "{query} digests diverge across schemes: {digests:?}"
+        );
+    }
+    server.shutdown();
+}

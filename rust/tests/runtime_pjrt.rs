@@ -1,3 +1,5 @@
+#![cfg(feature = "pjrt")]
+
 //! PJRT runtime integration: load the AOT artifacts, execute both SpMV
 //! variants and PageRank, validate against native kernels. Requires
 //! `make artifacts` (tests are skipped with a notice when artifacts are

@@ -1,0 +1,247 @@
+//! An offline, std-only drop-in subset of the `anyhow` error crate.
+//!
+//! The build environment cannot resolve crates.io (the same constraint
+//! that led this repo to hand-roll its arg parser, bench harness, and
+//! property-testing framework instead of clap/criterion/proptest), so
+//! this path dependency provides the slice of anyhow's API the codebase
+//! actually uses:
+//!
+//! * [`Error`] — a boxed-free error carrying a context chain;
+//! * [`Result<T>`] with the defaulted error type;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros (format-string forms);
+//! * the [`Context`] extension trait for `Result` and `Option`
+//!   (`.context(..)` / `.with_context(|| ..)`);
+//! * blanket `From<E: std::error::Error>` so `?` converts io/parse
+//!   errors, preserving their `source()` chain;
+//! * `{e}` prints the outermost message, `{e:#}` the full chain —
+//!   matching anyhow's Display contract, which `main.rs` and the
+//!   property harness rely on.
+//!
+//! Unsupported anyhow features (downcasting, backtraces, `Error::new`
+//! with live source objects) are deliberately omitted; nothing in this
+//! repo uses them. If the real crate ever becomes resolvable, deleting
+//! this directory and pointing Cargo.toml at the registry is a drop-in
+//! swap.
+
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error as a chain of messages, outermost context first.
+///
+/// Unlike `std` errors this type intentionally does **not** implement
+/// `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+/// impl coherent (the same design decision the real anyhow makes).
+pub struct Error {
+    /// `chain[0]` is the outermost message (latest context added);
+    /// subsequent entries are the causes, in order.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (what `.context(..)` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The outermost (most recently added) message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the whole chain, colon-separated (anyhow's format).
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `?` conversion from any std error, flattening its `source()` chain.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(cause) = source {
+            chain.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(|| ..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_number(s: &str) -> Result<u32> {
+        let v: u32 = s.parse()?;
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_number("42").unwrap(), 42);
+        let err = parse_number("nope").unwrap_err();
+        assert!(err.to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let base: Result<()> = Err(anyhow!("inner failure"));
+        let err = base.context("outer context").unwrap_err();
+        assert_eq!(format!("{err}"), "outer context");
+        assert_eq!(format!("{err:#}"), "outer context: inner failure");
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("inner failure"));
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let err = none.context("was empty").unwrap_err();
+        assert_eq!(err.to_string(), "was empty");
+        assert_eq!(Some(7).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let mut called = false;
+        let ok: Result<u32, std::num::ParseIntError> = "3".parse();
+        let v = ok
+            .with_context(|| {
+                called = true;
+                "ctx"
+            })
+            .unwrap();
+        assert_eq!(v, 3);
+        assert!(!called, "with_context must not evaluate on Ok");
+    }
+
+    fn ensure_even(v: u32) -> Result<()> {
+        ensure!(v % 2 == 0, "{v} is odd");
+        ensure!(v < 100);
+        Ok(())
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert!(ensure_even(4).is_ok());
+        assert_eq!(ensure_even(3).unwrap_err().to_string(), "3 is odd");
+        assert!(ensure_even(102)
+            .unwrap_err()
+            .to_string()
+            .contains("condition failed"));
+        fn bails() -> Result<()> {
+            bail!("stop: {}", 9)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stop: 9");
+    }
+
+    #[test]
+    fn inline_capture_in_format() {
+        let key = "scale";
+        let err = anyhow!("missing required option --{key}");
+        assert_eq!(err.to_string(), "missing required option --scale");
+    }
+}
