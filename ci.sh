@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
-# CI entry point: build, test, lint, and emit the serving benchmark.
+# CI entry point: build, test, docs, lint, and emit the benchmarks.
 #
-#   ./ci.sh            # build + test + fmt/clippy + quick BENCH_serve.json
-#   CI_SKIP_BENCH=1 ./ci.sh     # skip the serving benchmark
+#   ./ci.sh            # build + test + doc + fmt/clippy + quick benchmarks
+#   CI_SKIP_BENCH=1 ./ci.sh     # skip the serving + repro benchmarks
 #   CI_STRICT=1 ./ci.sh         # fmt/clippy failures fail the run too
 #
 # Build and test failures always fail the run. fmt/clippy are advisory
@@ -38,6 +38,15 @@ cd rust
 run_required cargo build --release
 run_required cargo test -q
 
+# Docs are part of the deliverable (ISSUE 2): the crate carries
+# #![deny(missing_docs)] and the doc build must be warning-free
+# (broken intra-doc links etc. fail here, doc-tests fail `cargo test`).
+note "cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
+if ! RUSTDOCFLAGS="-D warnings" cargo doc --no-deps; then
+    echo "FAILED (required): cargo doc --no-deps"
+    FAILURES=$((FAILURES + 1))
+fi
+
 if cargo fmt --version >/dev/null 2>&1; then
     run_advisory cargo fmt --check
 else
@@ -61,6 +70,16 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
         --mix spmv:7,pagerank:3 --pr-iters 5 \
         --json "$ROOT/BENCH_serve.json"; then
         echo "FAILED (required): serving benchmark"
+        FAILURES=$((FAILURES + 1))
+    fi
+
+    # Paper-reproduction smoke run: T1–T4 on the generated quick trio,
+    # writing the trajectory JSON and regenerating docs/RESULTS.md from
+    # the same records (uploaded as a CI artifact).
+    note "repro smoke (BENCH_repro.json + docs/RESULTS.md)"
+    if ! cargo run --release -- repro --quick \
+        --json "$ROOT/BENCH_repro.json" --md "$ROOT/docs/RESULTS.md"; then
+        echo "FAILED (required): repro smoke"
         FAILURES=$((FAILURES + 1))
     fi
 fi

@@ -1,0 +1,133 @@
+//! Testbed capture — the "machine" block of every committed benchmark
+//! JSON (`BENCH_repro.json`, `BENCH_serve.json`).
+//!
+//! Benchmark numbers without the machine they ran on are noise: the
+//! paper's Table 5 fixes a V100 + dual Xeon testbed, and cross-run
+//! comparisons of this repo's perf trajectory are only valid within one
+//! machine class. [`MachineInfo::capture`] records what std can see
+//! (OS, architecture, CPU count, worker-thread count, crate version,
+//! hostname) and [`rss_peak_bytes`] adds the peak resident set from
+//! `/proc/self/status` on Linux — the repro harness stores it next to
+//! the timings so memory blowups show up in the trajectory too.
+
+use crate::parallel;
+use crate::util::json::Json;
+
+/// A snapshot of the machine and process configuration a benchmark ran
+/// under.
+#[derive(Clone, Debug)]
+pub struct MachineInfo {
+    /// Host name (best-effort; "unknown" when undiscoverable).
+    pub hostname: String,
+    /// Operating system (`std::env::consts::OS`).
+    pub os: String,
+    /// CPU architecture (`std::env::consts::ARCH`).
+    pub arch: String,
+    /// Available hardware parallelism.
+    pub cpus: usize,
+    /// Worker threads the [`crate::parallel`] runtime will use (honours
+    /// `BOBA_THREADS` / [`crate::parallel::set_threads`]).
+    pub threads: usize,
+    /// Crate version (the code the numbers belong to).
+    pub version: String,
+}
+
+impl MachineInfo {
+    /// Capture the current machine/process configuration.
+    pub fn capture() -> Self {
+        Self {
+            hostname: hostname(),
+            os: std::env::consts::OS.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+            cpus: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0),
+            threads: parallel::threads(),
+            version: env!("CARGO_PKG_VERSION").to_string(),
+        }
+    }
+
+    /// Render as the `machine` JSON object of a benchmark document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hostname", Json::Str(self.hostname.clone())),
+            ("os", Json::Str(self.os.clone())),
+            ("arch", Json::Str(self.arch.clone())),
+            ("cpus", Json::Num(self.cpus as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            ("version", Json::Str(self.version.clone())),
+        ])
+    }
+}
+
+/// Best-effort host name: `HOSTNAME` env var, then
+/// `/proc/sys/kernel/hostname`, then "unknown".
+fn hostname() -> String {
+    if let Ok(h) = std::env::var("HOSTNAME") {
+        if !h.is_empty() {
+            return h;
+        }
+    }
+    if let Ok(h) = std::fs::read_to_string("/proc/sys/kernel/hostname") {
+        let h = h.trim();
+        if !h.is_empty() {
+            return h.to_string();
+        }
+    }
+    "unknown".to_string()
+}
+
+/// Peak resident set size (`VmHWM`) of this process in bytes, from
+/// `/proc/self/status`. `None` on platforms without procfs.
+pub fn rss_peak_bytes() -> Option<u64> {
+    proc_status_kb("VmHWM:").map(|kb| kb * 1024)
+}
+
+/// Current resident set size (`VmRSS`) in bytes. `None` without procfs.
+pub fn rss_bytes() -> Option<u64> {
+    proc_status_kb("VmRSS:").map(|kb| kb * 1024)
+}
+
+fn proc_status_kb(key: &str) -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix(key) {
+            // Format: "VmHWM:	   12345 kB"
+            let num: String =
+                rest.chars().filter(|c| c.is_ascii_digit()).collect();
+            return num.parse().ok();
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_has_sane_fields() {
+        let m = MachineInfo::capture();
+        assert!(!m.os.is_empty());
+        assert!(!m.arch.is_empty());
+        assert!(m.threads >= 1);
+        assert!(!m.version.is_empty());
+    }
+
+    #[test]
+    fn to_json_roundtrips() {
+        let m = MachineInfo::capture();
+        let j = m.to_json();
+        let back = Json::parse(&j.render()).unwrap();
+        assert_eq!(back.get("os").unwrap().as_str(), Some(m.os.as_str()));
+        assert_eq!(back.get("threads").unwrap().as_u64(), Some(m.threads as u64));
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn rss_reads_on_linux() {
+        // Both gauges exist and peak >= current (same scan, monotone).
+        let peak = rss_peak_bytes().expect("VmHWM on linux");
+        let cur = rss_bytes().expect("VmRSS on linux");
+        assert!(peak > 0 && cur > 0);
+        assert!(peak >= cur / 2, "peak {peak} vs current {cur}");
+    }
+}

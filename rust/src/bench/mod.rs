@@ -1,10 +1,30 @@
-//! A criterion-like benchmark harness (criterion does not resolve
-//! offline). Provides warmup, repeated timed iterations, robust summary
-//! statistics (median + MAD), throughput reporting, and aligned table
-//! output — everything the paper-table benches in `rust/benches/` need.
+//! The benchmark harness family (criterion does not resolve offline).
+//!
+//! * this module — [`Bench`] (warmup + repeated timed iterations with a
+//!   wall-clock cap), [`Measurement`] and [`Report`] for aligned table
+//!   output: everything the paper-table benches in `rust/benches/` need;
+//! * [`stats`] — robust summaries (median + MAD + min/max/mean) shared
+//!   by every timing consumer;
+//! * [`machine`] — testbed capture (OS/arch/CPUs/threads, peak RSS) so
+//!   committed numbers carry the machine they ran on;
+//! * [`results`] — the versioned `BENCH_repro.json` schema with a strict
+//!   parser and the `docs/RESULTS.md` markdown renderer.
 //!
 //! Benches are ordinary binaries with `harness = false`; each builds a
-//! [`Bench`] per measurement and prints rows via [`Report`].
+//! [`Bench`] per measurement and prints rows via [`Report`]. The repro
+//! harness ([`crate::coordinator::repro`]) layers [`results`] on top.
+//!
+//! ```
+//! let m = boba::bench::Bench::quick().run("add", || 1 + 1);
+//! assert!(m.iters() >= 1);
+//! assert!(m.summary.min_ms <= m.summary.median_ms);
+//! ```
+
+pub mod machine;
+pub mod results;
+pub mod stats;
+
+pub use stats::{median_mad, Summary};
 
 use crate::util::human;
 use std::time::{Duration, Instant};
@@ -14,20 +34,32 @@ use std::time::{Duration, Instant};
 pub struct Measurement {
     /// Label (e.g. "BOBA/kron18/reorder").
     pub name: String,
-    /// Median time per iteration, milliseconds.
-    pub median_ms: f64,
-    /// Median absolute deviation, milliseconds.
-    pub mad_ms: f64,
-    /// Iterations measured.
-    pub iters: usize,
+    /// Full summary (median/MAD/min/max/mean) of the samples — the
+    /// single source of truth for the numbers.
+    pub summary: Summary,
     /// Optional throughput item count (edges, rows...) per iteration.
     pub items: Option<u64>,
 }
 
 impl Measurement {
+    /// Median time per iteration, milliseconds.
+    pub fn median_ms(&self) -> f64 {
+        self.summary.median_ms
+    }
+
+    /// Median absolute deviation, milliseconds.
+    pub fn mad_ms(&self) -> f64 {
+        self.summary.mad_ms
+    }
+
+    /// Iterations measured.
+    pub fn iters(&self) -> usize {
+        self.summary.n
+    }
+
     /// Items per second, if an item count was attached.
     pub fn throughput(&self) -> Option<f64> {
-        self.items.map(|it| it as f64 / (self.median_ms / 1e3))
+        self.items.map(|it| it as f64 / (self.summary.median_ms / 1e3))
     }
 }
 
@@ -75,14 +107,8 @@ impl Bench {
                 break;
             }
         }
-        let (median, mad) = median_mad(&mut samples);
-        Measurement {
-            name: name.to_string(),
-            median_ms: median,
-            mad_ms: mad,
-            iters: samples.len(),
-            items: None,
-        }
+        let summary = Summary::of(&mut samples);
+        Measurement { name: name.to_string(), summary, items: None }
     }
 
     /// Like [`Bench::run`] with a throughput item count.
@@ -96,18 +122,6 @@ impl Bench {
         m.items = Some(items);
         m
     }
-}
-
-/// Median and median-absolute-deviation of samples (sorts in place).
-pub fn median_mad(samples: &mut [f64]) -> (f64, f64) {
-    if samples.is_empty() {
-        return (0.0, 0.0);
-    }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let median = samples[samples.len() / 2];
-    let mut dev: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
-    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    (median, dev[dev.len() / 2])
 }
 
 /// Identity function the optimizer must assume has side effects.
@@ -149,9 +163,9 @@ impl Report {
                 .unwrap_or_default();
             rows.push(vec![
                 m.name.clone(),
-                human::ms(m.median_ms),
-                format!("±{}", human::ms(m.mad_ms)),
-                format!("n={}", m.iters),
+                human::ms(m.median_ms()),
+                format!("±{}", human::ms(m.mad_ms())),
+                format!("n={}", m.iters()),
                 thr,
             ]);
         }
@@ -178,8 +192,9 @@ mod tests {
         let m = b.run("spin", || {
             std::thread::sleep(Duration::from_millis(2));
         });
-        assert_eq!(m.iters, 3);
-        assert!(m.median_ms >= 1.5, "median {}", m.median_ms);
+        assert_eq!(m.iters(), 3);
+        assert!(m.median_ms() >= 1.5, "median {}", m.median_ms());
+        assert!(m.summary.min_ms <= m.median_ms() && m.median_ms() <= m.summary.max_ms);
     }
 
     #[test]
@@ -204,9 +219,7 @@ mod tests {
         let mut r = Report::new("T");
         r.push(Measurement {
             name: "a".into(),
-            median_ms: 1.0,
-            mad_ms: 0.1,
-            iters: 5,
+            summary: Summary::single(1.0),
             items: Some(100),
         });
         let s = r.render();
@@ -217,6 +230,6 @@ mod tests {
     fn bench_respects_time_cap() {
         let b = Bench { warmup: 0, iters: 1000, max_total: Duration::from_millis(30) };
         let m = b.run("slow", || std::thread::sleep(Duration::from_millis(10)));
-        assert!(m.iters < 10, "iters {}", m.iters);
+        assert!(m.iters() < 10, "iters {}", m.iters());
     }
 }

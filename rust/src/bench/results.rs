@@ -1,0 +1,420 @@
+//! The `BENCH_repro.json` result schema and its renderers.
+//!
+//! The repro harness ([`crate::coordinator::repro`]) emits one
+//! [`ResultsDoc`] per run: machine info, run configuration, and a flat
+//! list of [`Record`]s keyed `(table, dataset, scheme, app, metric)`.
+//! The schema is **stable and versioned** ([`SCHEMA`]) because the
+//! committed JSON is the repo's perf trajectory — later optimization PRs
+//! are judged against it, so both the emitter and a strict parser/
+//! validator ([`ResultsDoc::parse`]) live here under test.
+//!
+//! [`ResultsDoc::render_markdown`] renders the same records as the
+//! human-readable `docs/RESULTS.md`, so the committed table and the
+//! committed JSON can never drift apart.
+
+use super::machine::MachineInfo;
+use super::stats::Summary;
+use crate::util::human;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Schema identifier written to (and required from) every document.
+pub const SCHEMA: &str = "boba-repro/1";
+
+/// The repro table identifiers, in report order.
+pub const TABLE_IDS: [&str; 4] = ["T1", "T2", "T3", "T4"];
+
+/// Human title for a repro table id (used by both renderers).
+pub fn table_title(id: &str) -> &'static str {
+    match id {
+        "T1" => "T1 — reordering time per scheme",
+        "T2" => "T2 — COO→CSR conversion time, pre/post reorder",
+        "T3" => "T3 — end-to-end pipeline time (reorder + [sort] + convert + app)",
+        "T4" => "T4 — simulated cache hit rates (V100-scaled hierarchy)",
+        _ => "unknown table",
+    }
+}
+
+/// One measured quantity of the repro run.
+#[derive(Clone, Debug)]
+pub struct Record {
+    /// Repro table this row belongs to ("T1".."T4").
+    pub table: String,
+    /// Dataset name (suite name or ad-hoc spec).
+    pub dataset: String,
+    /// Reordering scheme name (CLI vocabulary, plus "random" baseline).
+    pub scheme: String,
+    /// Application, for tables keyed by workload (T3/T4); empty
+    /// otherwise.
+    pub app: String,
+    /// Metric name ("reorder_ms", "convert_ms", "total_ms", "l1_hit_pct",
+    /// "speedup_x", ...).
+    pub metric: String,
+    /// Unit of the summary values ("ms", "%", "x").
+    pub unit: String,
+    /// Robust summary over the measured iterations.
+    pub summary: Summary,
+    /// Throughput (items/second — edges for reorder/convert), when the
+    /// metric has a natural item count.
+    pub items_per_sec: Option<f64>,
+    /// Order-sensitive digest of the produced permutation (T1 rows);
+    /// used by the determinism tests.
+    pub digest: Option<String>,
+}
+
+impl Record {
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("table", Json::Str(self.table.clone())),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("scheme", Json::Str(self.scheme.clone())),
+            ("app", Json::Str(self.app.clone())),
+            ("metric", Json::Str(self.metric.clone())),
+            ("unit", Json::Str(self.unit.clone())),
+            ("median", Json::Num(self.summary.median_ms)),
+            ("mad", Json::Num(self.summary.mad_ms)),
+            ("min", Json::Num(self.summary.min_ms)),
+            ("max", Json::Num(self.summary.max_ms)),
+            ("mean", Json::Num(self.summary.mean_ms)),
+            ("iters", Json::Num(self.summary.n as f64)),
+        ];
+        if let Some(t) = self.items_per_sec {
+            pairs.push(("items_per_sec", Json::Num(t)));
+        }
+        if let Some(d) = &self.digest {
+            pairs.push(("digest", Json::Str(d.clone())));
+        }
+        Json::obj(pairs)
+    }
+
+    fn parse(j: &Json) -> Result<Record> {
+        let s = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .and_then(|v| v.as_str())
+                .with_context(|| format!("record missing string field {k:?}"))?
+                .to_string())
+        };
+        let f = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("record missing numeric field {k:?}"))
+        };
+        Ok(Record {
+            table: s("table")?,
+            dataset: s("dataset")?,
+            scheme: s("scheme")?,
+            app: s("app")?,
+            metric: s("metric")?,
+            unit: s("unit")?,
+            summary: Summary {
+                median_ms: f("median")?,
+                mad_ms: f("mad")?,
+                min_ms: f("min")?,
+                max_ms: f("max")?,
+                mean_ms: f("mean")?,
+                n: f("iters")? as usize,
+            },
+            items_per_sec: j.get("items_per_sec").and_then(|v| v.as_f64()),
+            digest: j.get("digest").and_then(|v| v.as_str()).map(|s| s.to_string()),
+        })
+    }
+
+    /// Format one summary value in this record's unit.
+    pub fn fmt(&self, v: f64) -> String {
+        match self.unit.as_str() {
+            "ms" => human::ms(v),
+            "%" => format!("{v:.1}%"),
+            "x" => format!("{v:.2}x"),
+            other => format!("{v:.4} {other}"),
+        }
+    }
+}
+
+/// A complete repro run: configuration + machine + records.
+#[derive(Clone, Debug)]
+pub struct ResultsDoc {
+    /// Seed the run used.
+    pub seed: u64,
+    /// Dataset scale ("quick" or "full").
+    pub scale: String,
+    /// Worker threads the run was pinned to.
+    pub threads: usize,
+    /// Captured machine snapshot.
+    pub machine: MachineInfo,
+    /// Peak RSS at the end of the run (Linux; `None` elsewhere).
+    pub rss_peak_bytes: Option<u64>,
+    /// Unix timestamp (seconds) the document was created.
+    pub created_unix: u64,
+    /// All measurements, in emission order.
+    pub records: Vec<Record>,
+}
+
+impl ResultsDoc {
+    /// Fresh document capturing the current machine and time.
+    pub fn new(seed: u64, scale: &str) -> Self {
+        let machine = MachineInfo::capture();
+        let threads = machine.threads;
+        Self {
+            seed,
+            scale: scale.to_string(),
+            threads,
+            machine,
+            rss_peak_bytes: None,
+            created_unix: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+            records: Vec::new(),
+        }
+    }
+
+    /// Append a record.
+    pub fn push(&mut self, r: Record) {
+        self.records.push(r);
+    }
+
+    /// Unique table ids present, in [`TABLE_IDS`] order (unknown ids
+    /// last, in first-seen order).
+    pub fn tables(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for id in TABLE_IDS {
+            if self.records.iter().any(|r| r.table == id) {
+                out.push(id.to_string());
+            }
+        }
+        for r in &self.records {
+            if !out.contains(&r.table) {
+                out.push(r.table.clone());
+            }
+        }
+        out
+    }
+
+    /// Unique scheme names present (sorted).
+    pub fn schemes(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.records.iter().map(|r| r.scheme.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Look up a record.
+    pub fn get(&self, table: &str, dataset: &str, scheme: &str, metric: &str) -> Option<&Record> {
+        self.records.iter().find(|r| {
+            r.table == table && r.dataset == dataset && r.scheme == scheme && r.metric == metric
+        })
+    }
+
+    /// Render as the versioned JSON document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.to_string())),
+            ("created_unix", Json::Num(self.created_unix as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("scale", Json::Str(self.scale.clone())),
+            ("threads", Json::Num(self.threads as f64)),
+            ("machine", self.machine.to_json()),
+            (
+                "rss_peak_bytes",
+                self.rss_peak_bytes.map(|b| Json::Num(b as f64)).unwrap_or(Json::Null),
+            ),
+            ("records", Json::Arr(self.records.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+
+    /// Strict parse + schema validation of a rendered document. Rejects
+    /// unknown schema versions and structurally incomplete records, so a
+    /// drifting emitter fails its own tests rather than committing an
+    /// unreadable trajectory point.
+    pub fn parse(text: &str) -> Result<ResultsDoc> {
+        let j = Json::parse(text).context("BENCH_repro.json is not valid JSON")?;
+        let schema = j
+            .get("schema")
+            .and_then(|v| v.as_str())
+            .context("missing \"schema\" field")?;
+        if schema != SCHEMA {
+            bail!("unknown schema {schema:?} (this reader understands {SCHEMA:?})");
+        }
+        let num = |k: &str| -> Result<u64> {
+            j.get(k).and_then(|v| v.as_u64()).with_context(|| format!("missing numeric {k:?}"))
+        };
+        let mj = j.get("machine").context("missing \"machine\" object")?;
+        let ms = |k: &str| -> Result<String> {
+            Ok(mj.get(k)
+                .and_then(|v| v.as_str())
+                .with_context(|| format!("machine missing {k:?}"))?
+                .to_string())
+        };
+        let machine = MachineInfo {
+            hostname: ms("hostname")?,
+            os: ms("os")?,
+            arch: ms("arch")?,
+            cpus: mj.get("cpus").and_then(|v| v.as_u64()).context("machine missing cpus")?
+                as usize,
+            threads: mj
+                .get("threads")
+                .and_then(|v| v.as_u64())
+                .context("machine missing threads")? as usize,
+            version: ms("version")?,
+        };
+        let records = match j.get("records").context("missing \"records\" array")? {
+            Json::Arr(items) => items
+                .iter()
+                .enumerate()
+                .map(|(i, r)| Record::parse(r).with_context(|| format!("record {i}")))
+                .collect::<Result<Vec<_>>>()?,
+            _ => bail!("\"records\" is not an array"),
+        };
+        Ok(ResultsDoc {
+            seed: num("seed")?,
+            scale: j
+                .get("scale")
+                .and_then(|v| v.as_str())
+                .context("missing \"scale\"")?
+                .to_string(),
+            threads: num("threads")? as usize,
+            machine,
+            rss_peak_bytes: j.get("rss_peak_bytes").and_then(|v| v.as_u64()),
+            created_unix: num("created_unix")?,
+            records,
+        })
+    }
+
+    /// Render the records as the `docs/RESULTS.md` page: one GitHub-
+    /// flavoured markdown table per repro table, preceded by the run
+    /// configuration, so the committed page is regenerable from (and
+    /// always consistent with) the committed JSON.
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# Reproduction results\n\n");
+        out.push_str(
+            "Generated by `boba repro` — do not edit by hand. Regenerate with:\n\n\
+             ```sh\ncd rust && cargo run --release -- repro --quick \\\n    \
+             --json ../BENCH_repro.json --md ../docs/RESULTS.md\n```\n\n",
+        );
+        out.push_str(&format!(
+            "- **machine**: {} ({} {}, {} CPUs), crate v{}\n- **threads**: {}\n\
+             - **seed**: {}\n- **scale**: {}\n",
+            self.machine.hostname,
+            self.machine.os,
+            self.machine.arch,
+            self.machine.cpus,
+            self.machine.version,
+            self.threads,
+            self.seed,
+            self.scale,
+        ));
+        if let Some(b) = self.rss_peak_bytes {
+            out.push_str(&format!("- **peak RSS**: {}\n", human::bytes_binary(b)));
+        }
+        out.push('\n');
+        for table in self.tables() {
+            out.push_str(&format!("## {}\n\n", table_title(&table)));
+            out.push_str("| dataset | scheme | app | metric | median | min | max | n |\n");
+            out.push_str("|---|---|---|---|---:|---:|---:|---:|\n");
+            for r in self.records.iter().filter(|r| r.table == table) {
+                out.push_str(&format!(
+                    "| {} | {} | {} | {} | {} | {} | {} | {} |\n",
+                    r.dataset,
+                    r.scheme,
+                    if r.app.is_empty() { "—" } else { r.app.as_str() },
+                    r.metric,
+                    r.fmt(r.summary.median_ms),
+                    r.fmt(r.summary.min_ms),
+                    r.fmt(r.summary.max_ms),
+                    r.summary.n,
+                ));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_doc() -> ResultsDoc {
+        let mut doc = ResultsDoc::new(42, "quick");
+        doc.push(Record {
+            table: "T1".into(),
+            dataset: "rmat_q".into(),
+            scheme: "boba".into(),
+            app: String::new(),
+            metric: "reorder_ms".into(),
+            unit: "ms".into(),
+            summary: Summary::of(&mut [1.0, 1.2, 1.1]),
+            items_per_sec: Some(1.0e8),
+            digest: Some("deadbeef".into()),
+        });
+        doc.push(Record {
+            table: "T4".into(),
+            dataset: "rmat_q".into(),
+            scheme: "boba".into(),
+            app: "SpMV".into(),
+            metric: "l1_hit_pct".into(),
+            unit: "%".into(),
+            summary: Summary::single(61.5),
+            items_per_sec: None,
+            digest: None,
+        });
+        doc.rss_peak_bytes = Some(1 << 20);
+        doc
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_records() {
+        let doc = sample_doc();
+        let text = doc.to_json().render();
+        let back = ResultsDoc::parse(&text).unwrap();
+        assert_eq!(back.seed, 42);
+        assert_eq!(back.records.len(), 2);
+        let r = back.get("T1", "rmat_q", "boba", "reorder_ms").unwrap();
+        assert_eq!(r.digest.as_deref(), Some("deadbeef"));
+        assert_eq!(r.summary.n, 3);
+        assert!((r.summary.median_ms - 1.1).abs() < 1e-9);
+        assert_eq!(back.rss_peak_bytes, Some(1 << 20));
+    }
+
+    #[test]
+    fn parse_rejects_wrong_schema() {
+        let doc = sample_doc();
+        let text = doc.to_json().render().replace(SCHEMA, "boba-repro/999");
+        assert!(ResultsDoc::parse(&text).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_incomplete_record() {
+        let text = format!(
+            "{{\"schema\":\"{SCHEMA}\",\"created_unix\":0,\"seed\":1,\
+             \"scale\":\"quick\",\"threads\":1,\
+             \"machine\":{{\"hostname\":\"h\",\"os\":\"linux\",\"arch\":\"x\",\
+             \"cpus\":1,\"threads\":1,\"version\":\"0\"}},\
+             \"rss_peak_bytes\":null,\
+             \"records\":[{{\"table\":\"T1\"}}]}}"
+        );
+        let err = ResultsDoc::parse(&text).unwrap_err();
+        assert!(format!("{err:#}").contains("record 0"), "{err:#}");
+    }
+
+    #[test]
+    fn markdown_lists_every_table_present() {
+        let doc = sample_doc();
+        let md = doc.render_markdown();
+        assert!(md.contains("## T1 —"));
+        assert!(md.contains("## T4 —"));
+        assert!(!md.contains("## T2 —"), "absent tables are not rendered");
+        assert!(md.contains("| rmat_q | boba |"));
+        assert!(md.contains("61.5%"));
+        assert!(md.contains("boba repro"));
+    }
+
+    #[test]
+    fn tables_ordered_canonically() {
+        let doc = sample_doc();
+        assert_eq!(doc.tables(), vec!["T1".to_string(), "T4".to_string()]);
+        assert_eq!(doc.schemes(), vec!["boba".to_string()]);
+    }
+}

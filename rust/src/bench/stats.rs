@@ -1,0 +1,110 @@
+//! Robust summary statistics over timing samples.
+//!
+//! Every repro-harness measurement is reported as a [`Summary`] — median
+//! (the headline number, robust to scheduler noise), median absolute
+//! deviation (spread), and min/max/mean (the envelope) — following the
+//! methodology critique of Faldu et al. ("A Closer Look at Lightweight
+//! Graph Reordering"): single-shot timings of reordering pipelines are
+//! dominated by cache and scheduler state, so the harness always runs
+//! warmup + repeated iterations and summarizes.
+
+/// Summary statistics of a set of timing samples (milliseconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    /// Median sample.
+    pub median_ms: f64,
+    /// Median absolute deviation around the median.
+    pub mad_ms: f64,
+    /// Smallest sample.
+    pub min_ms: f64,
+    /// Largest sample.
+    pub max_ms: f64,
+    /// Arithmetic mean.
+    pub mean_ms: f64,
+    /// Number of samples summarized.
+    pub n: usize,
+}
+
+impl Summary {
+    /// An all-zero summary (no samples).
+    pub fn zero() -> Self {
+        Self { median_ms: 0.0, mad_ms: 0.0, min_ms: 0.0, max_ms: 0.0, mean_ms: 0.0, n: 0 }
+    }
+
+    /// Summarize `samples` (sorts in place; empty input yields
+    /// [`Summary::zero`]).
+    pub fn of(samples: &mut [f64]) -> Self {
+        if samples.is_empty() {
+            return Self::zero();
+        }
+        let (median, mad) = median_mad(samples);
+        let min = samples[0];
+        let max = samples[samples.len() - 1];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        Self {
+            median_ms: median,
+            mad_ms: mad,
+            min_ms: min,
+            max_ms: max,
+            mean_ms: mean,
+            n: samples.len(),
+        }
+    }
+
+    /// A single-sample summary (deterministic quantities, e.g. simulated
+    /// hit rates, where repetition adds nothing).
+    pub fn single(v: f64) -> Self {
+        Self { median_ms: v, mad_ms: 0.0, min_ms: v, max_ms: v, mean_ms: v, n: 1 }
+    }
+}
+
+/// Median and median-absolute-deviation of samples (sorts in place).
+pub fn median_mad(samples: &mut [f64]) -> (f64, f64) {
+    if samples.is_empty() {
+        return (0.0, 0.0);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut dev: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (median, dev[dev.len() / 2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_samples() {
+        let mut s = vec![3.0, 1.0, 2.0, 100.0, 2.5];
+        let sum = Summary::of(&mut s);
+        assert_eq!(sum.median_ms, 2.5);
+        assert_eq!(sum.min_ms, 1.0);
+        assert_eq!(sum.max_ms, 100.0);
+        assert_eq!(sum.n, 5);
+        assert!((sum.mean_ms - 21.7).abs() < 1e-9);
+        assert!(sum.mad_ms <= 1.5, "mad robust to the outlier: {}", sum.mad_ms);
+    }
+
+    #[test]
+    fn summary_empty_is_zero() {
+        assert_eq!(Summary::of(&mut []), Summary::zero());
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::single(7.5);
+        assert_eq!(s.median_ms, 7.5);
+        assert_eq!(s.min_ms, 7.5);
+        assert_eq!(s.max_ms, 7.5);
+        assert_eq!(s.n, 1);
+    }
+
+    #[test]
+    fn median_mad_basic() {
+        let mut s = vec![1.0, 100.0, 2.0, 3.0, 2.5];
+        let (med, mad) = median_mad(&mut s);
+        assert_eq!(med, 2.5);
+        assert!(mad <= 1.5);
+    }
+}

@@ -10,6 +10,17 @@
 //! real hardware is exactly what Fig. 7 compares — the *relative* hit
 //! rates of reordering schemes on the same kernel, which are a function
 //! of the access pattern, not of GPU microarchitecture details.
+//!
+//! ```
+//! use boba::cachesim::Hierarchy;
+//!
+//! let mut h = Hierarchy::cpu_like(); // 64 B lines
+//! h.access(0); // cold miss
+//! h.access(4); // same line: L1 hit
+//! let r = h.rates();
+//! assert_eq!(r.reads, 2);
+//! assert!((r.l1 - 0.5).abs() < 1e-9);
+//! ```
 
 use crate::algos::trace::Tracer;
 

@@ -9,6 +9,17 @@
 //! consecutive edges hit nearby counters — this is the paper's §5.3
 //! explanation for the conversion-time speedup (1.3–5.1×), and the effect
 //! reproduces directly on CPU caches.
+//!
+//! ```
+//! use boba::convert::coo_to_csr;
+//! use boba::graph::Coo;
+//!
+//! let coo = Coo::new(3, vec![0, 1, 2, 0], vec![1, 2, 0, 2]);
+//! let csr = coo_to_csr(&coo);
+//! assert_eq!(csr.neighbors(0), &[1, 2]); // stable: COO edge order kept
+//! assert_eq!(csr.neighbors(2), &[0]);
+//! assert_eq!(csr.m(), 4);
+//! ```
 
 use crate::graph::{Coo, Csr};
 use crate::parallel;

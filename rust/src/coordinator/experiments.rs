@@ -1,6 +1,10 @@
 //! Experiment drivers — one per table/figure of the paper's evaluation.
 //! Shared by the `boba` CLI and the `rust/benches/*` bench targets so the
 //! numbers in EXPERIMENTS.md are regenerable from either entry point.
+//! (The machine-readable counterpart of these drivers is
+//! [`crate::coordinator::repro`], which runs the same scheme × dataset ×
+//! kernel matrix under the repro methodology and emits
+//! `BENCH_repro.json`.)
 //!
 //! Every driver consumes pre-randomized inputs (the paper's §5 model) and
 //! returns an [`ExpTable`] of structured rows plus helpers to render the
@@ -172,7 +176,7 @@ fn time_conv_spmv(g: &Coo) -> (f64, f64) {
 
 // ───────────────────────── Fig. 4: end-to-end ─────────────────────────
 
-/// Fig. 4 — end-to-end stacked stage times (reorder + [sort] + convert +
+/// Fig. 4 — end-to-end stacked stage times (reorder + \[sort\] + convert +
 /// app), BOBA vs Random, per application × dataset. The headline
 /// end-to-end speedup numbers come from here.
 ///

@@ -9,7 +9,11 @@
 //!   stacked bars come from these records).
 //! * [`experiments`] — one driver per paper table/figure (Table 1,
 //!   Table 3, Fig. 4–7), shared by the CLI and the benches.
+//! * [`repro`] — the `boba repro` harness: the scheme × dataset × kernel
+//!   matrix as four repro tables (T1–T4), emitted as `BENCH_repro.json`
+//!   and `docs/RESULTS.md`.
 
 pub mod datasets;
 pub mod pipeline;
 pub mod experiments;
+pub mod repro;

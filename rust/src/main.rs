@@ -13,12 +13,19 @@
 //!             [--scheme S] [--mix spmv:7,pagerank:3] [--pr-iters I]
 //!             [--compare] [--json F] [--spawn]   drive a server
 //!   table1 | table3 | fig4 | fig5 | fig6 | fig7  regenerate a paper table/figure
+//!   repro     [--quick|--full] [--tables t1,t2,t3,t4] [--threads N]
+//!             [--datasets A,B] [--reps K] [--json F] [--md F]
+//!             run the paper-reproduction harness: T1 reorder time,
+//!             T2 COO→CSR conversion, T3 end-to-end, T4 cache rates;
+//!             writes BENCH_repro.json + docs/RESULTS.md
 //!   spmv-pjrt [--dataset N] [--pallas]           SpMV through the AOT artifacts
 //!                                                (needs the `pjrt` build feature)
 //!
 //! Common options: --seed (default 42), --scale quick|full (or BOBA_SCALE),
 //! --heavy false (or BOBA_HEAVY=0) to skip Gorder/RCM in figure drivers.
+//! Worker threads: --threads N (repro) or the BOBA_THREADS env var.
 
+use anyhow::Context;
 use boba::convert;
 use boba::coordinator::{datasets, experiments, pipeline};
 use boba::graph::{io, Coo};
@@ -188,6 +195,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 srv.shutdown();
             }
         }
+        Some("repro") => repro_cmd(args, seed)?,
         Some("table1") => println!("{}", experiments::table1(seed).render()),
         Some("table3") => println!("{}", experiments::table3(seed).render()),
         Some("fig4") => println!("{}", experiments::fig4(seed).render()),
@@ -198,12 +206,86 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         _ => {
             eprintln!(
                 "usage: boba <datasets|generate|reorder|convert|run|pipeline|serve|loadgen|\
-                 table1|table3|fig4|fig5|fig6|fig7|spmv-pjrt> [options]\n\
+                 repro|table1|table3|fig4|fig5|fig6|fig7|spmv-pjrt> [options]\n\
                  (see rust/src/main.rs header for options)"
             );
         }
     }
     Ok(())
+}
+
+/// The `repro` subcommand: run the paper-reproduction harness and write
+/// `BENCH_repro.json` + `docs/RESULTS.md`.
+fn repro_cmd(args: &Args, seed: u64) -> anyhow::Result<()> {
+    use boba::coordinator::repro;
+    let quick = if args.flag("full") {
+        false
+    } else if args.flag("quick") {
+        true
+    } else {
+        datasets::Scale::from_env() == datasets::Scale::Quick
+    };
+    let mut opts =
+        if quick { repro::ReproOptions::quick(seed) } else { repro::ReproOptions::full(seed) };
+    if let Some(t) = args.get("tables") {
+        opts.tables = repro::parse_tables(t)?;
+    }
+    // --heavy true/false overrides the scale default (BOBA_HEAVY was
+    // already folded into the env by dispatch()); a bare `--heavy` flag
+    // opts in.
+    if args.get("heavy").is_some() {
+        opts.heavy = experiments::include_heavy();
+    } else if args.flag("heavy") {
+        opts.heavy = true;
+    }
+    if let Some(t) = args.get("threads") {
+        let n: usize = t.parse().context("--threads must be a positive integer")?;
+        // 0 would clear the override (ThreadGuard semantics) and
+        // silently fall back to the machine default — reject it.
+        anyhow::ensure!(n > 0, "--threads must be a positive integer, got 0");
+        opts.threads = Some(n);
+    }
+    if let Some(specs) = args.get("datasets") {
+        opts.dataset_specs =
+            specs.split(',').filter(|s| !s.is_empty()).map(|s| s.trim().to_string()).collect();
+    }
+    opts.reps = args.get_parse("reps", opts.reps);
+    opts.pr_iters = args.get_parse("pr-iters", opts.pr_iters);
+
+    let run = repro::run(&opts)?;
+    println!("{}", run.console);
+
+    let json_path = args.get_or("json", &default_output("BENCH_repro.json"));
+    std::fs::write(&json_path, run.doc.to_json().render() + "\n")
+        .with_context(|| format!("writing {json_path}"))?;
+    let md_path = args.get_or("md", &default_output("docs/RESULTS.md"));
+    if let Some(parent) = Path::new(&md_path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    std::fs::write(&md_path, run.doc.render_markdown())
+        .with_context(|| format!("writing {md_path}"))?;
+    println!(
+        "repro: {} records across {:?} (schemes: {:?}, threads {}) -> {json_path}, {md_path}",
+        run.doc.records.len(),
+        run.doc.tables(),
+        run.doc.schemes(),
+        run.doc.threads,
+    );
+    Ok(())
+}
+
+/// Default output path for repro artifacts: repo-root-relative when the
+/// CLI is invoked from `rust/` (the `cargo run` working directory), else
+/// CWD-relative.
+fn default_output(name: &str) -> String {
+    if !Path::new("ROADMAP.md").exists() && Path::new("../ROADMAP.md").exists() {
+        format!("../{name}")
+    } else {
+        name.to_string()
+    }
 }
 
 /// Shared `serve`/`loadgen --spawn` server configuration from flags.

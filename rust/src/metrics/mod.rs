@@ -4,6 +4,18 @@
 //! All metrics are functions of the *labeled* graph — apply a reordering
 //! first ([`crate::graph::Coo::relabeled`]) and compare metric values
 //! across schemes, as Table 1 does.
+//!
+//! ```
+//! use boba::graph::Coo;
+//! use boba::metrics::{bandwidth, nscore};
+//!
+//! // A path graph labeled in path order has optimal bandwidth 1.
+//! let path = Coo::new(4, vec![0, 1, 2], vec![1, 2, 3]);
+//! assert_eq!(bandwidth(&path), 1);
+//! // Vertices 0 and 1 share out-neighbors {2, 3}: NScore counts both.
+//! let g = Coo::new(4, vec![0, 0, 1, 1], vec![2, 3, 2, 3]);
+//! assert_eq!(nscore(&g), 2);
+//! ```
 
 use crate::convert::coo_to_csr;
 use crate::graph::{Coo, Csr};

@@ -14,8 +14,20 @@
 //!   variant of Algorithm 3.
 //!
 //! Worker count defaults to the machine's available parallelism and can be
-//! pinned through [`set_threads`] (used by benches to sweep scaling) or the
-//! `BOBA_THREADS` environment variable.
+//! pinned through [`set_threads`] / [`ThreadGuard`] (used by benches and
+//! `boba repro --threads` to sweep scaling) or the `BOBA_THREADS`
+//! environment variable. Pinning changes scheduling only: every consumer
+//! except the deliberately racy parallel BOBA variant produces
+//! thread-count-independent results.
+//!
+//! ```
+//! let sum = boba::parallel::par_reduce(
+//!     1_000, 64, 0u64,
+//!     |acc, lo, hi| acc + (lo..hi).map(|i| i as u64).sum::<u64>(),
+//!     |a, b| a + b,
+//! );
+//! assert_eq!(sum, 499_500);
+//! ```
 
 pub mod atomic;
 

@@ -13,6 +13,17 @@
 //! All reorderers consume a COO (the paper's pragmatic pipeline input) and
 //! produce a [`Permutation`] mapping old vertex IDs to new ones; apply it
 //! with [`crate::graph::Coo::relabeled`].
+//!
+//! ```
+//! use boba::graph::Coo;
+//! use boba::reorder::{by_name, Reorderer};
+//!
+//! // BOBA orders by first appearance in I++J = [2, 0] ++ [0, 1].
+//! let coo = Coo::new(3, vec![2, 0], vec![0, 1]);
+//! let perm = by_name("boba", 42).unwrap().reorder(&coo);
+//! perm.validate(3).unwrap();
+//! assert_eq!(perm.order(), vec![2, 0, 1]);
+//! ```
 
 pub mod perm;
 pub mod boba;

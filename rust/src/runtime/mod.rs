@@ -7,7 +7,8 @@
 //! xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-id serialized protos.
 //!
 //! [`ell`] packs CSR matrices into the fixed `(N_TILE × K)` ELL tiles the
-//! artifacts were compiled for; [`Engine`] stitches tile executions into
+//! artifacts were compiled for; `Engine` (`pjrt`-gated) stitches tile
+//! executions into
 //! whole-graph SpMV and PageRank.
 
 //! The executable engine is compiled only with the **`pjrt` feature**

@@ -21,11 +21,15 @@
 //! wakes every blocked `accept()` with a dummy connection, then joins.
 
 pub mod http;
-pub mod json;
 pub mod loadgen;
 pub mod registry;
 pub mod router;
 pub mod stats;
+
+/// The JSON codec lives in [`crate::util::json`] (it is a substrate, not
+/// a server detail); re-exported here so `server::json::Json` paths keep
+/// working for the request/response plumbing and its callers.
+pub use crate::util::json;
 
 use anyhow::{Context, Result};
 use std::io::{BufReader, Write};

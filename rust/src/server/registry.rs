@@ -15,12 +15,11 @@
 use crate::convert;
 use crate::coordinator::datasets;
 use crate::coordinator::pipeline::StreamingIngest;
-use crate::graph::{io, Coo, Csr};
+use crate::graph::{Coo, Csr};
 use crate::reorder::{self, Permutation};
 use crate::util::timer::Stopwatch;
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
-use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -336,16 +335,12 @@ fn touch(order: &mut VecDeque<String>, id: &str) {
 /// resolved through [`datasets::resolve`] and randomized (the paper's
 /// input model — §5: "input labels are already randomized").
 fn load_source(spec: &str, seed: u64) -> Result<Coo> {
-    if spec.ends_with(".mtx") {
-        return io::read_matrix_market(Path::new(spec));
+    if datasets::is_file_spec(spec) {
+        // File labels are served as-is (resolve_source preserves edge-
+        // list IDs: a dense relabel would pre-reorder the baseline).
+        return datasets::resolve_source(spec, seed);
     }
-    if spec.ends_with(".el") || spec.ends_with(".txt") {
-        // preserve_ids: the dense first-appearance relabel is itself a
-        // sequential BOBA pass, which would silently turn the `none`
-        // baseline into an already-reordered artifact.
-        return io::read_edge_list(Path::new(spec), true);
-    }
-    Ok(datasets::resolve(spec, seed)?.randomized(seed + 1))
+    Ok(datasets::resolve_source(spec, seed)?.randomized(seed + 1))
 }
 
 #[cfg(test)]

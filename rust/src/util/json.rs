@@ -1,7 +1,11 @@
 //! A small JSON value type with a recursive-descent parser and a
-//! renderer — request/response bodies for the service layer and the
-//! `BENCH_serve.json` emitter. (No JSON crate resolves offline; the
-//! grammar needed here is tiny and fully under test.)
+//! renderer. (No JSON crate resolves offline; the grammar needed here is
+//! tiny and fully under test.)
+//!
+//! Shared by every machine-readable emitter in the crate: the service
+//! layer's request/response bodies ([`crate::server`] re-exports this
+//! module as `server::json`), the loadgen's `BENCH_serve.json`, and the
+//! repro harness's `BENCH_repro.json` ([`crate::bench::results`]).
 
 use anyhow::{bail, Context, Result};
 

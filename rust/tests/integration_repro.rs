@@ -1,0 +1,153 @@
+//! End-to-end tests of the `boba repro` harness on tiny generated
+//! datasets: schema validity of the emitted JSON, coverage of all four
+//! repro tables, markdown rendering, and the determinism claim — pinned
+//! worker-thread count must not change the permutation a deterministic
+//! scheme produces (the paper's batched construction is
+//! thread-count-invariant; only the deliberately racy `boba` parallel
+//! variant is exempt).
+
+use boba::bench::results::ResultsDoc;
+use boba::coordinator::repro::{self, ReproOptions};
+
+/// Tiny inputs so the full T1–T4 sweep stays CI-sized.
+fn tiny_opts(seed: u64) -> ReproOptions {
+    let mut opts = ReproOptions::quick(seed);
+    opts.dataset_specs = vec!["rmat:10:4".into(), "grid:40:30".into()];
+    opts.reps = 2;
+    opts.warmup = 0;
+    opts.pr_iters = 5;
+    opts
+}
+
+#[test]
+fn repro_covers_all_tables_with_valid_schema() {
+    let run = repro::run(&tiny_opts(42)).unwrap();
+    let doc = &run.doc;
+
+    // All four tables, ≥ 3 reorder schemes (the acceptance bar).
+    assert_eq!(doc.tables(), vec!["T1", "T2", "T3", "T4"]);
+    let schemes = doc.schemes();
+    assert!(schemes.len() >= 3, "schemes: {schemes:?}");
+    for s in ["boba", "boba-seq", "boba-atomic", "degree", "hub", "random"] {
+        assert!(schemes.iter().any(|x| x == s), "missing scheme {s}: {schemes:?}");
+    }
+
+    // T1 rows carry digests and positive medians.
+    let t1 = doc.get("T1", "rmat:10:4", "boba", "reorder_ms").unwrap();
+    assert!(t1.digest.is_some());
+    assert!(t1.summary.median_ms >= 0.0);
+    assert!(t1.summary.min_ms <= t1.summary.median_ms);
+    assert!(t1.summary.median_ms <= t1.summary.max_ms);
+    assert_eq!(t1.summary.n, 2, "reps honoured");
+
+    // T2 has the pre/post contrast plus the fused path and a speedup.
+    for metric in ["convert_seq_ms", "convert_par_ms"] {
+        assert!(doc.get("T2", "rmat:10:4", "random", metric).is_some(), "{metric}");
+        assert!(doc.get("T2", "rmat:10:4", "boba", metric).is_some(), "{metric}");
+    }
+    assert!(doc.get("T2", "rmat:10:4", "boba", "convert_fused_ms").is_some());
+    assert!(doc.get("T2", "rmat:10:4", "boba", "convert_speedup_x").is_some());
+
+    // T3 covers all four apps with totals and a speedup per scheme.
+    for app in ["SpMV", "PR", "TC", "SSSP"] {
+        let total = doc
+            .records
+            .iter()
+            .find(|r| r.table == "T3" && r.app == app && r.scheme == "boba"
+                && r.metric == "total_ms")
+            .unwrap_or_else(|| panic!("no T3 total for {app}"));
+        assert!(total.summary.median_ms > 0.0);
+        assert!(doc
+            .records
+            .iter()
+            .any(|r| r.table == "T3" && r.app == app && r.metric == "speedup_x"));
+    }
+
+    // T4 hit rates are percentages.
+    let t4: Vec<_> = doc.records.iter().filter(|r| r.table == "T4").collect();
+    assert!(!t4.is_empty());
+    for r in &t4 {
+        assert!(
+            (0.0..=100.0).contains(&r.summary.median_ms),
+            "{}/{}/{} = {}",
+            r.dataset,
+            r.scheme,
+            r.metric,
+            r.summary.median_ms
+        );
+    }
+
+    // The emitted JSON round-trips through the strict parser.
+    let text = doc.to_json().render();
+    let back = ResultsDoc::parse(&text).expect("BENCH_repro.json must be schema-valid");
+    assert_eq!(back.records.len(), doc.records.len());
+    assert_eq!(back.seed, 42);
+
+    // The markdown page renders every table from the same records.
+    let md = doc.render_markdown();
+    for t in ["## T1", "## T2", "## T3", "## T4"] {
+        assert!(md.contains(t), "markdown missing {t}");
+    }
+    assert!(md.contains("boba repro"), "regeneration hint present");
+
+    // The console rendering names every table too.
+    for t in ["T1 —", "T2 —", "T3 —", "T4 —"] {
+        assert!(run.console.contains(t), "console missing {t}");
+    }
+}
+
+#[test]
+fn thread_count_does_not_change_deterministic_digests() {
+    // `repro --threads 1` and `--threads N` must agree on every
+    // deterministic scheme's permutation digest. `boba` (the racy
+    // Algorithm-3 variant) is exempt by design: the paper's GPU kernel
+    // deliberately skips AtomicMin, and `boba-atomic` is the variant
+    // that restores exact first-appearance order.
+    let mut opts = tiny_opts(7);
+    opts.tables = vec!["T1".into()];
+
+    let digests = |threads: usize| {
+        let mut o = opts.clone();
+        o.threads = Some(threads);
+        let run = repro::run(&o).unwrap();
+        assert_eq!(run.doc.threads, threads, "pinned thread count recorded");
+        run.doc
+            .records
+            .iter()
+            .map(|r| ((r.dataset.clone(), r.scheme.clone()), r.digest.clone().unwrap()))
+            .collect::<std::collections::BTreeMap<_, _>>()
+    };
+    let one = digests(1);
+    let four = digests(4);
+    assert_eq!(one.len(), four.len());
+    for ((dataset, scheme), d1) in &one {
+        if scheme == "boba" {
+            continue; // racy by design; not a determinism claim
+        }
+        let d4 = &four[&(dataset.clone(), scheme.clone())];
+        assert_eq!(
+            d1, d4,
+            "{scheme} on {dataset}: digest differs between 1 and 4 threads"
+        );
+    }
+    // The atomic-min parallel variant recovers the sequential order
+    // exactly (paper §4.3) — same digest as Algorithm 2, at any width.
+    for dataset in ["rmat:10:4", "grid:40:30"] {
+        assert_eq!(
+            one[&(dataset.to_string(), "boba-seq".to_string())],
+            four[&(dataset.to_string(), "boba-atomic".to_string())],
+            "{dataset}: boba-atomic must equal boba-seq"
+        );
+    }
+}
+
+#[test]
+fn repro_honours_table_subset() {
+    let mut opts = tiny_opts(3);
+    opts.dataset_specs = vec!["rmat:10:4".into()];
+    opts.tables = vec!["T2".into()];
+    let run = repro::run(&opts).unwrap();
+    assert_eq!(run.doc.tables(), vec!["T2"]);
+    assert!(run.doc.records.iter().all(|r| r.table == "T2"));
+    assert!(!run.console.contains("T1 —"));
+}

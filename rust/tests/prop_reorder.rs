@@ -7,8 +7,8 @@ use boba::graph::{gen, Coo};
 use boba::metrics;
 use boba::parallel::ThreadGuard;
 use boba::reorder::{
-    boba::Boba, degree::DegreeSort, gorder::Gorder, hub::HubSort, random::RandomOrder, rcm::Rcm,
-    Reorderer,
+    self, boba::Boba, degree::DegreeSort, gorder::Gorder, hub::HubSort, random::RandomOrder,
+    rcm::Rcm, Reorderer,
 };
 use boba::testing::{check, Config, Gen};
 
@@ -182,6 +182,69 @@ fn rcm_never_increases_bandwidth_on_paths() {
             "RCM must recover optimal bandwidth on paths, got {}",
             metrics::bandwidth(&h)
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn degenerate_inputs_yield_valid_permutations() {
+    // Every scheme reachable through the shared CLI vocabulary
+    // (`reorder::by_name`) must return a bijection on the degenerate
+    // COOs real edge-list files produce: empty graphs, a single vertex,
+    // self-loops, duplicate edges, and fully isolated vertex sets.
+    let cases: Vec<(&str, Coo)> = vec![
+        ("empty", Coo::new(0, vec![], vec![])),
+        ("one-vertex", Coo::new(1, vec![], vec![])),
+        ("self-loop", Coo::new(1, vec![0], vec![0])),
+        ("loops-and-dups", Coo::new(3, vec![0, 0, 0, 2, 2], vec![0, 1, 1, 2, 1])),
+        ("all-isolated", Coo::new(5, vec![], vec![])),
+    ];
+    let names =
+        ["boba", "boba-seq", "boba-atomic", "degree", "hub", "rcm", "gorder", "random"];
+    for (label, coo) in &cases {
+        for name in names {
+            let s = reorder::by_name(name, 3).unwrap();
+            let p = s.reorder(coo);
+            p.validate(coo.n())
+                .unwrap_or_else(|e| panic!("{name} on {label}: invalid permutation: {e}"));
+            // Applying the permutation must preserve the edge multiset
+            // size (relabeling never drops or invents edges).
+            let h = coo.relabeled(p.new_of_old());
+            assert_eq!(h.m(), coo.m(), "{name} on {label}");
+            h.validate().unwrap_or_else(|e| panic!("{name} on {label}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn degenerate_inputs_random_cases() {
+    // Randomized variant: sprinkle self-loops and duplicates into small
+    // COOs and require bijectivity from every scheme.
+    check(Config::default().cases(25), "degenerate bijection", |g| {
+        let n = g.usize(1..40);
+        let m = g.usize(0..120);
+        let src: Vec<u32> = g.vec(m, |g| g.usize(0..n) as u32);
+        let mut dst: Vec<u32> = g.vec(m, |g| g.usize(0..n) as u32);
+        // Force some self-loops and duplicate edges.
+        for i in 0..m {
+            if g.bool(0.2) {
+                dst[i] = src[i]; // self-loop
+            }
+            if i > 0 && g.bool(0.2) {
+                let j = g.usize(0..i);
+                dst[i] = dst[j];
+                // duplicate of an earlier edge
+                let s = src[j];
+                src[i] = s;
+            }
+        }
+        let coo = Coo::new(n, src, dst);
+        for name in ["boba", "boba-seq", "boba-atomic", "degree", "hub", "rcm", "gorder", "random"]
+        {
+            let p = reorder::by_name(name, g.seed()).unwrap().reorder(&coo);
+            p.validate(coo.n())
+                .map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
+        }
         Ok(())
     });
 }
