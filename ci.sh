@@ -75,11 +75,27 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
 
     # Paper-reproduction smoke run: T1–T4 on the generated quick trio,
     # writing the trajectory JSON and regenerating docs/RESULTS.md from
-    # the same records (uploaded as a CI artifact).
+    # the same records (uploaded as a CI artifact). The run itself is the
+    # first determinism gate: T2 errors out if the deterministic parallel
+    # converter's output digest diverges from the sequential digest.
     note "repro smoke (BENCH_repro.json + docs/RESULTS.md)"
     if ! cargo run --release -- repro --quick \
         --json "$ROOT/BENCH_repro.json" --md "$ROOT/docs/RESULTS.md"; then
         echo "FAILED (required): repro smoke"
+        FAILURES=$((FAILURES + 1))
+    elif ! grep -q 'convert_par_det_ms' "$ROOT/BENCH_repro.json"; then
+        # Belt-and-braces: the committed trajectory must carry the
+        # par-det conversion rows (digest-gated in t2_conversion).
+        echo "FAILED (required): BENCH_repro.json has no convert_par_det_ms rows"
+        FAILURES=$((FAILURES + 1))
+    fi
+
+    # Pool-dispatch microbench smoke: one iteration, just to prove the
+    # pool-vs-spawn harness builds and runs (full numbers are a manual
+    # `cargo bench --bench micro_pool`, recorded in docs/EXPERIMENTS.md).
+    note "micro_pool smoke"
+    if ! cargo bench --bench micro_pool -- --smoke; then
+        echo "FAILED (required): micro_pool smoke"
         FAILURES=$((FAILURES + 1))
     fi
 fi

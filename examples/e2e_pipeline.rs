@@ -1,6 +1,6 @@
 //! END-TO-END DRIVER — the full system on a real workload.
 //!
-//! This is the repository's E2E validation (EXPERIMENTS.md §E2E): it
+//! This is the repository's E2E validation (docs/EXPERIMENTS.md §E2E): it
 //! exercises every layer together on the paper's Problem-3 scenario:
 //!
 //!   1. a producer thread streams edge batches (the RAPIDS-style online
@@ -85,7 +85,7 @@ fn main() -> anyhow::Result<()> {
     // ── the PJRT path: PageRank through the AOT artifacts ────────────
     // Validation-sized (the tile-pass launch overhead of the CPU-PJRT
     // engine at 500k vertices would dominate the example; pjrt perf is
-    // profiled separately in EXPERIMENTS.md §Perf).
+    // profiled separately in docs/EXPERIMENTS.md §Perf).
     println!("\nPJRT (AOT jax→HLO→xla) PageRank:");
     let engine = Engine::load_default()?;
     let small = boba::graph::gen::preferential_attachment(40_000, 6, 43).randomized(5);

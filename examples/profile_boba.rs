@@ -1,6 +1,6 @@
 //! §Perf instrumentation harness: times each phase of parallel BOBA
 //! (records pass, rank compaction, relabel) separately, across thread
-//! counts. Used to drive the EXPERIMENTS.md §Perf iteration log.
+//! counts. Used to drive the docs/EXPERIMENTS.md §Perf iteration log.
 //!
 //! Run: `cargo run --release --example profile_boba`
 

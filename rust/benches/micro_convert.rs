@@ -21,8 +21,26 @@ fn main() {
 
     report.push(b.run_with_items("rmat18/random/seq", m, || convert::coo_to_csr(&g)));
     report.push(b.run_with_items("rmat18/BOBA/seq", m, || convert::coo_to_csr(&boba_g)));
-    report.push(b.run_with_items("rmat18/random/par", m, || convert::coo_to_csr_parallel(&g)));
-    report.push(b.run_with_items("rmat18/BOBA/par", m, || convert::coo_to_csr_parallel(&boba_g)));
+    // Deterministic (private-histogram) vs atomic-scatter parallel
+    // conversion — the det-vs-atomic ablation docs/EXPERIMENTS.md
+    // §Conversion records.
+    report.push(b.run_with_items("rmat18/random/par-det", m, || convert::coo_to_csr_parallel(&g)));
+    report.push(b.run_with_items("rmat18/BOBA/par-det", m, || {
+        convert::coo_to_csr_parallel(&boba_g)
+    }));
+    report.push(b.run_with_items("rmat18/random/par-atomic", m, || {
+        convert::coo_to_csr_parallel_atomic(&g)
+    }));
+    report.push(b.run_with_items("rmat18/BOBA/par-atomic", m, || {
+        convert::coo_to_csr_parallel_atomic(&boba_g)
+    }));
+    // Fused relabel+convert, sequential vs parallel.
+    report.push(b.run_with_items("rmat18/BOBA/fused-seq", m, || {
+        convert::coo_to_csr_relabeled(&g, perm.new_of_old())
+    }));
+    report.push(b.run_with_items("rmat18/BOBA/fused-par", m, || {
+        convert::coo_to_csr_relabeled_parallel(&g, perm.new_of_old())
+    }));
 
     // The sort stage TC charges (paper: ~10x the conversion cost).
     report.push(b.run_with_items("rmat18/random/sort", m, || convert::sort_coo_by_src(&g)));

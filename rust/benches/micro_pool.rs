@@ -1,0 +1,98 @@
+//! Micro-benchmark of parallel-dispatch overhead: the persistent worker
+//! pool (`parallel::pool`) vs the old spawn-per-call baseline
+//! (`std::thread::scope`, replicated below verbatim). Short hot regions
+//! — BOBA's record scan, conversion passes, per-request SpMV rows — are
+//! dominated by dispatch cost, which is exactly what the pool amortizes;
+//! docs/EXPERIMENTS.md §Pool records the trajectory.
+//!
+//! Run: `cargo bench --bench micro_pool` (`-- --smoke` for the 1-shot CI
+//! gate).
+
+use boba::bench::{black_box, Bench, Report};
+use boba::parallel::{self, pool};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// The pre-pool dispatcher, kept bit-for-bit as the baseline: fresh
+/// scoped OS threads spawned and joined on every call.
+fn spawn_for_chunks<F>(len: usize, chunk: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if len == 0 {
+        return;
+    }
+    let t = parallel::threads().min(len.div_ceil(chunk)).max(1);
+    if t == 1 {
+        body(0, len);
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..t {
+            s.spawn(|| loop {
+                let lo = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if lo >= len {
+                    break;
+                }
+                let hi = (lo + chunk).min(len);
+                body(lo, hi);
+            });
+        }
+    });
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (bench, dispatches) = if smoke {
+        (Bench { warmup: 0, iters: 1, max_total: Duration::from_secs(30) }, 10u64)
+    } else {
+        (Bench::quick(), 200u64)
+    };
+    let mut report = Report::new("micro: pool dispatch vs spawn-per-call");
+
+    // Tiny bodies at three region sizes: the smaller the region, the
+    // larger the dispatch share — 4k items is BOBA-scan-per-batch
+    // territory, 1M items approximates a full conversion pass.
+    for (label, len) in [("4k", 4_096usize), ("64k", 65_536), ("1M", 1 << 20)] {
+        let chunk = (len / 64).max(256);
+        report.push(bench.run_with_items(&format!("{label}/pool"), dispatches, || {
+            for _ in 0..dispatches {
+                parallel::par_for_chunks(len, chunk, |lo, hi| {
+                    black_box(hi - lo);
+                });
+            }
+        }));
+        report.push(bench.run_with_items(&format!("{label}/spawn"), dispatches, || {
+            for _ in 0..dispatches {
+                spawn_for_chunks(len, chunk, |lo, hi| {
+                    black_box(hi - lo);
+                });
+            }
+        }));
+    }
+
+    // par_jobs scheduling: one straggler among short jobs. The pool's
+    // work-conserving claim loop starts every fast job immediately; the
+    // old wave scheduler serialized a full wave behind the straggler.
+    let jobs_round: u64 = if smoke { 1 } else { 5 };
+    report.push(bench.run_with_items("jobs/straggler", jobs_round, || {
+        for _ in 0..jobs_round {
+            let jobs: Vec<Box<dyn FnOnce() -> u64 + Send>> = (0..16u64)
+                .map(|j| {
+                    Box::new(move || {
+                        if j == 0 {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        j
+                    }) as _
+                })
+                .collect();
+            black_box(parallel::par_jobs(jobs));
+        }
+    }));
+
+    report.print();
+    let (workers, generations) = pool::stats();
+    println!("pool: {workers} persistent workers over {generations} dispatch generations");
+}

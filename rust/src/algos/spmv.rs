@@ -19,7 +19,7 @@ use crate::parallel::{self, SendPtr};
 /// Software-prefetch lookahead (edges) for the `x[col]` gather. Tuned on
 /// the 1-core testbed: 610 → 464 ms (-24%) on a randomized 64M-edge PA
 /// graph; neutral on already-local (BOBA-ordered) inputs. See
-/// EXPERIMENTS.md §Perf.
+/// docs/EXPERIMENTS.md §Perf.
 const PF_DIST: usize = 32;
 
 #[inline(always)]

@@ -57,8 +57,10 @@ pub struct Record {
     /// Throughput (items/second — edges for reorder/convert), when the
     /// metric has a natural item count.
     pub items_per_sec: Option<f64>,
-    /// Order-sensitive digest of the produced permutation (T1 rows);
-    /// used by the determinism tests.
+    /// Order-sensitive digest of the produced artifact — the permutation
+    /// on T1 rows, the full CSR (row_ptr, col_idx, vals) on T2
+    /// conversion rows; the determinism tests and the CI par-det gate
+    /// compare these.
     pub digest: Option<String>,
 }
 

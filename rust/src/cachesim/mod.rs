@@ -149,7 +149,7 @@ impl Hierarchy {
     /// same 48:1 L2:L1 ratio and 128 B lines). Fig. 7 runs use this
     /// because our datasets are 16–64× smaller than the paper's; keeping
     /// the cache:working-set ratio comparable keeps the hit-rate contrast
-    /// comparable (EXPERIMENTS.md documents the scaling).
+    /// comparable (docs/EXPERIMENTS.md documents the scaling).
     pub fn v100_scaled() -> Self {
         Self { l1: Cache::new(16 << 10, 4, 128), l2: Cache::new(768 << 10, 16, 128) }
     }

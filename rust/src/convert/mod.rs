@@ -10,6 +10,14 @@
 //! explanation for the conversion-time speedup (1.3–5.1×), and the effect
 //! reproduces directly on CPU caches.
 //!
+//! The parallel converters ([`coo_to_csr_parallel`],
+//! [`coo_to_csr_relabeled_parallel`]) are **deterministic**: private
+//! per-worker histograms + a two-level prefix sum + exact starting
+//! cursors make their output bit-identical to the sequential kernels at
+//! every thread count, so sorted inputs stay sorted and digests compare
+//! across `--threads` settings ([`coo_to_csr_parallel_atomic`] is the
+//! old atomic-scatter baseline, kept for the microbenches).
+//!
 //! ```
 //! use boba::convert::coo_to_csr;
 //! use boba::graph::Coo;
@@ -28,11 +36,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// Software-prefetch lookahead (edges) for the counter/cursor accesses.
 /// Tuned on the 1-core testbed: 1251 → 912 ms (-27%) converting a
 /// randomized 64M-edge PA graph; neutral on BOBA-ordered inputs whose
-/// counter accesses already cluster. See EXPERIMENTS.md §Perf.
+/// counter accesses already cluster. See docs/EXPERIMENTS.md §Perf.
 const PF_DIST: usize = 32;
 
 #[inline(always)]
-fn prefetch_u64(arr: &[u64], idx: usize) {
+fn prefetch<T>(arr: &[T], idx: usize) {
     #[cfg(target_arch = "x86_64")]
     unsafe {
         core::arch::x86_64::_mm_prefetch(
@@ -56,7 +64,7 @@ pub fn coo_to_csr(coo: &Coo) -> Csr {
     let mut row_ptr = vec![0u64; n + 1];
     for e in 0..m {
         if e + PF_DIST < m {
-            prefetch_u64(&row_ptr, src[e + PF_DIST] as usize + 1);
+            prefetch(&row_ptr, src[e + PF_DIST] as usize + 1);
         }
         row_ptr[src[e] as usize + 1] += 1;
     }
@@ -70,7 +78,7 @@ pub fn coo_to_csr(coo: &Coo) -> Csr {
     let mut vals = coo.vals.as_ref().map(|_| vec![0f32; m]);
     for e in 0..m {
         if e + PF_DIST < m {
-            prefetch_u64(&cursor, src[e + PF_DIST] as usize);
+            prefetch(&cursor, src[e + PF_DIST] as usize);
         }
         let s = src[e] as usize;
         let pos = cursor[s] as usize;
@@ -83,12 +91,40 @@ pub fn coo_to_csr(coo: &Coo) -> Csr {
     Csr { row_ptr, col_idx, vals }
 }
 
-/// Parallel COO→CSR: atomic histogram + sequential prefix sum + atomic
-/// fetch-add scatter. Row contents come out in a nondeterministic order
-/// *within* each row (like the GPU implementations the paper measures);
-/// callers needing sorted rows (TC) sort the COO first or call
-/// [`Csr::sort_rows`].
+/// Parallel COO→CSR, **bit-identical to [`coo_to_csr`] at every thread
+/// count**: the classic deterministic counting sort with per-worker
+/// private histograms and exact per-worker starting cursors (Koohi
+/// Esfahani & Vandierendonck's recipe for graph transposition).
+///
+/// Edges are split into one contiguous range per partition; each
+/// partition histograms privately, a two-level prefix sum (per-partition
+/// × per-vertex-block, both levels parallel) turns the histograms into
+/// exact starting cursors, and a race-free stable scatter follows. A
+/// vertex's row is filled partition-by-partition in edge order, so the
+/// output equals the sequential stable scatter exactly — no atomics, no
+/// [`Csr::sort_rows`] compensation downstream. The number of partitions
+/// does not affect the output, only the schedule.
 pub fn coo_to_csr_parallel(coo: &Coo) -> Csr {
+    if coo.m() < (1 << 15) || parallel::threads() == 1 {
+        return coo_to_csr(coo); // not worth the extra passes
+    }
+    if coo.m() >= u32::MAX as usize {
+        // Beyond the parallel skeleton's u32 counters; the sequential
+        // kernel handles any m and needs no mapped copy here.
+        return coo_to_csr(coo);
+    }
+    parallel_counting_sort(coo, |v| v)
+}
+
+/// The pre-pool parallel converter: atomic histogram + sequential prefix
+/// sum + atomic fetch-add scatter. Row contents come out in a
+/// nondeterministic order *within* each row (like the GPU implementations
+/// the paper measures), so callers need [`Csr::sort_rows`] or a sorted
+/// COO to compare outputs. Retained as the microbenchmark baseline for
+/// the deterministic kernel ([`coo_to_csr_parallel`]) — see
+/// docs/EXPERIMENTS.md §Conversion and `benches/micro_convert.rs`; new
+/// code should not call this.
+pub fn coo_to_csr_parallel_atomic(coo: &Coo) -> Csr {
     let n = coo.n();
     let m = coo.m();
     if m < 1 << 15 {
@@ -102,15 +138,16 @@ pub fn coo_to_csr_parallel(coo: &Coo) -> Csr {
             counts[coo.src[e] as usize + 1].fetch_add(1, Ordering::Relaxed);
         }
     });
-    // (2) prefix sum (sequential; n ≪ m).
+    // (2) prefix sum (sequential; n ≪ m). The histogram counted vertex v
+    // at slot v+1, so the inclusive running sum over counts[0..=i] is
+    // already the *exclusive* start of row i (edges with src < i) —
+    // row_ptr[0] = counts[0] = 0, no shift needed.
     let mut row_ptr = vec![0u64; n + 1];
     let mut acc = 0u64;
     for i in 0..=n {
         acc += counts[i].load(Ordering::Relaxed);
         row_ptr[i] = acc;
     }
-    // row_ptr currently holds inclusive ends; shift to starts.
-    // (acc included counts[0] == 0, so row_ptr[0] == 0 already.)
     // (3) scatter with atomic cursors.
     let cursor: Vec<AtomicU64> =
         row_ptr[..n].iter().map(|&v| AtomicU64::new(v)).collect();
@@ -136,15 +173,180 @@ pub fn coo_to_csr_parallel(coo: &Coo) -> Csr {
     Csr { row_ptr, col_idx, vals }
 }
 
-/// Fused relabel + COO→CSR: builds the CSR of `coo.relabeled(new_of_old)`
-/// without materializing the intermediate COO.
+/// Shared skeleton of the deterministic parallel converters: counting
+/// sort of `map(src[e])` with a stable scatter of `map(dst[e])`, where
+/// `map` is the identity ([`coo_to_csr_parallel`]) or an old→new label
+/// table ([`coo_to_csr_relabeled_parallel`]).
+///
+/// Layout: `counts` is `p` private per-vertex histograms (u32, flat
+/// `p × n`); the two-level prefix sum rewrites them in place into
+/// *vertex-block-local* exclusive offsets, with one `u64` base per
+/// vertex block carrying the global part — that keeps the table at
+/// 4 bytes/counter while staying correct past 4 G total edges.
+fn parallel_counting_sort<Map>(coo: &Coo, map: Map) -> Csr
+where
+    Map: Fn(u32) -> u32 + Sync,
+{
+    let n = coo.n();
+    let m = coo.m();
+    debug_assert!(n > 0 && m > 0);
+    // Per-partition counters are u32: a single partition never holds
+    // ≥ 4G edges. Only the relabeled entry point can still get here at
+    // that scale (the identity path pre-filters); materialize the
+    // relabeling — real work there — and convert sequentially.
+    if m >= u32::MAX as usize {
+        let relabeled = Coo {
+            n,
+            src: coo.src.iter().map(|&v| map(v)).collect(),
+            dst: coo.dst.iter().map(|&v| map(v)).collect(),
+            vals: coo.vals.clone(),
+        };
+        return coo_to_csr(&relabeled);
+    }
+    // Fixed contiguous edge range per partition. The partition count is
+    // free to differ between runs (it never changes the output), so it
+    // tracks the current worker pin, then shrinks until the private
+    // counter table (p × n × 4 bytes) stays within ~2× the edge arrays
+    // — high-degree graphs keep full parallelism, hypersparse ones trade
+    // workers for memory.
+    let mut p = parallel::threads().clamp(1, 64).min(m);
+    while p > 1 && p * n > 4 * m {
+        p /= 2;
+    }
+    let per = m.div_ceil(p);
+    let map = &map;
+
+    // ── (1) private histograms, one partition per worker ─────────────
+    let mut counts = vec![0u32; p * n];
+    {
+        let counts_ptr = parallel::SendPtr(counts.as_mut_ptr());
+        parallel::par_for_chunks(p, 1, |plo, phi| {
+            for r in plo..phi {
+                let (elo, ehi) = ((r * per).min(m), ((r + 1) * per).min(m));
+                // SAFETY: partition r exclusively owns counts[r*n..(r+1)*n].
+                let hist = unsafe {
+                    std::slice::from_raw_parts_mut(counts_ptr.get().add(r * n), n)
+                };
+                for e in elo..ehi {
+                    if e + PF_DIST < ehi {
+                        prefetch(hist, map(coo.src[e + PF_DIST]) as usize);
+                    }
+                    hist[map(coo.src[e]) as usize] += 1;
+                }
+            }
+        });
+    }
+
+    // ── (2) two-level prefix sum ─────────────────────────────────────
+    // Level 1 (parallel over vertex blocks): within each block, walk
+    // vertices × partitions in (vertex, partition) order, replacing each
+    // count with the running block-local offset; record the row start in
+    // row_ptr and the block total.
+    let block = n.div_ceil(p * 4).next_power_of_two().max(1024);
+    let shift = block.trailing_zeros();
+    let nblocks = n.div_ceil(block);
+    let mut row_ptr = vec![0u64; n + 1];
+    let mut block_sums = vec![0u64; nblocks];
+    {
+        let counts_ptr = parallel::SendPtr(counts.as_mut_ptr());
+        let row_ptr_ptr = parallel::SendPtr(row_ptr.as_mut_ptr());
+        let sums_ptr = parallel::SendPtr(block_sums.as_mut_ptr());
+        parallel::par_for_chunks(nblocks, 1, |blo, bhi| {
+            for b in blo..bhi {
+                let (vlo, vhi) = (b * block, ((b + 1) * block).min(n));
+                let mut acc = 0u64;
+                for v in vlo..vhi {
+                    // SAFETY: vertex v belongs to exactly one block, and
+                    // blocks are disjoint across chunk iterations.
+                    unsafe { *row_ptr_ptr.get().add(v) = acc };
+                    for r in 0..p {
+                        let slot = unsafe { &mut *counts_ptr.get().add(r * n + v) };
+                        let c = *slot;
+                        // Block totals are < m < 4G, so the offset fits.
+                        *slot = acc as u32;
+                        acc += c as u64;
+                    }
+                }
+                unsafe { *sums_ptr.get().add(b) = acc };
+            }
+        });
+    }
+    // Level 2 (sequential; nblocks is small): exclusive prefix over the
+    // block totals gives each block's global base.
+    let mut base = vec![0u64; nblocks];
+    let mut acc = 0u64;
+    for (slot, total) in base.iter_mut().zip(&block_sums) {
+        *slot = acc;
+        acc += *total;
+    }
+    debug_assert_eq!(acc, m as u64);
+    // Fold the bases into the row starts (parallel over blocks).
+    {
+        let row_ptr_ptr = parallel::SendPtr(row_ptr.as_mut_ptr());
+        let base_ref = &base;
+        parallel::par_for_chunks(nblocks, 1, |blo, bhi| {
+            for b in blo..bhi {
+                let (vlo, vhi) = (b * block, ((b + 1) * block).min(n));
+                for v in vlo..vhi {
+                    // SAFETY: blocks are disjoint.
+                    unsafe { *row_ptr_ptr.get().add(v) += base_ref[b] };
+                }
+            }
+        });
+    }
+    row_ptr[n] = m as u64;
+
+    // ── (3) race-free stable scatter, same partition ranges ──────────
+    // Partition r's cursor for vertex v starts at exactly the slot after
+    // every earlier partition's v-edges, so writes are disjoint and each
+    // row comes out in global edge order — the sequential output.
+    let mut col_idx = vec![0u32; m];
+    let mut vals = coo.vals.as_ref().map(|_| vec![0f32; m]);
+    {
+        let counts_ptr = parallel::SendPtr(counts.as_mut_ptr());
+        let col_ptr = parallel::SendPtr(col_idx.as_mut_ptr());
+        let val_ptr = vals.as_mut().map(|v| parallel::SendPtr(v.as_mut_ptr()));
+        let base_ref = &base;
+        parallel::par_for_chunks(p, 1, |plo, phi| {
+            for r in plo..phi {
+                let (elo, ehi) = ((r * per).min(m), ((r + 1) * per).min(m));
+                // SAFETY: partition r exclusively owns its cursor row.
+                let cursors = unsafe {
+                    std::slice::from_raw_parts_mut(counts_ptr.get().add(r * n), n)
+                };
+                for e in elo..ehi {
+                    if e + PF_DIST < ehi {
+                        prefetch(cursors, map(coo.src[e + PF_DIST]) as usize);
+                    }
+                    let s = map(coo.src[e]) as usize;
+                    let pos = (base_ref[s >> shift] + cursors[s] as u64) as usize;
+                    cursors[s] += 1;
+                    // SAFETY: exact starting cursors make every pos unique
+                    // across partitions and edges.
+                    unsafe {
+                        *col_ptr.get().add(pos) = map(coo.dst[e]);
+                        if let (Some(vp), Some(v)) = (val_ptr, coo.vals.as_ref()) {
+                            *vp.get().add(pos) = v[e];
+                        }
+                    }
+                }
+            }
+        });
+    }
+    Csr { row_ptr, col_idx, vals }
+}
+
+/// Fused relabel + COO→CSR (sequential): builds the CSR of
+/// `coo.relabeled(new_of_old)` without materializing the intermediate
+/// COO. [`coo_to_csr_relabeled_parallel`] is the multi-worker variant
+/// with bit-identical output.
 ///
 /// §Perf: the reordered pipeline's two stages (relabel: 2m gathers + 2m
 /// writes; convert: 2m reads + m writes) share most of their memory
 /// traffic — fusing them skips one full write+read of the edge list
 /// (~2×8m bytes), a ~35% end-to-end reduction for the BOBA→CSR path on
-/// the 1-core testbed. Output is identical to
-/// `coo_to_csr(&coo.relabeled(new_of_old))`.
+/// the 1-core testbed (docs/EXPERIMENTS.md §Perf). Output is identical
+/// to `coo_to_csr(&coo.relabeled(new_of_old))`.
 pub fn coo_to_csr_relabeled(coo: &Coo, new_of_old: &[u32]) -> Csr {
     assert_eq!(new_of_old.len(), coo.n());
     let n = coo.n();
@@ -171,6 +373,19 @@ pub fn coo_to_csr_relabeled(coo: &Coo, new_of_old: &[u32]) -> Csr {
     Csr { row_ptr, col_idx, vals }
 }
 
+/// Parallel fused relabel + COO→CSR on the same deterministic
+/// counting-sort skeleton as [`coo_to_csr_parallel`] (the label table
+/// becomes the vertex map): bit-identical to [`coo_to_csr_relabeled`] —
+/// and therefore to `coo_to_csr(&coo.relabeled(new_of_old))` — at every
+/// thread count.
+pub fn coo_to_csr_relabeled_parallel(coo: &Coo, new_of_old: &[u32]) -> Csr {
+    assert_eq!(new_of_old.len(), coo.n());
+    if coo.m() < (1 << 15) || parallel::threads() == 1 {
+        return coo_to_csr_relabeled(coo, new_of_old);
+    }
+    parallel_counting_sort(coo, |v| new_of_old[v as usize])
+}
+
 /// CSR → COO (row-major edge order).
 pub fn csr_to_coo(csr: &Csr) -> Coo {
     let n = csr.n();
@@ -184,7 +399,7 @@ pub fn csr_to_coo(csr: &Csr) -> Coo {
     }
     let mut coo = Coo::new(n, src, dst);
     coo.vals = csr.vals.clone();
-    Coo { n, src: coo.src, dst: coo.dst, vals: coo.vals }
+    coo
 }
 
 /// Sort a COO by `(src, dst)` with a two-pass radix over the key — the
@@ -221,8 +436,9 @@ pub fn sort_coo_by_src(coo: &Coo) -> Coo {
     radix_pass(&mut idx, &mut tmp, &|i| dst[i as usize] >> 16);
     radix_pass(&mut idx, &mut tmp, &|i| src[i as usize] & 0xFFFF);
     radix_pass(&mut idx, &mut tmp, &|i| src[i as usize] >> 16);
-    let order: Vec<usize> = idx.into_iter().map(|i| i as usize).collect();
-    coo.gathered(&order)
+    // Gather directly through the u32 ranks — no widened Vec<usize> copy
+    // (8 bytes/edge) just to fit the gather's index type.
+    coo.gathered_u32(&idx)
 }
 
 #[cfg(test)]
@@ -258,16 +474,36 @@ mod tests {
     }
 
     #[test]
-    fn parallel_matches_sequential_structure() {
+    fn parallel_is_bit_identical_to_sequential() {
         let g = gen::rmat(&GenParams::rmat(12, 16), 77);
         let a = coo_to_csr(&g);
-        let mut b = coo_to_csr_parallel(&g);
+        let b = coo_to_csr_parallel(&g);
+        // The determinism contract: no sort_rows compensation, plain
+        // equality of every array.
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallel_atomic_matches_up_to_row_order() {
+        let g = gen::rmat(&GenParams::rmat(12, 16), 77);
+        let a = coo_to_csr(&g);
+        let mut b = coo_to_csr_parallel_atomic(&g);
         assert_eq!(a.row_ptr, b.row_ptr);
-        // Same multiset per row (order within rows may differ).
+        // The retained baseline is only multiset-equal per row.
         let mut a_sorted = a.clone();
         a_sorted.sort_rows();
         b.sort_rows();
         assert_eq!(a_sorted.col_idx, b.col_idx);
+    }
+
+    #[test]
+    fn relabeled_parallel_is_bit_identical_to_fused() {
+        use crate::reorder::{boba::Boba, Reorderer};
+        let g = gen::rmat(&GenParams::rmat(12, 16), 13).randomized(5);
+        let p = Boba::sequential().reorder(&g);
+        let seq = coo_to_csr_relabeled(&g, p.new_of_old());
+        let par = coo_to_csr_relabeled_parallel(&g, p.new_of_old());
+        assert_eq!(seq, par);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Experiment drivers — one per table/figure of the paper's evaluation.
 //! Shared by the `boba` CLI and the `rust/benches/*` bench targets so the
-//! numbers in EXPERIMENTS.md are regenerable from either entry point.
+//! numbers in docs/EXPERIMENTS.md are regenerable from either entry point.
 //! (The machine-readable counterpart of these drivers is
 //! [`crate::coordinator::repro`], which runs the same scheme × dataset ×
 //! kernel matrix under the repro methodology and emits
@@ -370,7 +370,7 @@ pub fn fig7(seed: u64) -> ExpTable {
         // Schemes incl. the Random identity. Gorder runs with a tighter
         // hub cap here: at Fig. 7's graph sizes the uncapped sibling
         // enumeration costs tens of minutes for an ordering whose hit
-        // rates the cap barely moves (EXPERIMENTS.md notes the ablation).
+        // rates the cap barely moves (docs/EXPERIMENTS.md notes the ablation).
         let mut lineup: Vec<(String, Coo)> = vec![("Random".into(), g.clone())];
         let mut fig7_schemes: Vec<Box<dyn Reorderer + Send + Sync>> = Vec::new();
         if heavy {

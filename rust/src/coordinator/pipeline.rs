@@ -134,8 +134,11 @@ impl Pipeline {
             working
         };
         // ── convert ───────────────────────────────────────────────
+        // Deterministic parallel conversion: bit-identical to the
+        // sequential kernel, so TC's sorted COO still yields sorted
+        // rows and digests compare across schemes and thread counts.
         let sw = Stopwatch::start();
-        let csr = convert::coo_to_csr(&working);
+        let csr = convert::coo_to_csr_parallel(&working);
         stages.record("convert", sw.elapsed());
         // ── app ───────────────────────────────────────────────────
         let sw = Stopwatch::start();

@@ -8,10 +8,13 @@
 //!   random/degree/hub and, with `--heavy`, RCM/Gorder): the paper's
 //!   "~1 order of magnitude faster than lightweight techniques" claim;
 //! * **T2** — COO→CSR conversion time on pre-randomized vs
-//!   BOBA-reordered inputs (sequential, parallel, and the fused
-//!   relabel+convert path): the paper's §5.3 conversion speedups,
-//!   treating conversion as a first-class workload (Koohi Esfahani &
-//!   Vandierendonck);
+//!   BOBA-reordered inputs, across the sequential kernel, the
+//!   deterministic parallel kernel (`par-det` rows — bit-identical
+//!   output, digest-gated against the sequential digest), the retained
+//!   atomic-scatter baseline (`par-atomic`), and the fused
+//!   relabel+convert paths (sequential + parallel): the paper's §5.3
+//!   conversion speedups, treating conversion as a first-class workload
+//!   (Koohi Esfahani & Vandierendonck);
 //! * **T3** — end-to-end pipeline time (reorder + \[sort\] + convert +
 //!   app) for SpMV/PageRank/TC/SSSP: the paper's headline up-to-3.45×
 //!   end-to-end speedups;
@@ -132,12 +135,37 @@ pub fn parse_tables(spec: &str) -> Result<Vec<String>> {
 pub fn perm_digest(p: &Permutation) -> String {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &v in p.new_of_old() {
-        for b in v.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x1000_0000_01b3);
+        fnv_eat(&mut h, &v.to_le_bytes());
+    }
+    format!("{h:016x}")
+}
+
+/// FNV-1a 64 digest of a CSR's full contents (row_ptr, col_idx, vals) as
+/// fixed-width hex — the *bit-identical output* handle T2's determinism
+/// gate compares between the sequential and `par-det` converters (and
+/// the CI step asserts on).
+pub fn csr_digest(csr: &crate::graph::Csr) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &v in &csr.row_ptr {
+        fnv_eat(&mut h, &v.to_le_bytes());
+    }
+    for &c in &csr.col_idx {
+        fnv_eat(&mut h, &c.to_le_bytes());
+    }
+    if let Some(vals) = &csr.vals {
+        for &v in vals {
+            fnv_eat(&mut h, &v.to_bits().to_le_bytes());
         }
     }
     format!("{h:016x}")
+}
+
+#[inline]
+fn fnv_eat(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x1000_0000_01b3);
+    }
 }
 
 /// The T1 scheme lineup: every BOBA variant plus every lightweight
@@ -226,7 +254,7 @@ pub fn run(opts: &ReproOptions) -> Result<ReproRun> {
     for table in &opts.tables {
         match table.as_str() {
             "T1" => t1_reorder_time(opts, &data, &mut doc, &mut console),
-            "T2" => t2_conversion(opts, &data, &mut doc, &mut console),
+            "T2" => t2_conversion(opts, &data, &mut doc, &mut console)?,
             "T3" => t3_end_to_end(opts, &data, &mut doc, &mut console)?,
             "T4" => t4_cache_rates(opts, &data, &mut doc, &mut console)?,
             other => bail!("unknown repro table {other:?}"),
@@ -337,47 +365,93 @@ fn t2_conversion(
     data: &[(String, Coo)],
     doc: &mut ResultsDoc,
     console: &mut String,
-) {
+) -> Result<()> {
     let mut rows = Vec::new();
     for (dname, g) in data {
         let bench = bench_for(opts, false);
         // BOBA-reordered copy (reorder cost is T1's business; T2 isolates
         // conversion on the two labelings, the paper's §5.3 contrast).
         let (perm, h) = Boba::parallel().reorder_relabel(g);
-        let mut add = |scheme: &str, metric: &str, m: crate::bench::Measurement| {
-            rows.push(vec![
-                dname.clone(),
-                scheme.to_string(),
-                metric.to_string(),
-                human::ms(m.summary.median_ms),
-                human::ms(m.summary.min_ms),
-                human::ms(m.summary.max_ms),
-                format!("n={}", m.summary.n),
-            ]);
-            let mut rec = timing_record("T2", dname, scheme, "", metric, m.summary);
-            rec.items_per_sec = m.throughput();
-            doc.push(rec);
-        };
+        let mut add =
+            |scheme: &str, metric: &str, m: crate::bench::Measurement, digest: Option<String>| {
+                rows.push(vec![
+                    dname.clone(),
+                    scheme.to_string(),
+                    metric.to_string(),
+                    human::ms(m.summary.median_ms),
+                    human::ms(m.summary.min_ms),
+                    human::ms(m.summary.max_ms),
+                    format!("n={}", m.summary.n),
+                ]);
+                let mut rec = timing_record("T2", dname, scheme, "", metric, m.summary);
+                rec.items_per_sec = m.throughput();
+                rec.digest = digest;
+                doc.push(rec);
+            };
         let edges = g.m() as u64;
+        // Output digests: the determinism gate. The deterministic
+        // parallel kernels ("par-det") must reproduce the sequential
+        // output bit-for-bit; a mismatch fails the run (and CI).
+        let seq_rand = csr_digest(&convert::coo_to_csr(g));
+        let det_rand = csr_digest(&convert::coo_to_csr_parallel(g));
+        let seq_boba = csr_digest(&convert::coo_to_csr(&h));
+        let det_boba = csr_digest(&convert::coo_to_csr_parallel(&h));
+        let fused_seq = csr_digest(&convert::coo_to_csr_relabeled(g, perm.new_of_old()));
+        let fused_par =
+            csr_digest(&convert::coo_to_csr_relabeled_parallel(g, perm.new_of_old()));
+        for (what, a, b) in [
+            ("coo_to_csr_parallel(random)", &seq_rand, &det_rand),
+            ("coo_to_csr_parallel(boba)", &seq_boba, &det_boba),
+            ("coo_to_csr_relabeled(fused)", &seq_boba, &fused_seq),
+            ("coo_to_csr_relabeled_parallel(fused)", &seq_boba, &fused_par),
+        ] {
+            if a != b {
+                bail!(
+                    "{dname}: {what} output digest {b} differs from the \
+                     sequential digest {a} — the par-det determinism \
+                     contract is broken"
+                );
+            }
+        }
         add(
             "random",
             "convert_seq_ms",
             bench.run_with_items("seq/rand", edges, || convert::coo_to_csr(g)),
+            Some(seq_rand),
         );
         add(
             "random",
-            "convert_par_ms",
-            bench.run_with_items("par/rand", edges, || convert::coo_to_csr_parallel(g)),
+            "convert_par_det_ms",
+            bench.run_with_items("par-det/rand", edges, || convert::coo_to_csr_parallel(g)),
+            Some(det_rand),
+        );
+        add(
+            "random",
+            "convert_par_atomic_ms",
+            bench.run_with_items("par-atomic/rand", edges, || {
+                convert::coo_to_csr_parallel_atomic(g)
+            }),
+            None, // nondeterministic within rows by design
         );
         add(
             "boba",
             "convert_seq_ms",
             bench.run_with_items("seq/boba", edges, || convert::coo_to_csr(&h)),
+            Some(seq_boba.clone()),
         );
         add(
             "boba",
-            "convert_par_ms",
-            bench.run_with_items("par/boba", edges, || convert::coo_to_csr_parallel(&h)),
+            "convert_par_det_ms",
+            bench.run_with_items("par-det/boba", edges, || convert::coo_to_csr_parallel(&h)),
+            Some(det_boba),
+        );
+        add(
+            "boba",
+            "convert_par_atomic_ms",
+            bench.run_with_items("par-atomic/boba", edges, || {
+                convert::coo_to_csr_parallel_atomic(&h)
+            }),
+            None,
         );
         add(
             "boba",
@@ -385,6 +459,15 @@ fn t2_conversion(
             bench.run_with_items("fused/boba", edges, || {
                 convert::coo_to_csr_relabeled(g, perm.new_of_old())
             }),
+            Some(fused_seq),
+        );
+        add(
+            "boba",
+            "convert_fused_par_ms",
+            bench.run_with_items("fused-par/boba", edges, || {
+                convert::coo_to_csr_relabeled_parallel(g, perm.new_of_old())
+            }),
+            Some(fused_par),
         );
         // Derived: sequential-conversion speedup post-reorder.
         let pre = doc
@@ -423,6 +506,7 @@ fn t2_conversion(
         crate::bench::results::table_title("T2"),
         human::table(&["dataset", "scheme", "metric", "median", "min", "max", "iters"], &rows)
     ));
+    Ok(())
 }
 
 // ───────────────────────── T3: end-to-end ────────────────────────────

@@ -160,17 +160,26 @@ impl Coo {
     /// Proposition 10 assumes, and §5.6's recommended pre-pass for
     /// randomly ordered edge lists.
     pub fn sorted_by_dst(&self) -> Coo {
-        let mut idx: Vec<usize> = (0..self.m()).collect();
-        idx.sort_by_key(|&i| ((self.dst[i] as u64) << 32) | self.src[i] as u64);
-        self.gathered(&idx)
+        let mut idx = self.edge_ranks();
+        idx.sort_by_key(|&i| ((self.dst[i as usize] as u64) << 32) | self.src[i as usize] as u64);
+        self.gathered_u32(&idx)
     }
 
     /// Sort edges by `(src, dst)` — needed by TC's CSR build so adjacency
     /// lists come out sorted.
     pub fn sorted_by_src(&self) -> Coo {
-        let mut idx: Vec<usize> = (0..self.m()).collect();
-        idx.sort_by_key(|&i| ((self.src[i] as u64) << 32) | self.dst[i] as u64);
-        self.gathered(&idx)
+        let mut idx = self.edge_ranks();
+        idx.sort_by_key(|&i| ((self.src[i as usize] as u64) << 32) | self.dst[i as usize] as u64);
+        self.gathered_u32(&idx)
+    }
+
+    /// `0..m` as `u32` edge ranks — the index width every edge permuter
+    /// here uses. Edge counts fit u32 for the paper's datasets; the
+    /// assert is unconditional because a silent `as u32` truncation
+    /// would drop edges rather than fail.
+    fn edge_ranks(&self) -> Vec<u32> {
+        assert!(self.m() <= u32::MAX as usize, "edge count {} exceeds u32 ranks", self.m());
+        (0..self.m() as u32).collect()
     }
 
     /// Permute the *edge list* (not vertex labels) by `idx`.
@@ -181,12 +190,25 @@ impl Coo {
         Coo { n: self.n, src, dst, vals }
     }
 
+    /// [`Coo::gathered`] over `u32` edge ranks — what the radix sorts
+    /// produce; avoids materializing a widened `Vec<usize>` copy
+    /// (8 bytes/edge) of the index array just to gather.
+    pub fn gathered_u32(&self, idx: &[u32]) -> Coo {
+        let src = idx.iter().map(|&i| self.src[i as usize]).collect();
+        let dst = idx.iter().map(|&i| self.dst[i as usize]).collect();
+        let vals = self
+            .vals
+            .as_ref()
+            .map(|v| idx.iter().map(|&i| v[i as usize]).collect());
+        Coo { n: self.n, src, dst, vals }
+    }
+
     /// Shuffle the edge list order (the adversarial §5.6 scenario).
     pub fn edge_shuffled(&self, seed: u64) -> Coo {
         let mut rng = Xoshiro256::new(seed);
-        let mut idx: Vec<usize> = (0..self.m()).collect();
+        let mut idx = self.edge_ranks();
         rng.shuffle(&mut idx);
-        self.gathered(&idx)
+        self.gathered_u32(&idx)
     }
 
     /// Bytes this COO occupies in memory (for Table 2-style inventory).
@@ -303,6 +325,14 @@ mod tests {
         a.sort_unstable();
         b.sort_unstable();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gathered_u32_matches_gathered() {
+        let g = Coo::with_vals(3, vec![0, 1, 2, 0], vec![1, 2, 0, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let idx = [3usize, 0, 2, 1];
+        let idx32: Vec<u32> = idx.iter().map(|&i| i as u32).collect();
+        assert_eq!(g.gathered(&idx), g.gathered_u32(&idx32));
     }
 
     #[test]

@@ -4,20 +4,33 @@
 //! The paper runs BOBA (Algorithm 3) and the graph kernels on a V100 with
 //! tens of thousands of hardware threads; offline, neither `rayon` nor
 //! `tokio` resolve, so the crate carries a small deterministic data-parallel
-//! runtime built on `std::thread::scope`:
+//! runtime built on a persistent worker [`pool`]:
 //!
 //! * [`par_for_chunks`] / [`par_map_chunks`] — static+dynamic chunked
 //!   parallel-for over an index range (the moral equivalent of a CUDA grid
 //!   launch: each chunk is a "thread block").
 //! * [`par_reduce`] — tree reduction of per-worker partials.
+//! * [`par_jobs`] — heterogeneous independent jobs, work-conserving (a
+//!   slow job never blocks the next from starting).
 //! * [`atomic`] — atomic u32/usize min-arrays used by the atomic-min
 //!   variant of Algorithm 3.
+//!
+//! All four dispatch through [`pool`]: workers are spawned once, parked
+//! when idle, and reused by every hot region — BOBA's record scan, the
+//! COO→CSR conversion passes, per-request SpMV rows — instead of paying
+//! `std::thread::scope` spawn/teardown per call (docs/EXPERIMENTS.md
+//! §Pool has the dispatch-overhead numbers, `benches/micro_pool.rs` the
+//! harness). The dispatching thread always participates in the work, so
+//! nested parallelism (server worker threads entering these primitives,
+//! `par_jobs` jobs that fan out internally) degrades to less parallelism,
+//! never to deadlock.
 //!
 //! Worker count defaults to the machine's available parallelism and can be
 //! pinned through [`set_threads`] / [`ThreadGuard`] (used by benches and
 //! `boba repro --threads` to sweep scaling) or the `BOBA_THREADS`
-//! environment variable. Pinning changes scheduling only: every consumer
-//! except the deliberately racy parallel BOBA variant produces
+//! environment variable. Pinning masks how many pool workers a dispatch
+//! may use; parked workers persist. Pinning changes scheduling only: every
+//! consumer except the deliberately racy parallel BOBA variant produces
 //! thread-count-independent results.
 //!
 //! ```
@@ -30,6 +43,7 @@
 //! ```
 
 pub mod atomic;
+pub mod pool;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -81,8 +95,9 @@ pub fn default_chunk(len: usize) -> usize {
 }
 
 /// Dynamic chunked parallel-for: `body(lo, hi)` is invoked on disjoint
-/// subranges of `0..len` from multiple threads. `body` must be fine with
-/// any interleaving (the CUDA-kernel contract).
+/// subranges of `0..len` from multiple threads (the caller plus pool
+/// workers). `body` must be fine with any interleaving (the CUDA-kernel
+/// contract).
 pub fn par_for_chunks<F>(len: usize, chunk: usize, body: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -90,24 +105,22 @@ where
     if len == 0 {
         return;
     }
+    let chunk = chunk.max(1);
     let t = threads().min(len.div_ceil(chunk)).max(1);
     if t == 1 {
         body(0, len);
         return;
     }
     let cursor = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..t {
-            s.spawn(|| loop {
-                let lo = cursor.fetch_add(chunk, Ordering::Relaxed);
-                if lo >= len {
-                    break;
-                }
-                let hi = (lo + chunk).min(len);
-                body(lo, hi);
-            });
+    let worker = |_slot: usize| loop {
+        let lo = cursor.fetch_add(chunk, Ordering::Relaxed);
+        if lo >= len {
+            break;
         }
-    });
+        let hi = (lo + chunk).min(len);
+        body(lo, hi);
+    };
+    pool::dispatch(t - 1, &worker);
 }
 
 /// Parallel map over chunks writing into a fresh `Vec<T>`: `fill(lo, hi,
@@ -129,8 +142,11 @@ where
     out
 }
 
-/// Parallel reduction: each worker folds chunks into an accumulator with
-/// `fold`, partials are combined with `merge`.
+/// Parallel reduction: each participating worker folds chunks into its
+/// own accumulator with `fold`, partials are combined with `merge` in
+/// slot order. As before the pool rewrite, *which* chunks land in which
+/// accumulator is scheduling-dependent, so `merge`/`fold` should be
+/// associative-and-commutative for thread-count-independent results.
 pub fn par_reduce<A, F, M>(len: usize, chunk: usize, identity: A, fold: F, merge: M) -> A
 where
     A: Send + Clone,
@@ -140,72 +156,76 @@ where
     if len == 0 {
         return identity;
     }
+    let chunk = chunk.max(1);
     let t = threads().min(len.div_ceil(chunk)).max(1);
     if t == 1 {
         return fold(identity, 0, len);
     }
+    // Accumulators are cloned up front and handed out by participant
+    // slot, so `A` needs `Send` but not `Sync`; a slot that never shows
+    // up (busy pool) just contributes its untouched identity.
+    let mut partials: Vec<Option<A>> = (0..t).map(|_| Some(identity.clone())).collect();
     let cursor = AtomicUsize::new(0);
-    let fold_ref = &fold;
-    let partials: Vec<A> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..t)
-            .map(|_| {
-                let id = identity.clone();
-                let cursor = &cursor;
-                s.spawn(move || {
-                    let mut acc = id;
-                    loop {
-                        let lo = cursor.fetch_add(chunk, Ordering::Relaxed);
-                        if lo >= len {
-                            break;
-                        }
-                        let hi = (lo + chunk).min(len);
-                        acc = fold_ref(acc, lo, hi);
-                    }
-                    acc
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-    partials.into_iter().fold(identity, merge)
+    {
+        let parts = SendPtr(partials.as_mut_ptr());
+        let worker = |slot: usize| {
+            // SAFETY: dispatch hands out each slot in 0..t to at most one
+            // participant, so this &mut is exclusive.
+            let acc_slot = unsafe { &mut *parts.get().add(slot) };
+            let mut acc = acc_slot.take().expect("slot visited once");
+            loop {
+                let lo = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if lo >= len {
+                    break;
+                }
+                let hi = (lo + chunk).min(len);
+                acc = fold(acc, lo, hi);
+            }
+            *acc_slot = Some(acc);
+        };
+        pool::dispatch(t - 1, &worker);
+    }
+    partials.into_iter().flatten().fold(identity, merge)
 }
 
-/// Run `k` independent jobs (one thread each, capped at the worker count),
-/// returning their results in order. The coordinator uses this for
-/// multi-request dispatch.
+/// Run `k` independent jobs on the pool, returning their results in
+/// submission order. The coordinator uses this for multi-request
+/// dispatch. Scheduling is work-conserving: each participant pulls the
+/// next unclaimed job as soon as it finishes its current one, so one
+/// slow job delays only itself (the old implementation ran jobs in
+/// waves of `threads()`, where the slowest job in a wave gated the
+/// entire next wave).
 pub fn par_jobs<T: Send, F>(jobs: Vec<F>) -> Vec<T>
 where
     F: FnOnce() -> T + Send,
 {
-    let t = threads();
-    if t == 1 || jobs.len() <= 1 {
+    let n = jobs.len();
+    let t = threads().min(n).max(1);
+    if t == 1 {
         return jobs.into_iter().map(|j| j()).collect();
     }
-    // Simple wave scheduling: spawn up to `t` at a time.
-    let mut results: Vec<Option<T>> = Vec::new();
-    for _ in 0..jobs.len() {
-        results.push(None);
-    }
     let mut jobs: Vec<Option<F>> = jobs.into_iter().map(Some).collect();
-    let n = jobs.len();
-    let mut start = 0;
-    while start < n {
-        let end = (start + t).min(n);
-        let wave: Vec<(usize, F)> =
-            (start..end).map(|i| (i, jobs[i].take().unwrap())).collect();
-        let wave_results: Vec<(usize, T)> = std::thread::scope(|s| {
-            let handles: Vec<_> = wave
-                .into_iter()
-                .map(|(i, job)| s.spawn(move || (i, job())))
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        for (i, r) in wave_results {
-            results[i] = Some(r);
-        }
-        start = end;
+    let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let cursor = AtomicUsize::new(0);
+    {
+        let jobs_ptr = SendPtr(jobs.as_mut_ptr());
+        let out_ptr = SendPtr(results.as_mut_ptr());
+        let worker = |_slot: usize| loop {
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            // SAFETY: the cursor hands out each index exactly once, so
+            // the take() and the result write are exclusive.
+            let job = unsafe { (*jobs_ptr.get().add(i)).take().expect("job claimed once") };
+            let out = job();
+            unsafe {
+                *out_ptr.get().add(i) = Some(out);
+            }
+        };
+        pool::dispatch(t - 1, &worker);
     }
-    results.into_iter().map(|r| r.unwrap()).collect()
+    results.into_iter().map(|r| r.expect("all jobs completed")).collect()
 }
 
 /// A Send+Sync raw-pointer wrapper for disjoint-chunk writes.

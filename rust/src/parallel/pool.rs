@@ -1,0 +1,368 @@
+//! The persistent worker pool behind every `par_*` entry point.
+//!
+//! Before this module existed, each `par_for_chunks`/`par_reduce`/
+//! `par_jobs` call spawned fresh OS threads through `std::thread::scope`
+//! and joined them on exit. That is correct but pays thread
+//! spawn/teardown (tens of microseconds each) on *every* hot-region
+//! entry — BOBA's record scan, the conversion passes, and per-request
+//! SpMV rows are all short enough that dispatch dominated memory
+//! traffic (docs/EXPERIMENTS.md §Pool quantifies the gap via
+//! `benches/micro_pool.rs`).
+//!
+//! Design (std-only; rayon does not resolve offline):
+//!
+//! * Workers are spawned lazily on first dispatch and then **persist**
+//!   for the life of the process, parked on a `Condvar` wait against a
+//!   shared `Mutex`-protected job queue when idle.
+//! * A dispatch publishes one task — a lifetime-erased pointer to
+//!   the caller's worker closure plus a generation latch — and asks for
+//!   `helpers` pool workers. The **caller always participates**: it runs
+//!   the same closure itself, so a dispatch never waits for a worker to
+//!   become free before making progress, and nested dispatches from pool
+//!   workers (e.g. `par_jobs` jobs that call `par_for_chunks`, or server
+//!   worker threads entering the substrate) cannot deadlock — in the
+//!   worst case the nested caller simply does all the work alone.
+//! * [`set_threads`](super::set_threads) / `ThreadGuard` / `BOBA_THREADS`
+//!   mask *active* workers per dispatch: the pool may hold more parked
+//!   threads than the current pin, but each dispatch asks for at most
+//!   `threads() - 1` helpers, so a pin of `n` means at most `n` threads
+//!   ever touch one task.
+//! * Completion is a generation-counted barrier in miniature: every
+//!   dispatch is its own generation (a fresh `Task` carrying the pool's
+//!   generation number), and the caller closes the task and blocks on
+//!   its latch until the last helper of that generation leaves. Helpers
+//!   that pop a closed (stale-generation) task drop it without touching
+//!   the closure — which is what makes the lifetime erasure sound.
+//!
+//! Safety argument for the lifetime erasure: the closure reference is
+//! valid for the whole `dispatch` call. A helper only dereferences it
+//! after registering itself in the task latch *under the latch lock*
+//! while the task is not closed; the caller cannot observe "closed with
+//! zero running" (and therefore cannot return and invalidate the
+//! closure) until that helper deregisters. Helpers that arrive after
+//! close never touch the pointer.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Hard cap on pool threads, a backstop against pathological
+/// `BOBA_THREADS` values; dispatches masked above this simply run with
+/// fewer helpers.
+const MAX_WORKERS: usize = 256;
+
+/// Lifetime-erased shared worker closure (`&dyn Fn(slot)` transmuted to
+/// `'static`; see the module-level safety argument).
+struct FnPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared across workers by design) and the
+// latch protocol guarantees it outlives every dereference.
+unsafe impl Send for FnPtr {}
+unsafe impl Sync for FnPtr {}
+
+/// Latch state of one dispatch generation.
+struct TaskState {
+    /// Set by the caller once its own share of the work is done; helpers
+    /// arriving later drop the task unexecuted.
+    closed: bool,
+    /// Helpers currently inside the closure.
+    running: usize,
+    /// First helper panic payload (re-raised in the caller, so the
+    /// original message survives the pool crossing like it survives
+    /// `std::thread::scope`).
+    panic_payload: Option<Box<dyn std::any::Any + Send>>,
+}
+
+/// One dispatch generation: the erased closure plus its completion latch.
+struct Task {
+    func: FnPtr,
+    /// Next participant slot (0 = the caller); slots index per-worker
+    /// output arrays in `par_reduce`-style consumers.
+    next_slot: AtomicUsize,
+    state: Mutex<TaskState>,
+    done: Condvar,
+}
+
+impl Task {
+    fn new(func: FnPtr) -> Self {
+        Task {
+            func,
+            next_slot: AtomicUsize::new(0),
+            state: Mutex::new(TaskState { closed: false, running: 0, panic_payload: None }),
+            done: Condvar::new(),
+        }
+    }
+
+    fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Helper-side entry: register in the latch, run one share of the
+    /// task, deregister. Returns immediately on a closed task.
+    fn participate(&self) {
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.closed {
+                return;
+            }
+            st.running += 1;
+        }
+        let slot = self.next_slot.fetch_add(1, Ordering::Relaxed);
+        // SAFETY: `closed` was false while we held the latch lock, so the
+        // dispatching caller is still inside `dispatch` and cannot return
+        // (invalidating the closure) until `running` returns to zero.
+        let func = unsafe { &*self.func.0 };
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| func(slot)));
+        let mut st = self.state.lock().unwrap();
+        st.running -= 1;
+        if let Err(payload) = outcome {
+            st.panic_payload.get_or_insert(payload);
+        }
+        if st.running == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Caller-side barrier: close this generation (pending helpers will
+    /// skip it) and wait until every registered helper has left the
+    /// closure. Returns the first helper panic payload, if any.
+    fn close_and_wait(&self) -> Option<Box<dyn std::any::Any + Send>> {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        while st.running > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+        st.panic_payload.take()
+    }
+}
+
+/// A queued request for helpers: `remaining` workers may still join
+/// `task`'s generation.
+struct Entry {
+    task: Arc<Task>,
+    remaining: usize,
+}
+
+/// The process-wide pool.
+struct Pool {
+    queue: Mutex<VecDeque<Entry>>,
+    work: Condvar,
+    /// Worker threads spawned so far (monotone; workers never exit).
+    spawned: AtomicUsize,
+    /// Dispatch generations published so far.
+    generations: AtomicU64,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+impl Pool {
+    fn global() -> &'static Pool {
+        POOL.get_or_init(|| Pool {
+            queue: Mutex::new(VecDeque::new()),
+            work: Condvar::new(),
+            spawned: AtomicUsize::new(0),
+            generations: AtomicU64::new(0),
+        })
+    }
+
+    /// Grow the pool to at least `want` workers (capped). Lazy: nothing
+    /// is spawned until the first multi-threaded dispatch needs help.
+    fn ensure_workers(&'static self, want: usize) {
+        let want = want.min(MAX_WORKERS);
+        loop {
+            let have = self.spawned.load(Ordering::Relaxed);
+            if have >= want {
+                return;
+            }
+            if self
+                .spawned
+                .compare_exchange(have, have + 1, Ordering::Relaxed, Ordering::Relaxed)
+                .is_err()
+            {
+                continue; // raced with another dispatcher; re-check
+            }
+            let spawned = std::thread::Builder::new()
+                .name(format!("boba-pool-{have}"))
+                .spawn(move || self.worker_loop());
+            if spawned.is_err() {
+                // Thread exhaustion: give the slot back and stop growing;
+                // dispatches stay correct (the caller always works).
+                self.spawned.fetch_sub(1, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+
+    /// Worker main: park on the queue, join one task generation, repeat.
+    fn worker_loop(&'static self) {
+        loop {
+            let task = {
+                let mut q = self.queue.lock().unwrap();
+                loop {
+                    if let Some(task) = Self::pop(&mut q) {
+                        break task;
+                    }
+                    q = self.work.wait(q).unwrap();
+                }
+            };
+            task.participate();
+        }
+    }
+
+    /// Pop one helper ticket, discarding closed (stale) generations.
+    fn pop(q: &mut VecDeque<Entry>) -> Option<Arc<Task>> {
+        while let Some(front) = q.front_mut() {
+            if front.task.is_closed() {
+                q.pop_front();
+                continue;
+            }
+            front.remaining -= 1;
+            let task = front.task.clone();
+            if front.remaining == 0 {
+                q.pop_front();
+            }
+            return Some(task);
+        }
+        None
+    }
+
+    fn submit(&self, task: Arc<Task>, helpers: usize) {
+        self.generations.fetch_add(1, Ordering::Relaxed);
+        let mut q = self.queue.lock().unwrap();
+        // Drop tickets of finished generations so the queue cannot
+        // accumulate stale entries faster than workers discard them.
+        q.retain(|e| !e.task.is_closed());
+        q.push_back(Entry { task, remaining: helpers });
+        drop(q);
+        // Wake only as many workers as there are tickets — notify_all
+        // here would thundering-herd every parked worker on each short
+        // dispatch. A worker that loses the race to a busy one re-parks;
+        // spurious extra wakeups are benign, missing ones impossible
+        // (one notify per ticket).
+        for _ in 0..helpers {
+            self.work.notify_one();
+        }
+    }
+}
+
+/// Run `f(slot)` on the calling thread plus up to `helpers` pool workers
+/// and return once every participant has finished. Slots are unique and
+/// dense-ish in `0..=helpers`; the closure must treat any subset of
+/// slots actually showing up as valid (a busy pool may contribute fewer
+/// helpers — the caller then claims the whole work list itself).
+///
+/// Panics in any participant are propagated to the caller after the
+/// barrier, like `std::thread::scope`.
+pub(crate) fn dispatch(helpers: usize, f: &(dyn Fn(usize) + Sync)) {
+    if helpers == 0 {
+        f(0);
+        return;
+    }
+    let pool = Pool::global();
+    pool.ensure_workers(helpers);
+    // A ticket nobody can serve is pointless: clamp to the workers that
+    // actually exist (spawning can fail under resource exhaustion).
+    let helpers = helpers.min(pool.spawned.load(Ordering::Relaxed));
+    if helpers == 0 {
+        f(0);
+        return;
+    }
+    // Erase the closure's lifetime; soundness is the latch protocol (see
+    // the module docs).
+    let func: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+    let task = Arc::new(Task::new(FnPtr(func as *const _)));
+    pool.submit(task.clone(), helpers);
+    let slot = task.next_slot.fetch_add(1, Ordering::Relaxed);
+    let own = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(slot)));
+    // The barrier must run even if our own share panicked — helpers may
+    // still be inside the (stack-allocated) closure environment.
+    let helper_payload = task.close_and_wait();
+    if let Err(payload) = own {
+        std::panic::resume_unwind(payload);
+    }
+    if let Some(payload) = helper_payload {
+        std::panic::resume_unwind(payload);
+    }
+}
+
+/// Pool observability: `(workers_spawned, dispatch_generations)`. Worker
+/// count is monotone (threads persist once spawned; `set_threads` masks
+/// them per dispatch instead of tearing them down), so a bounded value
+/// across many dispatches is the pool-reuse signal the stress tests and
+/// `benches/micro_pool.rs` assert on.
+pub fn stats() -> (usize, u64) {
+    let pool = Pool::global();
+    (pool.spawned.load(Ordering::Relaxed), pool.generations.load(Ordering::Relaxed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::{self, ThreadGuard};
+
+    #[test]
+    fn dispatch_runs_caller_inline_when_no_helpers() {
+        let hits = AtomicUsize::new(0);
+        dispatch(0, &|slot| {
+            assert_eq!(slot, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn dispatch_slots_are_unique_and_bounded() {
+        for _ in 0..50 {
+            let helpers = 3;
+            let seen: Vec<AtomicUsize> = (0..helpers + 1).map(|_| AtomicUsize::new(0)).collect();
+            dispatch(helpers, &|slot| {
+                seen[slot].fetch_add(1, Ordering::Relaxed);
+            });
+            for s in &seen {
+                assert!(s.load(Ordering::Relaxed) <= 1, "slot used twice");
+            }
+            // The caller always participates, so at least one slot ran.
+            assert!(seen.iter().any(|s| s.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn workers_persist_across_dispatches() {
+        let _g = ThreadGuard::pin(4);
+        // Warm the pool, then hammer it: the spawned count must not grow
+        // per dispatch (that was the spawn-per-call behaviour).
+        parallel::par_for_chunks(1 << 16, 1 << 10, |_lo, _hi| {});
+        let (after_warm, _) = stats();
+        for _ in 0..64 {
+            parallel::par_for_chunks(1 << 16, 1 << 10, |_lo, _hi| {});
+        }
+        let (after_burst, _) = stats();
+        // Stats are process-global and other tests dispatch concurrently,
+        // so bound growth by the largest legitimate pool size (machine
+        // parallelism / the largest ThreadGuard pin in the suite), far
+        // below the 64 × 3 helpers spawn-per-call would have created.
+        let ceiling = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).max(8);
+        assert!(
+            after_burst <= ceiling,
+            "pool grew per dispatch: {after_warm} -> {after_burst} (ceiling {ceiling})"
+        );
+    }
+
+    #[test]
+    fn helper_panic_propagates_to_caller() {
+        let _g = ThreadGuard::pin(4);
+        let result = std::panic::catch_unwind(|| {
+            parallel::par_for_chunks(1 << 16, 1 << 10, |lo, _hi| {
+                if lo == 0 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(result.is_err(), "panic must cross the dispatch barrier");
+        // The pool must still be usable afterwards.
+        let total = AtomicUsize::new(0);
+        parallel::par_for_chunks(1000, 100, |lo, hi| {
+            total.fetch_add(hi - lo, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 1000);
+    }
+}

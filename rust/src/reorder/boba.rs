@@ -105,7 +105,7 @@ impl Reorderer for Boba {
 }
 
 /// Software-prefetch lookahead for the label-table gather (the same
-/// tuning as convert's counter prefetch; see EXPERIMENTS.md §Perf).
+/// tuning as convert's counter prefetch; see docs/EXPERIMENTS.md §Perf).
 const PF_DIST: usize = 32;
 
 #[inline(always)]
@@ -217,7 +217,7 @@ fn parallel_records(coo: &Coo, use_atomic: bool) -> Permutation {
     let dst = &coo.dst;
     parallel::par_for_chunks(2 * m, chunk, |lo, hi| {
         // Split the chunk at the I/J boundary to keep the inner loops
-        // branch-free (hot path; see EXPERIMENTS.md §Perf).
+        // branch-free (hot path; see docs/EXPERIMENTS.md §Perf).
         let (i_lo, i_hi) = (lo.min(m), hi.min(m));
         if use_atomic {
             for i in i_lo..i_hi {

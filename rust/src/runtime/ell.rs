@@ -17,7 +17,7 @@
 //! BOBA's effect is visible here too: clustered column labels concentrate
 //! a row's entries into fewer segments, producing fewer passes (the
 //! pass count is reported by [`EllPlan::passes`] and benchmarked in
-//! EXPERIMENTS.md).
+//! docs/EXPERIMENTS.md).
 
 use super::Meta;
 #[cfg(feature = "pjrt")]

@@ -121,14 +121,16 @@ impl PreparedGraph {
     /// The TC view, building it on first use. Reconstructs an edge list
     /// from the served CSR, then applies the same symmetrize → dedup →
     /// sort-by-src → convert → orient pipeline the offline TC stage
-    /// runs (`pipeline.rs`), so served counts match the CLI's.
+    /// runs (`pipeline.rs`), so served counts match the CLI's. The
+    /// parallel converter is deterministic and stable, so the sorted COO
+    /// yields sorted rows with no `sort_rows` compensation.
     pub fn tc_view(&self) -> Arc<TcView> {
         self.tc
             .get_or_init(|| {
                 use crate::algos::tc;
                 let und = convert::csr_to_coo(&self.csr).symmetrized().deduped();
                 let sorted = convert::sort_coo_by_src(&und);
-                let csr = convert::coo_to_csr(&sorted);
+                let csr = convert::coo_to_csr_parallel(&sorted);
                 let rank = tc::degree_rank(&csr);
                 let dag = tc::orient_by_rank(&csr, &rank);
                 Arc::new(TcView { dag, rank })
@@ -305,8 +307,12 @@ impl GraphRegistry {
         };
 
         // ── convert ───────────────────────────────────────────────
+        // The deterministic parallel kernel: prepare is the serving hot
+        // path the worker pool + non-atomic counting sort exist for, and
+        // its output is bit-identical to the sequential converter, so
+        // digests still compare across schemes and thread counts.
         let sw = Stopwatch::start();
-        let csr = convert::coo_to_csr(&working);
+        let csr = convert::coo_to_csr_parallel(&working);
         prep.convert_ms = sw.ms();
 
         Ok(PreparedGraph {

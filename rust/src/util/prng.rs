@@ -5,7 +5,7 @@
 //! [`Xoshiro256`] (xoshiro256**, the workhorse). Both are tiny,
 //! well-studied, and — crucially for the experiment drivers — fully
 //! deterministic across runs and threads, so every table and figure in
-//! EXPERIMENTS.md is exactly reproducible from its seed.
+//! docs/EXPERIMENTS.md is exactly reproducible from its seed.
 
 /// SplitMix64 — Steele, Lea & Flood's 64-bit mixer.
 ///

@@ -1,0 +1,110 @@
+//! The conversion determinism contract: `coo_to_csr_parallel` and
+//! `coo_to_csr_relabeled_parallel` must equal their sequential
+//! counterparts **bit-for-bit** (`row_ptr`, `col_idx`, `vals`) at every
+//! pinned worker count, on every input shape — skewed (R-MAT), regular
+//! (road grid), weighted, and degenerate. This is the contract that lets
+//! the serving registry, the pipeline, and the TC paths use the parallel
+//! kernels with no `sort_rows` compensation, and lets `repro` digests
+//! compare across `--threads` settings.
+
+use boba::convert::{
+    coo_to_csr, coo_to_csr_parallel, coo_to_csr_relabeled, coo_to_csr_relabeled_parallel,
+};
+use boba::graph::{gen, Coo};
+use boba::parallel::ThreadGuard;
+use boba::reorder::{boba::Boba, Reorderer};
+
+/// Worker pins the contract is checked under. Pins are process-global,
+/// so a concurrently running test may mask the effective count — which
+/// is fine: the contract is *thread-count independence*, so the asserts
+/// must hold whatever count actually schedules.
+const PINS: [usize; 4] = [1, 2, 4, 8];
+
+/// The input lineup: large enough to cross the parallel threshold where
+/// it matters, plus the degenerate shapes that exercise the edges of the
+/// partitioning (empty edge list, single vertex, all self-loops).
+fn lineup() -> Vec<(&'static str, Coo)> {
+    let weighted = {
+        let mut g = gen::uniform_random(3_000, 40_000, 11);
+        g.vals = Some((0..g.m()).map(|i| (i % 17) as f32 * 0.5 - 3.0).collect());
+        g
+    };
+    vec![
+        ("rmat", gen::rmat(&gen::GenParams::rmat(12, 16), 7).randomized(3)),
+        ("road-grid", gen::grid_road(160, 120, 5).symmetrized().randomized(9)),
+        ("weighted", weighted),
+        ("empty", Coo::new(5, vec![], vec![])),
+        ("single-vertex", Coo::new(1, vec![0, 0], vec![0, 0])),
+        ("all-self-loops", Coo::new(64, (0..64).collect(), (0..64).collect())),
+    ]
+}
+
+#[test]
+fn parallel_convert_bit_identical_at_every_pin() {
+    for (name, g) in lineup() {
+        let reference = coo_to_csr(&g);
+        for pin in PINS {
+            let guard = ThreadGuard::pin(pin);
+            let par = coo_to_csr_parallel(&g);
+            drop(guard);
+            assert_eq!(
+                reference, par,
+                "{name}: coo_to_csr_parallel diverged from coo_to_csr at pin {pin}"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_fused_relabel_bit_identical_at_every_pin() {
+    for (name, g) in lineup() {
+        // A non-trivial relabeling (BOBA's first-appearance order); falls
+        // back to the identity-ish order on degenerate inputs, which is
+        // exactly the edge case worth pinning.
+        let perm = Boba::sequential().reorder(&g);
+        let reference = coo_to_csr_relabeled(&g, perm.new_of_old());
+        assert_eq!(
+            reference,
+            coo_to_csr(&g.relabeled(perm.new_of_old())),
+            "{name}: fused sequential reference must match relabel-then-convert"
+        );
+        for pin in PINS {
+            let guard = ThreadGuard::pin(pin);
+            let par = coo_to_csr_relabeled_parallel(&g, perm.new_of_old());
+            drop(guard);
+            assert_eq!(
+                reference, par,
+                "{name}: coo_to_csr_relabeled_parallel diverged at pin {pin}"
+            );
+        }
+    }
+}
+
+#[test]
+fn weighted_values_follow_columns_exactly() {
+    // Beyond multiset equality: the weighted parallel conversion must
+    // keep every (col, val) pair in the sequential position.
+    let mut g = gen::rmat(&gen::GenParams::rmat(12, 16), 21).randomized(2);
+    g.vals = Some((0..g.m()).map(|i| i as f32 * 0.25).collect());
+    let seq = coo_to_csr(&g);
+    for pin in PINS {
+        let _guard = ThreadGuard::pin(pin);
+        let par = coo_to_csr_parallel(&g);
+        assert_eq!(seq.vals, par.vals, "vals diverged at pin {pin}");
+        assert_eq!(seq.col_idx, par.col_idx, "col_idx diverged at pin {pin}");
+    }
+}
+
+#[test]
+fn sorted_input_stays_sorted_through_parallel_convert() {
+    // The property the TC/serve paths now rely on instead of sort_rows:
+    // stable deterministic scatter of a (src, dst)-sorted COO yields
+    // sorted adjacency lists.
+    let g = gen::rmat(&gen::GenParams::rmat(12, 16), 31).randomized(17);
+    let sorted = boba::convert::sort_coo_by_src(&g.symmetrized().deduped());
+    for pin in PINS {
+        let _guard = ThreadGuard::pin(pin);
+        let csr = coo_to_csr_parallel(&sorted);
+        assert!(csr.rows_sorted(), "rows unsorted at pin {pin}");
+    }
+}

@@ -80,7 +80,7 @@ fn table3_shapes() {
         }
         // delaunay: bounded either way (the paper's null-result row; our
         // generator's natural edge order lets BOBA recover more — see
-        // EXPERIMENTS.md Table 3 note).
+        // docs/EXPERIMENTS.md Table 3 note).
         let rc = t.get("delaunay_like", "rand_conv").unwrap();
         let bc = t.get("delaunay_like", "boba_conv").unwrap();
         if !(bc < rc * 1.5 && bc > rc * 0.2) {

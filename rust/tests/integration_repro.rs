@@ -40,13 +40,30 @@ fn repro_covers_all_tables_with_valid_schema() {
     assert!(t1.summary.median_ms <= t1.summary.max_ms);
     assert_eq!(t1.summary.n, 2, "reps honoured");
 
-    // T2 has the pre/post contrast plus the fused path and a speedup.
-    for metric in ["convert_seq_ms", "convert_par_ms"] {
+    // T2 has the pre/post contrast across the sequential, deterministic
+    // parallel (par-det), and atomic-baseline kernels, plus the fused
+    // paths and a speedup.
+    for metric in ["convert_seq_ms", "convert_par_det_ms", "convert_par_atomic_ms"] {
         assert!(doc.get("T2", "rmat:10:4", "random", metric).is_some(), "{metric}");
         assert!(doc.get("T2", "rmat:10:4", "boba", metric).is_some(), "{metric}");
     }
     assert!(doc.get("T2", "rmat:10:4", "boba", "convert_fused_ms").is_some());
+    assert!(doc.get("T2", "rmat:10:4", "boba", "convert_fused_par_ms").is_some());
     assert!(doc.get("T2", "rmat:10:4", "boba", "convert_speedup_x").is_some());
+    // The determinism gate: par-det rows carry the same output digest as
+    // the sequential rows (the harness itself errors on a mismatch; this
+    // pins the contract in the committed JSON too).
+    for dataset in ["rmat:10:4", "grid:40:30"] {
+        for scheme in ["random", "boba"] {
+            let seq = doc.get("T2", dataset, scheme, "convert_seq_ms").unwrap();
+            let det = doc.get("T2", dataset, scheme, "convert_par_det_ms").unwrap();
+            assert!(seq.digest.is_some(), "{dataset}/{scheme} seq digest missing");
+            assert_eq!(
+                seq.digest, det.digest,
+                "{dataset}/{scheme}: par-det digest must equal the sequential digest"
+            );
+        }
+    }
 
     // T3 covers all four apps with totals and a speedup per scheme.
     for app in ["SpMV", "PR", "TC", "SSSP"] {
@@ -138,6 +155,29 @@ fn thread_count_does_not_change_deterministic_digests() {
             four[&(dataset.to_string(), "boba-atomic".to_string())],
             "{dataset}: boba-atomic must equal boba-seq"
         );
+    }
+}
+
+#[test]
+fn t2_determinism_gate_exercises_the_parallel_kernel() {
+    // The tiny datasets above sit below the 1<<15-edge threshold where
+    // coo_to_csr_parallel falls back to the sequential kernel — there
+    // the digest gate compares sequential against itself. This run uses
+    // a 65_536-edge graph with a pinned multi-worker count, so the
+    // deterministic parallel kernel really executes and t2_conversion's
+    // internal bail (par-det digest != sequential digest) is live.
+    let mut opts = ReproOptions::quick(11);
+    opts.dataset_specs = vec!["rmat:13:8".into()];
+    opts.tables = vec!["T2".into()];
+    opts.threads = Some(4);
+    opts.reps = 1;
+    opts.warmup = 0;
+    let run = repro::run(&opts).expect("par-det digest must match sequential");
+    for scheme in ["random", "boba"] {
+        let seq = run.doc.get("T2", "rmat:13:8", scheme, "convert_seq_ms").unwrap();
+        let det = run.doc.get("T2", "rmat:13:8", scheme, "convert_par_det_ms").unwrap();
+        assert!(seq.digest.is_some(), "{scheme}: seq digest missing");
+        assert_eq!(seq.digest, det.digest, "{scheme}: par-det digest diverged");
     }
 }
 

@@ -1,0 +1,155 @@
+//! Stress tests of the persistent worker pool: nested dispatch from
+//! foreign OS threads (the server's worker threads enter the parallel
+//! substrate exactly like this), `par_jobs` jobs that fan out into
+//! `par_for_chunks` internally, and concurrent `set_threads` flips —
+//! asserting no deadlock and full, exactly-once index coverage
+//! throughout.
+
+use boba::parallel::{self, pool, ThreadGuard};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// `set_threads` is process-global and libtest runs `#[test]`s
+/// concurrently, so the tests that pin or flip the worker count take
+/// this lock to avoid perturbing each other's scheduling assumptions.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn nested_par_jobs_into_par_for_chunks_from_server_like_threads() {
+    // 4 "server worker" OS threads, each dispatching a wave of par_jobs
+    // whose jobs themselves run par_for_chunks — two levels of nesting
+    // on top of foreign threads. The pool's caller-participates design
+    // must complete all of it without deadlock.
+    const OS_THREADS: usize = 4;
+    const JOBS: usize = 6;
+    const LEN: usize = 20_000;
+    let _serial = serial();
+    let hits = Arc::new(
+        (0..OS_THREADS * JOBS * LEN)
+            .map(|_| AtomicUsize::new(0))
+            .collect::<Vec<_>>(),
+    );
+    let handles: Vec<_> = (0..OS_THREADS)
+        .map(|t| {
+            let hits = Arc::clone(&hits);
+            std::thread::spawn(move || {
+                let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..JOBS)
+                    .map(|j| {
+                        let hits = Arc::clone(&hits);
+                        Box::new(move || {
+                            let off = (t * JOBS + j) * LEN;
+                            parallel::par_for_chunks(LEN, 512, |lo, hi| {
+                                for i in lo..hi {
+                                    hits[off + i].fetch_add(1, Ordering::Relaxed);
+                                }
+                            });
+                            j
+                        }) as _
+                    })
+                    .collect();
+                let out = parallel::par_jobs(jobs);
+                assert_eq!(out, (0..JOBS).collect::<Vec<_>>(), "job results in order");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("server-like thread completed");
+    }
+    for (i, h) in hits.iter().enumerate() {
+        assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} covered exactly once");
+    }
+}
+
+#[test]
+fn set_threads_flips_during_dispatch_storm() {
+    // Repeatedly flip the worker pin while another thread hammers the
+    // pool with short dispatches. Each dispatch reads the mask once at
+    // entry; flips must never deadlock it or lose coverage.
+    let _serial = serial();
+    let stop = Arc::new(AtomicUsize::new(0));
+    let flipper = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut pin = 1usize;
+            while stop.load(Ordering::Relaxed) == 0 {
+                let _g = ThreadGuard::pin(pin);
+                pin = pin % 8 + 1;
+                std::thread::yield_now();
+            }
+        })
+    };
+    for round in 0..200 {
+        let len = 1_000 + round * 7;
+        let total = AtomicUsize::new(0);
+        parallel::par_for_chunks(len, 64, |lo, hi| {
+            total.fetch_add(hi - lo, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), len, "round {round}");
+    }
+    stop.store(1, Ordering::Relaxed);
+    flipper.join().unwrap();
+}
+
+#[test]
+fn pool_is_reused_not_respawned() {
+    let _serial = serial();
+    let _g = ThreadGuard::pin(4);
+    parallel::par_for_chunks(1 << 16, 1 << 10, |_, _| {}); // warm
+    let (_, gen_before) = pool::stats();
+    for _ in 0..32 {
+        parallel::par_reduce(
+            1 << 14,
+            256,
+            0u64,
+            |acc, lo, hi| acc + (hi - lo) as u64,
+            |a, b| a + b,
+        );
+    }
+    let (workers, gen_after) = pool::stats();
+    assert!(gen_after > gen_before, "dispatch generations advance");
+    // Workers are bounded by machine parallelism / the biggest pin, not
+    // by the number of dispatches (the spawn-per-call failure mode).
+    let ceiling = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).max(8);
+    assert!(workers <= ceiling, "pool spawned {workers} workers (ceiling {ceiling})");
+}
+
+#[test]
+fn par_jobs_is_work_conserving_under_one_slow_job() {
+    // With the old wave scheduler, a slow job in wave 1 gated every job
+    // of wave 2. Now all fast jobs must finish while the slow one is
+    // still sleeping. (Generous timing margins keep this robust on slow
+    // CI machines; the ordering claim—fast jobs don't wait for the slow
+    // one—is what matters.)
+    let _serial = serial();
+    let _g = ThreadGuard::pin(4);
+    let started = std::time::Instant::now();
+    let fast_done = Arc::new(AtomicUsize::new(0));
+    let jobs: Vec<Box<dyn FnOnce() -> u128 + Send>> = (0..8)
+        .map(|j| {
+            let fast_done = Arc::clone(&fast_done);
+            Box::new(move || {
+                if j == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(400));
+                } else {
+                    fast_done.fetch_add(1, Ordering::Relaxed);
+                }
+                started.elapsed().as_millis()
+            }) as _
+        })
+        .collect();
+    let finish_ms = parallel::par_jobs(jobs);
+    assert_eq!(fast_done.load(Ordering::Relaxed), 7);
+    // Every fast job must have finished well before the slow job did —
+    // they never queue behind it in a wave.
+    let slow_finish = finish_ms[0];
+    for (j, &t) in finish_ms.iter().enumerate().skip(1) {
+        assert!(
+            t < slow_finish,
+            "job {j} finished at {t}ms, after the slow job at {slow_finish}ms"
+        );
+    }
+}

@@ -3,7 +3,9 @@
 //! cache behaviour the paper's Problem 3 measures, so their *correctness*
 //! must be beyond doubt under every labeling.
 
-use boba::convert::{coo_to_csr, coo_to_csr_parallel, csr_to_coo, sort_coo_by_src};
+use boba::convert::{
+    coo_to_csr, coo_to_csr_parallel, coo_to_csr_parallel_atomic, csr_to_coo, sort_coo_by_src,
+};
 use boba::graph::{gen, Coo};
 use boba::testing::{check, Config, Gen};
 
@@ -38,14 +40,29 @@ fn csr_structure_matches_coo() {
 }
 
 #[test]
-fn parallel_converter_matches_sequential() {
-    check(Config::default().cases(25), "par == seq (up to row order)", |g| {
+fn parallel_converter_is_bit_identical_to_sequential() {
+    check(Config::default().cases(25), "par == seq (bit-identical)", |g| {
         // Force sizes across the parallel threshold.
         let n = g.usize(10..2000);
         let m = g.usize(30_000..80_000);
         let coo = gen::uniform_random(n, m, g.seed());
         let a = coo_to_csr(&coo);
-        let mut b = coo_to_csr_parallel(&coo);
+        let b = coo_to_csr_parallel(&coo);
+        // The deterministic kernel needs no sort_rows compensation:
+        // every array must match exactly.
+        anyhow::ensure!(a == b, "deterministic parallel converter diverged");
+        Ok(())
+    });
+}
+
+#[test]
+fn atomic_baseline_matches_sequential_up_to_row_order() {
+    check(Config::default().cases(10), "par-atomic == seq (multisets)", |g| {
+        let n = g.usize(10..2000);
+        let m = g.usize(30_000..80_000);
+        let coo = gen::uniform_random(n, m, g.seed());
+        let a = coo_to_csr(&coo);
+        let mut b = coo_to_csr_parallel_atomic(&coo);
         anyhow::ensure!(a.row_ptr == b.row_ptr, "row_ptr differs");
         let mut a2 = a.clone();
         a2.sort_rows();
