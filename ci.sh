@@ -88,6 +88,10 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
         # par-det conversion rows (digest-gated in t2_conversion).
         echo "FAILED (required): BENCH_repro.json has no convert_par_det_ms rows"
         FAILURES=$((FAILURES + 1))
+    elif ! grep -q 'ingest_ms' "$ROOT/BENCH_repro.json"; then
+        # Schema boba-repro/2: T3 prices the ingest stage per dataset.
+        echo "FAILED (required): BENCH_repro.json has no T3 ingest_ms rows"
+        FAILURES=$((FAILURES + 1))
     fi
 
     # Pool-dispatch microbench smoke: one iteration, just to prove the
@@ -96,6 +100,16 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
     note "micro_pool smoke"
     if ! cargo bench --bench micro_pool -- --smoke; then
         echo "FAILED (required): micro_pool smoke"
+        FAILURES=$((FAILURES + 1))
+    fi
+
+    # Ingest microbench smoke: one iteration of seq-text vs parallel-
+    # text vs .bcoo, just to prove the harness builds and every path
+    # loads the same graph (full numbers: `cargo bench --bench
+    # micro_ingest`, recorded in docs/EXPERIMENTS.md §Ingest).
+    note "micro_ingest smoke"
+    if ! cargo bench --bench micro_ingest -- --smoke; then
+        echo "FAILED (required): micro_ingest smoke"
         FAILURES=$((FAILURES + 1))
     fi
 fi

@@ -1,0 +1,136 @@
+//! Micro-benchmark of the ingest subsystem: the old sequential
+//! `BufReader::lines()` + `str::parse` reader (replicated below
+//! verbatim as the baseline), the parallel byte-level text parser
+//! (`graph::io`), and the `.bcoo` binary load — on a ≥1M-edge graph in
+//! the full run, so the acceptance ordering
+//! `.bcoo > parallel text > sequential text` (load throughput) is
+//! measured where it matters. docs/EXPERIMENTS.md §Ingest records the
+//! trajectory, including the text→`.bcoo` ratio.
+//!
+//! Run: `cargo bench --bench micro_ingest` (`-- --smoke` for the
+//! 1-shot CI gate on a smaller graph).
+
+use boba::bench::{black_box, Bench, Report};
+use boba::graph::io::{self, bcoo};
+use boba::graph::{gen, Coo};
+use std::io::BufRead;
+use std::path::Path;
+use std::time::Duration;
+
+/// The pre-parallel Matrix Market reader, kept bit-for-bit as the
+/// baseline: one `String` + UTF-8 validation + `str::parse` per line.
+fn seq_read_matrix_market(path: &Path) -> anyhow::Result<Coo> {
+    let f = std::fs::File::open(path)?;
+    let mut lines = std::io::BufReader::new(f).lines();
+    let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty file"))??;
+    let h: Vec<&str> = header.split_whitespace().collect();
+    anyhow::ensure!(h.len() >= 5 && h[0].starts_with("%%MatrixMarket"), "bad header");
+    let pattern = h[3] == "pattern";
+    let symmetric = h[4] == "symmetric";
+    let mut dims: Option<(usize, usize, usize)> = None;
+    let mut src = Vec::new();
+    let mut dst = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        if dims.is_none() {
+            let r: usize = it.next().unwrap().parse()?;
+            let c: usize = it.next().unwrap().parse()?;
+            let nnz: usize = it.next().unwrap().parse()?;
+            dims = Some((r, c, nnz));
+            src.reserve(nnz);
+            dst.reserve(nnz);
+            continue;
+        }
+        let i: u64 = it.next().ok_or_else(|| anyhow::anyhow!("short line"))?.parse()?;
+        let j: u64 = it.next().ok_or_else(|| anyhow::anyhow!("short line"))?.parse()?;
+        src.push((i - 1) as u32);
+        dst.push((j - 1) as u32);
+        if !pattern {
+            let v: f32 = it.next().map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+            vals.push(v);
+        }
+        if symmetric && i != j {
+            src.push((j - 1) as u32);
+            dst.push((i - 1) as u32);
+            if !pattern {
+                vals.push(*vals.last().unwrap());
+            }
+        }
+    }
+    let (r, c, _) = dims.ok_or_else(|| anyhow::anyhow!("missing size line"))?;
+    let mut coo = Coo::new(r.max(c), src, dst);
+    if !pattern {
+        coo.vals = Some(vals);
+    }
+    Ok(coo)
+}
+
+fn main() {
+    // Note: the raw read_* functions never consult the sidecar cache
+    // (only io::load_graph_file does), so every iteration below is a
+    // real parse — no cache-busting needed.
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (bench, scale) = if smoke {
+        (Bench { warmup: 0, iters: 1, max_total: Duration::from_secs(60) }, 13)
+    } else {
+        (Bench { warmup: 1, iters: 5, max_total: Duration::from_secs(300) }, 17)
+    };
+    // rmat(17, 8) is 8 · 2^17 = 1,048,576 edges — the ≥1M-edge bar the
+    // acceptance ordering is measured on; --smoke drops to 64k edges.
+    let g = gen::rmat(&gen::GenParams::rmat(scale, 8), 42).randomized(43);
+    let edges = g.m() as u64;
+
+    let dir = std::env::temp_dir();
+    let mtx = dir.join(format!("boba_micro_ingest_{}.mtx", std::process::id()));
+    let el = dir.join(format!("boba_micro_ingest_{}.el", std::process::id()));
+    let bin = dir.join(format!("boba_micro_ingest_{}.bcoo", std::process::id()));
+    io::write_matrix_market(&g, &mtx).unwrap();
+    io::write_edge_list(&g, &el).unwrap();
+    bcoo::write_bcoo(&g, &bin).unwrap();
+
+    let mut report = Report::new("micro: graph ingest — seq text vs parallel text vs .bcoo");
+    let m_seq = bench.run_with_items("mtx/seq-text", edges, || {
+        black_box(seq_read_matrix_market(&mtx).unwrap())
+    });
+    let m_par = bench.run_with_items("mtx/par-text", edges, || {
+        black_box(io::read_matrix_market(&mtx).unwrap())
+    });
+    let m_el = bench.run_with_items("el/par-text", edges, || {
+        black_box(io::read_edge_list(&el, true).unwrap())
+    });
+    let m_bin = bench.run_with_items("bcoo", edges, || {
+        black_box(bcoo::read_bcoo(&bin).unwrap())
+    });
+
+    // Sanity: every path loads the same graph.
+    assert_eq!(seq_read_matrix_market(&mtx).unwrap(), g);
+    assert_eq!(io::read_matrix_market(&mtx).unwrap(), g);
+    assert_eq!(bcoo::read_bcoo(&bin).unwrap(), g);
+
+    let (seq_ms, par_ms, bin_ms) =
+        (m_seq.median_ms(), m_par.median_ms(), m_bin.median_ms());
+    report.push(m_seq);
+    report.push(m_par);
+    report.push(m_el);
+    report.push(m_bin);
+    report.print();
+    println!(
+        "sizes: mtx {} B, bcoo {} B; speedups: par-text {:.2}x over seq-text, \
+         bcoo {:.2}x over par-text, {:.2}x over seq-text (text→bcoo ratio)",
+        std::fs::metadata(&mtx).map(|m| m.len()).unwrap_or(0),
+        std::fs::metadata(&bin).map(|m| m.len()).unwrap_or(0),
+        seq_ms / par_ms.max(1e-9),
+        par_ms / bin_ms.max(1e-9),
+        seq_ms / bin_ms.max(1e-9),
+    );
+
+    std::fs::remove_file(&mtx).ok();
+    std::fs::remove_file(&el).ok();
+    std::fs::remove_file(&bin).ok();
+}

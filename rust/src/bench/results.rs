@@ -18,8 +18,15 @@ use crate::util::human;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 
-/// Schema identifier written to (and required from) every document.
-pub const SCHEMA: &str = "boba-repro/1";
+/// Schema identifier written to every document. Version 2 added the
+/// T3 `ingest_ms` stage rows (the pipeline's front door is now a
+/// priced stage); [`ResultsDoc::parse`] still reads version-1
+/// documents — they simply carry no ingest rows.
+pub const SCHEMA: &str = "boba-repro/2";
+
+/// Older schema identifiers [`ResultsDoc::parse`] accepts (committed
+/// trajectory points from earlier PRs stay readable).
+pub const LEGACY_SCHEMAS: [&str; 1] = ["boba-repro/1"];
 
 /// The repro table identifiers, in report order.
 pub const TABLE_IDS: [&str; 4] = ["T1", "T2", "T3", "T4"];
@@ -29,7 +36,7 @@ pub fn table_title(id: &str) -> &'static str {
     match id {
         "T1" => "T1 — reordering time per scheme",
         "T2" => "T2 — COO→CSR conversion time, pre/post reorder",
-        "T3" => "T3 — end-to-end pipeline time (reorder + [sort] + convert + app)",
+        "T3" => "T3 — end-to-end pipeline time (ingest + reorder + [sort] + convert + app)",
         "T4" => "T4 — simulated cache hit rates (V100-scaled hierarchy)",
         _ => "unknown table",
     }
@@ -192,10 +199,15 @@ impl ResultsDoc {
         out
     }
 
-    /// Unique scheme names present (sorted).
+    /// Unique scheme names present (sorted). Scheme-less rows (the T3
+    /// ingest stage) are not a scheme and are excluded.
     pub fn schemes(&self) -> Vec<String> {
-        let mut v: Vec<String> =
-            self.records.iter().map(|r| r.scheme.clone()).collect();
+        let mut v: Vec<String> = self
+            .records
+            .iter()
+            .filter(|r| !r.scheme.is_empty())
+            .map(|r| r.scheme.clone())
+            .collect();
         v.sort();
         v.dedup();
         v
@@ -235,8 +247,11 @@ impl ResultsDoc {
             .get("schema")
             .and_then(|v| v.as_str())
             .context("missing \"schema\" field")?;
-        if schema != SCHEMA {
-            bail!("unknown schema {schema:?} (this reader understands {SCHEMA:?})");
+        if schema != SCHEMA && !LEGACY_SCHEMAS.contains(&schema) {
+            bail!(
+                "unknown schema {schema:?} (this reader understands {SCHEMA:?} \
+                 and legacy {LEGACY_SCHEMAS:?})"
+            );
         }
         let num = |k: &str| -> Result<u64> {
             j.get(k).and_then(|v| v.as_u64()).with_context(|| format!("missing numeric {k:?}"))
@@ -319,7 +334,9 @@ impl ResultsDoc {
                 out.push_str(&format!(
                     "| {} | {} | {} | {} | {} | {} | {} | {} |\n",
                     r.dataset,
-                    r.scheme,
+                    // Scheme-less rows (the T3 ingest stage) render like
+                    // app-less ones.
+                    if r.scheme.is_empty() { "—" } else { r.scheme.as_str() },
                     if r.app.is_empty() { "—" } else { r.app.as_str() },
                     r.metric,
                     r.fmt(r.summary.median_ms),
@@ -385,6 +402,38 @@ mod tests {
         let doc = sample_doc();
         let text = doc.to_json().render().replace(SCHEMA, "boba-repro/999");
         assert!(ResultsDoc::parse(&text).is_err());
+    }
+
+    #[test]
+    fn parse_accepts_legacy_schema() {
+        // Committed v1 trajectory points (pre-ingest-stage) stay
+        // readable.
+        let doc = sample_doc();
+        let text = doc.to_json().render().replace(SCHEMA, "boba-repro/1");
+        let back = ResultsDoc::parse(&text).unwrap();
+        assert_eq!(back.records.len(), doc.records.len());
+    }
+
+    #[test]
+    fn markdown_renders_scheme_less_rows_with_dash() {
+        let mut doc = sample_doc();
+        doc.push(Record {
+            table: "T3".into(),
+            dataset: "rmat_q".into(),
+            scheme: String::new(),
+            app: String::new(),
+            metric: "ingest_ms".into(),
+            unit: "ms".into(),
+            summary: Summary::single(4.2),
+            items_per_sec: Some(1.0e8),
+            digest: None,
+        });
+        let md = doc.render_markdown();
+        assert!(md.contains("| rmat_q | — | — | ingest_ms |"), "{md}");
+        assert!(
+            !doc.schemes().contains(&String::new()),
+            "scheme-less rows are not a scheme"
+        );
     }
 
     #[test]

@@ -211,25 +211,29 @@ pub fn resolve(spec: &str, seed: u64) -> anyhow::Result<Coo> {
 /// True if `spec` names an on-disk graph file rather than a suite name
 /// or generator recipe.
 pub fn is_file_spec(spec: &str) -> bool {
-    spec.ends_with(".mtx") || spec.ends_with(".el") || spec.ends_with(".txt")
+    spec.ends_with(".mtx")
+        || spec.ends_with(".el")
+        || spec.ends_with(".txt")
+        || spec.ends_with(".bcoo")
 }
 
-/// Resolve a dataset *source*: an on-disk `.mtx`/`.el`/`.txt` file or a
-/// [`resolve`] spec. Edge-list files keep their vertex IDs
+/// Resolve a dataset *source*: an on-disk `.mtx`/`.el`/`.txt`/`.bcoo`
+/// file or a [`resolve`] spec. Edge-list files keep their vertex IDs
 /// (`preserve_ids` — a dense first-appearance relabel would itself be a
-/// sequential BOBA pass, silently pre-reordering the baseline). No
-/// randomization is applied here: file labels are served as-is, and
-/// callers apply [`crate::graph::Coo::randomized`] to generated graphs
-/// per the paper's input model. Shared by the server's registry and the
-/// repro harness so a spec means the same graph everywhere.
+/// sequential BOBA pass, silently pre-reordering the baseline). Text
+/// files go through [`crate::graph::io::load_graph_file`], so the
+/// parallel byte-level parser and the write-once `.bcoo` sidecar cache
+/// apply to every consumer — the CLI, the server's registry, and the
+/// repro harness — and a repeated load (server restarts, repro sweeps)
+/// is a memcpy, not a re-parse. No randomization is applied here: file
+/// labels are served as-is, and callers apply
+/// [`crate::graph::Coo::randomized`] to generated graphs per the
+/// paper's input model.
 pub fn resolve_source(spec: &str, seed: u64) -> anyhow::Result<Coo> {
     use crate::graph::io;
     use std::path::Path;
-    if spec.ends_with(".mtx") {
-        return io::read_matrix_market(Path::new(spec));
-    }
-    if spec.ends_with(".el") || spec.ends_with(".txt") {
-        return io::read_edge_list(Path::new(spec), true);
+    if is_file_spec(spec) {
+        return io::load_graph_file(Path::new(spec), true);
     }
     resolve(spec, seed)
 }
@@ -300,11 +304,13 @@ mod tests {
     #[test]
     fn file_specs_detected_and_resolved() {
         assert!(is_file_spec("g.mtx") && is_file_spec("g.el") && is_file_spec("g.txt"));
+        assert!(is_file_spec("g.bcoo"), ".bcoo is a file spec");
         assert!(!is_file_spec("rmat:10:4") && !is_file_spec("road_grid"));
         // Recipes fall through to resolve(); missing files / bogus specs
         // error instead of panicking.
         assert_eq!(resolve_source("rmat:10:4", 1).unwrap().n(), 1 << 10);
         assert!(resolve_source("/no/such/file.mtx", 1).is_err());
+        assert!(resolve_source("/no/such/file.bcoo", 1).is_err());
         assert!(resolve_source("bogus-spec", 1).is_err());
     }
 

@@ -15,9 +15,14 @@
 //!   relabel+convert paths (sequential + parallel): the paper's §5.3
 //!   conversion speedups, treating conversion as a first-class workload
 //!   (Koohi Esfahani & Vandierendonck);
-//! * **T3** — end-to-end pipeline time (reorder + \[sort\] + convert +
-//!   app) for SpMV/PageRank/TC/SSSP: the paper's headline up-to-3.45×
-//!   end-to-end speedups;
+//! * **T3** — end-to-end pipeline time (ingest + reorder + \[sort\] +
+//!   convert + app) for SpMV/PageRank/TC/SSSP: the paper's headline
+//!   up-to-3.45× end-to-end speedups. Since schema `boba-repro/2` the
+//!   run prices the pipeline's front door too: one `ingest_ms` row per
+//!   dataset — a disk re-load for file specs (the `.bcoo` sidecar hit
+//!   after the first parse wrote it — the served steady state) or the
+//!   batched `StreamingIngest` assembly for generated specs (what the
+//!   server registry pays);
 //! * **T4** — simulated L1/L2 hit rates and DRAM fraction per workload:
 //!   the paper's Fig. 7 profiler numbers (7–52% L1 / 11–67% L2 gains).
 //!
@@ -30,7 +35,7 @@
 //! records).
 
 use super::datasets;
-use super::pipeline::{App, Pipeline, ReorderStage};
+use super::pipeline::{App, Pipeline, ReorderStage, StreamingIngest};
 use crate::algos::{pagerank, sssp, tc};
 use crate::bench::machine;
 use crate::bench::results::{Record, ResultsDoc};
@@ -519,6 +524,48 @@ fn t3_end_to_end(
 ) -> Result<()> {
     let mut rows = Vec::new();
     for (dname, g) in data {
+        // ── ingest stage (schema boba-repro/2) ────────────────────
+        // One row per dataset: ingest is scheme-independent, so it is
+        // measured once instead of re-read per scheme × app. File
+        // specs re-load from disk — build_datasets' first text parse
+        // wrote the `.bcoo` sidecar, so this prices the binary-cache
+        // hit, the steady state every later run pays. Generated specs
+        // price the batched StreamingIngest assembly the server
+        // registry runs (the per-iteration clone stands in for the
+        // producer materializing its batches).
+        let bench = bench_for(opts, false);
+        let m_ingest = if datasets::is_file_spec(dname) {
+            // Fallible probe first: a file deleted since build_datasets
+            // surfaces as an error that keeps the T1/T2 records already
+            // measured, not a panic. The timed closure then only races
+            // a deletion inside the measurement window itself.
+            datasets::resolve_source(dname, opts.seed)
+                .with_context(|| format!("re-ingesting dataset {dname} for T3"))?;
+            bench.run_with_items(&format!("{dname}/ingest"), g.m() as u64, || {
+                datasets::resolve_source(dname, opts.seed)
+                    .expect("dataset loadable a moment ago")
+            })
+        } else {
+            bench.run_with_items(&format!("{dname}/ingest"), g.m() as u64, || {
+                let (producer, stream) = StreamingIngest::from_coo(g.clone(), 1 << 16, 4);
+                let out = stream.collect();
+                producer.join().ok();
+                out
+            })
+        };
+        let mut rec = timing_record("T3", dname, "", "", "ingest_ms", m_ingest.summary);
+        rec.items_per_sec = m_ingest.throughput();
+        doc.push(rec);
+        rows.push(vec![
+            dname.clone(),
+            "—".into(),
+            "(ingest)".into(),
+            human::ms(m_ingest.summary.median_ms),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+        ]);
         for app in App::all() {
             let mut random_median = None;
             for name in pipeline_schemes(opts.heavy) {

@@ -1,0 +1,367 @@
+//! `.bcoo` — the versioned little-endian binary COO interchange format
+//! and its write-once sidecar cache.
+//!
+//! Text formats pay tokenizing + decimal decoding per edge no matter
+//! how fast the parser is; `.bcoo` stores the three `Coo` arrays as raw
+//! little-endian words so a load is header validation + one `memcpy`
+//! per array (plus a parallel bounds check — a corrupt cache must fail,
+//! not crash a kernel later). Layout, all little-endian:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  b"BCOO"
+//!      4     4  version (u32, currently 1)
+//!      8     4  flags   (u32: bit 0 = has vals, bit 1 = dense-relabeled)
+//!     12     8  n       (u64 vertex count)
+//!     20     8  m       (u64 edge count)
+//!     28    4m  src     (m × u32)
+//!   28+4m   4m  dst     (m × u32)
+//!   28+8m   4m  vals    (m × f32, present iff flag bit 0)
+//! ```
+//!
+//! The **sidecar cache**: the first text parse of `graph.mtx` writes
+//! `graph.mtx.bcoo` next to it; later loads take the binary path when
+//! the sidecar's mtime is strictly newer than the source's (strictness
+//! keeps coarse-timestamp filesystems on the re-parse side, never the
+//! stale side). The two `.el` relabeling modes cache under different
+//! names (`g.el.bcoo` preserve-ids, `g.el.dense.bcoo` dense) so mixed
+//! consumers keep both warm, and flag bit 1 additionally records the
+//! mode so a renamed file is never served for the wrong one. Set
+//! `BOBA_NO_BCOO_CACHE=1` to disable both sides of the cache; a stale,
+//! truncated, or foreign sidecar is ignored (the text is re-parsed and
+//! the sidecar rewritten), never an error.
+
+use crate::graph::Coo;
+use crate::parallel;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Magic bytes every `.bcoo` file starts with.
+pub const MAGIC: [u8; 4] = *b"BCOO";
+/// Format version this build reads and writes.
+pub const VERSION: u32 = 1;
+/// Flag bit: the file carries an f32 values array.
+pub const FLAG_VALS: u32 = 1;
+/// Flag bit: the edge list was dense-relabeled (first-appearance order)
+/// at parse time — sidecar cache keying, see the module docs.
+pub const FLAG_DENSE: u32 = 1 << 1;
+
+const HEADER_LEN: usize = 28;
+
+/// Read a `.bcoo` file.
+pub fn read_bcoo(path: &Path) -> Result<Coo> {
+    Ok(read_bcoo_flagged(path)?.0)
+}
+
+/// Read a `.bcoo` file, returning the graph and the raw flags word.
+pub(crate) fn read_bcoo_flagged(path: &Path) -> Result<(Coo, u32)> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse_bcoo(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+fn parse_bcoo(bytes: &[u8]) -> Result<(Coo, u32)> {
+    if bytes.len() < HEADER_LEN {
+        bail!("not a .bcoo file: {} bytes is shorter than the header", bytes.len());
+    }
+    if bytes[..4] != MAGIC {
+        bail!("not a .bcoo file (bad magic {:?})", &bytes[..4]);
+    }
+    let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+    let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+    let version = u32_at(4);
+    if version != VERSION {
+        bail!("unsupported .bcoo version {version} (this reader understands {VERSION})");
+    }
+    let flags = u32_at(8);
+    let n = u64_at(12);
+    let m = u64_at(20);
+    let arrays = if flags & FLAG_VALS != 0 { 3u64 } else { 2 };
+    let expected = m
+        .checked_mul(4 * arrays)
+        .and_then(|b| b.checked_add(HEADER_LEN as u64))
+        .filter(|&b| b == bytes.len() as u64);
+    if expected.is_none() {
+        bail!(
+            "truncated .bcoo: m={m} with flags {flags:#x} needs {} bytes, file has {}",
+            m.saturating_mul(4 * arrays).saturating_add(HEADER_LEN as u64),
+            bytes.len()
+        );
+    }
+    let (n, m) = (n as usize, m as usize);
+    let src = u32s_from_le(&bytes[HEADER_LEN..HEADER_LEN + 4 * m]);
+    let dst = u32s_from_le(&bytes[HEADER_LEN + 4 * m..HEADER_LEN + 8 * m]);
+    let vals = (flags & FLAG_VALS != 0)
+        .then(|| f32s_from_le(&bytes[HEADER_LEN + 8 * m..HEADER_LEN + 12 * m]));
+    // Parallel bounds check: a corrupt or hand-edited cache must error
+    // here, not index out of range inside a kernel.
+    let max_id = parallel::par_reduce(
+        m,
+        parallel::default_chunk(m),
+        0u32,
+        |acc, lo, hi| {
+            let mut acc = acc;
+            for i in lo..hi {
+                acc = acc.max(src[i]).max(dst[i]);
+            }
+            acc
+        },
+        u32::max,
+    );
+    if m > 0 && max_id as u64 >= n as u64 {
+        bail!("corrupt .bcoo: vertex id {max_id} out of range for n={n}");
+    }
+    Ok((Coo { n, src, dst, vals }, flags))
+}
+
+/// Write `coo` as a `.bcoo` file (vals flag set iff the graph is
+/// weighted; dense flag clear — use the sidecar API for cache-keyed
+/// writes).
+pub fn write_bcoo(coo: &Coo, path: &Path) -> Result<()> {
+    write_bcoo_flagged(coo, path, 0)
+}
+
+pub(crate) fn write_bcoo_flagged(coo: &Coo, path: &Path, extra_flags: u32) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = std::io::BufWriter::with_capacity(1 << 20, f);
+    let mut flags = extra_flags;
+    if coo.vals.is_some() {
+        flags |= FLAG_VALS;
+    }
+    w.write_all(&MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&flags.to_le_bytes())?;
+    w.write_all(&(coo.n() as u64).to_le_bytes())?;
+    w.write_all(&(coo.m() as u64).to_le_bytes())?;
+    write_u32s(&mut w, &coo.src)?;
+    write_u32s(&mut w, &coo.dst)?;
+    if let Some(v) = &coo.vals {
+        // f32 and u32 share size/alignment; serialize the bit patterns.
+        write_f32s(&mut w, v)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Sidecar path for a text source in the default (preserve-ids / mtx)
+/// mode: the full file name plus `.bcoo` (`graph.mtx` →
+/// `graph.mtx.bcoo`), so different extensions never collide.
+pub fn sidecar_path(path: &Path) -> PathBuf {
+    sidecar_path_for(path, false)
+}
+
+/// Sidecar path for a given relabeling mode. The two `.el` modes cache
+/// under different names (`g.el.bcoo` vs `g.el.dense.bcoo`) so
+/// consumers that disagree on `preserve_ids` (the CLI defaults to
+/// dense, the registry/repro to preserve) each keep a warm cache
+/// instead of invalidating the other's on every load.
+pub fn sidecar_path_for(path: &Path, dense: bool) -> PathBuf {
+    let mut name = path.as_os_str().to_os_string();
+    name.push(if dense { ".dense.bcoo" } else { ".bcoo" });
+    PathBuf::from(name)
+}
+
+/// True unless `BOBA_NO_BCOO_CACHE` disables the sidecar cache.
+pub fn cache_enabled() -> bool {
+    match std::env::var("BOBA_NO_BCOO_CACHE") {
+        Ok(v) => v.is_empty() || v == "0",
+        Err(_) => true,
+    }
+}
+
+/// Load the sidecar for `path` if it exists, is **strictly newer**
+/// than the source, parses cleanly, and was written for the same
+/// relabeling mode. Strict ordering is the conservative side of coarse
+/// filesystem timestamps: a source rewritten within the mtime
+/// granularity of the sidecar write re-parses (wasted work) instead of
+/// serving the old graph (wrong result). Any failure means "re-parse
+/// the text" — never an error.
+pub(crate) fn try_sidecar(path: &Path, dense: bool) -> Option<Coo> {
+    let sc = sidecar_path_for(path, dense);
+    let source_mtime = mtime(path)?;
+    let sidecar_mtime = mtime(&sc)?;
+    if sidecar_mtime <= source_mtime {
+        return None; // stale (or indistinguishable from stale)
+    }
+    let (coo, flags) = read_bcoo_flagged(&sc).ok()?;
+    ((flags & FLAG_DENSE != 0) == dense).then_some(coo)
+}
+
+/// Per-write tmp-name discriminator: the pid alone is not unique
+/// within a process, and the server registry's prepare path can race
+/// two threads onto the same sidecar (`GraphRegistry::get_or_prepare`
+/// runs prepares outside the lock).
+static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Best-effort sidecar write: to a uniquely-named temp file, then an
+/// atomic rename so concurrent readers and racing writers (the server
+/// registry's worker threads) never see a half-written cache. Failures
+/// (read-only dir, full disk) are swallowed — the cache is an
+/// optimization, not a deliverable.
+pub(crate) fn write_sidecar(coo: &Coo, path: &Path, dense: bool) {
+    let sc = sidecar_path_for(path, dense);
+    let tmp = {
+        let mut name = sc.as_os_str().to_os_string();
+        let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        name.push(format!(".tmp{}.{seq}", std::process::id()));
+        PathBuf::from(name)
+    };
+    let flags = if dense { FLAG_DENSE } else { 0 };
+    if write_bcoo_flagged(coo, &tmp, flags).is_ok() {
+        if std::fs::rename(&tmp, &sc).is_err() {
+            std::fs::remove_file(&tmp).ok();
+        }
+    } else {
+        std::fs::remove_file(&tmp).ok();
+    }
+}
+
+fn mtime(p: &Path) -> Option<std::time::SystemTime> {
+    std::fs::metadata(p).ok()?.modified().ok()
+}
+
+fn u32s_from_le(bytes: &[u8]) -> Vec<u32> {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    let n = bytes.len() / 4;
+    if cfg!(target_endian = "little") {
+        let mut v: Vec<u32> = Vec::with_capacity(n);
+        // SAFETY: the reservation holds n u32s = bytes.len() bytes, the
+        // ranges don't overlap, and on a little-endian target the byte
+        // image of [u32] is the on-disk layout.
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), v.as_mut_ptr() as *mut u8, bytes.len());
+            v.set_len(n);
+        }
+        v
+    } else {
+        bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+}
+
+fn f32s_from_le(bytes: &[u8]) -> Vec<f32> {
+    u32s_from_le(bytes).into_iter().map(f32::from_bits).collect()
+}
+
+fn write_u32s(w: &mut impl Write, v: &[u32]) -> std::io::Result<()> {
+    if cfg!(target_endian = "little") {
+        // SAFETY: reinterpreting [u32] as its byte image is always
+        // valid (alignment only loosens), and on little-endian the
+        // image is the on-disk layout.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+        w.write_all(bytes)
+    } else {
+        let mut buf = Vec::with_capacity(4 << 10);
+        for chunk in v.chunks(1 << 10) {
+            buf.clear();
+            for x in chunk {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            w.write_all(&buf)?;
+        }
+        Ok(())
+    }
+}
+
+fn write_f32s(w: &mut impl Write, v: &[f32]) -> std::io::Result<()> {
+    if cfg!(target_endian = "little") {
+        // SAFETY: same as write_u32s — f32 has the same size/alignment.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+        w.write_all(bytes)
+    } else {
+        let mut buf = Vec::with_capacity(4 << 10);
+        for chunk in v.chunks(1 << 10) {
+            buf.clear();
+            for x in chunk {
+                buf.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+            w.write_all(&buf)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("boba_bcoo_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_unweighted_and_weighted() {
+        let g = Coo::new(5, vec![0, 4, 2, 2], vec![1, 0, 3, 2]);
+        let p = tmp("rt.bcoo");
+        write_bcoo(&g, &p).unwrap();
+        assert_eq!(read_bcoo(&p).unwrap(), g);
+        let w = Coo::with_vals(3, vec![0, 2], vec![1, 0], vec![1.5, -0.25]);
+        write_bcoo(&w, &p).unwrap();
+        assert_eq!(read_bcoo(&p).unwrap(), w);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn roundtrip_empty_graph_keeps_n() {
+        let g = Coo::new(7, vec![], vec![]);
+        let p = tmp("empty.bcoo");
+        write_bcoo(&g, &p).unwrap();
+        assert_eq!(read_bcoo(&p).unwrap(), g);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_truncation_and_bounds() {
+        let g = Coo::new(3, vec![0, 1], vec![1, 2]);
+        let p = tmp("bad.bcoo");
+        write_bcoo(&g, &p).unwrap();
+        let good = std::fs::read(&p).unwrap();
+
+        let chain = |p: &Path| format!("{:#}", read_bcoo(p).unwrap_err());
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        std::fs::write(&p, &bad).unwrap();
+        assert!(chain(&p).contains("magic"));
+
+        let mut bad = good.clone();
+        bad[4] = 99; // version
+        std::fs::write(&p, &bad).unwrap();
+        assert!(chain(&p).contains("version"));
+
+        std::fs::write(&p, &good[..good.len() - 3]).unwrap();
+        assert!(chain(&p).contains("truncated"));
+
+        let mut bad = good.clone();
+        bad[HEADER_LEN] = 200; // src[0] = 200 ≥ n = 3
+        std::fs::write(&p, &bad).unwrap();
+        assert!(chain(&p).contains("out of range"));
+
+        std::fs::write(&p, b"BC").unwrap();
+        assert!(read_bcoo(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn sidecar_path_appends_full_extension_and_keys_by_mode() {
+        assert_eq!(
+            sidecar_path(Path::new("/x/graph.mtx")),
+            PathBuf::from("/x/graph.mtx.bcoo")
+        );
+        assert_eq!(sidecar_path(Path::new("g.el")), PathBuf::from("g.el.bcoo"));
+        assert_eq!(
+            sidecar_path_for(Path::new("g.el"), true),
+            PathBuf::from("g.el.dense.bcoo"),
+            "dense mode caches under its own name"
+        );
+        assert_eq!(sidecar_path_for(Path::new("g.el"), false), sidecar_path(Path::new("g.el")));
+    }
+}

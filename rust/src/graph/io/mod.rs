@@ -1,0 +1,961 @@
+//! Graph file ingest: Matrix Market (`.mtx`), plain edge lists
+//! (`.el`), and the binary [`bcoo`] sidecar format — the pipeline's
+//! front door, and a measured stage of it.
+//!
+//! The paper measures *end-to-end* graph-creation time, and for text
+//! inputs the load stage dominates once reordering and conversion are
+//! parallel. These readers therefore never touch `BufReader::lines()`:
+//! a file is read into one `Vec<u8>`, split at newline boundaries into
+//! per-worker ranges, and parsed straight from the bytes (no per-line
+//! `String`, no UTF-8 validation, no `str::parse` in the hot loop —
+//! see [`parse`](self) internals) on the [`crate::parallel`] worker
+//! pool. Per-worker `(src, dst, vals)` buffers are stitched by
+//! [`crate::parallel::par_concat`], so **output order equals file
+//! order at every thread count** — the same determinism contract the
+//! parallel COO→CSR converters honour. Symmetric-`.mtx` mirroring
+//! happens inside each worker (mirror follows its original, exactly
+//! like the sequential reader), and `.el` dense relabeling derives
+//! first-appearance order from a rank-then-remap pass over per-worker
+//! first-position maps.
+//!
+//! Matching the paper's workflow observation, `read_*` functions return
+//! **COO** — conversion to CSR is an explicit, measured pipeline stage
+//! (`crate::convert`), never hidden inside the reader.
+//!
+//! Repeated loads skip text entirely: [`load_graph_file`] consults the
+//! write-once `.bcoo` sidecar cache ([`bcoo`] — raw little-endian
+//! arrays, loaded at memcpy speed) and falls back to the parallel text
+//! parse, writing the sidecar for next time.
+
+pub mod bcoo;
+mod parse;
+
+use super::coo::Coo;
+use crate::parallel;
+use anyhow::{bail, Context};
+use parse::{is_ws, parse_f32_token, parse_int_token, parse_u64_at, skip_ws, token_end};
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+// ───────────────────────── shared machinery ──────────────────────────
+
+/// Iterator over the lines of `bytes[at..hi)`: yields
+/// `(line_start_offset, line)` with the trailing `\n` (and a `\r`
+/// before it, for CRLF files) stripped. The final line needs no
+/// trailing newline.
+struct LineIter<'a> {
+    bytes: &'a [u8],
+    at: usize,
+    hi: usize,
+}
+
+impl<'a> Iterator for LineIter<'a> {
+    type Item = (usize, &'a [u8]);
+
+    fn next(&mut self) -> Option<(usize, &'a [u8])> {
+        if self.at >= self.hi {
+            return None;
+        }
+        let start = self.at;
+        let mut end = start;
+        while end < self.hi && self.bytes[end] != b'\n' {
+            end += 1;
+        }
+        self.at = end + 1;
+        let mut line_end = end;
+        if line_end > start && self.bytes[line_end - 1] == b'\r' {
+            line_end -= 1;
+        }
+        Some((start, &self.bytes[start..line_end]))
+    }
+}
+
+/// Strip leading/trailing horizontal whitespace.
+fn trim(line: &[u8]) -> &[u8] {
+    let mut lo = 0;
+    let mut hi = line.len();
+    while lo < hi && is_ws(line[lo]) {
+        lo += 1;
+    }
+    while hi > lo && is_ws(line[hi - 1]) {
+        hi -= 1;
+    }
+    &line[lo..hi]
+}
+
+/// 1-based line number of byte `offset` (error paths only — errors are
+/// reported with the line they occurred on, computed lazily so the hot
+/// path never counts newlines).
+fn line_no(bytes: &[u8], offset: usize) -> usize {
+    bytes[..offset.min(bytes.len())].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+/// A parse failure inside a worker's range: byte offset of the line it
+/// occurred on plus the message. Ranges race, so the caller reports the
+/// failure with the *smallest* offset — the same error a sequential
+/// scan would have hit first, at every thread count.
+struct PErr {
+    at: usize,
+    msg: String,
+}
+
+impl PErr {
+    fn new(at: usize, msg: impl Into<String>) -> Self {
+        Self { at, msg: msg.into() }
+    }
+}
+
+/// Parse one integer token at `t[i..]` (optional leading `+`, like
+/// `str::parse`), requiring a whitespace/EOL boundary after it so
+/// `12x3` is junk, not 12. `what` names the token in both diagnostics;
+/// `off` is the line's byte offset for error reporting.
+fn expect_int(t: &[u8], i: usize, off: usize, what: &str) -> Result<(u64, usize), PErr> {
+    let Some((v, ni)) = parse_int_token(t, i) else {
+        return Err(PErr::new(off, format!(
+            "expected integer {what} in {:?}",
+            String::from_utf8_lossy(t)
+        )));
+    };
+    if ni < t.len() && !is_ws(t[ni]) {
+        return Err(PErr::new(off, format!(
+            "junk after {what} in {:?}",
+            String::from_utf8_lossy(t)
+        )));
+    }
+    Ok((v, ni))
+}
+
+/// Split `bytes[start..]` into up to `parts` contiguous ranges whose
+/// boundaries sit just past a newline, so no line spans two ranges and
+/// concatenating per-range output in range order reproduces file order.
+fn newline_ranges(bytes: &[u8], start: usize, parts: usize) -> Vec<(usize, usize)> {
+    let len = bytes.len();
+    if start >= len {
+        return Vec::new();
+    }
+    let parts = parts.max(1);
+    let step = (len - start).div_ceil(parts);
+    let mut ranges = Vec::with_capacity(parts);
+    let mut lo = start;
+    while lo < len {
+        let mut hi = (lo + step).min(len);
+        while hi < len && bytes[hi - 1] != b'\n' {
+            hi += 1;
+        }
+        ranges.push((lo, hi));
+        lo = hi;
+    }
+    ranges
+}
+
+/// Worker count for a data section: one range (sequential, no dispatch)
+/// below 64 KiB — at that size dispatch overhead beats the win — else
+/// one range per pool worker.
+fn ingest_parts(data_len: usize) -> usize {
+    if data_len < (1 << 16) {
+        1
+    } else {
+        parallel::threads()
+    }
+}
+
+/// Fold per-range results, keeping parsed chunks in range order and the
+/// earliest (smallest-offset) error if any range failed.
+fn collect_chunks<T>(results: Vec<Result<T, PErr>>, bytes: &[u8]) -> anyhow::Result<Vec<T>> {
+    let mut chunks = Vec::with_capacity(results.len());
+    let mut first_err: Option<PErr> = None;
+    for r in results {
+        match r {
+            Ok(c) => chunks.push(c),
+            Err(e) => {
+                if first_err.as_ref().map_or(true, |f| e.at < f.at) {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        bail!("line {}: {}", line_no(bytes, e.at), e.msg);
+    }
+    Ok(chunks)
+}
+
+// ───────────────────────── Matrix Market ─────────────────────────────
+
+/// Read a Matrix Market coordinate file into COO, parsing the data
+/// section in parallel (see the module docs for the determinism
+/// contract).
+///
+/// Supports `matrix coordinate (pattern|real|integer) (general|symmetric)`.
+/// Symmetric files get their mirrored edges materialized (like SciPy's
+/// `mmread` + `coo_matrix`). 1-based indices are converted to 0-based.
+pub fn read_matrix_market(path: &Path) -> anyhow::Result<Coo> {
+    let bytes = std::fs::read(path)?;
+    parse_matrix_market(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Parse Matrix Market bytes (the file already in memory). Split out of
+/// [`read_matrix_market`] so benches can time parsing without disk.
+pub fn parse_matrix_market(bytes: &[u8]) -> anyhow::Result<Coo> {
+    let mut lines = LineIter { bytes, at: 0, hi: bytes.len() };
+    let (_, header) = lines.next().ok_or_else(|| anyhow::anyhow!("empty file"))?;
+    let header_s = String::from_utf8_lossy(header);
+    let h: Vec<&str> = header_s.split_whitespace().collect();
+    if h.len() < 5 || !h[0].starts_with("%%MatrixMarket") {
+        bail!("not a MatrixMarket file: {header_s:?}");
+    }
+    if h[1] != "matrix" || h[2] != "coordinate" {
+        bail!("only 'matrix coordinate' supported, got {header_s:?}");
+    }
+    let field = h[3]; // pattern | real | integer
+    let symmetry = h[4]; // general | symmetric
+    if !matches!(field, "pattern" | "real" | "integer") {
+        bail!("unsupported field type {field}");
+    }
+    if !matches!(symmetry, "general" | "symmetric") {
+        bail!("unsupported symmetry {symmetry}");
+    }
+    let pattern = field == "pattern";
+    let symmetric = symmetry == "symmetric";
+
+    // Skip comments; first data line is "rows cols nnz". A malformed
+    // size line is a proper error naming the line, never a panic.
+    let (r, c, _nnz) = loop {
+        let Some((off, line)) = lines.next() else {
+            bail!("missing size line");
+        };
+        let t = trim(line);
+        if t.is_empty() || t[0] == b'%' {
+            continue;
+        }
+        let Some(dims) = parse_size_line(t) else {
+            bail!(
+                "line {}: malformed MatrixMarket size line {:?} (expected \"rows cols nnz\")",
+                line_no(bytes, off),
+                String::from_utf8_lossy(line)
+            );
+        };
+        break dims;
+    };
+    let data_start = lines.at.min(bytes.len());
+
+    let ranges = newline_ranges(bytes, data_start, ingest_parts(bytes.len() - data_start));
+    let results: Vec<Result<MtxChunk, PErr>> = if ranges.len() <= 1 {
+        ranges
+            .iter()
+            .map(|&(lo, hi)| parse_mtx_range(bytes, lo, hi, pattern, symmetric))
+            .collect()
+    } else {
+        parallel::par_jobs(
+            ranges
+                .iter()
+                .map(|&(lo, hi)| move || parse_mtx_range(bytes, lo, hi, pattern, symmetric))
+                .collect(),
+        )
+    };
+    let chunks = collect_chunks(results, bytes)?;
+
+    // Move, don't clone: chunks is consumed field-by-field below. A
+    // lone chunk (small file, or one worker) is moved out whole — no
+    // point memcpying the arrays through the gather.
+    let (mut srcs, mut dsts, mut valss) = (Vec::new(), Vec::new(), Vec::new());
+    for c in chunks {
+        srcs.push(c.src);
+        dsts.push(c.dst);
+        valss.push(c.vals);
+    }
+    let (src, dst, vals) = if srcs.len() == 1 {
+        let vals = (!pattern).then(|| valss.pop().unwrap());
+        (srcs.pop().unwrap(), dsts.pop().unwrap(), vals)
+    } else {
+        (
+            parallel::par_concat(&srcs),
+            parallel::par_concat(&dsts),
+            (!pattern).then(|| parallel::par_concat(&valss)),
+        )
+    };
+
+    let n = r.max(c);
+    // Struct literal, not Coo::new: an out-of-range index in the file
+    // must surface as validate()'s error, not a debug_assert panic.
+    let coo = Coo { n, src, dst, vals };
+    coo.validate()?;
+    Ok(coo)
+}
+
+/// Parse `rows cols nnz` (extra trailing tokens tolerated, as before).
+fn parse_size_line(t: &[u8]) -> Option<(usize, usize, usize)> {
+    let mut i = skip_ws(t, 0);
+    let mut out = [0u64; 3];
+    for slot in &mut out {
+        let (v, ni) = parse_int_token(t, i)?;
+        if ni < t.len() && !is_ws(t[ni]) {
+            return None; // junk glued to the number
+        }
+        *slot = v;
+        i = skip_ws(t, ni);
+    }
+    Some((out[0] as usize, out[1] as usize, out[2] as usize))
+}
+
+/// One worker's share of a Matrix Market data section.
+struct MtxChunk {
+    src: Vec<u32>,
+    dst: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+fn parse_mtx_range(
+    bytes: &[u8],
+    lo: usize,
+    hi: usize,
+    pattern: bool,
+    symmetric: bool,
+) -> Result<MtxChunk, PErr> {
+    // ~"1 2\n" is 4 bytes; an eighth of the range is a conservative
+    // line-count guess that avoids most regrows without overshooting.
+    let est = (hi - lo) / 8 + 4;
+    let cap = if symmetric { est * 2 } else { est };
+    let mut src = Vec::with_capacity(cap);
+    let mut dst = Vec::with_capacity(cap);
+    let mut vals = Vec::with_capacity(if pattern { 0 } else { cap });
+    for (off, line) in (LineIter { bytes, at: lo, hi }) {
+        let t = trim(line);
+        if t.is_empty() || t[0] == b'%' {
+            continue;
+        }
+        let i0 = skip_ws(t, 0);
+        let (iv, n1) = expect_int(t, i0, off, "row index")?;
+        let i1 = skip_ws(t, n1);
+        if i1 >= t.len() {
+            return Err(PErr::new(off, "short line".to_string()));
+        }
+        let (jv, n2) = expect_int(t, i1, off, "column index")?;
+        if iv == 0 || jv == 0 {
+            return Err(PErr::new(off, "MatrixMarket indices are 1-based; found 0"));
+        }
+        if iv > u32::MAX as u64 + 1 || jv > u32::MAX as u64 + 1 {
+            return Err(PErr::new(off, format!("vertex index {} exceeds the u32 range", iv.max(jv))));
+        }
+        src.push((iv - 1) as u32);
+        dst.push((jv - 1) as u32);
+        if !pattern {
+            let i2 = skip_ws(t, n2);
+            let v = if i2 >= t.len() {
+                1.0 // value column omitted, as mmread tolerates
+            } else {
+                let end = token_end(t, i2);
+                match parse_f32_token(&t[i2..end]) {
+                    Some(v) => v,
+                    None => {
+                        return Err(PErr::new(off, format!(
+                            "bad value token {:?}",
+                            String::from_utf8_lossy(&t[i2..end])
+                        )));
+                    }
+                }
+            };
+            vals.push(v);
+        }
+        if symmetric && iv != jv {
+            src.push((jv - 1) as u32);
+            dst.push((iv - 1) as u32);
+            if !pattern {
+                vals.push(*vals.last().unwrap());
+            }
+        }
+    }
+    Ok(MtxChunk { src, dst, vals })
+}
+
+/// Write COO as MatrixMarket `matrix coordinate real general`
+/// (`pattern` when unweighted). Edges are formatted into a reusable
+/// byte buffer and written in ~64 KiB batches — no per-edge formatter
+/// + syscall round trip; output is byte-identical to the old
+/// per-`writeln!` writer.
+pub fn write_matrix_market(coo: &Coo, path: &Path) -> anyhow::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    let field = if coo.vals.is_some() { "real" } else { "pattern" };
+    let mut buf: Vec<u8> = Vec::with_capacity(FLUSH_AT + 64);
+    writeln!(buf, "%%MatrixMarket matrix coordinate {field} general")?;
+    writeln!(buf, "% written by boba (BOBA reproduction)")?;
+    writeln!(buf, "{} {} {}", coo.n(), coo.n(), coo.m())?;
+    match &coo.vals {
+        Some(v) => {
+            for i in 0..coo.m() {
+                push_uint(&mut buf, coo.src[i] as u64 + 1);
+                buf.push(b' ');
+                push_uint(&mut buf, coo.dst[i] as u64 + 1);
+                buf.push(b' ');
+                write!(buf, "{}", v[i])?;
+                buf.push(b'\n');
+                flush_if_full(&mut f, &mut buf)?;
+            }
+        }
+        None => {
+            for i in 0..coo.m() {
+                push_uint(&mut buf, coo.src[i] as u64 + 1);
+                buf.push(b' ');
+                push_uint(&mut buf, coo.dst[i] as u64 + 1);
+                buf.push(b'\n');
+                flush_if_full(&mut f, &mut buf)?;
+            }
+        }
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+const FLUSH_AT: usize = 1 << 16;
+
+#[inline]
+fn flush_if_full(f: &mut std::fs::File, buf: &mut Vec<u8>) -> std::io::Result<()> {
+    if buf.len() >= FLUSH_AT {
+        f.write_all(buf)?;
+        buf.clear();
+    }
+    Ok(())
+}
+
+/// Append a decimal integer (same bytes `Display` would produce).
+#[inline]
+fn push_uint(buf: &mut Vec<u8>, mut v: u64) {
+    let mut tmp = [0u8; 20];
+    let mut i = tmp.len();
+    loop {
+        i -= 1;
+        tmp[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
+    }
+    buf.extend_from_slice(&tmp[i..]);
+}
+
+// ───────────────────────── edge lists ────────────────────────────────
+
+/// Read a whitespace-separated edge list (`u v` per line, `#` comments),
+/// SNAP style, parsing in parallel. IDs need not be dense: they are
+/// *relabeled to a dense 0..n range in first-appearance order* — which
+/// is exactly a sequential BOBA pass (the paper's observation that
+/// pipelines that must renumber anyway get BOBA for free); the parallel
+/// reader reproduces that order exactly via a rank-then-remap pass
+/// (per-worker first-position maps, min-merged, ranked by position).
+/// Set `preserve_ids = true` to instead keep numeric IDs (n = max + 1,
+/// or the header's `n=` if larger — so a [`write_edge_list`] round-trip
+/// preserves trailing isolated vertices).
+pub fn read_edge_list(path: &Path, preserve_ids: bool) -> anyhow::Result<Coo> {
+    let bytes = std::fs::read(path)?;
+    parse_edge_list(&bytes, preserve_ids)
+        .with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Parse edge-list bytes (the file already in memory). Split out of
+/// [`read_edge_list`] so benches can time parsing without disk.
+pub fn parse_edge_list(bytes: &[u8], preserve_ids: bool) -> anyhow::Result<Coo> {
+    let ranges = newline_ranges(bytes, 0, ingest_parts(bytes.len()));
+    let results: Vec<Result<ElChunk, PErr>> = if ranges.len() <= 1 {
+        ranges.iter().map(|&(lo, hi)| parse_el_range(bytes, lo, hi)).collect()
+    } else {
+        parallel::par_jobs(
+            ranges.iter().map(|&(lo, hi)| move || parse_el_range(bytes, lo, hi)).collect(),
+        )
+    };
+    let chunks = collect_chunks(results, bytes)?;
+
+    // Our own writer records `n=` in a comment; the first boundary match
+    // in file order wins, exactly as the sequential scan found it.
+    let header_n = chunks
+        .iter()
+        .filter_map(|c| c.header_n)
+        .min_by_key(|&(off, _)| off)
+        .map(|(_, n)| n);
+
+    if preserve_ids {
+        let max_id = chunks.iter().filter(|c| !c.src.is_empty()).map(|c| c.max_id).max();
+        if let Some(mx) = max_id {
+            if mx > u32::MAX as u64 {
+                bail!("vertex id {mx} exceeds the u32 vertex-id range");
+            }
+        }
+        let n_ids = max_id.map_or(0, |mx| mx as usize + 1);
+        let n = n_ids.max(header_n.unwrap_or(0));
+        // Gather + narrow in one pass (every id was range-checked above).
+        let src_chunks: Vec<&[u64]> = chunks.iter().map(|c| c.src.as_slice()).collect();
+        let dst_chunks: Vec<&[u64]> = chunks.iter().map(|c| c.dst.as_slice()).collect();
+        let src = parallel::par_concat_map(&src_chunks, |&v| v as u32);
+        let dst = parallel::par_concat_map(&dst_chunks, |&v| v as u32);
+        return Ok(Coo { n, src, dst, vals: None });
+    }
+
+    // Dense relabel in first-appearance order over I++J — BOBA order.
+    // A lone chunk is moved out whole instead of copied through the
+    // gather (same fast path as the mtx stitch).
+    let (mut srcs, mut dsts) = (Vec::new(), Vec::new());
+    for c in chunks {
+        srcs.push(c.src);
+        dsts.push(c.dst);
+    }
+    let (src_raw, dst_raw) = if srcs.len() == 1 {
+        (srcs.pop().unwrap(), dsts.pop().unwrap())
+    } else {
+        (parallel::par_concat(&srcs), parallel::par_concat(&dsts))
+    };
+    let (n, src, dst) = dense_relabel(&src_raw, &dst_raw)?;
+    Ok(Coo { n, src, dst, vals: None })
+}
+
+/// One worker's share of an edge-list file.
+struct ElChunk {
+    src: Vec<u64>,
+    dst: Vec<u64>,
+    /// Max endpoint id in this chunk (meaningful only when non-empty).
+    max_id: u64,
+    /// First boundary-matched `n=N` header comment: (byte offset, N).
+    header_n: Option<(usize, usize)>,
+}
+
+fn parse_el_range(bytes: &[u8], lo: usize, hi: usize) -> Result<ElChunk, PErr> {
+    let est = (hi - lo) / 8 + 4;
+    let mut src = Vec::with_capacity(est);
+    let mut dst = Vec::with_capacity(est);
+    let mut max_id = 0u64;
+    let mut header_n: Option<(usize, usize)> = None;
+    for (off, line) in (LineIter { bytes, at: lo, hi }) {
+        let t = trim(line);
+        if t.is_empty() || t[0] == b'#' || t[0] == b'%' {
+            if header_n.is_none() {
+                if let Some(n) = scan_header_n(t) {
+                    header_n = Some((off, n));
+                }
+            }
+            continue;
+        }
+        let i0 = skip_ws(t, 0);
+        let (u, n1) = expect_int(t, i0, off, "endpoint")?;
+        let i1 = skip_ws(t, n1);
+        if i1 >= t.len() {
+            return Err(PErr::new(off, format!(
+                "edge line with one endpoint: {:?}",
+                String::from_utf8_lossy(t)
+            )));
+        }
+        let (v, n2) = expect_int(t, i1, off, "endpoint")?;
+        max_id = max_id.max(u).max(v);
+        src.push(u);
+        dst.push(v);
+    }
+    Ok(ElChunk { src, dst, max_id, header_n })
+}
+
+/// Scan a comment line for a token-boundary `n=DIGITS` (our writer's
+/// header). Only a boundary match counts — `min=`/`mean=` in
+/// third-party headers must not be misread as a vertex count.
+fn scan_header_n(t: &[u8]) -> Option<usize> {
+    let mut at = 0usize;
+    while at + 1 < t.len() {
+        if t[at] == b'n' && t[at + 1] == b'=' {
+            let at_boundary =
+                at == 0 || matches!(t[at - 1], b' ' | b'\t' | b'#' | b':');
+            if at_boundary {
+                if let Some((v, _)) = parse_u64_at(t, at + 2) {
+                    if v <= usize::MAX as u64 {
+                        return Some(v as usize);
+                    }
+                }
+            }
+        }
+        at += 1;
+    }
+    None
+}
+
+/// Rank-then-remap dense relabeling: compute each distinct id's first
+/// position in the virtual `I ++ J` sequence (per-worker maps over
+/// position ranges, min-merged), sort ids by that rank to assign dense
+/// labels, then remap both arrays in parallel. Produces exactly the
+/// labels a sequential first-appearance scan assigns.
+fn dense_relabel(
+    src_raw: &[u64],
+    dst_raw: &[u64],
+) -> anyhow::Result<(usize, Vec<u32>, Vec<u32>)> {
+    let m = src_raw.len();
+    let total = 2 * m;
+    let parts = if total < (1 << 16) { 1 } else { parallel::threads() };
+    let step = total.div_ceil(parts.max(1)).max(1);
+    let maps: Vec<HashMap<u64, u64>> = parallel::par_jobs(
+        (0..parts)
+            .map(|k| {
+                let (lo, hi) = ((k * step).min(total), ((k + 1) * step).min(total));
+                move || {
+                    let mut first = HashMap::new();
+                    for p in lo..hi {
+                        let id = if p < m { src_raw[p] } else { dst_raw[p - m] };
+                        first.entry(id).or_insert(p as u64);
+                    }
+                    first
+                }
+            })
+            .collect(),
+    );
+    let mut first: HashMap<u64, u64> = HashMap::new();
+    for map in maps {
+        for (id, pos) in map {
+            first
+                .entry(id)
+                .and_modify(|p| *p = (*p).min(pos))
+                .or_insert(pos);
+        }
+    }
+    let mut order: Vec<(u64, u64)> = first.iter().map(|(&id, &pos)| (pos, id)).collect();
+    order.sort_unstable();
+    let n = order.len();
+    if n > u32::MAX as usize + 1 {
+        bail!("{n} distinct vertex ids exceed the u32 label range");
+    }
+    // Reuse the first-position map as the label map (overwrite values
+    // with ranks) instead of building and re-hashing a second
+    // HashMap of the same cardinality.
+    for (rank, &(_, id)) in order.iter().enumerate() {
+        *first.get_mut(&id).expect("id came from this map") = rank as u64;
+    }
+    let label = first;
+    let chunk = parallel::default_chunk(m);
+    let src = parallel::par_map_chunks(m, chunk, |lo, _hi, out| {
+        for (k, slot) in out.iter_mut().enumerate() {
+            *slot = label[&src_raw[lo + k]] as u32;
+        }
+    });
+    let dst = parallel::par_map_chunks(m, chunk, |lo, _hi, out| {
+        for (k, slot) in out.iter_mut().enumerate() {
+            *slot = label[&dst_raw[lo + k]] as u32;
+        }
+    });
+    Ok((n, src, dst))
+}
+
+/// Write a plain `u v` edge list, batched like [`write_matrix_market`]
+/// (byte-identical output to the old per-`writeln!` writer).
+pub fn write_edge_list(coo: &Coo, path: &Path) -> anyhow::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    let mut buf: Vec<u8> = Vec::with_capacity(FLUSH_AT + 64);
+    writeln!(buf, "# boba edge list: n={} m={}", coo.n(), coo.m())?;
+    for i in 0..coo.m() {
+        push_uint(&mut buf, coo.src[i] as u64);
+        buf.push(b' ');
+        push_uint(&mut buf, coo.dst[i] as u64);
+        buf.push(b'\n');
+        flush_if_full(&mut f, &mut buf)?;
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+// ───────────────────────── cached front door ─────────────────────────
+
+/// Load a graph file of any supported on-disk format: `.mtx`,
+/// `.el`/`.txt` (text, parsed in parallel), or `.bcoo` (binary,
+/// memcpy-speed). Text loads consult the write-once `.bcoo` sidecar
+/// cache — `graph.mtx` reads `graph.mtx.bcoo` when it is strictly
+/// newer than the source, and writes it (best-effort) after a text
+/// parse — unless `BOBA_NO_BCOO_CACHE=1` disables the cache.
+/// `preserve_ids` has the [`read_edge_list`] meaning and is part of
+/// the cache key (separate sidecar name per mode, plus a flag bit), so
+/// the two relabeling modes never cross-serve or thrash each other's
+/// cache.
+pub fn load_graph_file(path: &Path, preserve_ids: bool) -> anyhow::Result<Coo> {
+    if path.to_string_lossy().ends_with(".bcoo") {
+        return bcoo::read_bcoo(path);
+    }
+    let dense = text_dense_mode(path, preserve_ids);
+    if bcoo::cache_enabled() {
+        if let Some(coo) = bcoo::try_sidecar(path, dense) {
+            return Ok(coo);
+        }
+    }
+    let coo = parse_text_file(path, preserve_ids)?;
+    if bcoo::cache_enabled() {
+        bcoo::write_sidecar(&coo, path, dense);
+    }
+    Ok(coo)
+}
+
+/// The single place the text format-selection policy lives: `.mtx`
+/// goes to the Matrix Market reader, everything else is an edge list.
+/// Both [`load_graph_file`] and [`convert_to_bcoo`] dispatch through
+/// here so the policy cannot drift between them.
+fn parse_text_file(path: &Path, preserve_ids: bool) -> anyhow::Result<Coo> {
+    if path.to_string_lossy().ends_with(".mtx") {
+        read_matrix_market(path)
+    } else {
+        read_edge_list(path, preserve_ids)
+    }
+}
+
+/// Whether a text load of `path` produces a dense-relabeled graph —
+/// the sidecar cache key companion of [`parse_text_file`]'s dispatch.
+fn text_dense_mode(path: &Path, preserve_ids: bool) -> bool {
+    !path.to_string_lossy().ends_with(".mtx") && !preserve_ids
+}
+
+/// Explicitly convert a text graph file to `.bcoo` (the `boba
+/// convert-bcoo` subcommand). Writes to `out` when given, else to the
+/// mode's sidecar path (`graph.mtx` → `graph.mtx.bcoo`; a
+/// dense-relabeled `.el` → `g.el.dense.bcoo`), and returns the written
+/// path plus the parsed graph. Unlike the implicit cache this always
+/// writes, and write failures are errors.
+pub fn convert_to_bcoo(
+    path: &Path,
+    out: Option<&Path>,
+    preserve_ids: bool,
+) -> anyhow::Result<(PathBuf, Coo)> {
+    let name = path.to_string_lossy();
+    if name.ends_with(".bcoo") {
+        bail!("{name} already is a .bcoo file");
+    }
+    let dense = text_dense_mode(path, preserve_ids);
+    let coo = parse_text_file(path, preserve_ids)?;
+    let target =
+        out.map(Path::to_path_buf).unwrap_or_else(|| bcoo::sidecar_path_for(path, dense));
+    let flags = if dense { bcoo::FLAG_DENSE } else { 0 };
+    bcoo::write_bcoo_flagged(&coo, &target, flags)
+        .with_context(|| format!("writing {}", target.display()))?;
+    Ok((target, coo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("boba_io_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn mtx_roundtrip_pattern() {
+        let g = Coo::new(4, vec![0, 1, 2, 3], vec![1, 2, 3, 0]);
+        let p = tmp("rt.mtx");
+        write_matrix_market(&g, &p).unwrap();
+        let h = read_matrix_market(&p).unwrap();
+        assert_eq!(g, h);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mtx_roundtrip_real() {
+        let g = Coo::with_vals(3, vec![0, 2], vec![1, 0], vec![1.5, -2.0]);
+        let p = tmp("rtv.mtx");
+        write_matrix_market(&g, &p).unwrap();
+        let h = read_matrix_market(&p).unwrap();
+        assert_eq!(h.vals.as_ref().unwrap(), &vec![1.5, -2.0]);
+        assert_eq!(h.src, g.src);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mtx_symmetric_mirrors() {
+        let p = tmp("sym.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate pattern symmetric\n3 3 2\n2 1\n3 3\n",
+        )
+        .unwrap();
+        let g = read_matrix_market(&p).unwrap();
+        // (2,1) mirrored to (1,2); diagonal (3,3) not mirrored.
+        assert_eq!(g.m(), 3);
+        let set: std::collections::HashSet<_> = g.edges().collect();
+        assert!(set.contains(&(1, 0)) && set.contains(&(0, 1)) && set.contains(&(2, 2)));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mtx_rejects_garbage() {
+        let p = tmp("bad.mtx");
+        std::fs::write(&p, "hello world\n1 1 1\n").unwrap();
+        assert!(read_matrix_market(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mtx_malformed_size_line_errors_with_line_number() {
+        let p = tmp("badsize.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate pattern general\n% c\n3 three 9\n1 1\n",
+        )
+        .unwrap();
+        let err = format!("{:#}", read_matrix_market(&p).unwrap_err());
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("size line"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn edge_list_dense_relabel_is_first_appearance() {
+        let p = tmp("el.txt");
+        std::fs::write(&p, "# comment\n100 7\n7 100\n500 100\n").unwrap();
+        let g = read_edge_list(&p, false).unwrap();
+        // First appearances scanning I then J: 100→0, 7→1, 500→2.
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.src, vec![0, 1, 2]);
+        assert_eq!(g.dst, vec![1, 0, 0]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn edge_list_preserved_ids() {
+        let p = tmp("el2.txt");
+        std::fs::write(&p, "0 5\n2 3\n").unwrap();
+        let g = read_edge_list(&p, true).unwrap();
+        assert_eq!(g.n(), 6);
+        assert_eq!(g.src, vec![0, 2]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// Edge multiset (order-insensitive, multiplicity-sensitive).
+    fn edge_multiset(g: &Coo) -> std::collections::HashMap<(u32, u32), u32> {
+        let mut m = std::collections::HashMap::new();
+        for e in g.edges() {
+            *m.entry(e).or_insert(0u32) += 1;
+        }
+        m
+    }
+
+    #[test]
+    fn mtx_roundtrip_preserves_n_m_and_multiset() {
+        use crate::graph::gen;
+        // Generated graph with duplicate edges kept and an isolated
+        // trailing vertex (n > max id + 1).
+        let mut g = gen::preferential_attachment(500, 4, 11).randomized(12);
+        g.n += 3; // three isolated vertices
+        let p = tmp("full_rt.mtx");
+        write_matrix_market(&g, &p).unwrap();
+        let h = read_matrix_market(&p).unwrap();
+        assert_eq!(h.n(), g.n(), "n survives (dims line)");
+        assert_eq!(h.m(), g.m(), "m survives");
+        assert_eq!(edge_multiset(&h), edge_multiset(&g), "edge multiset survives");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mtx_on_disk_is_one_based() {
+        let g = Coo::new(3, vec![0, 2], vec![1, 0]);
+        let p = tmp("onebased.mtx");
+        write_matrix_market(&g, &p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let data: Vec<&str> = text
+            .lines()
+            .filter(|l| !l.starts_with('%'))
+            .skip(1) // dims line
+            .collect();
+        // Edge (0,1) is stored as "1 2", (2,0) as "3 1" — 1-based.
+        assert_eq!(data, vec!["1 2", "3 1"]);
+        // And reading converts back to 0-based.
+        let h = read_matrix_market(&p).unwrap();
+        assert_eq!(h.src, g.src);
+        assert_eq!(h.dst, g.dst);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mtx_roundtrip_weighted_multiset() {
+        let g = Coo::with_vals(
+            4,
+            vec![0, 1, 1, 3],
+            vec![1, 2, 2, 0],
+            vec![0.5, -1.25, 2.0, 8.0],
+        );
+        let p = tmp("wrt.mtx");
+        write_matrix_market(&g, &p).unwrap();
+        let h = read_matrix_market(&p).unwrap();
+        assert_eq!(h.n(), g.n());
+        assert_eq!(h.m(), g.m());
+        assert_eq!(edge_multiset(&h), edge_multiset(&g));
+        assert_eq!(h.vals, g.vals, "values follow their edges");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn edge_list_roundtrip_preserves_n_via_header() {
+        // n = 9 with max id 5: the trailing isolated vertices are only
+        // recorded in the writer's `n=` header comment.
+        let g = Coo::new(9, vec![0, 5, 2], vec![5, 2, 0]);
+        let p = tmp("hdr.el");
+        write_edge_list(&g, &p).unwrap();
+        let h = read_edge_list(&p, true).unwrap();
+        assert_eq!(h.n(), 9, "n survives via the header");
+        assert_eq!(h.m(), g.m());
+        assert_eq!(edge_multiset(&h), edge_multiset(&g));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn edge_list_header_ignores_non_boundary_matches() {
+        // `mean=` and `min=` contain "n=" but are not a vertex count.
+        let p = tmp("fake_hdr.el");
+        std::fs::write(&p, "# mean=3.5 min=900000\n0 1\n1 0\n").unwrap();
+        let g = read_edge_list(&p, true).unwrap();
+        assert_eq!(g.n(), 2, "no phantom vertices from mean=/min=");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = Coo::new(3, vec![0, 1, 2], vec![1, 2, 0]);
+        let p = tmp("rt.el");
+        write_edge_list(&g, &p).unwrap();
+        let h = read_edge_list(&p, true).unwrap();
+        assert_eq!(g, h);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn newline_ranges_tile_and_align() {
+        let text = b"aa\nbbbb\nc\n\ndddd\nee";
+        for parts in 1..8 {
+            let ranges = newline_ranges(text, 0, parts);
+            assert_eq!(ranges.first().map(|r| r.0), Some(0));
+            assert_eq!(ranges.last().map(|r| r.1), Some(text.len()));
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+                assert_eq!(text[w[0].1 - 1], b'\n', "boundary after newline");
+            }
+        }
+        assert!(newline_ranges(b"", 0, 4).is_empty());
+    }
+
+    #[test]
+    fn convert_to_bcoo_roundtrips_and_names_sidecar() {
+        let g = Coo::new(4, vec![0, 1, 3], vec![1, 2, 0]);
+        let p = tmp("conv.mtx");
+        write_matrix_market(&g, &p).unwrap();
+        let (out, parsed) = convert_to_bcoo(&p, None, true).unwrap();
+        assert_eq!(out, bcoo::sidecar_path(&p));
+        assert_eq!(parsed, g);
+        assert_eq!(bcoo::read_bcoo(&out).unwrap(), g);
+        // Already-binary input is rejected, not double-converted.
+        assert!(convert_to_bcoo(&out, None, true).is_err());
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(&out).ok();
+    }
+
+    #[test]
+    fn load_graph_file_reads_all_formats() {
+        let g = Coo::new(4, vec![0, 1, 3], vec![1, 2, 0]);
+        let mtx = tmp("lgf.mtx");
+        write_matrix_market(&g, &mtx).unwrap();
+        let sc = bcoo::sidecar_path(&mtx);
+        std::fs::remove_file(&sc).ok();
+        assert_eq!(load_graph_file(&mtx, true).unwrap(), g);
+        // The text parse wrote the sidecar; the second load takes it.
+        assert!(sc.exists(), "sidecar written after text parse");
+        assert_eq!(load_graph_file(&mtx, true).unwrap(), g);
+        assert_eq!(load_graph_file(&sc, true).unwrap(), g);
+        std::fs::remove_file(&mtx).ok();
+        std::fs::remove_file(&sc).ok();
+    }
+}

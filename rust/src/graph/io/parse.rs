@@ -1,0 +1,201 @@
+//! Byte-level numeric parsing for the ingest hot loop.
+//!
+//! The readers in [`super`] never materialize a per-line `String` and
+//! never run UTF-8 validation over edge data: a file is one `&[u8]`,
+//! lines are subslices, and numbers are decoded by the digit loops
+//! here. Integers are a plain checked accumulate; floats take a fast
+//! path that is *provably* correctly rounded (mantissa exact in `f32`,
+//! divided by an exactly-representable power of ten — one rounding
+//! total) and fall back to `str::parse` on the rare token outside that
+//! envelope (exponents, > 7 significant digits, inf/nan), so every
+//! accepted token decodes bit-identically to the old
+//! `BufReader::lines()` + `str::parse` readers.
+
+/// Horizontal whitespace inside a line (CR shows up when a CRLF file's
+/// lines are split on `\n` alone; it is trimmed by the line iterator,
+/// but tolerate it mid-scan too).
+#[inline]
+pub(crate) fn is_ws(b: u8) -> bool {
+    matches!(b, b' ' | b'\t' | b'\r')
+}
+
+/// First non-whitespace position at or after `i`.
+#[inline]
+pub(crate) fn skip_ws(s: &[u8], mut i: usize) -> usize {
+    while i < s.len() && is_ws(s[i]) {
+        i += 1;
+    }
+    i
+}
+
+/// Parse an unsigned decimal integer at `s[i..]`. Returns the value and
+/// the index one past the last digit; `None` on no digits or overflow.
+/// The caller checks that the next byte is whitespace/EOL, so `12x3`
+/// is a junk token, not the integer 12.
+#[inline]
+pub(crate) fn parse_u64_at(s: &[u8], mut i: usize) -> Option<(u64, usize)> {
+    let start = i;
+    let mut v: u64 = 0;
+    while i < s.len() && s[i].is_ascii_digit() {
+        v = v.checked_mul(10)?.checked_add((s[i] - b'0') as u64)?;
+        i += 1;
+    }
+    (i > start).then_some((v, i))
+}
+
+/// [`parse_u64_at`] with an optional leading `+` — Rust's integer
+/// `FromStr` accepts `+3`, so the data-line and size-line parsers must
+/// too to stay input-compatible with the old `str::parse` readers.
+/// (The `n=` header scan deliberately does NOT use this: the old code
+/// collected bare digits only, so `n=+5` was never a match.)
+#[inline]
+pub(crate) fn parse_int_token(s: &[u8], i: usize) -> Option<(u64, usize)> {
+    if i < s.len() && s[i] == b'+' {
+        return parse_u64_at(s, i + 1);
+    }
+    parse_u64_at(s, i)
+}
+
+/// End of the token starting at `i` (first whitespace byte or EOL).
+#[inline]
+pub(crate) fn token_end(s: &[u8], mut i: usize) -> usize {
+    while i < s.len() && !is_ws(s[i]) {
+        i += 1;
+    }
+    i
+}
+
+/// Exact powers of ten representable in `f32` (10^10 = 5^10 · 2^10 and
+/// 5^10 < 2^24, so every entry's significand fits in 24 bits).
+const POW10_F32: [f32; 11] = [
+    1e0, 1e1, 1e2, 1e3, 1e4, 1e5, 1e6, 1e7, 1e8, 1e9, 1e10,
+];
+
+/// Decode one float token, bit-identical to `tok.parse::<f32>()`.
+///
+/// Fast path: `sign? digits '.'? digits?` with the all-digits mantissa
+/// `< 2^24` and ≤ 10 fraction digits. Then mantissa and divisor are
+/// both exact in `f32` and the single division rounds once from the
+/// exact rational value — which is precisely the correctly-rounded
+/// result `str::parse` computes. Everything else (exponents, long
+/// mantissas, `inf`/`nan`) falls back to `str::parse` on the token
+/// slice, so the equivalence holds for every accepted input.
+pub(crate) fn parse_f32_token(tok: &[u8]) -> Option<f32> {
+    let (neg, body) = match tok.first()? {
+        b'-' => (true, &tok[1..]),
+        b'+' => (false, &tok[1..]),
+        _ => (false, &tok[..]),
+    };
+    let mut mant: u32 = 0;
+    let mut frac = 0usize;
+    let mut any_digit = false;
+    let mut seen_dot = false;
+    for &b in body {
+        match b {
+            b'0'..=b'9' => {
+                mant = mant * 10 + (b - b'0') as u32;
+                if mant >= 1 << 24 {
+                    return parse_f32_fallback(tok);
+                }
+                any_digit = true;
+                if seen_dot {
+                    frac += 1;
+                }
+            }
+            b'.' if !seen_dot => seen_dot = true,
+            _ => return parse_f32_fallback(tok),
+        }
+    }
+    if !any_digit || frac >= POW10_F32.len() {
+        return parse_f32_fallback(tok);
+    }
+    let v = mant as f32 / POW10_F32[frac];
+    Some(if neg { -v } else { v })
+}
+
+#[cold]
+fn parse_f32_fallback(tok: &[u8]) -> Option<f32> {
+    std::str::from_utf8(tok).ok()?.parse::<f32>().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_basics() {
+        assert_eq!(parse_u64_at(b"12345 7", 0), Some((12345, 5)));
+        assert_eq!(parse_u64_at(b"  42", 2), Some((42, 4)));
+        assert_eq!(parse_u64_at(b"x1", 0), None);
+        assert_eq!(parse_u64_at(b"", 0), None);
+        // Overflow is an error, not a wrap.
+        assert_eq!(parse_u64_at(b"99999999999999999999999", 0), None);
+        // The caller detects junk via the returned index.
+        let (v, at) = parse_u64_at(b"12x3", 0).unwrap();
+        assert_eq!((v, at), (12, 2));
+    }
+
+    #[test]
+    fn int_token_accepts_plus_like_from_str() {
+        assert_eq!(parse_int_token(b"+42", 0), Some((42, 3)));
+        assert_eq!(parse_int_token(b"42", 0), Some((42, 2)));
+        assert_eq!(parse_int_token(b"+", 0), None);
+        assert_eq!(parse_int_token(b"-3", 0), None, "u64 stays unsigned");
+        assert_eq!(parse_int_token(b"++1", 0), None);
+    }
+
+    #[test]
+    fn f32_matches_str_parse_exactly() {
+        // Fast-path shapes, fallback shapes, and signs — every one must
+        // be bit-identical to str::parse.
+        for s in [
+            "0", "1", "-1", "+1", "1.5", "-2.25", "0.1", "-0.1", "-0",
+            "123456.7", "0.0000000001", "16777215", "16777216", "1.",
+            ".5", "3.14159265358979", "1e-3", "2.5E+7", "-1e10", "inf",
+            "-inf", "1.17549435e-38", "3.4028235e38", "0.30000001",
+            "123456789", "9.999999999",
+        ] {
+            let want: f32 = s.parse().unwrap();
+            let got = parse_f32_token(s.as_bytes()).unwrap();
+            assert_eq!(got.to_bits(), want.to_bits(), "token {s:?}");
+        }
+        // NaN compares by bits, not ==.
+        let nan = parse_f32_token(b"NaN").unwrap();
+        assert_eq!(nan.to_bits(), "NaN".parse::<f32>().unwrap().to_bits());
+    }
+
+    #[test]
+    fn f32_rejects_junk() {
+        for s in ["", ".", "-", "+.", "1.2.3", "12a", "--1"] {
+            assert!(parse_f32_token(s.as_bytes()).is_none(), "token {s:?}");
+        }
+    }
+
+    #[test]
+    fn f32_exhaustive_fraction_sweep_vs_str_parse() {
+        // A dense sweep over the fast-path envelope boundary: values
+        // around 2^24 and many fraction widths.
+        for mant in [0u64, 1, 9, 16777215, 16777216, 16777217, 999999999] {
+            for frac in 0..12usize {
+                let s = if frac == 0 {
+                    format!("{mant}")
+                } else {
+                    let digits = format!("{mant:0>width$}", width = frac.max(1));
+                    let split = digits.len() - frac.min(digits.len());
+                    format!("{}.{}", &digits[..split], &digits[split..])
+                };
+                let want: f32 = s.parse().unwrap();
+                let got = parse_f32_token(s.as_bytes()).unwrap();
+                assert_eq!(got.to_bits(), want.to_bits(), "token {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn token_end_and_ws() {
+        let s = b"abc  def";
+        assert_eq!(token_end(s, 0), 3);
+        assert_eq!(skip_ws(s, 3), 5);
+        assert_eq!(token_end(s, 5), 8);
+    }
+}

@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   datasets                         print the Table-2 style inventory
-//!   generate  --dataset N --out F    build a dataset and write .mtx/.el
+//!   generate  --dataset N --out F    build a dataset and write .mtx/.el/.bcoo
+//!   convert-bcoo --in F [--out F]    convert a text graph to binary .bcoo
 //!   reorder   --algo S [--in F | --dataset N] [--out F]
 //!   convert   [--in F | --dataset N]             time COO→CSR
 //!   run       --app A [--algo S] [--in F | --dataset N]
@@ -60,10 +61,31 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
             let out = args.get_or("out", "graph.mtx");
             if out.ends_with(".mtx") {
                 io::write_matrix_market(&g, Path::new(&out))?;
+            } else if out.ends_with(".bcoo") {
+                io::bcoo::write_bcoo(&g, Path::new(&out))?;
             } else {
                 io::write_edge_list(&g, Path::new(&out))?;
             }
             println!("wrote {} (n={} m={})", out, g.n(), g.m());
+        }
+        Some("convert-bcoo") => {
+            // Explicit text → .bcoo conversion (the same binary format
+            // the sidecar cache writes implicitly); later loads of the
+            // output (or of the text next to it) skip parsing entirely.
+            let inp = args
+                .get("in")
+                .context("convert-bcoo needs --in FILE (.mtx, .el, or .txt)")?;
+            let out = args.get("out").map(Path::new);
+            let (written, g) =
+                io::convert_to_bcoo(Path::new(inp), out, args.flag("preserve-ids"))?;
+            println!(
+                "wrote {} (n={} m={}, {} bytes vs {} text)",
+                written.display(),
+                g.n(),
+                g.m(),
+                std::fs::metadata(&written).map(|m| m.len()).unwrap_or(0),
+                std::fs::metadata(inp).map(|m| m.len()).unwrap_or(0),
+            );
         }
         Some("reorder") => {
             let g = load_graph(args, seed)?.randomized(seed + 1);
@@ -205,8 +227,8 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         Some("spmv-pjrt") => spmv_pjrt(args, seed)?,
         _ => {
             eprintln!(
-                "usage: boba <datasets|generate|reorder|convert|run|pipeline|serve|loadgen|\
-                 repro|table1|table3|fig4|fig5|fig6|fig7|spmv-pjrt> [options]\n\
+                "usage: boba <datasets|generate|convert-bcoo|reorder|convert|run|pipeline|\
+                 serve|loadgen|repro|table1|table3|fig4|fig5|fig6|fig7|spmv-pjrt> [options]\n\
                  (see rust/src/main.rs header for options)"
             );
         }
@@ -304,15 +326,13 @@ fn server_config(args: &Args, seed: u64) -> ServerConfig {
 
 /// Load a graph from `--in FILE` or build `--dataset NAME` (default
 /// pa_c8). Dataset specs share their vocabulary with the server's
-/// registry (`datasets::resolve`).
+/// registry (`datasets::resolve`). Files go through the parallel
+/// byte-level readers with the `.bcoo` sidecar cache
+/// (`io::load_graph_file`); pass `--preserve-ids` to keep sparse
+/// edge-list IDs instead of dense first-appearance relabeling.
 fn load_graph(args: &Args, seed: u64) -> anyhow::Result<Coo> {
     if let Some(path) = args.get("in") {
-        let p = Path::new(path);
-        return if path.ends_with(".mtx") {
-            io::read_matrix_market(p)
-        } else {
-            io::read_edge_list(p, args.flag("preserve-ids"))
-        };
+        return io::load_graph_file(Path::new(path), args.flag("preserve-ids"));
     }
     match args.get("dataset") {
         Some(name) => datasets::resolve(name, seed),

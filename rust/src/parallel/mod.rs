@@ -10,6 +10,10 @@
 //!   parallel-for over an index range (the moral equivalent of a CUDA grid
 //!   launch: each chunk is a "thread block").
 //! * [`par_reduce`] — tree reduction of per-worker partials.
+//! * [`par_concat`] / [`par_concat_map`] — order-preserving parallel
+//!   gather of per-worker output buffers into one contiguous `Vec`,
+//!   optionally converting per element (the stitch step of the
+//!   parallel file ingest).
 //! * [`par_jobs`] — heterogeneous independent jobs, work-conserving (a
 //!   slow job never blocks the next from starting).
 //! * [`atomic`] — atomic u32/usize min-arrays used by the atomic-min
@@ -188,6 +192,81 @@ where
     partials.into_iter().flatten().fold(identity, merge)
 }
 
+/// Concatenate per-worker output buffers into one `Vec` with a parallel
+/// gather: offsets are prefix-summed sequentially (cheap — one add per
+/// chunk), then every chunk is memcpy'd into its slot concurrently.
+/// Output order equals chunk order, so producers that emit in input
+/// order stitch back to exactly the sequential result — the determinism
+/// contract the parallel ingest readers (`graph::io`) are built on.
+pub fn par_concat<T: Copy + Send + Sync>(chunks: &[Vec<T>]) -> Vec<T> {
+    gathered(
+        &chunks.iter().map(|c| c.as_slice()).collect::<Vec<_>>(),
+        // SAFETY (of the write inside): delegated to `gathered`, which
+        // hands each chunk an exclusive destination region. memcpy
+        // specialization: one copy_nonoverlapping per chunk instead of
+        // per-element stores.
+        |chunk, dst| unsafe {
+            std::ptr::copy_nonoverlapping(chunk.as_ptr(), dst, chunk.len());
+        },
+    )
+}
+
+/// [`par_concat`] with a per-element conversion: chunk order is
+/// preserved and `f` is applied during the gather (the ingest readers
+/// use this to narrow raw `u64` ids to `u32` without an intermediate
+/// copy).
+pub fn par_concat_map<T, U, F>(chunks: &[&[T]], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Copy + Send + Sync,
+    F: Fn(&T) -> U + Sync,
+{
+    gathered(chunks, |chunk, dst| {
+        for (k, v) in chunk.iter().enumerate() {
+            // SAFETY: `gathered` guarantees dst..dst+chunk.len() is an
+            // exclusive region of the output allocation.
+            unsafe { *dst.add(k) = f(v) };
+        }
+    })
+}
+
+/// The one gather skeleton behind [`par_concat`] / [`par_concat_map`]:
+/// `write(chunk, dst)` must fully initialize `dst..dst + chunk.len()`.
+fn gathered<T, U, W>(chunks: &[&[T]], write: W) -> Vec<U>
+where
+    T: Sync,
+    U: Send + Sync,
+    W: Fn(&[T], *mut U) + Sync,
+{
+    let total: usize = chunks.iter().map(|c| c.len()).sum();
+    let mut out: Vec<U> = Vec::with_capacity(total);
+    {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let write = &write;
+        let mut off = 0usize;
+        let jobs: Vec<_> = chunks
+            .iter()
+            .map(|&c| {
+                let my_off = off;
+                off += c.len();
+                move || {
+                    // SAFETY: [my_off, my_off + c.len()) ranges tile
+                    // [0, total) disjointly (offsets are the exclusive
+                    // prefix sum of chunk lengths), so each writer gets
+                    // an exclusive region of the reserved allocation.
+                    write(c, unsafe { out_ptr.get().add(my_off) });
+                }
+            })
+            .collect();
+        par_jobs(jobs);
+    }
+    // SAFETY: every element of [0, total) was initialized by exactly one
+    // job above (par_jobs runs all jobs to completion or propagates the
+    // panic, in which case this line is never reached).
+    unsafe { out.set_len(total) };
+    out
+}
+
 /// Run `k` independent jobs on the pool, returning their results in
 /// submission order. The coordinator uses this for multi-request
 /// dispatch. Scheduling is work-conserving: each participant pulls the
@@ -312,6 +391,34 @@ mod tests {
             total.fetch_add((hi - lo) as u64, Ordering::Relaxed);
         });
         assert_eq!(total.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn par_concat_preserves_chunk_order() {
+        // Uneven chunk sizes, including empties, at several pins.
+        let chunks: Vec<Vec<u32>> = (0..13u32)
+            .map(|k| (0..(k * 37) % 501).map(|x| k * 100_000 + x).collect())
+            .collect();
+        let expected: Vec<u32> = chunks.iter().flatten().copied().collect();
+        for t in [1, 2, 4, 8] {
+            let _g = ThreadGuard::pin(t);
+            assert_eq!(par_concat(&chunks), expected, "t={t}");
+        }
+        assert!(par_concat::<u64>(&[]).is_empty());
+    }
+
+    #[test]
+    fn par_concat_map_narrows_in_chunk_order() {
+        let a: Vec<u64> = (0..1000).collect();
+        let b: Vec<u64> = (1000..1003).collect();
+        let c: Vec<u64> = Vec::new();
+        let chunks: Vec<&[u64]> = vec![&a, &b, &c];
+        for t in [1, 4] {
+            let _g = ThreadGuard::pin(t);
+            let got = par_concat_map(&chunks, |&v| v as u32);
+            let want: Vec<u32> = (0..1003).collect();
+            assert_eq!(got, want, "t={t}");
+        }
     }
 
     #[test]

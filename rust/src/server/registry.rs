@@ -337,9 +337,13 @@ fn touch(order: &mut VecDeque<String>, id: &str) {
     order.push_back(id.to_string());
 }
 
-/// Load a dataset spec: a `.mtx`/`.el` file path, or a generator spec
-/// resolved through [`datasets::resolve`] and randomized (the paper's
-/// input model — §5: "input labels are already randomized").
+/// Load a dataset spec: a `.mtx`/`.el`/`.bcoo` file path, or a
+/// generator spec resolved through [`datasets::resolve`] and randomized
+/// (the paper's input model — §5: "input labels are already
+/// randomized"). File paths go through the parallel byte-level readers
+/// and the `.bcoo` sidecar cache ([`crate::graph::io::load_graph_file`]
+/// via [`datasets::resolve_source`]), so re-registering a file after an
+/// eviction or restart is a memcpy-speed binary load, not a re-parse.
 fn load_source(spec: &str, seed: u64) -> Result<Coo> {
     if datasets::is_file_spec(spec) {
         // File labels are served as-is (resolve_source preserves edge-
@@ -438,6 +442,20 @@ mod tests {
         let s = g.default_source();
         assert_eq!(s, g.default_source());
         assert!((s as usize) < g.n());
+    }
+
+    #[test]
+    fn bcoo_file_specs_load_binary() {
+        use crate::graph::io::bcoo;
+        let g = Coo::new(4, vec![0, 1, 2, 3], vec![1, 2, 3, 0]);
+        let path = std::env::temp_dir()
+            .join(format!("boba_registry_{}.bcoo", std::process::id()));
+        bcoo::write_bcoo(&g, &path).unwrap();
+        let r = registry(2);
+        let (p, _) = r.get_or_prepare(path.to_str().unwrap(), SCHEME_NONE).unwrap();
+        assert_eq!(p.m(), 4);
+        assert_eq!(p.n(), 4);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

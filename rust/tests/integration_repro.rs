@@ -65,6 +65,17 @@ fn repro_covers_all_tables_with_valid_schema() {
         }
     }
 
+    // T3 prices the ingest stage once per dataset (schema
+    // boba-repro/2): generated specs through the batched
+    // StreamingIngest assembly, file specs through a disk re-load.
+    for dataset in ["rmat:10:4", "grid:40:30"] {
+        let ing = doc
+            .get("T3", dataset, "", "ingest_ms")
+            .unwrap_or_else(|| panic!("no T3 ingest_ms row for {dataset}"));
+        assert!(ing.summary.median_ms >= 0.0);
+        assert!(ing.items_per_sec.unwrap_or(0.0) > 0.0, "ingest throughput recorded");
+    }
+
     // T3 covers all four apps with totals and a speedup per scheme.
     for app in ["SpMV", "PR", "TC", "SSSP"] {
         let total = doc
@@ -179,6 +190,39 @@ fn t2_determinism_gate_exercises_the_parallel_kernel() {
         assert!(seq.digest.is_some(), "{scheme}: seq digest missing");
         assert_eq!(seq.digest, det.digest, "{scheme}: par-det digest diverged");
     }
+}
+
+#[test]
+fn t3_file_spec_ingest_prices_the_bcoo_sidecar() {
+    // A file-spec dataset: build_datasets' first text parse writes the
+    // `.bcoo` sidecar, so the T3 ingest stage prices the binary-cache
+    // hit — and the row must land in the document like any other.
+    use boba::graph::io::{self, bcoo};
+    let g = boba::graph::gen::preferential_attachment(300, 4, 5);
+    let path = std::env::temp_dir()
+        .join(format!("boba_repro_ingest_{}.mtx", std::process::id()));
+    io::write_matrix_market(&g, &path).unwrap();
+    let sidecar = bcoo::sidecar_path(&path);
+    std::fs::remove_file(&sidecar).ok();
+
+    let spec = path.to_str().unwrap().to_string();
+    let mut opts = ReproOptions::quick(5);
+    opts.dataset_specs = vec![spec.clone()];
+    opts.tables = vec!["T3".into()];
+    opts.reps = 1;
+    opts.warmup = 0;
+    opts.pr_iters = 3;
+    let run = repro::run(&opts).unwrap();
+
+    let ing = run.doc.get("T3", &spec, "", "ingest_ms").expect("ingest row for file spec");
+    assert!(ing.summary.median_ms >= 0.0);
+    assert!(sidecar.exists(), "text parse wrote the sidecar the ingest stage then hits");
+    // Round-trips through the strict v2 parser.
+    let back = ResultsDoc::parse(&run.doc.to_json().render()).unwrap();
+    assert!(back.get("T3", &spec, "", "ingest_ms").is_some());
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&sidecar).ok();
 }
 
 #[test]
