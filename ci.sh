@@ -60,16 +60,26 @@ else
 fi
 
 # Quick serving benchmark for the perf trajectory: BOBA-prepared vs
-# random-labeled artifacts under a mixed SpMV/PageRank load, written to
-# BENCH_serve.json at the repo root. --spawn self-hosts an ephemeral
-# server so the step is one self-contained command.
+# random-labeled artifacts under a mixed SpMV/PageRank load, plus a
+# single-vs-coalesced pricing row (--coalesce routes 4-query batches
+# through POST /query/batch), written to BENCH_serve.json at the repo
+# root. --spawn self-hosts an ephemeral server so the step is one
+# self-contained command.
 if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
     note "serving benchmark (BENCH_serve.json)"
-    if ! cargo run --release -- loadgen --spawn --compare \
+    if ! cargo run --release -- loadgen --spawn --compare --coalesce \
         --dataset rmat:14:8 --conns 4 --requests 600 \
-        --mix spmv:7,pagerank:3 --pr-iters 5 \
+        --mix spmv:7,pagerank:3 --pr-iters 5 --batch-queries 4 \
         --json "$ROOT/BENCH_serve.json"; then
         echo "FAILED (required): serving benchmark"
+        FAILURES=$((FAILURES + 1))
+    elif ! grep -q '"mode":"single"' "$ROOT/BENCH_serve.json" \
+        || ! grep -q '"mode":"coalesced"' "$ROOT/BENCH_serve.json" \
+        || ! grep -q '"speedup_coalesced_qps"' "$ROOT/BENCH_serve.json"; then
+        # The committed serving trajectory must price both axes:
+        # reordering (reordered/baseline) AND batching (the coalesced
+        # row with its speedup vs the single-query run).
+        echo "FAILED (required): BENCH_serve.json lacks the coalesced-vs-single rows"
         FAILURES=$((FAILURES + 1))
     fi
 
@@ -110,6 +120,17 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
     note "micro_ingest smoke"
     if ! cargo bench --bench micro_ingest -- --smoke; then
         echo "FAILED (required): micro_ingest smoke"
+        FAILURES=$((FAILURES + 1))
+    fi
+
+    # Batched-SpMV microbench smoke: one iteration of the k-sweep (k
+    # independent spmv calls vs one spmm pass, boba vs random ordering).
+    # The bench asserts spmm is bit-identical to the k spmv calls before
+    # timing, so this doubles as a determinism gate (full numbers:
+    # `cargo bench --bench micro_batch`, docs/EXPERIMENTS.md §Batching).
+    note "micro_batch smoke"
+    if ! cargo bench --bench micro_batch -- --smoke; then
+        echo "FAILED (required): micro_batch smoke"
         FAILURES=$((FAILURES + 1))
     fi
 fi

@@ -13,6 +13,7 @@
 
 pub mod trace;
 pub mod spmv;
+pub mod spmm;
 pub mod pagerank;
 pub mod tc;
 pub mod sssp;

@@ -1,0 +1,272 @@
+//! Multi-RHS SpMV (block SpMV / SpMM): `Y = A·X` for `k` right-hand
+//! sides in one pass over the graph.
+//!
+//! The paper's entire win is the locality of the `x[col]` gather
+//! (Alg. 1 line 4, Fig. 7). A block kernel multiplies that payoff by
+//! `k`: the `row_ptr`/`col_idx` index streams — pure bandwidth, the part
+//! reordering cannot help — are read **once** for `k` vectors instead of
+//! `k` times, so the per-query edge-stream cost drops as `1/k` while the
+//! BOBA-clustered gathers stay cache-resident. This is the serving
+//! layer's batching primitive: the request coalescer
+//! ([`crate::server::coalesce`]) parks concurrent SpMV queries and
+//! answers them with one [`spmm_pull_parallel`] call.
+//!
+//! Layout: `X` and `Y` are **column-major** — column `j` (one query's
+//! vector) is the contiguous slice `[j*n .. (j+1)*n]`, so column `j` of
+//! the output is byte-identical to what `spmv_pull` would have produced
+//! for that column alone. The inner loop is row-tiled over a
+//! const-generic `K`: the `k` accumulators live in registers and the
+//! column loop fully unrolls.
+//!
+//! Determinism contract: for every column `j`, the accumulation order
+//! over a row's edges is exactly [`super::spmv::spmv_pull`]'s, so the
+//! output is **bit-identical to `k` independent `spmv_pull` calls** at
+//! every thread count and batch width (`tests/batch_equiv.rs` pins
+//! this).
+
+use super::spmv::{edge_balanced_row_bounds, PF_DIST};
+use crate::graph::Csr;
+use crate::parallel::{self, SendPtr};
+
+/// Maximum right-hand sides per kernel call. 16 accumulators is the
+/// largest tile that plausibly stays in registers on x86-64 (16 XMM/YMM
+/// names); wider batches are chunked by the callers (the coalescer's
+/// `max_batch` is clamped to this, `/query/batch` splits into tiles).
+pub const MAX_RHS: usize = 16;
+
+/// Prefetch the `k` gather targets of the edge `PF_DIST` ahead — the
+/// [`super::spmv`] prefetch scheme applied per column. The per-edge
+/// prefetch count scales with `K`, but so does the per-edge work (K
+/// FMAs), so the prefetch-per-FMA ratio matches the single-RHS kernel.
+#[inline(always)]
+fn prefetch_cols<const K: usize>(x: &[f32], n: usize, cols: &[u32], e: usize) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let pf = e + PF_DIST;
+        if pf < cols.len() {
+            let c = cols[pf] as usize;
+            for j in 0..K {
+                unsafe {
+                    core::arch::x86_64::_mm_prefetch(
+                        x.as_ptr().add(j * n + c) as *const i8,
+                        core::arch::x86_64::_MM_HINT_T0,
+                    );
+                }
+            }
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (x, n, cols, e);
+    }
+}
+
+/// Row-tiled kernel body over rows `[r0, r1)` for a compile-time tile
+/// width `K`.
+///
+/// # Safety
+/// `y` must be valid for writes of `K * csr.n()` f32s, and the caller
+/// must guarantee exclusive access to rows `[r0, r1)` of every column
+/// (writes land at `y[j*n + v]` for `v ∈ [r0, r1)`, `j ∈ [0, K)`).
+unsafe fn spmm_rows<const K: usize>(csr: &Csr, x: &[f32], y: *mut f32, r0: usize, r1: usize) {
+    let n = csr.n();
+    let cols = &csr.col_idx;
+    match &csr.vals {
+        Some(vals) => {
+            for v in r0..r1 {
+                let (lo, hi) = (csr.row_ptr[v] as usize, csr.row_ptr[v + 1] as usize);
+                let mut acc = [0f32; K];
+                for e in lo..hi {
+                    prefetch_cols::<K>(x, n, cols, e);
+                    let c = cols[e] as usize;
+                    let w = vals[e];
+                    for j in 0..K {
+                        acc[j] += w * x[j * n + c];
+                    }
+                }
+                for j in 0..K {
+                    *y.add(j * n + v) = acc[j];
+                }
+            }
+        }
+        None => {
+            for v in r0..r1 {
+                let (lo, hi) = (csr.row_ptr[v] as usize, csr.row_ptr[v + 1] as usize);
+                let mut acc = [0f32; K];
+                for e in lo..hi {
+                    prefetch_cols::<K>(x, n, cols, e);
+                    let c = cols[e] as usize;
+                    for j in 0..K {
+                        acc[j] += x[j * n + c];
+                    }
+                }
+                for j in 0..K {
+                    *y.add(j * n + v) = acc[j];
+                }
+            }
+        }
+    }
+}
+
+/// Monomorphization dispatch: route the runtime `k` onto the
+/// const-generic row kernel.
+///
+/// # Safety
+/// Same contract as [`spmm_rows`] with `K = k`; `k` must be in
+/// `1..=MAX_RHS` (validated by the public entry points).
+unsafe fn run_rows(csr: &Csr, x: &[f32], k: usize, y: *mut f32, r0: usize, r1: usize) {
+    match k {
+        1 => spmm_rows::<1>(csr, x, y, r0, r1),
+        2 => spmm_rows::<2>(csr, x, y, r0, r1),
+        3 => spmm_rows::<3>(csr, x, y, r0, r1),
+        4 => spmm_rows::<4>(csr, x, y, r0, r1),
+        5 => spmm_rows::<5>(csr, x, y, r0, r1),
+        6 => spmm_rows::<6>(csr, x, y, r0, r1),
+        7 => spmm_rows::<7>(csr, x, y, r0, r1),
+        8 => spmm_rows::<8>(csr, x, y, r0, r1),
+        9 => spmm_rows::<9>(csr, x, y, r0, r1),
+        10 => spmm_rows::<10>(csr, x, y, r0, r1),
+        11 => spmm_rows::<11>(csr, x, y, r0, r1),
+        12 => spmm_rows::<12>(csr, x, y, r0, r1),
+        13 => spmm_rows::<13>(csr, x, y, r0, r1),
+        14 => spmm_rows::<14>(csr, x, y, r0, r1),
+        15 => spmm_rows::<15>(csr, x, y, r0, r1),
+        16 => spmm_rows::<16>(csr, x, y, r0, r1),
+        _ => unreachable!("k validated to 1..=MAX_RHS"),
+    }
+}
+
+fn validate(csr: &Csr, x: &[f32], k: usize) {
+    assert!(
+        (1..=MAX_RHS).contains(&k),
+        "spmm batch width k={k} out of range 1..={MAX_RHS}"
+    );
+    assert_eq!(
+        x.len(),
+        k * csr.n(),
+        "X must be column-major k*n (k={k}, n={})",
+        csr.n()
+    );
+}
+
+/// Sequential multi-RHS pull SpMV: `Y = A·X` for `k ∈ 1..=`[`MAX_RHS`]
+/// right-hand sides, `X`/`Y` column-major (`x[j*n..(j+1)*n]` is column
+/// `j`). Bit-identical to `k` independent
+/// [`super::spmv::spmv_pull`] calls on the columns.
+pub fn spmm_pull(csr: &Csr, x: &[f32], k: usize) -> Vec<f32> {
+    validate(csr, x, k);
+    let mut y = vec![0f32; k * csr.n()];
+    // SAFETY: `y` has k*n elements and this single call owns all rows.
+    unsafe { run_rows(csr, x, k, y.as_mut_ptr(), 0, csr.n()) };
+    y
+}
+
+/// Edge-balanced parallel multi-RHS pull SpMV on the persistent worker
+/// pool — same row partitioning as
+/// [`super::spmv::spmv_pull_parallel`], same determinism contract:
+/// bit-identical to [`spmm_pull`] (and hence to `k` independent
+/// `spmv_pull` calls) at every thread count.
+pub fn spmm_pull_parallel(csr: &Csr, x: &[f32], k: usize) -> Vec<f32> {
+    validate(csr, x, k);
+    let n = csr.n();
+    if csr.m() < 1 << 14 {
+        return spmm_pull(csr, x, k);
+    }
+    let tasks = (parallel::threads() * 8).max(1);
+    let bounds = edge_balanced_row_bounds(csr, tasks);
+    let mut y = vec![0f32; k * n];
+    let y_ptr = SendPtr(y.as_mut_ptr());
+    let bounds_ref = &bounds;
+    parallel::par_for_chunks(tasks, 1, |t_lo, t_hi| {
+        for t in t_lo..t_hi {
+            let (r0, r1) = (bounds_ref[t], bounds_ref[t + 1]);
+            // SAFETY: task row ranges are disjoint, so writes to
+            // y[j*n + v] for v in [r0, r1) are exclusive per task; the
+            // allocation is k*n as required.
+            unsafe { run_rows(csr, x, k, y_ptr.get(), r0, r1) };
+        }
+    });
+    y
+}
+
+/// Column `j` of a column-major multi-RHS vector block (a view helper
+/// for callers unpacking [`spmm_pull`] output).
+pub fn column(y: &[f32], n: usize, j: usize) -> &[f32] {
+    &y[j * n..(j + 1) * n]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::spmv;
+    use crate::convert::coo_to_csr;
+    use crate::graph::gen::{self, GenParams};
+    use crate::graph::Coo;
+    use crate::parallel::ThreadGuard;
+
+    fn rhs(n: usize, k: usize) -> Vec<f32> {
+        (0..k * n)
+            .map(|i| ((i as u32).wrapping_mul(2654435761) % 997) as f32 * 0.013 + 0.25)
+            .collect()
+    }
+
+    fn k_spmv_ref(csr: &crate::graph::Csr, x: &[f32], k: usize) -> Vec<f32> {
+        let n = csr.n();
+        let mut want = Vec::with_capacity(k * n);
+        for j in 0..k {
+            want.extend(spmv::spmv_pull(csr, column(x, n, j)));
+        }
+        want
+    }
+
+    #[test]
+    fn matches_k_independent_spmv_calls_unweighted() {
+        let g = gen::uniform_random(300, 2500, 7);
+        let csr = coo_to_csr(&g);
+        for k in [1, 2, 3, 5, 16] {
+            let x = rhs(csr.n(), k);
+            assert_eq!(spmm_pull(&csr, &x, k), k_spmv_ref(&csr, &x, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn matches_k_independent_spmv_calls_weighted() {
+        let mut g = gen::uniform_random(200, 1500, 9);
+        g.vals = Some((0..g.m()).map(|i| (i % 13) as f32 * 0.5 - 2.0).collect());
+        let csr = coo_to_csr(&g);
+        for k in [1, 4, 7] {
+            let x = rhs(csr.n(), k);
+            assert_eq!(spmm_pull(&csr, &x, k), k_spmv_ref(&csr, &x, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let g = gen::rmat(&GenParams::rmat(13, 16), 3);
+        let csr = coo_to_csr(&g);
+        for k in [1, 4, 8] {
+            let x = rhs(csr.n(), k);
+            let want = spmm_pull(&csr, &x, k);
+            for t in [1, 2, 4, 8] {
+                let _g = ThreadGuard::pin(t);
+                assert_eq!(spmm_pull_parallel(&csr, &x, k), want, "k={k} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single_vertex_graphs() {
+        let empty = coo_to_csr(&Coo::new(4, vec![], vec![]));
+        assert_eq!(spmm_pull(&empty, &[1.0; 8], 2), vec![0.0; 8]);
+        let single = coo_to_csr(&Coo::new(1, vec![0], vec![0]));
+        assert_eq!(spmm_pull(&single, &[3.0, 5.0], 2), vec![3.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_oversized_batch() {
+        let csr = coo_to_csr(&Coo::new(2, vec![0], vec![1]));
+        let x = vec![0.0; 34];
+        spmm_pull(&csr, &x, 17);
+    }
+}

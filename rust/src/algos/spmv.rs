@@ -20,7 +20,28 @@ use crate::parallel::{self, SendPtr};
 /// the 1-core testbed: 610 → 464 ms (-24%) on a randomized 64M-edge PA
 /// graph; neutral on already-local (BOBA-ordered) inputs. See
 /// docs/EXPERIMENTS.md §Perf.
-const PF_DIST: usize = 32;
+pub(crate) const PF_DIST: usize = 32;
+
+/// Partition rows into `tasks` contiguous ranges owning ~equal numbers of
+/// *edges* (binary search over `row_ptr`, the merge-path diagonal idea of
+/// Merrill & Garland simplified to row granularity: a task never splits a
+/// row, but task boundaries are chosen on the edge axis). Returns
+/// `tasks + 1` row bounds; shared by [`spmv_pull_parallel`] and the
+/// multi-RHS [`super::spmm`] kernel so both balance hub rows identically.
+pub(crate) fn edge_balanced_row_bounds(csr: &Csr, tasks: usize) -> Vec<usize> {
+    let n = csr.n();
+    let m = csr.m();
+    let edges_per_task = m.div_ceil(tasks.max(1));
+    let mut bounds = Vec::with_capacity(tasks + 1);
+    for t in 0..=tasks {
+        let target = (t * edges_per_task).min(m) as u64;
+        let row = csr.row_ptr.partition_point(|&p| p < target);
+        bounds.push(row.min(n));
+    }
+    bounds[0] = 0;
+    *bounds.last_mut().unwrap() = n;
+    bounds
+}
 
 #[inline(always)]
 fn prefetch_x(x: &[f32], cols: &[u32], e: usize) {
@@ -89,16 +110,7 @@ pub fn spmv_pull_parallel(csr: &Csr, x: &[f32]) -> Vec<f32> {
         return spmv_pull(csr, x);
     }
     let tasks = (parallel::threads() * 8).max(1);
-    let edges_per_task = m.div_ceil(tasks);
-    // Row boundary for each task: first row whose edge start ≥ k·edges_per_task.
-    let mut bounds = Vec::with_capacity(tasks + 1);
-    for t in 0..=tasks {
-        let target = (t * edges_per_task).min(m) as u64;
-        let row = csr.row_ptr.partition_point(|&p| p < target);
-        bounds.push(row.min(n));
-    }
-    bounds[0] = 0;
-    *bounds.last_mut().unwrap() = n;
+    let bounds = edge_balanced_row_bounds(csr, tasks);
 
     let mut y = vec![0f32; n];
     let y_ptr = SendPtr(y.as_mut_ptr());

@@ -129,6 +129,85 @@ pub fn sssp_frontier_traced<T: Tracer>(csr: &Csr, source: u32, tracer: &mut T) -
     dist
 }
 
+/// Maximum sources per [`sssp_frontier_multi`] batch (active-source
+/// masks are `u16` bit sets; wider batches are chunked by callers, see
+/// [`crate::server::coalesce`]).
+pub const MAX_SOURCES: usize = 16;
+
+/// Multi-source frontier SSSP: relax `s ∈ 1..=`[`MAX_SOURCES`] sources
+/// per edge scan. Returns column-major distances — `out[i*n..(i+1)*n]`
+/// is source `i`'s distance array.
+///
+/// The union frontier is scanned once per round: each frontier vertex's
+/// adjacency (`row_ptr` lookup + `col_idx`/`vals` stream — the part of
+/// the traversal reordering cannot compress) is loaded **once** and
+/// relaxed for every source whose bit is set in the vertex's active
+/// mask, instead of once per source.
+///
+/// Output is **bit-identical to per-source [`sssp_frontier`]**: with
+/// non-negative weights, frontier relaxation run to fixpoint computes
+/// `dist[u] = min over paths P(source→u) of the f32 left-fold sum of P`
+/// regardless of relaxation order — `fl(a+w)` is monotone in `a`, so at
+/// fixpoint `dist[u]` is both ≤ every path's float sum (induction along
+/// the path) and equal to some path's float sum (every update extends
+/// one). Scheduling changes which relaxations run, never the fixpoint.
+/// `tests/batch_equiv.rs` pins the equality on every fixture.
+pub fn sssp_frontier_multi(csr: &Csr, sources: &[u32]) -> Vec<f32> {
+    let s = sources.len();
+    assert!(
+        (1..=MAX_SOURCES).contains(&s),
+        "sssp batch width {s} out of range 1..={MAX_SOURCES}"
+    );
+    let n = csr.n();
+    let mut dist = vec![f32::INFINITY; s * n];
+    // Per-vertex bit sets: `active` = sources for which the vertex is in
+    // the current frontier, `pending` = next frontier under construction.
+    let mut active = vec![0u16; n];
+    let mut pending = vec![0u16; n];
+    let mut frontier: Vec<u32> = Vec::new();
+    let mut next: Vec<u32> = Vec::new();
+    for (i, &src) in sources.iter().enumerate() {
+        let src = src as usize;
+        assert!(src < n, "source {src} out of range n={n}");
+        dist[i * n + src] = 0.0;
+        if active[src] == 0 {
+            frontier.push(src as u32);
+        }
+        active[src] |= 1 << i;
+    }
+    while !frontier.is_empty() {
+        for &v in &frontier {
+            let v = v as usize;
+            let mask = active[v];
+            let (lo, hi) = (csr.row_ptr[v] as usize, csr.row_ptr[v + 1] as usize);
+            for e in lo..hi {
+                let u = csr.col_idx[e] as usize;
+                let w = csr.vals.as_ref().map_or(1.0, |vv| vv[e]);
+                let mut bits = mask;
+                while bits != 0 {
+                    let i = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    let nd = dist[i * n + v] + w;
+                    if nd < dist[i * n + u] {
+                        dist[i * n + u] = nd;
+                        if pending[u] == 0 {
+                            next.push(u as u32);
+                        }
+                        pending[u] |= 1 << i;
+                    }
+                }
+            }
+        }
+        for &v in &frontier {
+            active[v as usize] = 0;
+        }
+        std::mem::swap(&mut frontier, &mut next);
+        std::mem::swap(&mut active, &mut pending);
+        next.clear();
+    }
+    dist
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,6 +263,28 @@ mod tests {
         let b = sssp_frontier_traced(&csr, 3, &mut t);
         assert_eq!(a, b);
         assert!(!t.addrs.is_empty());
+    }
+
+    #[test]
+    fn multi_source_matches_per_source() {
+        for (s, seed) in [(1usize, 3u64), (2, 4), (7, 5), (16, 6)] {
+            let csr = weighted_csr(150, 900, seed);
+            let sources: Vec<u32> = (0..s).map(|i| ((i * 31 + 2) % 150) as u32).collect();
+            let d = sssp_frontier_multi(&csr, &sources);
+            for (i, &src) in sources.iter().enumerate() {
+                let want = sssp_frontier(&csr, src);
+                assert_eq!(&d[i * 150..(i + 1) * 150], want.as_slice(), "s={s} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_source_handles_duplicate_sources_and_no_edges() {
+        let csr = coo_to_csr(&Coo::new(3, vec![], vec![]));
+        let d = sssp_frontier_multi(&csr, &[1, 1, 2]);
+        assert_eq!(d[3 + 1], 0.0);
+        assert_eq!(d[2 * 3 + 2], 0.0);
+        assert!(d[0].is_infinite() && d[3].is_infinite());
     }
 
     #[test]

@@ -36,7 +36,7 @@ pub fn table_title(id: &str) -> &'static str {
     match id {
         "T1" => "T1 — reordering time per scheme",
         "T2" => "T2 — COO→CSR conversion time, pre/post reorder",
-        "T3" => "T3 — end-to-end pipeline time (ingest + reorder + [sort] + convert + app)",
+        "T3" => "T3 — end-to-end pipeline time (ingest + reorder + [sort] + convert + app) and batched SpMV (spmm k-rows)",
         "T4" => "T4 — simulated cache hit rates (V100-scaled hierarchy)",
         _ => "unknown table",
     }

@@ -22,7 +22,9 @@
 //!   dataset — a disk re-load for file specs (the `.bcoo` sidecar hit
 //!   after the first parse wrote it — the served steady state) or the
 //!   batched `StreamingIngest` assembly for generated specs (what the
-//!   server registry pays);
+//!   server registry pays) — and, since the batched query engine, the
+//!   `spmm_k{1,4,8}_ms` rows pricing the multi-RHS SpMV the serving
+//!   coalescer amortizes concurrent queries with;
 //! * **T4** — simulated L1/L2 hit rates and DRAM fraction per workload:
 //!   the paper's Fig. 7 profiler numbers (7–52% L1 / 11–67% L2 gains).
 //!
@@ -566,6 +568,49 @@ fn t3_end_to_end(
             String::new(),
             String::new(),
         ]);
+        // ── batched SpMV (spmm) rows ──────────────────────────────
+        // The serving layer's coalescer answers k concurrent SpMV
+        // queries with one multi-RHS pass; these rows price that
+        // amortization offline: total time for a k-wide spmm on the
+        // prepared CSR (k = 1 is the single-query baseline, so
+        // median/k falling as k grows is the per-query edge-stream
+        // saving `benches/micro_batch.rs` sweeps in detail).
+        for scheme in ["random", "boba"] {
+            let csr = if scheme == "random" {
+                convert::coo_to_csr_parallel(g)
+            } else {
+                let (_p, h) = Boba::parallel().reorder_relabel(g);
+                convert::coo_to_csr_parallel(&h)
+            };
+            for k in [1usize, 4, 8] {
+                let x = vec![1.0f32; k * csr.n()];
+                let m = bench.run_with_items(
+                    &format!("{dname}/{scheme}/spmm_k{k}"),
+                    (g.m() * k) as u64,
+                    || crate::algos::spmm::spmm_pull_parallel(&csr, &x, k),
+                );
+                let mut rec = timing_record(
+                    "T3",
+                    dname,
+                    scheme,
+                    "SpMV",
+                    &format!("spmm_k{k}_ms"),
+                    m.summary,
+                );
+                rec.items_per_sec = m.throughput();
+                doc.push(rec);
+                rows.push(vec![
+                    dname.clone(),
+                    "SpMV".into(),
+                    format!("{scheme}/spmm_k{k}"),
+                    human::ms(m.summary.median_ms),
+                    format!("{:.3} ms/query", m.summary.median_ms / k as f64),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                ]);
+            }
+        }
         for app in App::all() {
             let mut random_median = None;
             for name in pipeline_schemes(opts.heavy) {

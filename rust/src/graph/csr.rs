@@ -118,6 +118,26 @@ impl Csr {
     /// the reverse graph). Pull-mode kernels over in-neighborhoods use
     /// this.
     pub fn transposed(&self) -> Csr {
+        self.transpose_impl(true)
+    }
+
+    /// The transpose of the adjacency structure only — `vals` are never
+    /// materialized. Pull-mode kernels that ignore edge weights (the
+    /// deterministic parallel PageRank) use this instead of
+    /// [`Csr::transposed`] to skip building an O(m) weight array they
+    /// would immediately drop. The counting sort is stable, so row `u`
+    /// lists in-neighbors in ascending source order, exactly like
+    /// [`Csr::transposed`].
+    pub fn transposed_structure(&self) -> Csr {
+        self.transpose_impl(false)
+    }
+
+    /// The one stable-counting-sort transpose skeleton behind both
+    /// public forms (the stability — row `u` lists in-neighbors in
+    /// ascending `(source, edge)` order — is load-bearing: the
+    /// deterministic parallel PageRank reproduces the sequential push
+    /// kernel's f32 addition order through it).
+    fn transpose_impl(&self, want_vals: bool) -> Csr {
         let n = self.n();
         let mut counts = vec![0u64; n + 1];
         for &c in &self.col_idx {
@@ -129,7 +149,11 @@ impl Csr {
         let row_ptr = counts.clone();
         let mut cursor = counts;
         let mut col_idx = vec![0u32; self.m()];
-        let mut vals = self.vals.as_ref().map(|_| vec![0f32; self.m()]);
+        let mut vals = if want_vals {
+            self.vals.as_ref().map(|_| vec![0f32; self.m()])
+        } else {
+            None
+        };
         for v in 0..n {
             let (lo, hi) = (self.row_ptr[v] as usize, self.row_ptr[v + 1] as usize);
             for e in lo..hi {
@@ -212,6 +236,21 @@ mod tests {
         assert!(t.neighbors(2).contains(&1));
         assert!(t.neighbors(0).contains(&2));
         assert_eq!(t.m(), g.m());
+    }
+
+    #[test]
+    fn transposed_structure_matches_transposed_minus_vals() {
+        let g = Csr {
+            row_ptr: vec![0, 2, 3, 4],
+            col_idx: vec![1, 2, 2, 0],
+            vals: Some(vec![1.0, 2.0, 3.0, 4.0]),
+        };
+        let full = g.transposed();
+        let structure = g.transposed_structure();
+        assert_eq!(structure.row_ptr, full.row_ptr);
+        assert_eq!(structure.col_idx, full.col_idx, "same stable in-neighbor order");
+        assert!(structure.vals.is_none());
+        assert!(full.vals.is_some());
     }
 
     #[test]

@@ -9,10 +9,16 @@
 //!   run       --app A [--algo S] [--in F | --dataset N]
 //!   pipeline  --app A --algo S [--dataset N] [--batch B] [--in-flight K]
 //!   serve     [--addr H:P] [--workers W] [--cache C] [--batch B]
-//!             [--in-flight K]        run the graph-analytics service
+//!             [--in-flight K] [--batch-window-us U] [--max-batch K]
+//!                                      run the graph-analytics service
 //!   loadgen   [--addr H:P] [--conns C] [--requests R] [--dataset N]
 //!             [--scheme S] [--mix spmv:7,pagerank:3] [--pr-iters I]
-//!             [--compare] [--json F] [--spawn]   drive a server
+//!             [--compare] [--coalesce] [--batch-queries K]
+//!             [--compare-coalesced] [--json F] [--spawn]
+//!             drive a server; --coalesce sends K-query batches through
+//!             POST /query/batch (with --compare it appends a
+//!             single-vs-coalesced pricing row; --compare-coalesced
+//!             prices just that contrast)
 //!   table1 | table3 | fig4 | fig5 | fig6 | fig7  regenerate a paper table/figure
 //!   repro     [--quick|--full] [--tables t1,t2,t3,t4] [--threads N]
 //!             [--datasets A,B] [--reps K] [--json F] [--md F]
@@ -182,6 +188,8 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 mix: loadgen::parse_mix(&args.get_or("mix", "spmv:7,pagerank:3"))?,
                 pr_iters: args.get_parse("pr-iters", 5),
                 seed,
+                coalesce: args.flag("coalesce"),
+                batch: args.get_parse("batch-queries", 4),
             };
             // --spawn: self-host an ephemeral server for the run (CI's
             // one-command benchmark mode).
@@ -195,7 +203,12 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 None
             };
             let doc = if args.flag("compare") {
-                let (reordered, baseline, speedup) = loadgen::compare(&cfg)?;
+                // Scheme comparison runs in single mode; --coalesce then
+                // appends a single-vs-coalesced pricing on the reordered
+                // scheme, so BENCH_serve.json carries both axes.
+                let mut single_cfg = cfg.clone();
+                single_cfg.coalesce = false;
+                let (reordered, baseline, speedup) = loadgen::compare(&single_cfg)?;
                 println!("baseline  {}", baseline.render());
                 println!("reordered {}", reordered.render());
                 println!(
@@ -203,7 +216,32 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                      ({:.0} vs {:.0} q/s)",
                     reordered.qps, baseline.qps,
                 );
-                loadgen::comparison_json(&reordered, &baseline, speedup)
+                let coalesced = if cfg.coalesce {
+                    let co = loadgen::run(&cfg)?;
+                    println!("coalesced {}", co.render());
+                    let co_speedup =
+                        if reordered.qps > 0.0 { co.qps / reordered.qps } else { 0.0 };
+                    println!(
+                        "request-coalescing speedup: {co_speedup:.2}x queries/second \
+                         ({:.0} vs {:.0} q/s, batches of {})",
+                        co.qps, reordered.qps, co.batch,
+                    );
+                    Some((co, co_speedup))
+                } else {
+                    None
+                };
+                loadgen::comparison_json(
+                    &reordered,
+                    &baseline,
+                    speedup,
+                    coalesced.as_ref().map(|(r, s)| (r, *s)),
+                )
+            } else if args.flag("compare-coalesced") {
+                let (single, coalesced, speedup) = loadgen::compare_coalesced(&cfg)?;
+                println!("single    {}", single.render());
+                println!("coalesced {}", coalesced.render());
+                println!("request-coalescing speedup: {speedup:.2}x queries/second");
+                loadgen::batch_comparison_json(&single, &coalesced, speedup)
             } else {
                 let report = loadgen::run(&cfg)?;
                 println!("{}", report.render());
@@ -321,6 +359,8 @@ fn server_config(args: &Args, seed: u64) -> ServerConfig {
         in_flight: args.get_parse("in-flight", default.in_flight),
         seed,
         read_timeout: default.read_timeout,
+        batch_window_us: args.get_parse("batch-window-us", default.batch_window_us),
+        max_batch: args.get_parse("max-batch", default.max_batch),
     }
 }
 

@@ -1,0 +1,621 @@
+//! Request coalescing: batch concurrent queries against the same
+//! prepared artifact into one multi-RHS kernel pass.
+//!
+//! Faldu et al.'s amortization argument made explicit at query
+//! granularity: the registry already amortizes the *reorder* cost
+//! across queries; the coalescer amortizes the *edge-stream* cost
+//! (`row_ptr`/`col_idx` — pure bandwidth, the part reordering cannot
+//! compress) across concurrent queries by answering k parked SpMV
+//! queries with one [`crate::algos::spmm::spmm_pull_parallel`] call and
+//! s parked SSSP queries with one
+//! [`crate::algos::sssp::sssp_frontier_multi`] scan.
+//!
+//! Mechanics: one batching group per `(artifact instance, query kind)`
+//! — keyed by the `Arc<PreparedGraph>` address, not the registry id, so
+//! queries that resolved different generations of a re-prepared
+//! artifact can never share a batch (an id-keyed group could hand a
+//! follower's label-dependent query to a leader holding a stale
+//! generation with different vertex labels). The key cannot alias: a
+//! group member keeps its artifact alive for the whole submit call, so
+//! an address is only reused once the old group is empty. Groups whose
+//! artifact went idle are pruned from the map on the way out, so the
+//! map tracks live artifacts, not everything ever served. The first
+//! query to arrive becomes the batch *leader*: it waits up to
+//! `window` (`--batch-window-us`) for companions — or returns
+//! immediately with whatever is already queued when the window is zero
+//! — then drains up to `max_batch` requests and executes them in one
+//! kernel pass. Queries arriving while that batch is in flight park on
+//! the group's condvar and form the next batch, so under load batches
+//! widen naturally even with a zero window (the in-flight execution
+//! *is* the window). Batching never changes answers: the batched
+//! kernels are bit-identical to their one-query forms, so a response is
+//! the same whether it was coalesced or not — the serve path stays
+//! deterministic at every batch width.
+//!
+//! Trade-off: a non-zero window adds up to `window` of latency to the
+//! *first* query of a batch in exchange for width (≈ k× edge-stream
+//! amortization); `window = 0` (the default) only coalesces queries
+//! that are already queued and adds no latency. `/stats` exposes the
+//! realized batch-width histograms so the trade can be observed live.
+
+use crate::algos::{spmm, sssp};
+use anyhow::{bail, ensure, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+use super::registry::PreparedGraph;
+use crate::util::prng::Xoshiro256;
+
+/// Coalescer tuning (CLI flags map 1:1 onto these fields).
+#[derive(Clone, Copy, Debug)]
+pub struct CoalesceConfig {
+    /// How long a batch leader waits for companion queries before
+    /// executing. Zero (the default) coalesces only already-queued
+    /// queries — no added latency.
+    pub window: Duration,
+    /// Maximum queries per kernel pass (clamped to
+    /// [`spmm::MAX_RHS`]).
+    pub max_batch: usize,
+}
+
+impl Default for CoalesceConfig {
+    fn default() -> Self {
+        Self { window: Duration::ZERO, max_batch: 8 }
+    }
+}
+
+/// A coalescable query (the non-coalescable kinds — PageRank, TC — take
+/// the direct path in the router).
+#[derive(Clone, Copy, Debug)]
+pub enum BatchQuery {
+    /// One SpMV right-hand side: `None` = the all-ones vector (the
+    /// label-invariant digest query), `Some(seed)` = the deterministic
+    /// pseudo-random vector [`rhs_vector`] builds.
+    Spmv {
+        /// RHS seed (`None` = ones).
+        seed: Option<u64>,
+    },
+    /// One SSSP source (already validated against `n` by the caller).
+    Sssp {
+        /// Source vertex.
+        source: u32,
+    },
+}
+
+/// The per-query answer a batch execution produces.
+#[derive(Clone, Copy, Debug)]
+pub enum BatchOut {
+    /// SpMV: sum of the output vector (f64, label-invariant for ones).
+    Spmv {
+        /// Σ y as f64.
+        digest: f64,
+    },
+    /// SSSP: sum of finite distances + reached count.
+    Sssp {
+        /// Σ finite distances as f64.
+        digest: f64,
+        /// Vertices with finite distance.
+        reached: usize,
+    },
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+enum Kind {
+    Spmv,
+    Sssp,
+}
+
+impl BatchQuery {
+    fn kind(&self) -> Kind {
+        match self {
+            BatchQuery::Spmv { .. } => Kind::Spmv,
+            BatchQuery::Sssp { .. } => Kind::Sssp,
+        }
+    }
+}
+
+/// Build the RHS vector for one SpMV query: all-ones without a seed
+/// (digest = m on unweighted graphs, the smoke tests' invariant), a
+/// deterministic seeded pseudo-random vector otherwise — so a coalesced
+/// batch of seeded queries is a genuine multi-RHS block, not k copies
+/// of one vector.
+pub fn rhs_vector(n: usize, seed: Option<u64>) -> Vec<f32> {
+    match seed {
+        None => vec![1.0f32; n],
+        Some(s) => {
+            let mut rng = Xoshiro256::new(s);
+            (0..n).map(|_| rng.next_f32()).collect()
+        }
+    }
+}
+
+/// Execute one SpMV tile (≤ [`spmm::MAX_RHS`] right-hand sides) in a
+/// single [`spmm::spmm_pull_parallel`] pass; returns one digest per
+/// query. Shared by the coalescer leader and the `/query/batch`
+/// endpoint so both price exactly one edge-stream per tile.
+pub fn run_spmv_tile(graph: &PreparedGraph, seeds: &[Option<u64>]) -> Vec<f64> {
+    let k = seeds.len();
+    assert!((1..=spmm::MAX_RHS).contains(&k), "tile width {k}");
+    let n = graph.csr.n();
+    let mut x = Vec::with_capacity(k * n);
+    for s in seeds {
+        x.extend(rhs_vector(n, *s));
+    }
+    let y = spmm::spmm_pull_parallel(&graph.csr, &x, k);
+    (0..k)
+        .map(|j| spmm::column(&y, n, j).iter().map(|&v| v as f64).sum())
+        .collect()
+}
+
+/// Execute one SSSP tile (≤ [`sssp::MAX_SOURCES`] sources) in a single
+/// [`sssp::sssp_frontier_multi`] scan; returns `(digest, reached)` per
+/// source.
+pub fn run_sssp_tile(graph: &PreparedGraph, sources: &[u32]) -> Vec<(f64, usize)> {
+    let s = sources.len();
+    assert!((1..=sssp::MAX_SOURCES).contains(&s), "tile width {s}");
+    let n = graph.csr.n();
+    let d = sssp::sssp_frontier_multi(&graph.csr, sources);
+    (0..s)
+        .map(|i| {
+            let col = &d[i * n..(i + 1) * n];
+            let digest: f64 = col.iter().filter(|v| v.is_finite()).map(|&v| v as f64).sum();
+            let reached = col.iter().filter(|v| v.is_finite()).count();
+            (digest, reached)
+        })
+        .collect()
+}
+
+fn execute_batch(graph: &PreparedGraph, batch: &[(u64, BatchQuery)]) -> Vec<BatchOut> {
+    // Groups are homogeneous by construction (keyed on Kind).
+    match batch[0].1 {
+        BatchQuery::Spmv { .. } => {
+            let seeds: Vec<Option<u64>> = batch
+                .iter()
+                .map(|(_, q)| match q {
+                    BatchQuery::Spmv { seed } => *seed,
+                    _ => unreachable!("mixed kinds in one group"),
+                })
+                .collect();
+            run_spmv_tile(graph, &seeds)
+                .into_iter()
+                .map(|digest| BatchOut::Spmv { digest })
+                .collect()
+        }
+        BatchQuery::Sssp { .. } => {
+            let sources: Vec<u32> = batch
+                .iter()
+                .map(|(_, q)| match q {
+                    BatchQuery::Sssp { source } => *source,
+                    _ => unreachable!("mixed kinds in one group"),
+                })
+                .collect();
+            run_sssp_tile(graph, &sources)
+                .into_iter()
+                .map(|(digest, reached)| BatchOut::Sssp { digest, reached })
+                .collect()
+        }
+    }
+}
+
+/// Realized batch-width accounting for one query kind (rendered as the
+/// `/stats` width histogram).
+#[derive(Debug, Default)]
+pub struct BatchWidths {
+    counts: [AtomicU64; spmm::MAX_RHS],
+    batches: AtomicU64,
+    queries: AtomicU64,
+}
+
+impl BatchWidths {
+    /// Record one executed batch of `width` queries.
+    pub fn record(&self, width: usize) {
+        debug_assert!((1..=spmm::MAX_RHS).contains(&width));
+        self.counts[width.clamp(1, spmm::MAX_RHS) - 1].fetch_add(1, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.queries.fetch_add(width as u64, Ordering::Relaxed);
+    }
+
+    /// Batches executed.
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Queries answered across all batches.
+    pub fn queries(&self) -> u64 {
+        self.queries.load(Ordering::Relaxed)
+    }
+
+    /// JSON snapshot: totals, mean width, and the non-empty width
+    /// buckets.
+    pub fn to_json(&self) -> Json {
+        let batches = self.batches();
+        let queries = self.queries();
+        let widths: Vec<(String, Json)> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let c = c.load(Ordering::Relaxed);
+                (c > 0).then(|| ((i + 1).to_string(), Json::Num(c as f64)))
+            })
+            .collect();
+        Json::obj(vec![
+            ("batches", Json::Num(batches as f64)),
+            ("queries", Json::Num(queries as f64)),
+            (
+                "mean_width",
+                Json::Num(if batches == 0 { 0.0 } else { queries as f64 / batches as f64 }),
+            ),
+            ("widths", Json::Obj(widths)),
+        ])
+    }
+}
+
+struct GroupState {
+    /// Requests not yet claimed by a batch, FIFO.
+    queue: Vec<(u64, BatchQuery)>,
+    /// Finished answers keyed by ticket (`Err` = execution panicked).
+    results: HashMap<u64, std::result::Result<(BatchOut, usize), String>>,
+    /// A leader is currently forming or executing a batch.
+    leader: bool,
+    next_ticket: u64,
+    shutdown: bool,
+}
+
+struct Group {
+    state: Mutex<GroupState>,
+    cv: Condvar,
+}
+
+impl Group {
+    fn new() -> Group {
+        Group {
+            state: Mutex::new(GroupState {
+                queue: Vec::new(),
+                results: HashMap::new(),
+                leader: false,
+                next_ticket: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// Group key: the artifact's allocation address plus the query kind.
+/// Address, not id — see the module docs for why (stale-generation
+/// isolation) and why it cannot alias (members pin the allocation).
+type GroupKey = (usize, Kind);
+
+/// The per-`(artifact, kind)` query coalescer (see the module docs for
+/// the batching protocol).
+pub struct Coalescer {
+    cfg: CoalesceConfig,
+    groups: Mutex<HashMap<GroupKey, Arc<Group>>>,
+    down: AtomicBool,
+    spmv_widths: BatchWidths,
+    sssp_widths: BatchWidths,
+}
+
+impl Coalescer {
+    /// New coalescer (`max_batch` clamped to `1..=`[`spmm::MAX_RHS`]).
+    pub fn new(mut cfg: CoalesceConfig) -> Coalescer {
+        cfg.max_batch = cfg.max_batch.clamp(1, spmm::MAX_RHS);
+        Coalescer {
+            cfg,
+            groups: Mutex::new(HashMap::new()),
+            down: AtomicBool::new(false),
+            spmv_widths: BatchWidths::default(),
+            sssp_widths: BatchWidths::default(),
+        }
+    }
+
+    fn widths(&self, kind: Kind) -> &BatchWidths {
+        match kind {
+            Kind::Spmv => &self.spmv_widths,
+            Kind::Sssp => &self.sssp_widths,
+        }
+    }
+
+    /// Batch-width accounting for the SpMV kind (also fed by the
+    /// `/query/batch` endpoint's explicit tiles).
+    pub fn spmv_widths(&self) -> &BatchWidths {
+        &self.spmv_widths
+    }
+
+    /// Batch-width accounting for the SSSP kind.
+    pub fn sssp_widths(&self) -> &BatchWidths {
+        &self.sssp_widths
+    }
+
+    /// Submit one query; blocks until the batch containing it has
+    /// executed. Returns the answer and the width of the batch it rode
+    /// in. Errors if the coalescer is shut down while the query is
+    /// parked (or before it enqueues).
+    pub fn submit(&self, graph: &Arc<PreparedGraph>, q: BatchQuery) -> Result<(BatchOut, usize)> {
+        ensure!(!self.down.load(Ordering::Relaxed), "coalescer is shut down");
+        let kind = q.kind();
+        let key: GroupKey = (Arc::as_ptr(graph) as usize, kind);
+        let group = {
+            let mut gs = self.groups.lock().unwrap();
+            gs.entry(key).or_insert_with(|| Arc::new(Group::new())).clone()
+        };
+        let mut st = group.state.lock().unwrap();
+        // Re-check the global flag under the group lock: if shutdown()
+        // collected the group map before our group was registered, its
+        // `down` store is visible here (the groups-map mutex orders the
+        // insert against the collection), so we can never park in a
+        // group shutdown will not visit.
+        if st.shutdown || self.down.load(Ordering::Relaxed) {
+            bail!("coalescer is shut down");
+        }
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        st.queue.push((ticket, q));
+        // A leader parked in its window may now be full — let it see us.
+        group.cv.notify_all();
+        loop {
+            if let Some(out) = st.results.remove(&ticket) {
+                // Last one out turns off the light: an idle group (no
+                // queued work, no pending answers, no leader) is removed
+                // from the map so evicted/re-prepared artifacts do not
+                // leak one group per generation.
+                let idle = st.queue.is_empty() && st.results.is_empty() && !st.leader;
+                drop(st);
+                if idle {
+                    self.prune(&key, &group);
+                }
+                return out.map_err(|m| anyhow::anyhow!("{m}"));
+            }
+            if st.shutdown {
+                st.queue.retain(|(t, _)| *t != ticket);
+                group.cv.notify_all();
+                bail!("coalescer shut down with the query parked");
+            }
+            let queued = st.queue.iter().any(|(t, _)| *t == ticket);
+            if !queued || st.leader {
+                // Either an executing leader owns our request, or a
+                // forming batch will take it — park until woken.
+                st = group.cv.wait(st).unwrap();
+                continue;
+            }
+            // Become the leader: optionally hold the window open.
+            st.leader = true;
+            if !self.cfg.window.is_zero() {
+                let deadline = Instant::now() + self.cfg.window;
+                while st.queue.len() < self.cfg.max_batch && !st.shutdown {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (g, _) = group.cv.wait_timeout(st, deadline - now).unwrap();
+                    st = g;
+                }
+            }
+            if st.shutdown {
+                st.leader = false;
+                st.queue.retain(|(t, _)| *t != ticket);
+                group.cv.notify_all();
+                bail!("coalescer shut down while forming a batch");
+            }
+            let take = st.queue.len().min(self.cfg.max_batch);
+            let batch: Vec<(u64, BatchQuery)> = st.queue.drain(..take).collect();
+            drop(st);
+            let width = batch.len();
+            self.widths(kind).record(width);
+            // Unwind-safe: a panicking kernel must not leave followers
+            // parked forever — they get an error result instead.
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                execute_batch(graph, &batch)
+            }));
+            let mut st2 = group.state.lock().unwrap();
+            st2.leader = false;
+            match outcome {
+                Ok(outs) => {
+                    for ((t, _), out) in batch.iter().zip(outs) {
+                        st2.results.insert(*t, Ok((out, width)));
+                    }
+                }
+                Err(_) => {
+                    for (t, _) in &batch {
+                        st2.results.insert(*t, Err("batch execution panicked".to_string()));
+                    }
+                }
+            }
+            group.cv.notify_all();
+            st = st2;
+            // Loop back: our own answer is in the results map now (our
+            // ticket rode this batch unless we arrived > max_batch deep,
+            // in which case we queue for the next one).
+        }
+    }
+
+    /// Remove `group` from the map if it is still the mapped entry for
+    /// `key` and is (re-checked under both locks, groups before state —
+    /// the crate-wide lock order) still idle. Losing the race to a new
+    /// arrival is fine: a thread that fetched the group Arc just before
+    /// the removal simply runs its batch in the detached group — every
+    /// member of a group can lead, so nothing can park unserved; only
+    /// cross-request coalescing with later arrivals is forgone.
+    fn prune(&self, key: &GroupKey, group: &Arc<Group>) {
+        let mut gs = self.groups.lock().unwrap();
+        let mapped = gs.get(key).map_or(false, |g| Arc::ptr_eq(g, group));
+        if mapped {
+            let idle = {
+                let st = group.state.lock().unwrap();
+                st.queue.is_empty() && st.results.is_empty() && !st.leader
+            };
+            if idle {
+                gs.remove(key);
+            }
+        }
+    }
+
+    /// Shut down: every parked waiter (including leaders holding a
+    /// window open) is released with an error, and new submissions are
+    /// refused. Idempotent. A group detached by a racing [`Self::prune`]
+    /// is not notified, but detached groups cannot park past their
+    /// window (every member can lead and the `down` flag refuses new
+    /// work), so shutdown is delayed by at most one window.
+    pub fn shutdown(&self) {
+        self.down.store(true, Ordering::Relaxed);
+        let groups: Vec<Arc<Group>> = self.groups.lock().unwrap().values().cloned().collect();
+        for g in groups {
+            let mut st = g.state.lock().unwrap();
+            st.shutdown = true;
+            g.cv.notify_all();
+        }
+    }
+
+    /// Live batching groups (pruning observability: idle groups are
+    /// removed, so this tracks artifacts with in-flight queries, not
+    /// everything ever served).
+    pub fn group_count(&self) -> usize {
+        self.groups.lock().unwrap().len()
+    }
+
+    /// `/stats` snapshot: config + live group count + per-kind
+    /// batch-width histograms.
+    pub fn stats_json(&self) -> Json {
+        Json::obj(vec![
+            ("window_us", Json::Num(self.cfg.window.as_micros() as f64)),
+            ("max_batch", Json::Num(self.cfg.max_batch as f64)),
+            ("groups", Json::Num(self.group_count() as f64)),
+            ("spmv", self.spmv_widths.to_json()),
+            ("sssp", self.sssp_widths.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::spmv;
+    use crate::server::registry::{GraphRegistry, RegistryConfig};
+
+    fn prepared() -> Arc<PreparedGraph> {
+        let r = GraphRegistry::new(RegistryConfig {
+            capacity: 2,
+            batch: 1000,
+            in_flight: 2,
+            seed: 3,
+        });
+        r.get_or_prepare("pa:2000:4", "none").unwrap().0
+    }
+
+    #[test]
+    fn coalesced_answers_equal_direct_kernels() {
+        let g = prepared();
+        let co = Arc::new(Coalescer::new(CoalesceConfig {
+            window: Duration::from_millis(50),
+            max_batch: 8,
+        }));
+        let mut handles = Vec::new();
+        for i in 0..6u64 {
+            let co = co.clone();
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || {
+                let seed = if i == 0 { None } else { Some(i) };
+                (seed, co.submit(&g, BatchQuery::Spmv { seed }).unwrap())
+            }));
+        }
+        for h in handles {
+            let (seed, (out, width)) = h.join().unwrap();
+            let BatchOut::Spmv { digest } = out else { panic!("kind") };
+            let x = rhs_vector(g.csr.n(), seed);
+            let want: f64 = spmv::spmv_pull(&g.csr, &x).iter().map(|&v| v as f64).sum();
+            assert_eq!(digest, want, "coalescing must not change answers (seed {seed:?})");
+            assert!((1..=8).contains(&width));
+        }
+        assert_eq!(co.spmv_widths().queries(), 6);
+        assert!(co.spmv_widths().batches() >= 1);
+    }
+
+    #[test]
+    fn zero_window_executes_immediately_and_prunes_idle_groups() {
+        let g = prepared();
+        let co = Coalescer::new(CoalesceConfig::default());
+        let (out, width) = co.submit(&g, BatchQuery::Sssp { source: 0 }).unwrap();
+        let BatchOut::Sssp { digest, reached } = out else { panic!("kind") };
+        let d = crate::algos::sssp::sssp_frontier(&g.csr, 0);
+        let want: f64 = d.iter().filter(|v| v.is_finite()).map(|&v| v as f64).sum();
+        assert_eq!(digest, want);
+        assert_eq!(reached, d.iter().filter(|v| v.is_finite()).count());
+        assert_eq!(width, 1);
+        // The group went idle with the last member and was pruned.
+        assert_eq!(co.group_count(), 0, "idle groups must not accumulate");
+        co.submit(&g, BatchQuery::Spmv { seed: None }).unwrap();
+        assert_eq!(co.group_count(), 0);
+    }
+
+    #[test]
+    fn distinct_artifact_generations_never_share_a_batch() {
+        // Two generations of the same registry id (different registry
+        // seeds ⇒ different randomized labelings). Groups are keyed by
+        // artifact instance, so concurrent label-dependent queries must
+        // each be answered against the generation they resolved — an
+        // id-keyed group would hand one of them to a leader holding the
+        // other generation.
+        let generation = |seed: u64| {
+            let r = GraphRegistry::new(RegistryConfig {
+                capacity: 2,
+                batch: 1000,
+                in_flight: 2,
+                seed,
+            });
+            r.get_or_prepare("pa:2000:4", "none").unwrap().0
+        };
+        let a = generation(3);
+        let b = generation(4);
+        assert_eq!(a.id, b.id, "same registry id, different generations");
+        let co = Arc::new(Coalescer::new(CoalesceConfig {
+            window: Duration::from_millis(80),
+            max_batch: 16,
+        }));
+        let mut handles = Vec::new();
+        for g in [a.clone(), b.clone()] {
+            let co = co.clone();
+            handles.push(std::thread::spawn(move || {
+                (g.clone(), co.submit(&g, BatchQuery::Spmv { seed: Some(9) }).unwrap())
+            }));
+        }
+        for h in handles {
+            let (g, (out, _width)) = h.join().unwrap();
+            let BatchOut::Spmv { digest } = out else { panic!("kind") };
+            let x = rhs_vector(g.csr.n(), Some(9));
+            let want: f64 = spmv::spmv_pull(&g.csr, &x).iter().map(|&v| v as f64).sum();
+            assert_eq!(
+                digest, want,
+                "every query must be answered against its own artifact generation"
+            );
+        }
+    }
+
+    #[test]
+    fn shutdown_releases_parked_waiters() {
+        let g = prepared();
+        // A huge window so the leader (and followers) genuinely park.
+        let co = Arc::new(Coalescer::new(CoalesceConfig {
+            window: Duration::from_secs(60),
+            max_batch: 16,
+        }));
+        let mut handles = Vec::new();
+        for i in 0..4u64 {
+            let co = co.clone();
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || {
+                co.submit(&g, BatchQuery::Spmv { seed: Some(i) })
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(100));
+        co.shutdown();
+        for h in handles {
+            assert!(h.join().unwrap().is_err(), "parked waiters must be released with an error");
+        }
+        // Post-shutdown submissions are refused outright.
+        assert!(co.submit(&g, BatchQuery::Spmv { seed: None }).is_err());
+    }
+}

@@ -36,6 +36,12 @@ pub struct LoadgenConfig {
     pub pr_iters: usize,
     /// PRNG seed for the mix schedule.
     pub seed: u64,
+    /// Closed-loop batch mode: send queries through `POST /query/batch`
+    /// in explicit batches instead of one-at-a-time endpoint calls, so
+    /// every SpMV/SSSP batch is answered by one multi-RHS kernel pass.
+    pub coalesce: bool,
+    /// Queries per batch request in coalesced mode (ignored otherwise).
+    pub batch: usize,
 }
 
 impl Default for LoadgenConfig {
@@ -49,6 +55,8 @@ impl Default for LoadgenConfig {
             mix: vec![("spmv".to_string(), 7), ("pagerank".to_string(), 3)],
             pr_iters: 5,
             seed: 42,
+            coalesce: false,
+            batch: 4,
         }
     }
 }
@@ -85,21 +93,28 @@ pub struct Report {
     pub cached: bool,
     /// Server-reported preparation time (ms; 0 on cache hits).
     pub prep_ms: f64,
-    /// Requests attempted (excluding the ingest call).
+    /// Queries attempted (excluding the ingest call). In coalesced mode
+    /// each batch request carries several queries; this counts queries.
     pub requests: usize,
-    /// Requests that failed (non-200 or transport error).
+    /// Queries that failed (non-200 or transport error).
     pub failed: usize,
+    /// Whether queries went through `POST /query/batch`.
+    pub coalesced: bool,
+    /// Queries per batch request (1 in single / direct-endpoint mode).
+    pub batch: usize,
     /// Wall time of the query phase in seconds.
     pub elapsed_s: f64,
-    /// Sustained throughput (completed queries / second).
+    /// Sustained throughput (completed queries / second; in coalesced
+    /// mode each batch request completes `batch` queries).
     pub qps: f64,
-    /// Latency mean over completed queries (ms).
+    /// Latency mean over completed HTTP requests (ms) — a whole batch
+    /// in coalesced mode.
     pub mean_ms: f64,
-    /// Latency p50 (ms).
+    /// Per-request latency p50 (ms).
     pub p50_ms: f64,
-    /// Latency p99 (ms).
+    /// Per-request latency p99 (ms).
     pub p99_ms: f64,
-    /// Slowest query (ms).
+    /// Slowest request (ms).
     pub max_ms: f64,
 }
 
@@ -109,6 +124,11 @@ impl Report {
         Json::obj(vec![
             ("dataset", Json::Str(self.dataset.clone())),
             ("scheme", Json::Str(self.scheme.clone())),
+            (
+                "mode",
+                Json::Str(if self.coalesced { "coalesced" } else { "single" }.to_string()),
+            ),
+            ("batch", Json::Num(self.batch as f64)),
             ("id", Json::Str(self.id.clone())),
             ("cached", Json::Bool(self.cached)),
             ("prep_ms", Json::Num(self.prep_ms)),
@@ -126,11 +146,16 @@ impl Report {
     /// One-paragraph human rendering.
     pub fn render(&self) -> String {
         format!(
-            "{} via {}: {} requests over {:.2} s → {:.0} q/s \
+            "{} via {}{}: {} queries over {:.2} s → {:.0} q/s \
              (p50 {:.3} ms, p99 {:.3} ms, max {:.3} ms, mean {:.3} ms), \
              {} failed; prep {:.1} ms{}",
             self.dataset,
             self.scheme,
+            if self.coalesced {
+                format!(" (coalesced x{})", self.batch)
+            } else {
+                String::new()
+            },
             self.requests,
             self.elapsed_s,
             self.qps,
@@ -178,6 +203,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
 
     // ── query phase ───────────────────────────────────────────────
     let conns = cfg.conns.max(1);
+    let batch = if cfg.coalesce { cfg.batch.max(1) } else { 1 };
     let remaining = AtomicUsize::new(cfg.requests);
     let pr_body = format!("{{\"iters\": {}}}", cfg.pr_iters);
     let total_weight: u32 = cfg.mix.iter().map(|(_, w)| w).sum();
@@ -185,6 +211,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
 
     struct WorkerOut {
         latencies_us: Vec<u64>,
+        completed: usize,
         failed: usize,
     }
 
@@ -197,23 +224,13 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
             let id = &id;
             let pr_body = &pr_body;
             handles.push(scope.spawn(move || {
-                let mut out = WorkerOut { latencies_us: Vec::new(), failed: 0 };
+                let mut out = WorkerOut { latencies_us: Vec::new(), completed: 0, failed: 0 };
                 let mut client = match HttpClient::connect(&cfg.addr) {
                     Ok(c) => c,
                     Err(_) => return out, // counted below via remaining
                 };
                 let mut rng = Xoshiro256::stream(cfg.seed, w as u64 + 1);
-                loop {
-                    // Claim one request from the shared budget.
-                    let prev = remaining.fetch_update(
-                        Ordering::SeqCst,
-                        Ordering::SeqCst,
-                        |r| r.checked_sub(1),
-                    );
-                    if prev.is_err() {
-                        return out;
-                    }
-                    // Draw the query from the weighted mix.
+                let mut draw = |rng: &mut Xoshiro256| -> &str {
                     let mut pick = rng.below(total_weight as u64) as u32;
                     let mut query = cfg.mix[0].0.as_str();
                     for (name, weight) in &cfg.mix {
@@ -223,20 +240,52 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
                         }
                         pick -= weight;
                     }
-                    let body: &str = if matches!(query, "pagerank" | "pr") {
-                        pr_body.as_str()
-                    } else {
-                        ""
+                    query
+                };
+                loop {
+                    // Claim up to `batch` queries from the shared budget.
+                    let take = match remaining.fetch_update(
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                        |r| (r > 0).then(|| r.saturating_sub(batch)),
+                    ) {
+                        Ok(prev) => prev.min(batch),
+                        Err(_) => return out,
                     };
-                    let path = format!("/graphs/{id}/{query}");
+                    let (path, body) = if cfg.coalesce {
+                        // One POST /query/batch carrying `take` queries:
+                        // the server answers the SpMV/SSSP portion with
+                        // one multi-RHS kernel pass per ≤16-wide tile.
+                        let items: Vec<String> = (0..take)
+                            .map(|_| match draw(&mut rng) {
+                                q @ ("pagerank" | "pr") => {
+                                    format!("{{\"query\": \"{q}\", \"iters\": {}}}", cfg.pr_iters)
+                                }
+                                q => format!("{{\"query\": \"{q}\"}}"),
+                            })
+                            .collect();
+                        (
+                            "/query/batch".to_string(),
+                            format!("{{\"id\": \"{id}\", \"queries\": [{}]}}", items.join(",")),
+                        )
+                    } else {
+                        let query = draw(&mut rng);
+                        let body = if matches!(query, "pagerank" | "pr") {
+                            pr_body.clone()
+                        } else {
+                            String::new()
+                        };
+                        (format!("/graphs/{id}/{query}"), body)
+                    };
                     let lap = Stopwatch::start();
                     match client.request("POST", &path, body.as_bytes()) {
                         Ok((200, _)) => {
-                            out.latencies_us.push(lap.elapsed().as_micros() as u64)
+                            out.latencies_us.push(lap.elapsed().as_micros() as u64);
+                            out.completed += take;
                         }
-                        Ok((_, _)) => out.failed += 1,
+                        Ok((_, _)) => out.failed += take,
                         Err(_) => {
-                            out.failed += 1;
+                            out.failed += take;
                             // One reconnect attempt; give up on repeat failure.
                             match HttpClient::connect(&cfg.addr) {
                                 Ok(c) => client = c,
@@ -252,13 +301,15 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
     let elapsed_s = sw.elapsed().as_secs_f64();
 
     let mut latencies: Vec<u64> = Vec::new();
+    let mut completed = 0usize;
     let mut failed = 0usize;
     for o in &outs {
         latencies.extend_from_slice(&o.latencies_us);
+        completed += o.completed;
         failed += o.failed;
     }
-    // Requests the workers never got to (early bail-outs) count as failed.
-    let attempted = latencies.len() + failed;
+    // Queries the workers never got to (early bail-outs) count as failed.
+    let attempted = completed + failed;
     failed += cfg.requests.saturating_sub(attempted);
     latencies.sort_unstable();
 
@@ -270,7 +321,6 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
             .min(latencies.len() - 1);
         latencies[idx] as f64 / 1e3
     };
-    let completed = latencies.len();
     Ok(Report {
         dataset: cfg.dataset.clone(),
         scheme: cfg.scheme.clone(),
@@ -279,12 +329,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
         prep_ms,
         requests: cfg.requests,
         failed,
+        coalesced: cfg.coalesce,
+        batch,
         elapsed_s,
         qps: if elapsed_s > 0.0 { completed as f64 / elapsed_s } else { 0.0 },
-        mean_ms: if completed == 0 {
+        mean_ms: if latencies.is_empty() {
             0.0
         } else {
-            latencies.iter().sum::<u64>() as f64 / completed as f64 / 1e3
+            latencies.iter().sum::<u64>() as f64 / latencies.len() as f64 / 1e3
         },
         p50_ms: pctl(0.50),
         p99_ms: pctl(0.99),
@@ -307,14 +359,57 @@ pub fn compare(cfg: &LoadgenConfig) -> Result<(Report, Report, f64)> {
     Ok((reordered, baseline, speedup))
 }
 
-/// Render the comparison as the `BENCH_serve.json` document.
-pub fn comparison_json(reordered: &Report, baseline: &Report, speedup: f64) -> Json {
+/// Single-vs-coalesced pricing on the same scheme: the same workload
+/// once through the direct endpoints (one query per request) and once
+/// through `POST /query/batch` (`cfg.batch` queries per request, each
+/// SpMV/SSSP tile one kernel pass). Returns `(single, coalesced,
+/// speedup)` where speedup is the coalesced/single throughput ratio —
+/// the serving-layer restatement of the spmm edge-stream amortization.
+pub fn compare_coalesced(cfg: &LoadgenConfig) -> Result<(Report, Report, f64)> {
+    let mut single_cfg = cfg.clone();
+    single_cfg.coalesce = false;
+    // Single first: the coalesced run then reuses the warmed artifact,
+    // so the contrast isolates batching, not preparation.
+    let single = run(&single_cfg)?;
+    let mut co_cfg = cfg.clone();
+    co_cfg.coalesce = true;
+    let coalesced = run(&co_cfg)?;
+    let speedup = if single.qps > 0.0 { coalesced.qps / single.qps } else { 0.0 };
+    Ok((single, coalesced, speedup))
+}
+
+/// Render a [`compare_coalesced`] result as its own document
+/// (`loadgen --compare-coalesced`).
+pub fn batch_comparison_json(single: &Report, coalesced: &Report, speedup: f64) -> Json {
     Json::obj(vec![
-        ("bench", Json::Str("serve".into())),
-        ("reordered", reordered.to_json()),
-        ("baseline", baseline.to_json()),
-        ("speedup_qps", Json::Num(speedup)),
+        ("bench", Json::Str("serve-batch".into())),
+        ("single", single.to_json()),
+        ("coalesced", coalesced.to_json()),
+        ("speedup_coalesced_qps", Json::Num(speedup)),
     ])
+}
+
+/// Render the comparison as the `BENCH_serve.json` document. The
+/// optional `coalesced` triple appends the single-vs-coalesced rows
+/// ([`compare_coalesced`] on the reordered scheme) so one document
+/// prices both axes: reordering and batching.
+pub fn comparison_json(
+    reordered: &Report,
+    baseline: &Report,
+    speedup: f64,
+    coalesced: Option<(&Report, f64)>,
+) -> Json {
+    let mut pairs = vec![
+        ("bench".to_string(), Json::Str("serve".into())),
+        ("reordered".to_string(), reordered.to_json()),
+        ("baseline".to_string(), baseline.to_json()),
+        ("speedup_qps".to_string(), Json::Num(speedup)),
+    ];
+    if let Some((co, co_speedup)) = coalesced {
+        pairs.push(("coalesced".to_string(), co.to_json()));
+        pairs.push(("speedup_coalesced_qps".to_string(), Json::Num(co_speedup)));
+    }
+    Json::Obj(pairs)
 }
 
 #[cfg(test)]
@@ -342,6 +437,7 @@ mod tests {
             in_flight: 2,
             seed: 13,
             read_timeout: std::time::Duration::from_secs(10),
+            ..Default::default()
         })
         .unwrap();
         let cfg = LoadgenConfig {
@@ -360,9 +456,28 @@ mod tests {
         assert!(report.qps > 0.0);
         assert!(report.p99_ms >= report.p50_ms);
         assert!(!report.cached);
+        assert!(!report.coalesced);
+        assert_eq!(report.batch, 1);
         // A second run hits the artifact cache.
         let again = run(&cfg).unwrap();
         assert!(again.cached);
+
+        // Coalesced mode: same workload through /query/batch, 5 queries
+        // per request (40 = 8 batches), every query must succeed.
+        let co_cfg = LoadgenConfig { coalesce: true, batch: 5, ..cfg.clone() };
+        let co = run(&co_cfg).unwrap();
+        assert_eq!(co.requests, 40);
+        assert_eq!(co.failed, 0, "no batched query may fail: {co:?}");
+        assert!(co.coalesced);
+        assert_eq!(co.batch, 5);
+        assert!(co.qps > 0.0);
+        // The server-side width histogram saw multi-query tiles.
+        assert!(server.coalescer.spmv_widths().queries() > 0);
+
+        // The JSON rows carry the mode tag the CI grep keys on.
+        let j = co.to_json().render();
+        assert!(j.contains("\"mode\":\"coalesced\""), "{j}");
+        assert!(run(&cfg).unwrap().to_json().render().contains("\"mode\":\"single\""));
         server.shutdown();
     }
 }

@@ -20,6 +20,7 @@
 //! closed-loop loadgen does exactly that). Shutdown sets a flag and
 //! wakes every blocked `accept()` with a dummy connection, then joins.
 
+pub mod coalesce;
 pub mod http;
 pub mod loadgen;
 pub mod registry;
@@ -38,6 +39,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use self::coalesce::{CoalesceConfig, Coalescer};
 use self::registry::{GraphRegistry, RegistryConfig};
 use self::router::Router;
 use self::stats::ServerStats;
@@ -59,6 +61,14 @@ pub struct ServerConfig {
     pub seed: u64,
     /// Idle keep-alive timeout per connection.
     pub read_timeout: Duration,
+    /// Coalescer window in microseconds (`--batch-window-us`): how long
+    /// a batch leader holds the door open for companion SpMV/SSSP
+    /// queries. 0 = coalesce only already-queued queries (no added
+    /// latency).
+    pub batch_window_us: u64,
+    /// Maximum coalesced queries per kernel pass (`--max-batch`,
+    /// clamped to [`crate::algos::spmm::MAX_RHS`]).
+    pub max_batch: usize,
 }
 
 impl Default for ServerConfig {
@@ -71,6 +81,8 @@ impl Default for ServerConfig {
             in_flight: 4,
             seed: 42,
             read_timeout: Duration::from_secs(30),
+            batch_window_us: 0,
+            max_batch: 8,
         }
     }
 }
@@ -86,6 +98,8 @@ pub struct Server {
     pub registry: Arc<GraphRegistry>,
     /// Shared latency stats.
     pub stats: Arc<ServerStats>,
+    /// Shared query coalescer (exposed for in-process inspection).
+    pub coalescer: Arc<Coalescer>,
 }
 
 /// Bind and start serving on a fixed worker pool.
@@ -100,7 +114,11 @@ pub fn spawn(cfg: ServerConfig) -> Result<Server> {
         seed: cfg.seed,
     }));
     let stats = Arc::new(ServerStats::new());
-    let router = Arc::new(Router::new(registry.clone(), stats.clone()));
+    let coalescer = Arc::new(Coalescer::new(CoalesceConfig {
+        window: Duration::from_micros(cfg.batch_window_us),
+        max_batch: cfg.max_batch,
+    }));
+    let router = Arc::new(Router::new(registry.clone(), stats.clone(), coalescer.clone()));
     let shutdown = Arc::new(AtomicBool::new(false));
 
     let n_workers = cfg.workers.max(1);
@@ -117,7 +135,7 @@ pub fn spawn(cfg: ServerConfig) -> Result<Server> {
                 .context("spawning worker")?,
         );
     }
-    Ok(Server { addr, shutdown, workers, registry, stats })
+    Ok(Server { addr, shutdown, workers, registry, stats, coalescer })
 }
 
 impl Server {
@@ -133,11 +151,14 @@ impl Server {
         }
     }
 
-    /// Graceful shutdown: stop accepting, wake blocked workers, join.
-    /// Connections currently inside a request finish it first; idle
-    /// keep-alive connections are abandoned to their read timeout.
+    /// Graceful shutdown: stop accepting, release coalescer waiters,
+    /// wake blocked workers, join. Connections currently inside a
+    /// request finish it first (parked coalesced queries answer with an
+    /// error); idle keep-alive connections are abandoned to their read
+    /// timeout.
     pub fn shutdown(self) {
         self.shutdown.store(true, Ordering::SeqCst);
+        self.coalescer.shutdown();
         for _ in 0..self.workers.len() {
             // Wake one blocked accept() per worker.
             if let Ok(s) = TcpStream::connect(self.addr) {
@@ -228,6 +249,7 @@ mod tests {
             in_flight: 2,
             seed: 11,
             read_timeout: Duration::from_secs(5),
+            ..Default::default()
         })
         .unwrap()
     }

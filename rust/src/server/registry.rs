@@ -10,7 +10,13 @@
 //!
 //! Cache policy is LRU keyed by `(dataset, scheme)` — the same dataset
 //! prepared under two schemes is two artifacts, which is exactly what
-//! the BOBA-vs-random serving comparison needs.
+//! the BOBA-vs-random serving comparison needs. Recency is a monotonic
+//! per-entry counter (touch = one store under the lock, eviction = a
+//! min-recency scan at insert time only), so the query hot path does
+//! O(1) work inside the registry mutex. Preparation is **single-flight**:
+//! N concurrent requesters for a cold key run the pipeline exactly once
+//! — the first installs an in-flight marker, the rest park on its
+//! condvar and share the result.
 
 use crate::convert;
 use crate::coordinator::datasets;
@@ -18,10 +24,10 @@ use crate::coordinator::pipeline::StreamingIngest;
 use crate::graph::{Coo, Csr};
 use crate::reorder::{self, Permutation};
 use crate::util::timer::Stopwatch;
-use anyhow::{Context, Result};
-use std::collections::{HashMap, VecDeque};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use super::json::Json;
 
@@ -171,19 +177,88 @@ impl Default for RegistryConfig {
     }
 }
 
-struct Inner {
-    map: HashMap<String, Arc<PreparedGraph>>,
-    /// LRU order: front = coldest, back = hottest.
-    order: VecDeque<String>,
+/// A prepare in flight: waiters block on the condvar until the one
+/// thread running the pipeline publishes its outcome. Errors cross as
+/// rendered strings (`anyhow::Error` is not `Clone`).
+struct InFlight {
+    done: Mutex<Option<std::result::Result<Arc<PreparedGraph>, String>>>,
+    cv: Condvar,
 }
 
-/// The concurrent LRU registry of prepared graphs.
+impl InFlight {
+    fn new() -> InFlight {
+        InFlight { done: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn wait(&self) -> std::result::Result<Arc<PreparedGraph>, String> {
+        let mut d = self.done.lock().unwrap();
+        while d.is_none() {
+            d = self.cv.wait(d).unwrap();
+        }
+        d.clone().unwrap()
+    }
+
+    fn publish(&self, r: std::result::Result<Arc<PreparedGraph>, String>) {
+        *self.done.lock().unwrap() = Some(r);
+        self.cv.notify_all();
+    }
+}
+
+/// One registry map slot: a prepared artifact with its LRU recency
+/// stamp, or an in-flight marker other requesters join instead of
+/// re-running the pipeline.
+enum Slot {
+    Ready { graph: Arc<PreparedGraph>, recency: u64 },
+    Pending(Arc<InFlight>),
+}
+
+struct Inner {
+    map: HashMap<String, Slot>,
+    /// Monotonic recency clock: every lookup stamps its entry with the
+    /// next tick, so a *touch* is O(1) inside the lock (the old
+    /// `VecDeque` order list cost an O(n) scan per query hit) and
+    /// eviction is a min-recency scan at insert time only.
+    clock: u64,
+}
+
+impl Inner {
+    fn ready_count(&self) -> usize {
+        self.map.values().filter(|s| matches!(s, Slot::Ready { .. })).count()
+    }
+}
+
+/// The concurrent LRU registry of prepared graphs (single-flight: N
+/// concurrent requesters for a cold key run the pipeline exactly once).
 pub struct GraphRegistry {
     cfg: RegistryConfig,
     inner: Mutex<Inner>,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    prepares: AtomicU64,
+}
+
+/// Removes the pending marker and publishes a failure if the preparing
+/// thread unwinds (a panicking pipeline must not leave waiters parked
+/// forever or the key permanently uncacheable).
+struct PendingGuard<'a> {
+    registry: &'a GraphRegistry,
+    id: &'a str,
+    flight: &'a Arc<InFlight>,
+    armed: bool,
+}
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            let mut inner = self.registry.inner.lock().unwrap();
+            if matches!(inner.map.get(self.id), Some(Slot::Pending(_))) {
+                inner.map.remove(self.id);
+            }
+            drop(inner);
+            self.flight.publish(Err("prepare panicked".to_string()));
+        }
+    }
 }
 
 impl GraphRegistry {
@@ -191,10 +266,11 @@ impl GraphRegistry {
     pub fn new(cfg: RegistryConfig) -> GraphRegistry {
         GraphRegistry {
             cfg,
-            inner: Mutex::new(Inner { map: HashMap::new(), order: VecDeque::new() }),
+            inner: Mutex::new(Inner { map: HashMap::new(), clock: 0 }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            prepares: AtomicU64::new(0),
         }
     }
 
@@ -203,68 +279,160 @@ impl GraphRegistry {
         format!("{dataset}@{scheme}")
     }
 
-    /// Cached artifact by id, touching LRU recency. Does not move the
-    /// hit/miss counters — those track *prepare-cache* outcomes (see
-    /// [`Self::get_or_prepare`]), not query lookups.
+    /// Cached artifact by id, touching LRU recency — O(1) inside the
+    /// lock (the query hot path). Does not move the hit/miss counters —
+    /// those track *prepare-cache* outcomes (see
+    /// [`Self::get_or_prepare`]), not query lookups. In-flight prepares
+    /// are not yet queryable and return `None`.
     pub fn get(&self, id: &str) -> Option<Arc<PreparedGraph>> {
         let mut inner = self.inner.lock().unwrap();
-        let found = inner.map.get(id).cloned();
-        if found.is_some() {
-            touch(&mut inner.order, id);
+        inner.clock += 1;
+        let clock = inner.clock;
+        match inner.map.get_mut(id) {
+            Some(Slot::Ready { graph, recency }) => {
+                *recency = clock;
+                Some(graph.clone())
+            }
+            _ => None,
         }
-        found
     }
 
     /// Cached artifact, or prepare-and-insert. Returns `(graph, cached)`
-    /// where `cached` is true on an LRU hit.
+    /// where `cached` is true on an LRU hit (including joining a prepare
+    /// another requester already has in flight).
     ///
-    /// The pipeline runs *outside* the registry lock, so slow prepares
-    /// never stall queries against already-cached artifacts. Two racing
-    /// prepares of the same key both run and the later insert wins —
-    /// wasted work, never wrong results (queries hold `Arc`s).
+    /// Single-flight: the first requester for a cold key installs an
+    /// in-flight marker and runs the Problem-3 pipeline *outside* the
+    /// registry lock; every concurrent requester for the same key parks
+    /// on the marker's condvar and shares the one result (losers wait,
+    /// then hit — they count as hits, not misses). Requesters for
+    /// *other* keys are never stalled. A failed prepare clears the
+    /// marker (waiters get the error; the next requester retries).
     pub fn get_or_prepare(&self, dataset: &str, scheme: &str) -> Result<(Arc<PreparedGraph>, bool)> {
         let id = Self::id_of(dataset, scheme);
-        if let Some(g) = self.get(&id) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok((g, true));
-        }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let prepared = Arc::new(self.prepare(dataset, scheme)?);
-        let mut inner = self.inner.lock().unwrap();
-        if inner.map.insert(id.clone(), prepared.clone()).is_none() {
-            inner.order.push_back(id);
-        } else {
-            touch(&mut inner.order, &id);
-        }
-        while inner.map.len() > self.cfg.capacity.max(1) {
-            if let Some(cold) = inner.order.pop_front() {
-                inner.map.remove(&cold);
-                self.evictions.fetch_add(1, Ordering::Relaxed);
-            } else {
-                break;
+        let flight: Arc<InFlight>;
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.clock += 1;
+            let clock = inner.clock;
+            match inner.map.get_mut(&id) {
+                Some(Slot::Ready { graph, recency }) => {
+                    *recency = clock;
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((graph.clone(), true));
+                }
+                Some(Slot::Pending(f)) => {
+                    flight = f.clone();
+                }
+                None => {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    let f = Arc::new(InFlight::new());
+                    inner.map.insert(id.clone(), Slot::Pending(f.clone()));
+                    drop(inner);
+                    return self.run_prepare(&id, dataset, scheme, &f);
+                }
             }
         }
-        Ok((prepared, false))
+        // Waiter path: park until the in-flight prepare publishes.
+        match flight.wait() {
+            Ok(g) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Ok((g, true))
+            }
+            Err(msg) => Err(anyhow!("{msg}")),
+        }
+    }
+
+    /// Leader path of [`Self::get_or_prepare`]: run the pipeline, swap
+    /// the pending marker for the result, wake the waiters.
+    fn run_prepare(
+        &self,
+        id: &str,
+        dataset: &str,
+        scheme: &str,
+        flight: &Arc<InFlight>,
+    ) -> Result<(Arc<PreparedGraph>, bool)> {
+        let mut guard = PendingGuard { registry: self, id, flight, armed: true };
+        let result = self.prepare(dataset, scheme).map(Arc::new);
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        match &result {
+            Ok(g) => {
+                inner
+                    .map
+                    .insert(id.to_string(), Slot::Ready { graph: g.clone(), recency: clock });
+                self.evict_over_capacity(&mut inner);
+            }
+            Err(_) => {
+                inner.map.remove(id);
+            }
+        }
+        drop(inner);
+        guard.armed = false;
+        flight.publish(
+            result
+                .as_ref()
+                .map(Arc::clone)
+                .map_err(|e| format!("{e:#}")),
+        );
+        result.map(|g| (g, false))
+    }
+
+    /// Evict min-recency ready artifacts down to capacity — the only
+    /// O(n) scan left in the cache, and it runs at insert time, never on
+    /// the query hit path. Pending markers are not evictable.
+    fn evict_over_capacity(&self, inner: &mut Inner) {
+        while inner.ready_count() > self.cfg.capacity.max(1) {
+            let coldest = inner
+                .map
+                .iter()
+                .filter_map(|(k, s)| match s {
+                    Slot::Ready { recency, .. } => Some((*recency, k.clone())),
+                    Slot::Pending(_) => None,
+                })
+                .min()
+                .map(|(_, k)| k);
+            match coldest {
+                Some(k) => {
+                    inner.map.remove(&k);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
     }
 
     /// Snapshot of cached artifacts, hottest last.
     pub fn list(&self) -> Vec<Arc<PreparedGraph>> {
         let inner = self.inner.lock().unwrap();
-        inner
-            .order
-            .iter()
-            .filter_map(|id| inner.map.get(id).cloned())
-            .collect()
+        let mut rows: Vec<(u64, Arc<PreparedGraph>)> = inner
+            .map
+            .values()
+            .filter_map(|s| match s {
+                Slot::Ready { graph, recency } => Some((*recency, graph.clone())),
+                Slot::Pending(_) => None,
+            })
+            .collect();
+        rows.sort_by_key(|(r, _)| *r);
+        rows.into_iter().map(|(_, g)| g).collect()
     }
 
-    /// Cached artifact count.
+    /// Cached (query-ready) artifact count.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.inner.lock().unwrap().ready_count()
     }
 
     /// True when nothing is cached.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Pipeline executions so far — the single-flight observability
+    /// handle (`tests/batch_equiv.rs` hammers a cold key from 8 threads
+    /// and asserts this reads 1).
+    pub fn prepares(&self) -> u64 {
+        self.prepares.load(Ordering::Relaxed)
     }
 
     /// Cache counters as JSON (for `/stats`).
@@ -275,11 +443,13 @@ impl GraphRegistry {
             ("hits", Json::Num(self.hits.load(Ordering::Relaxed) as f64)),
             ("misses", Json::Num(self.misses.load(Ordering::Relaxed) as f64)),
             ("evictions", Json::Num(self.evictions.load(Ordering::Relaxed) as f64)),
+            ("prepares", Json::Num(self.prepares.load(Ordering::Relaxed) as f64)),
         ])
     }
 
     /// Run the Problem-3 pipeline once for `(dataset, scheme)`.
     fn prepare(&self, dataset: &str, scheme: &str) -> Result<PreparedGraph> {
+        self.prepares.fetch_add(1, Ordering::Relaxed);
         let mut prep = PrepReport::default();
 
         // ── source + batched ingest ───────────────────────────────
@@ -327,14 +497,6 @@ impl GraphRegistry {
             tc: OnceLock::new(),
         })
     }
-}
-
-/// Move `id` to the hot end of the LRU order.
-fn touch(order: &mut VecDeque<String>, id: &str) {
-    if let Some(pos) = order.iter().position(|x| x == id) {
-        order.remove(pos);
-    }
-    order.push_back(id.to_string());
 }
 
 /// Load a dataset spec: a `.mtx`/`.el`/`.bcoo` file path, or a
@@ -419,6 +581,43 @@ mod tests {
         assert!(r.get_or_prepare("nope:13", "boba").is_err());
         assert!(r.get_or_prepare("pa:1000:4", "definitely-not-a-scheme").is_err());
         assert_eq!(r.len(), 0, "failed prepares cache nothing");
+        // A failed prepare clears its in-flight marker: the key stays
+        // retryable and a later valid request succeeds.
+        assert!(r.get_or_prepare("pa:1000:4", "boba").is_ok());
+    }
+
+    #[test]
+    fn counters_track_prepare_outcomes() {
+        let r = registry(4);
+        r.get_or_prepare("pa:1000:4", "boba").unwrap();
+        r.get_or_prepare("pa:1000:4", "boba").unwrap();
+        r.get_or_prepare("pa:1000:4", "boba").unwrap();
+        assert_eq!(r.prepares(), 1, "one pipeline run");
+        let stats = r.stats_json();
+        assert_eq!(stats.get("misses").unwrap().as_u64(), Some(1));
+        assert_eq!(stats.get("hits").unwrap().as_u64(), Some(2));
+        assert_eq!(stats.get("prepares").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn concurrent_cold_requesters_single_flight() {
+        let r = std::sync::Arc::new(registry(4));
+        let barrier = std::sync::Arc::new(std::sync::Barrier::new(4));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let r = r.clone();
+            let b = barrier.clone();
+            handles.push(std::thread::spawn(move || {
+                b.wait();
+                r.get_or_prepare("pa:2500:4", "boba").unwrap()
+            }));
+        }
+        let outs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(r.prepares(), 1, "the pipeline must run exactly once");
+        assert_eq!(outs.iter().filter(|(_, cached)| !cached).count(), 1, "one leader");
+        for (g, _) in &outs {
+            assert!(Arc::ptr_eq(g, &outs[0].0), "all requesters share one artifact");
+        }
     }
 
     #[test]

@@ -7,24 +7,36 @@
 //! | `GET  /stats` | per-endpoint latency histograms + cache counters (`?format=text` for a table) |
 //! | `GET  /graphs` | list cached artifacts |
 //! | `POST /graphs` | `{"dataset": SPEC, "scheme": NAME}` → prepare (201) or cache hit (200) |
-//! | `POST /graphs/{id}/spmv` | one SpMV over the prepared CSR |
-//! | `POST /graphs/{id}/pagerank` | PageRank (`{"iters": N}`, default 20) |
-//! | `POST /graphs/{id}/sssp` | frontier SSSP (`{"source": V}`, default max-degree vertex) |
+//! | `POST /graphs/{id}/spmv` | one SpMV over the prepared CSR (`{"seed": S}` for a seeded RHS; coalesced) |
+//! | `POST /graphs/{id}/pagerank` | PageRank (`{"iters": N}`, default 20; deterministic parallel kernel) |
+//! | `POST /graphs/{id}/sssp` | frontier SSSP (`{"source": V}`, default max-degree vertex; coalesced) |
 //! | `POST /graphs/{id}/tc` | triangle count (lazy oriented view) |
+//! | `POST /query/batch` | `{"id": ID, "queries": [...]}` → heterogeneous batch, SpMV/SSSP tiled into multi-RHS passes |
+//!
+//! SpMV and SSSP queries route through the per-artifact
+//! [`Coalescer`]: concurrent queries against the same prepared graph
+//! are answered by one multi-RHS kernel pass. Coalescing never changes
+//! an answer (the batched kernels are bit-identical to their one-query
+//! forms); responses carry the realized `batch_width` as evidence.
 //!
 //! Query digests are label-invariant (sums / counts), so the same
 //! dataset prepared under different schemes answers identically — the
 //! smoke test asserts this against direct `algos::` calls.
 
-use crate::algos::{pagerank, spmv, sssp, tc};
+use crate::algos::{pagerank, spmm, sssp, tc};
 use crate::util::timer::Stopwatch;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
+use super::coalesce::{self, BatchOut, BatchQuery, Coalescer};
 use super::http::{Request, Response};
 use super::json::Json;
 use super::registry::{GraphRegistry, PreparedGraph};
 use super::stats::{Endpoint, ServerStats};
+
+/// Upper bound on `/query/batch` array length (DoS guard; the array is
+/// tiled into ≤ [`spmm::MAX_RHS`]-wide kernel passes regardless).
+pub const MAX_BATCH_QUERIES: usize = 256;
 
 /// The shared request router.
 pub struct Router {
@@ -32,12 +44,18 @@ pub struct Router {
     pub registry: Arc<GraphRegistry>,
     /// Latency/error accounting.
     pub stats: Arc<ServerStats>,
+    /// Per-artifact query coalescer (SpMV/SSSP batching).
+    pub coalescer: Arc<Coalescer>,
 }
 
 impl Router {
-    /// New router over shared registry and stats.
-    pub fn new(registry: Arc<GraphRegistry>, stats: Arc<ServerStats>) -> Router {
-        Router { registry, stats }
+    /// New router over shared registry, stats, and coalescer.
+    pub fn new(
+        registry: Arc<GraphRegistry>,
+        stats: Arc<ServerStats>,
+        coalescer: Arc<Coalescer>,
+    ) -> Router {
+        Router { registry, stats, coalescer }
     }
 
     /// Handle one request, recording latency under its endpoint slot.
@@ -58,6 +76,7 @@ impl Router {
             ("GET", ["stats"]) => (Some(Endpoint::Stats), self.stats_page(req)),
             ("GET", ["graphs"]) => (Some(Endpoint::List), self.list()),
             ("POST", ["graphs"]) => (Some(Endpoint::Ingest), self.ingest(req)),
+            ("POST", ["query", "batch"]) => (Some(Endpoint::Batch), self.query_batch(req)),
             ("POST", ["graphs", id, query]) => match Endpoint::query_from(query) {
                 Some(ep) => (Some(ep), self.query(id, ep, req)),
                 None => (
@@ -65,7 +84,7 @@ impl Router {
                     Response::error(404, &format!("unknown query {query:?} (spmv|pagerank|sssp|tc)")),
                 ),
             },
-            (_, ["healthz" | "stats" | "graphs", ..]) => {
+            (_, ["healthz" | "stats" | "graphs" | "query", ..]) => {
                 (None, Response::error(405, "method not allowed"))
             }
             _ => (None, Response::error(404, "no such route")),
@@ -93,6 +112,7 @@ impl Router {
             _ => unreachable!(),
         };
         body.push(("registry".to_string(), self.registry.stats_json()));
+        body.push(("coalescer".to_string(), self.coalescer.stats_json()));
         Response::json(200, Json::Obj(body).render())
     }
 
@@ -152,7 +172,17 @@ impl Router {
             }
         };
         let sw = Stopwatch::start();
-        let mut pairs = match run_query(&graph, ep, &body) {
+        let result = match ep {
+            // SpMV/SSSP go through the coalescer: concurrent queries
+            // against this artifact share one multi-RHS kernel pass.
+            Endpoint::Spmv | Endpoint::Sssp => parse_coalescable(&graph, ep, &body)
+                .and_then(|q| {
+                    let (out, width) = self.coalescer.submit(&graph, q)?;
+                    Ok(coalesced_json(q, out, width))
+                }),
+            _ => run_query(&graph, ep, &body),
+        };
+        let mut pairs = match result {
             Ok(Json::Obj(p)) => p,
             Ok(_) => unreachable!("queries return objects"),
             Err(e) => return Response::error(422, &format!("{e:#}")),
@@ -163,50 +193,252 @@ impl Router {
         pairs.push(("ms".to_string(), Json::Num(sw.ms())));
         Response::json(200, Json::Obj(pairs).render())
     }
+
+    /// `POST /query/batch`: execute a heterogeneous query array against
+    /// one prepared artifact. SpMV entries are tiled into
+    /// ≤ [`spmm::MAX_RHS`]-wide [`coalesce::run_spmv_tile`] passes and
+    /// SSSP entries into [`coalesce::run_sssp_tile`] scans (each tile is
+    /// one edge-stream); identical PageRank/TC entries are deduplicated
+    /// and computed once. Results come back in input order.
+    fn query_batch(&self, req: &Request) -> Response {
+        let body = match Json::parse(&req.body_str()) {
+            Ok(v) => v,
+            Err(e) => return Response::error(400, &format!("bad JSON body: {e:#}")),
+        };
+        let id = match body.get("id").and_then(Json::as_str) {
+            Some(i) => i.to_string(),
+            None => return Response::error(422, "body must carry {\"id\": \"dataset@scheme\"}"),
+        };
+        let graph = match self.registry.get(&id) {
+            Some(g) => g,
+            None => {
+                return Response::error(
+                    404,
+                    &format!("no prepared graph {id:?} (POST /graphs first)"),
+                )
+            }
+        };
+        let entries = match body.get("queries") {
+            Some(Json::Arr(items)) if !items.is_empty() => items,
+            Some(Json::Arr(_)) => return Response::error(422, "queries array is empty"),
+            _ => return Response::error(422, "body must carry {\"queries\": [...]}"),
+        };
+        if entries.len() > MAX_BATCH_QUERIES {
+            return Response::error(
+                422,
+                &format!("{} queries exceed the {MAX_BATCH_QUERIES} per-batch cap", entries.len()),
+            );
+        }
+        // Validate every entry before executing any (a bad index fails
+        // the whole batch with its position named).
+        enum Plan {
+            Spmv { seed: Option<u64> },
+            Sssp { source: u32 },
+            Direct(Endpoint, Json),
+        }
+        let mut plans = Vec::with_capacity(entries.len());
+        for (i, q) in entries.iter().enumerate() {
+            let name = match q.get("query").and_then(Json::as_str) {
+                Some(n) => n,
+                None => {
+                    return Response::error(422, &format!("queries[{i}] missing \"query\" name"))
+                }
+            };
+            let ep = match Endpoint::query_from(name) {
+                Some(ep) => ep,
+                None => {
+                    return Response::error(
+                        422,
+                        &format!("queries[{i}]: unknown query {name:?} (spmv|pagerank|sssp|tc)"),
+                    )
+                }
+            };
+            match parse_coalescable(&graph, ep, q) {
+                Ok(BatchQuery::Spmv { seed }) => plans.push(Plan::Spmv { seed }),
+                Ok(BatchQuery::Sssp { source }) => plans.push(Plan::Sssp { source }),
+                Err(e) if matches!(ep, Endpoint::Spmv | Endpoint::Sssp) => {
+                    return Response::error(422, &format!("queries[{i}]: {e:#}"))
+                }
+                _ => {
+                    // Direct kinds validate here too, so no kernel pass
+                    // (or width-histogram entry) ever runs for a batch
+                    // that is doomed to 422.
+                    if ep == Endpoint::Pagerank {
+                        let iters = q.get("iters").and_then(Json::as_u64).unwrap_or(20);
+                        if !(1..=10_000).contains(&iters) {
+                            return Response::error(
+                                422,
+                                &format!("queries[{i}]: iters must be in 1..=10000"),
+                            );
+                        }
+                    }
+                    plans.push(Plan::Direct(ep, q.clone()))
+                }
+            }
+        }
+        let sw = Stopwatch::start();
+        // Tile the homogeneous groups: one kernel pass per tile.
+        let spmv_idx: Vec<usize> = plans
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| matches!(p, Plan::Spmv { .. }).then_some(i))
+            .collect();
+        let sssp_idx: Vec<usize> = plans
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| matches!(p, Plan::Sssp { .. }).then_some(i))
+            .collect();
+        let mut results: Vec<Option<Json>> = (0..plans.len()).map(|_| None).collect();
+        for tile in spmv_idx.chunks(spmm::MAX_RHS) {
+            let seeds: Vec<Option<u64>> = tile
+                .iter()
+                .map(|&i| match plans[i] {
+                    Plan::Spmv { seed } => seed,
+                    _ => unreachable!(),
+                })
+                .collect();
+            self.coalescer.spmv_widths().record(tile.len());
+            for (&i, digest) in tile.iter().zip(coalesce::run_spmv_tile(&graph, &seeds)) {
+                let q = match plans[i] {
+                    Plan::Spmv { seed } => BatchQuery::Spmv { seed },
+                    _ => unreachable!(),
+                };
+                results[i] = Some(with_query_name(
+                    "spmv",
+                    coalesced_json(q, BatchOut::Spmv { digest }, tile.len()),
+                ));
+            }
+        }
+        for tile in sssp_idx.chunks(sssp::MAX_SOURCES) {
+            let sources: Vec<u32> = tile
+                .iter()
+                .map(|&i| match plans[i] {
+                    Plan::Sssp { source } => source,
+                    _ => unreachable!(),
+                })
+                .collect();
+            self.coalescer.sssp_widths().record(tile.len());
+            for (&i, (digest, reached)) in
+                tile.iter().zip(coalesce::run_sssp_tile(&graph, &sources))
+            {
+                let q = match plans[i] {
+                    Plan::Sssp { source } => BatchQuery::Sssp { source },
+                    _ => unreachable!(),
+                };
+                results[i] = Some(with_query_name(
+                    "sssp",
+                    coalesced_json(q, BatchOut::Sssp { digest, reached }, tile.len()),
+                ));
+            }
+        }
+        // Remaining kinds: identical queries collapse to one execution.
+        let mut memo: Vec<(String, Json)> = Vec::new();
+        for (i, plan) in plans.iter().enumerate() {
+            if let Plan::Direct(ep, q) = plan {
+                let key = format!("{}|{}", ep.name(), q.render());
+                let cached = memo.iter().find(|(k, _)| *k == key).map(|(_, v)| v.clone());
+                let out = match cached {
+                    Some(v) => v,
+                    None => match run_query(&graph, *ep, q) {
+                        Ok(v) => {
+                            memo.push((key, v.clone()));
+                            v
+                        }
+                        Err(e) => {
+                            return Response::error(422, &format!("queries[{i}]: {e:#}"))
+                        }
+                    },
+                };
+                results[i] = Some(with_query_name(ep.name(), out));
+            }
+            // Spmv/Sssp slots were filled by the tile loops above.
+        }
+        let count = plans.len();
+        graph.queries.fetch_add(count as u64, Ordering::Relaxed);
+        let rows: Vec<Json> = results.into_iter().map(|r| r.expect("every slot filled")).collect();
+        Response::json(
+            200,
+            Json::obj(vec![
+                ("id", Json::Str(graph.id.clone())),
+                ("count", Json::Num(count as f64)),
+                ("results", Json::Arr(rows)),
+                ("ms", Json::Num(sw.ms())),
+            ])
+            .render(),
+        )
+    }
 }
 
-/// Execute one query against a prepared artifact. Digests mirror
-/// `pipeline::Pipeline::run_app` so served results can be validated
-/// against the offline pipeline.
-fn run_query(g: &PreparedGraph, ep: Endpoint, body: &Json) -> anyhow::Result<Json> {
-    let csr = &*g.csr;
+/// Prefix a per-query result object with its query name (batch rows
+/// are self-describing).
+fn with_query_name(name: &str, j: Json) -> Json {
+    let mut pairs = match j {
+        Json::Obj(p) => p,
+        _ => unreachable!("queries return objects"),
+    };
+    pairs.insert(0, ("query".to_string(), Json::Str(name.to_string())));
+    Json::Obj(pairs)
+}
+
+/// Parse an SpMV/SSSP request body into its coalescable form,
+/// validating ranges against the prepared graph.
+fn parse_coalescable(g: &PreparedGraph, ep: Endpoint, body: &Json) -> anyhow::Result<BatchQuery> {
     match ep {
-        Endpoint::Spmv => {
-            let x = vec![1.0f32; csr.n()];
-            let y = spmv::spmv_pull(csr, &x);
-            let digest: f64 = y.iter().map(|&v| v as f64).sum();
-            Ok(Json::obj(vec![("digest", Json::Num(digest))]))
-        }
-        Endpoint::Pagerank => {
-            let iters = body.get("iters").and_then(Json::as_u64).unwrap_or(20) as usize;
-            anyhow::ensure!(iters >= 1 && iters <= 10_000, "iters must be in 1..=10000");
-            let p = pagerank::PrParams { max_iters: iters, ..Default::default() };
-            let r = pagerank::pagerank(csr, p);
-            let digest: f64 = r.ranks.iter().map(|&v| v as f64).sum();
-            Ok(Json::obj(vec![
-                ("digest", Json::Num(digest)),
-                ("iters", Json::Num(r.iters as f64)),
-            ]))
-        }
+        Endpoint::Spmv => Ok(BatchQuery::Spmv { seed: body.get("seed").and_then(Json::as_u64) }),
         Endpoint::Sssp => {
             let source = match body.get("source").and_then(Json::as_u64) {
                 Some(s) => {
-                    anyhow::ensure!((s as usize) < csr.n(), "source {s} out of range");
+                    anyhow::ensure!((s as usize) < g.csr.n(), "source {s} out of range");
                     s as u32
                 }
                 None => g.default_source(),
             };
-            let d = sssp::sssp_frontier(csr, source);
-            let reached = d.iter().filter(|v| v.is_finite()).count();
-            let digest: f64 = d
-                .iter()
-                .filter(|v| v.is_finite())
-                .map(|&v| v as f64)
-                .sum();
+            Ok(BatchQuery::Sssp { source })
+        }
+        _ => anyhow::bail!("not a coalescable query"),
+    }
+}
+
+/// Render one coalesced answer (the per-query response fields plus the
+/// realized batch width).
+fn coalesced_json(q: BatchQuery, out: BatchOut, width: usize) -> Json {
+    match (q, out) {
+        (BatchQuery::Spmv { seed }, BatchOut::Spmv { digest }) => {
+            let mut pairs = vec![("digest", Json::Num(digest))];
+            if let Some(s) = seed {
+                pairs.push(("seed", Json::Num(s as f64)));
+            }
+            pairs.push(("batch_width", Json::Num(width as f64)));
+            Json::obj(pairs)
+        }
+        (BatchQuery::Sssp { source }, BatchOut::Sssp { digest, reached }) => Json::obj(vec![
+            ("digest", Json::Num(digest)),
+            ("source", Json::Num(source as f64)),
+            ("reached", Json::Num(reached as f64)),
+            ("batch_width", Json::Num(width as f64)),
+        ]),
+        _ => unreachable!("kind mismatch between query and answer"),
+    }
+}
+
+/// Execute one non-coalescable query against a prepared artifact.
+/// Digests mirror `pipeline::Pipeline::run_app` so served results can
+/// be validated against the offline pipeline. PageRank runs the
+/// deterministic parallel kernel — bit-identical to the sequential one
+/// at every thread count, so responses stay reproducible under any
+/// server parallelism.
+fn run_query(g: &PreparedGraph, ep: Endpoint, body: &Json) -> anyhow::Result<Json> {
+    let csr = &*g.csr;
+    match ep {
+        Endpoint::Pagerank => {
+            let iters = body.get("iters").and_then(Json::as_u64).unwrap_or(20) as usize;
+            anyhow::ensure!(iters >= 1 && iters <= 10_000, "iters must be in 1..=10000");
+            let p = pagerank::PrParams { max_iters: iters, ..Default::default() };
+            let r = pagerank::pagerank_parallel(csr, p);
+            let digest: f64 = r.ranks.iter().map(|&v| v as f64).sum();
             Ok(Json::obj(vec![
                 ("digest", Json::Num(digest)),
-                ("source", Json::Num(source as f64)),
-                ("reached", Json::Num(reached as f64)),
+                ("iters", Json::Num(r.iters as f64)),
             ]))
         }
         Endpoint::Tc => {
@@ -226,14 +458,18 @@ const USAGE: &str = "boba graph-analytics service\n\
   GET  /stats[?format=text]\n\
   GET  /graphs\n\
   POST /graphs                       {\"dataset\": \"rmat:16:16\", \"scheme\": \"boba\"}\n\
-  POST /graphs/{id}/spmv\n\
+  POST /graphs/{id}/spmv             {\"seed\": 7}        (optional seeded RHS)\n\
   POST /graphs/{id}/pagerank         {\"iters\": 20}\n\
   POST /graphs/{id}/sssp             {\"source\": 0}\n\
-  POST /graphs/{id}/tc\n";
+  POST /graphs/{id}/tc\n\
+  POST /query/batch                  {\"id\": \"rmat:16:16@boba\",\n\
+                                      \"queries\": [{\"query\": \"spmv\"},\n\
+                                                  {\"query\": \"sssp\", \"source\": 3}]}\n";
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::server::coalesce::CoalesceConfig;
     use crate::server::registry::RegistryConfig;
 
     fn router() -> Router {
@@ -245,6 +481,7 @@ mod tests {
                 seed: 5,
             })),
             Arc::new(ServerStats::new()),
+            Arc::new(Coalescer::new(CoalesceConfig::default())),
         )
     }
 
@@ -355,6 +592,129 @@ mod tests {
         assert_eq!(r.handle(&req("GET", "/nope", "")).status, 404);
         let bad_query = r.handle(&req("POST", "/graphs/x@y/frobnicate", ""));
         assert_eq!(bad_query.status, 404);
+    }
+
+    #[test]
+    fn batch_endpoint_runs_heterogeneous_queries_in_order() {
+        let r = router();
+        let resp = r.handle(&req("POST", "/graphs", "{\"dataset\": \"pa:1500:4\"}"));
+        let id = json_of(&resp).get("id").unwrap().as_str().unwrap().to_string();
+        let body = format!(
+            "{{\"id\": \"{id}\", \"queries\": [\
+             {{\"query\": \"spmv\"}},\
+             {{\"query\": \"sssp\"}},\
+             {{\"query\": \"pagerank\", \"iters\": 10}},\
+             {{\"query\": \"spmv\", \"seed\": 7}},\
+             {{\"query\": \"pagerank\", \"iters\": 10}}]}}"
+        );
+        let resp = r.handle(&req("POST", "/query/batch", &body));
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let out = json_of(&resp);
+        assert_eq!(out.get("count").unwrap().as_u64(), Some(5));
+        let rows = match out.get("results").unwrap() {
+            Json::Arr(items) => items.clone(),
+            other => panic!("results not an array: {other:?}"),
+        };
+        assert_eq!(rows.len(), 5);
+        // Input order preserved, names attached.
+        for (i, want) in ["spmv", "sssp", "pagerank", "spmv", "pagerank"].iter().enumerate() {
+            assert_eq!(rows[i].get("query").unwrap().as_str(), Some(*want), "row {i}");
+        }
+        // The two spmv entries rode one tile (width 2); the plain one
+        // answers exactly like the direct endpoint.
+        assert_eq!(rows[0].get("batch_width").unwrap().as_u64(), Some(2));
+        let direct = json_of(&r.handle(&req("POST", &format!("/graphs/{id}/spmv"), "")));
+        assert_eq!(
+            rows[0].get("digest").unwrap().as_f64(),
+            direct.get("digest").unwrap().as_f64(),
+            "batched spmv must answer exactly like the direct endpoint"
+        );
+        // Identical pagerank entries dedup to one execution but both rows
+        // answer.
+        assert_eq!(
+            rows[2].get("digest").unwrap().as_f64(),
+            rows[4].get("digest").unwrap().as_f64()
+        );
+        // Width histogram saw the tile.
+        let stats = json_of(&r.handle(&req("GET", "/stats", "")));
+        let co = stats.get("coalescer").unwrap();
+        assert_eq!(co.get("spmv").unwrap().get("queries").unwrap().as_u64(), Some(3));
+        assert!(co.get("spmv").unwrap().get("widths").unwrap().get("2").is_some());
+    }
+
+    #[test]
+    fn batch_endpoint_validates_inputs() {
+        let r = router();
+        assert_eq!(r.handle(&req("POST", "/query/batch", "{not json")).status, 400);
+        assert_eq!(r.handle(&req("POST", "/query/batch", "{}")).status, 422);
+        assert_eq!(
+            r.handle(&req("POST", "/query/batch", "{\"id\": \"nope@x\", \"queries\": [{\"query\": \"spmv\"}]}"))
+                .status,
+            404
+        );
+        let resp = r.handle(&req("POST", "/graphs", "{\"dataset\": \"pa:900:4\"}"));
+        let id = json_of(&resp).get("id").unwrap().as_str().unwrap().to_string();
+        assert_eq!(
+            r.handle(&req("POST", "/query/batch", &format!("{{\"id\": \"{id}\", \"queries\": []}}")))
+                .status,
+            422
+        );
+        assert_eq!(
+            r.handle(&req(
+                "POST",
+                "/query/batch",
+                &format!("{{\"id\": \"{id}\", \"queries\": [{{\"query\": \"frobnicate\"}}]}}")
+            ))
+            .status,
+            422
+        );
+        assert_eq!(
+            r.handle(&req(
+                "POST",
+                "/query/batch",
+                &format!(
+                    "{{\"id\": \"{id}\", \"queries\": [{{\"query\": \"sssp\", \"source\": 99999999}}]}}"
+                )
+            ))
+            .status,
+            422
+        );
+        // A doomed batch is rejected at plan time: the invalid pagerank
+        // entry 422s before the spmv tile runs, so no kernel pass is
+        // wasted and the width histogram stays untouched.
+        let before = r.coalescer.spmv_widths().batches();
+        let resp = r.handle(&req(
+            "POST",
+            "/query/batch",
+            &format!(
+                "{{\"id\": \"{id}\", \"queries\": [{{\"query\": \"spmv\"}}, \
+                 {{\"query\": \"pagerank\", \"iters\": 0}}]}}"
+            ),
+        ));
+        assert_eq!(resp.status, 422);
+        assert_eq!(
+            r.coalescer.spmv_widths().batches(),
+            before,
+            "no tile may execute for a batch that fails validation"
+        );
+        assert_eq!(r.handle(&req("GET", "/query/batch", "")).status, 405);
+    }
+
+    #[test]
+    fn seeded_spmv_digest_differs_from_ones() {
+        let r = router();
+        let resp = r.handle(&req("POST", "/graphs", "{\"dataset\": \"pa:1200:4\"}"));
+        let id = json_of(&resp).get("id").unwrap().as_str().unwrap().to_string();
+        let ones = json_of(&r.handle(&req("POST", &format!("/graphs/{id}/spmv"), "")));
+        let seeded =
+            json_of(&r.handle(&req("POST", &format!("/graphs/{id}/spmv"), "{\"seed\": 11}")));
+        assert_eq!(seeded.get("seed").unwrap().as_u64(), Some(11));
+        assert_ne!(
+            ones.get("digest").unwrap().as_f64(),
+            seeded.get("digest").unwrap().as_f64(),
+            "a seeded RHS must be a genuinely different query"
+        );
+        assert!(ones.get("batch_width").unwrap().as_u64().unwrap() >= 1);
     }
 
     #[test]

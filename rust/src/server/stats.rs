@@ -129,6 +129,8 @@ pub enum Endpoint {
     Sssp,
     /// `POST /graphs/{id}/tc`.
     Tc,
+    /// `POST /query/batch` — heterogeneous query arrays.
+    Batch,
     /// `GET /healthz`.
     Healthz,
     /// `GET /stats`.
@@ -137,13 +139,14 @@ pub enum Endpoint {
 
 impl Endpoint {
     /// All endpoints, display order.
-    pub const ALL: [Endpoint; 8] = [
+    pub const ALL: [Endpoint; 9] = [
         Endpoint::Ingest,
         Endpoint::List,
         Endpoint::Spmv,
         Endpoint::Pagerank,
         Endpoint::Sssp,
         Endpoint::Tc,
+        Endpoint::Batch,
         Endpoint::Healthz,
         Endpoint::Stats,
     ];
@@ -157,6 +160,7 @@ impl Endpoint {
             Endpoint::Pagerank => "pagerank",
             Endpoint::Sssp => "sssp",
             Endpoint::Tc => "tc",
+            Endpoint::Batch => "batch",
             Endpoint::Healthz => "healthz",
             Endpoint::Stats => "stats",
         }
@@ -177,7 +181,7 @@ impl Endpoint {
 /// Aggregated per-endpoint stats for one server instance.
 #[derive(Debug)]
 pub struct ServerStats {
-    slots: [(Histogram, AtomicU64); 8], // (latencies, error count)
+    slots: [(Histogram, AtomicU64); 9], // (latencies, error count)
     started: std::time::Instant,
 }
 

@@ -1,0 +1,226 @@
+//! Batched-query equivalence and single-flight tests — the determinism
+//! gate of the batched query engine:
+//!
+//! * `spmm` output bit-identical to k independent `spmv_pull` calls at
+//!   every pinned thread count and batch width;
+//! * multi-source frontier SSSP identical to per-source
+//!   `sssp_frontier`;
+//! * the rebuilt `pagerank_parallel` bit-identical to sequential
+//!   `pagerank` at every pinned thread count (the tier-1 pagerank
+//!   determinism gate);
+//! * `GraphRegistry::get_or_prepare` single-flight: 8 concurrent cold
+//!   requesters run the Problem-3 pipeline exactly once;
+//! * coalescer shutdown releases parked waiters.
+
+use boba::algos::{pagerank, spmm, spmv, sssp};
+use boba::convert::coo_to_csr;
+use boba::graph::{gen, Coo};
+use boba::parallel::ThreadGuard;
+use boba::server::coalesce::{BatchQuery, CoalesceConfig, Coalescer};
+use boba::server::registry::{GraphRegistry, RegistryConfig};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+/// The equivalence fixtures: scale-free, road-like, degenerate.
+fn fixtures() -> Vec<(&'static str, Coo)> {
+    let mut weighted = gen::uniform_random(500, 4000, 11);
+    weighted.vals = Some((0..4000).map(|i| ((i * 7) % 97) as f32 * 0.125 + 0.25).collect());
+    vec![
+        ("rmat", gen::rmat(&gen::GenParams::rmat(12, 8), 3).randomized(7)),
+        ("road-grid", gen::grid_road(40, 30, 2).symmetrized()),
+        ("weighted", weighted),
+        ("empty", Coo::new(5, vec![], vec![])),
+        ("single-vertex", Coo::new(1, vec![0], vec![0])),
+    ]
+}
+
+/// Deterministic column-major RHS block.
+fn rhs(n: usize, k: usize) -> Vec<f32> {
+    (0..k * n)
+        .map(|i| ((i as u32).wrapping_mul(2654435761) % 1009) as f32 * 0.01 - 3.0)
+        .collect()
+}
+
+#[test]
+fn spmm_bit_identical_to_k_spmv_calls_at_every_pin() {
+    for (name, coo) in fixtures() {
+        let csr = coo_to_csr(&coo);
+        let n = csr.n();
+        for k in [1usize, 2, 7, 16] {
+            let x = rhs(n, k);
+            let mut want: Vec<f32> = Vec::with_capacity(k * n);
+            for j in 0..k {
+                want.extend(spmv::spmv_pull(&csr, &x[j * n..(j + 1) * n]));
+            }
+            for t in [1usize, 2, 4, 8] {
+                let _g = ThreadGuard::pin(t);
+                assert_eq!(spmm::spmm_pull(&csr, &x, k), want, "{name}: seq k={k} t={t}");
+                assert_eq!(
+                    spmm::spmm_pull_parallel(&csr, &x, k),
+                    want,
+                    "{name}: par k={k} t={t}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_source_sssp_identical_to_per_source_at_every_pin() {
+    for (name, coo) in fixtures() {
+        let csr = coo_to_csr(&coo);
+        let n = csr.n();
+        for s in [1usize, 2, 7, 16] {
+            let sources: Vec<u32> = (0..s).map(|i| ((i * 37 + 1) % n) as u32).collect();
+            for t in [1usize, 2, 4, 8] {
+                let _g = ThreadGuard::pin(t);
+                let d = sssp::sssp_frontier_multi(&csr, &sources);
+                for (i, &src) in sources.iter().enumerate() {
+                    let want = sssp::sssp_frontier(&csr, src);
+                    assert_eq!(
+                        &d[i * n..(i + 1) * n],
+                        want.as_slice(),
+                        "{name}: s={s} source#{i}={src} t={t}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pagerank_parallel_bit_identical_to_sequential_at_every_pin() {
+    // n = 2^15 clears the 2^14 fallback threshold, so the parallel
+    // kernel genuinely runs at pins > 1.
+    let g = gen::rmat(&gen::GenParams::rmat(15, 8), 5).randomized(6);
+    let csr = coo_to_csr(&g);
+    let p = pagerank::PrParams { max_iters: 20, ..Default::default() };
+    let want = pagerank::pagerank(&csr, p);
+    for t in [1usize, 2, 4, 8] {
+        let _g = ThreadGuard::pin(t);
+        let got = pagerank::pagerank_parallel(&csr, p);
+        assert_eq!(got.iters, want.iters, "iteration count must match at t={t}");
+        assert_eq!(
+            got.ranks, want.ranks,
+            "pagerank_parallel must be bit-identical to pagerank at t={t}"
+        );
+    }
+}
+
+fn registry() -> GraphRegistry {
+    GraphRegistry::new(RegistryConfig { capacity: 4, batch: 1000, in_flight: 2, seed: 17 })
+}
+
+#[test]
+fn registry_hammer_eight_cold_requesters_one_prepare() {
+    let r = Arc::new(registry());
+    let barrier = Arc::new(Barrier::new(8));
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let r = r.clone();
+        let b = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            b.wait();
+            r.get_or_prepare("pa:4000:4", "boba").unwrap()
+        }));
+    }
+    let outs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(r.prepares(), 1, "8 concurrent cold requesters must run ONE pipeline");
+    assert_eq!(
+        outs.iter().filter(|(_, cached)| !cached).count(),
+        1,
+        "exactly one leader reports a fresh prepare"
+    );
+    for (g, _) in &outs {
+        assert!(Arc::ptr_eq(g, &outs[0].0), "every requester shares the one artifact");
+    }
+    // Miss-counter discipline: the leader is the only miss; the seven
+    // waiters landed on the shared result and count as hits.
+    let stats = r.stats_json();
+    assert_eq!(stats.get("misses").unwrap().as_u64(), Some(1), "waiters must not count as misses");
+    assert_eq!(stats.get("hits").unwrap().as_u64(), Some(7));
+}
+
+#[test]
+fn registry_failed_prepare_releases_waiters_and_stays_retryable() {
+    let r = Arc::new(registry());
+    let barrier = Arc::new(Barrier::new(4));
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let r = r.clone();
+        let b = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            b.wait();
+            r.get_or_prepare("pa:1000:4", "definitely-not-a-scheme")
+        }));
+    }
+    for h in handles {
+        assert!(h.join().unwrap().is_err(), "every requester sees the prepare failure");
+    }
+    assert_eq!(r.prepares(), 1, "the failing pipeline also runs once");
+    assert_eq!(r.len(), 0, "failures cache nothing");
+    // The key is immediately retryable with a valid scheme.
+    assert!(r.get_or_prepare("pa:1000:4", "boba").is_ok());
+}
+
+#[test]
+fn coalescer_shutdown_releases_parked_waiters() {
+    let r = registry();
+    let (graph, _) = r.get_or_prepare("pa:2000:4", "none").unwrap();
+    // A 60 s window parks the leader (and followers) until shutdown.
+    let co = Arc::new(Coalescer::new(CoalesceConfig {
+        window: Duration::from_secs(60),
+        max_batch: 16,
+    }));
+    let mut handles = Vec::new();
+    for i in 0..4u64 {
+        let co = co.clone();
+        let graph = graph.clone();
+        handles.push(std::thread::spawn(move || {
+            co.submit(&graph, BatchQuery::Spmv { seed: Some(i) })
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(150));
+    co.shutdown();
+    for h in handles {
+        assert!(
+            h.join().unwrap().is_err(),
+            "shutdown must release every parked waiter with an error"
+        );
+    }
+    assert!(
+        co.submit(&graph, BatchQuery::Spmv { seed: None }).is_err(),
+        "post-shutdown submissions are refused"
+    );
+}
+
+#[test]
+fn coalesced_batches_answer_exactly_like_single_queries() {
+    let r = registry();
+    let (graph, _) = r.get_or_prepare("pa:2500:4", "boba").unwrap();
+    let co = Arc::new(Coalescer::new(CoalesceConfig {
+        window: Duration::from_millis(40),
+        max_batch: 16,
+    }));
+    let mut handles = Vec::new();
+    for i in 0..8u64 {
+        let co = co.clone();
+        let graph = graph.clone();
+        handles.push(std::thread::spawn(move || {
+            let source = (i * 311) as u32 % graph.csr.n() as u32;
+            (source, co.submit(&graph, BatchQuery::Sssp { source }).unwrap())
+        }));
+    }
+    for h in handles {
+        let (source, (out, width)) = h.join().unwrap();
+        let boba::server::coalesce::BatchOut::Sssp { digest, reached } = out else {
+            panic!("wrong answer kind");
+        };
+        let d = sssp::sssp_frontier(&graph.csr, source);
+        let want: f64 = d.iter().filter(|v| v.is_finite()).map(|&v| v as f64).sum();
+        assert_eq!(digest, want, "coalescing must not change the sssp digest (src {source})");
+        assert_eq!(reached, d.iter().filter(|v| v.is_finite()).count());
+        assert!((1..=16).contains(&width));
+    }
+    assert_eq!(co.sssp_widths().queries(), 8);
+}

@@ -26,6 +26,7 @@ fn spawn_server() -> server::Server {
         in_flight: 2,
         seed: SEED,
         read_timeout: Duration::from_secs(10),
+        ..Default::default()
     })
     .expect("server must bind an ephemeral port")
 }
@@ -141,6 +142,63 @@ fn smoke_ingest_query_validate_shutdown() {
             .is_err(),
         "server must stop accepting after shutdown"
     );
+}
+
+#[test]
+fn batch_endpoint_matches_direct_queries_over_http() {
+    let server = spawn_server();
+    let addr = server.addr();
+    let (status, resp) = raw_post(
+        &addr,
+        "/graphs",
+        &format!("{{\"dataset\": \"{DATASET}\", \"scheme\": \"boba\"}}"),
+    );
+    assert_eq!(status, 201);
+    let id = resp.get("id").unwrap().as_str().unwrap().to_string();
+
+    let (status, direct_spmv) = raw_post(&addr, &format!("/graphs/{id}/spmv"), "");
+    assert_eq!(status, 200);
+    let (status, direct_sssp) = raw_post(&addr, &format!("/graphs/{id}/sssp"), "");
+    assert_eq!(status, 200);
+
+    let body = format!(
+        "{{\"id\": \"{id}\", \"queries\": [\
+         {{\"query\": \"spmv\"}}, {{\"query\": \"spmv\", \"seed\": 9}}, \
+         {{\"query\": \"sssp\"}}, {{\"query\": \"tc\"}}]}}"
+    );
+    let (status, batch) = raw_post(&addr, "/query/batch", &body);
+    assert_eq!(status, 200, "{}", batch.render());
+    assert_eq!(batch.get("count").unwrap().as_u64(), Some(4));
+    let rows = match batch.get("results").unwrap() {
+        Json::Arr(items) => items.clone(),
+        other => panic!("results not an array: {other:?}"),
+    };
+    // Batched answers must equal the direct ones exactly — the batched
+    // kernels are bit-identical, and both digests fold in vertex order.
+    assert_eq!(
+        rows[0].get("digest").unwrap().as_f64(),
+        direct_spmv.get("digest").unwrap().as_f64(),
+        "batched spmv == direct spmv"
+    );
+    assert_eq!(
+        rows[2].get("digest").unwrap().as_f64(),
+        direct_sssp.get("digest").unwrap().as_f64(),
+        "batched sssp == direct sssp"
+    );
+    // The two spmv entries shared one kernel pass.
+    assert_eq!(rows[0].get("batch_width").unwrap().as_u64(), Some(2));
+
+    // /stats exposes the batch endpoint slot and the width histograms.
+    let mut client = HttpClient::connect(&addr.to_string()).unwrap();
+    let (_, stats) = client.request_json("GET", "/stats", "").unwrap();
+    assert_eq!(
+        stats.get("endpoints").unwrap().get("batch").unwrap().get("count").unwrap().as_u64(),
+        Some(1)
+    );
+    let co = stats.get("coalescer").unwrap();
+    assert!(co.get("spmv").unwrap().get("batches").unwrap().as_u64().unwrap() >= 1);
+    drop(client);
+    server.shutdown();
 }
 
 #[test]
