@@ -70,7 +70,7 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
     if ! cargo run --release -- loadgen --spawn --compare --coalesce \
         --dataset rmat:14:8 --conns 4 --requests 600 \
         --mix spmv:7,pagerank:3 --pr-iters 5 --batch-queries 4 \
-        --json "$ROOT/BENCH_serve.json"; then
+        --scrape-metrics --json "$ROOT/BENCH_serve.json"; then
         echo "FAILED (required): serving benchmark"
         FAILURES=$((FAILURES + 1))
     elif ! grep -q '"mode":"single"' "$ROOT/BENCH_serve.json" \
@@ -81,7 +81,56 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
         # row with its speedup vs the single-query run).
         echo "FAILED (required): BENCH_serve.json lacks the coalesced-vs-single rows"
         FAILURES=$((FAILURES + 1))
+    elif ! grep -q '"server"' "$ROOT/BENCH_serve.json" \
+        || ! grep -q '"prepare.transpose"' "$ROOT/BENCH_serve.json"; then
+        # --scrape-metrics must embed the server-side evidence: per-
+        # endpoint p50/p99 from the /metrics delta plus the prepare
+        # stage breakdown (ingest/reorder/convert/transpose).
+        echo "FAILED (required): BENCH_serve.json lacks the scraped server-side evidence"
+        FAILURES=$((FAILURES + 1))
     fi
+
+    # Observability gate: serve on a fixed port, drive real traffic,
+    # then scrape /metrics and /debug/traces raw (bash /dev/tcp — no
+    # curl dependency) and require every metric family the dashboards
+    # and the loadgen scraper key on.
+    note "metrics exposition gate"
+    OBS_PORT="${CI_OBS_PORT:-7199}"
+    http_get() {
+        exec 3<>"/dev/tcp/127.0.0.1/$OBS_PORT" || return 1
+        printf 'GET %s HTTP/1.1\r\nhost: ci\r\nconnection: close\r\n\r\n' "$1" >&3
+        cat <&3
+        exec 3>&- 2>/dev/null
+    }
+    ./target/release/boba serve --addr "127.0.0.1:$OBS_PORT" --workers 4 \
+        --slow-trace-ms 5000 &
+    SERVE_PID=$!
+    sleep 1
+    if ! cargo run --release -- loadgen --addr "127.0.0.1:$OBS_PORT" \
+        --dataset rmat:12:8 --conns 2 --requests 120 --mix spmv:3,pagerank:1; then
+        echo "FAILED (required): loadgen against the fixed-port server"
+        FAILURES=$((FAILURES + 1))
+    fi
+    METRICS="$ROOT/ci_metrics.txt"
+    http_get /metrics > "$METRICS" || true
+    for fam in boba_uptime_seconds boba_requests_total boba_request_errors_total \
+               boba_request_duration_seconds boba_registry_graphs boba_registry_hits_total \
+               boba_registry_prepares_total boba_pool_dispatches_total \
+               boba_coalesce_batches_total boba_coalesce_batch_width \
+               boba_stage_duration_seconds boba_process_resident_memory_bytes \
+               boba_traces_total; do
+        if ! grep -q "^# TYPE $fam " "$METRICS"; then
+            echo "FAILED (required): /metrics lacks family $fam"
+            FAILURES=$((FAILURES + 1))
+        fi
+    done
+    if ! http_get '/debug/traces?n=8' | grep -q '"endpoint":"ingest"'; then
+        echo "FAILED (required): /debug/traces has no ingest trace"
+        FAILURES=$((FAILURES + 1))
+    fi
+    kill "$SERVE_PID" 2>/dev/null
+    wait "$SERVE_PID" 2>/dev/null
+    rm -f "$METRICS"
 
     # Paper-reproduction smoke run: T1–T4 on the generated quick trio,
     # writing the trajectory JSON and regenerating docs/RESULTS.md from
@@ -131,6 +180,15 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
     note "micro_batch smoke"
     if ! cargo bench --bench micro_batch -- --smoke; then
         echo "FAILED (required): micro_batch smoke"
+        FAILURES=$((FAILURES + 1))
+    fi
+
+    # Tracing-overhead smoke: the bench itself asserts < 5 µs per span
+    # with tracing on (the serve path wraps every kernel in a span, so
+    # regressions here tax every query).
+    note "micro_obs smoke"
+    if ! cargo bench --bench micro_obs -- --smoke; then
+        echo "FAILED (required): micro_obs smoke"
         FAILURES=$((FAILURES + 1))
     fi
 fi

@@ -1,0 +1,88 @@
+//! Micro-benchmark of stage-span tracing overhead: `obs::span` with
+//! tracing enabled (stage-histogram path), inside an open request trace
+//! (histogram + span-tree path), and with the kill switch thrown. The
+//! serve path wraps every kernel call in a span, so the per-span cost
+//! must stay far below kernel time — the CI smoke gate asserts < 5 µs
+//! per span with tracing on.
+//!
+//! Run: `cargo bench --bench micro_obs` (`-- --smoke` for the 1-shot CI
+//! gate).
+
+use boba::bench::{black_box, Bench, Measurement, Report};
+use boba::obs;
+use std::time::Duration;
+
+const SPANS: u64 = 100_000;
+const PER_TRACE: u64 = 256;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let bench = if smoke {
+        Bench { warmup: 1, iters: 3, max_total: Duration::from_secs(30) }
+    } else {
+        Bench::quick()
+    };
+    let mut report = Report::new("micro: stage-span tracing overhead");
+    let per_span_us = |m: &Measurement| m.median_ms() * 1e3 / SPANS as f64;
+
+    // Tracing on, no open trace: the steady-state query path for
+    // requests that only feed the stage histograms.
+    obs::set_enabled(true);
+    let on = bench.run_with_items("span/stage-histogram", SPANS, || {
+        let mut acc = 0u64;
+        for i in 0..SPANS {
+            acc = acc.wrapping_add(obs::span("bench.obs", || black_box(i)));
+        }
+        acc
+    });
+    let on_us = per_span_us(&on);
+
+    // Inside an open trace every span also lands in the request tree
+    // (the traced-request path; PER_TRACE spans per begin/finish pair).
+    let in_trace = bench.run_with_items("span/in-trace", SPANS, || {
+        let mut acc = 0u64;
+        for _ in 0..SPANS / PER_TRACE {
+            let g = obs::begin();
+            for i in 0..PER_TRACE {
+                acc = acc.wrapping_add(obs::span("bench.obs", || black_box(i)));
+            }
+            black_box(g.finish("spmv", 200));
+        }
+        acc
+    });
+    let in_trace_us = per_span_us(&in_trace);
+
+    // Kill switch thrown: the span must degrade to one relaxed atomic
+    // load around the closure.
+    obs::set_enabled(false);
+    let off = bench.run_with_items("span/disabled", SPANS, || {
+        let mut acc = 0u64;
+        for i in 0..SPANS {
+            acc = acc.wrapping_add(obs::span("bench.obs", || black_box(i)));
+        }
+        acc
+    });
+    let off_us = per_span_us(&off);
+    obs::set_enabled(true);
+
+    report.push(on);
+    report.push(in_trace);
+    report.push(off);
+    report.print();
+    println!(
+        "per-span: stage-histogram {on_us:.4} µs, in-trace {in_trace_us:.4} µs, \
+         disabled {off_us:.4} µs"
+    );
+
+    if smoke {
+        assert!(
+            on_us < 5.0,
+            "span overhead with tracing on must stay under 5 µs, measured {on_us:.4} µs"
+        );
+        assert!(
+            in_trace_us < 5.0,
+            "in-trace span overhead must stay under 5 µs, measured {in_trace_us:.4} µs"
+        );
+        println!("smoke ok: span overhead within the 5 µs budget");
+    }
+}

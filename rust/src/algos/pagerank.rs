@@ -99,14 +99,33 @@ pub fn pagerank(csr: &Csr, p: PrParams) -> PrResult {
 /// Cost: one transpose (O(m), amortized over all iterations) plus
 /// `share`/`next` vectors.
 pub fn pagerank_parallel(csr: &Csr, p: PrParams) -> PrResult {
-    let n = csr.n();
-    if n < 1 << 14 {
+    if csr.n() < 1 << 14 {
         return pagerank(csr, p);
     }
     // Pull operand: the reverse graph, structure only (PageRank
     // propagates shares along edges regardless of vals, like the push
     // kernel, so the transposed weight array is never built).
     let tr = csr.transposed_structure();
+    pagerank_parallel_pull(csr, &tr, p)
+}
+
+/// [`pagerank_parallel`] with a caller-supplied transpose — the serving
+/// path caches `Aᵀ` per prepared artifact ([`crate::server::registry`]
+/// builds it as a first-class prepare stage), so repeated PageRank
+/// queries skip the per-call O(m) transpose this function's wrapper
+/// pays. `tr` must be the stable-counting-sort transpose of `csr`
+/// ([`Csr::transposed_structure`]); any other in-neighbor order changes
+/// the f32 summation order and breaks digest equality with the
+/// sequential kernel. Small graphs still take the sequential kernel
+/// (same threshold as the wrapper), keeping results identical across
+/// both entry points.
+pub fn pagerank_parallel_pull(csr: &Csr, tr: &Csr, p: PrParams) -> PrResult {
+    let n = csr.n();
+    if n < 1 << 14 {
+        return pagerank(csr, p);
+    }
+    debug_assert_eq!(tr.n(), n);
+    debug_assert_eq!(tr.m(), csr.m());
     let mut rank = vec![1.0f32 / n as f32; n];
     let mut share = vec![0f32; n];
     let chunk = parallel::default_chunk(n);
@@ -136,7 +155,7 @@ pub fn pagerank_parallel(csr: &Csr, p: PrParams) -> PrResult {
         }
         // next[u] = Σ share[v] over in-neighbors v ascending — the pull
         // form of the push scatter, row-parallel and race-free.
-        let next = spmv::spmv_pull_parallel(&tr, &share);
+        let next = spmv::spmv_pull_parallel(tr, &share);
         let base = (1.0 - p.damping) / n as f32 + p.damping * dangling / n as f32;
         let mut delta = 0f32;
         for v in 0..n {
@@ -325,6 +344,28 @@ mod tests {
         let q = pagerank_parallel(&csr, p);
         assert_eq!(s.iters, q.iters);
         assert_eq!(s.ranks, q.ranks, "deterministic parallel pagerank must match bitwise");
+    }
+
+    #[test]
+    fn precomputed_transpose_matches_wrapper() {
+        // The serving path hands pagerank_parallel_pull the transpose it
+        // cached at prepare time; the result must be bit-identical to
+        // the transpose-per-call wrapper (and hence to sequential).
+        let g = gen::rmat(&GenParams::rmat(15, 8), 11);
+        let csr = coo_to_csr(&g);
+        let tr = csr.transposed_structure();
+        let p = PrParams { max_iters: 20, ..Default::default() };
+        let a = pagerank_parallel(&csr, p);
+        let b = pagerank_parallel_pull(&csr, &tr, p);
+        assert_eq!(a.iters, b.iters);
+        assert_eq!(a.ranks, b.ranks);
+        // Below the threshold both entry points fall back to sequential.
+        let small = coo_to_csr(&gen::preferential_attachment(500, 3, 1));
+        let str_ = small.transposed_structure();
+        assert_eq!(
+            pagerank_parallel_pull(&small, &str_, p).ranks,
+            pagerank(&small, p).ranks
+        );
     }
 
     #[test]

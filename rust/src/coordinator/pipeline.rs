@@ -118,7 +118,8 @@ impl Pipeline {
             ReorderStage::None => ("Random".to_string(), std::borrow::Cow::Borrowed(coo)),
             ReorderStage::Scheme(s) => {
                 let sw = Stopwatch::start();
-                let (_perm, relabeled) = s.reorder_relabel(coo);
+                let (_perm, relabeled) =
+                    crate::obs::span("pipeline.reorder", || s.reorder_relabel(coo));
                 stages.record("reorder", sw.elapsed());
                 (s.name().to_string(), std::borrow::Cow::Owned(relabeled))
             }
@@ -138,11 +139,11 @@ impl Pipeline {
         // sequential kernel, so TC's sorted COO still yields sorted
         // rows and digests compare across schemes and thread counts.
         let sw = Stopwatch::start();
-        let csr = convert::coo_to_csr_parallel(&working);
+        let csr = crate::obs::span("pipeline.convert", || convert::coo_to_csr_parallel(&working));
         stages.record("convert", sw.elapsed());
         // ── app ───────────────────────────────────────────────────
         let sw = Stopwatch::start();
-        let digest = self.run_app(&csr);
+        let digest = crate::obs::span("pipeline.app", || self.run_app(&csr));
         stages.record("app", sw.elapsed());
         PipelineReport {
             scheme: scheme_name,

@@ -10,15 +10,22 @@
 //!   pipeline  --app A --algo S [--dataset N] [--batch B] [--in-flight K]
 //!   serve     [--addr H:P] [--workers W] [--cache C] [--batch B]
 //!             [--in-flight K] [--batch-window-us U] [--max-batch K]
-//!                                      run the graph-analytics service
+//!             [--no-trace] [--slow-trace-ms T]
+//!                                      run the graph-analytics service;
+//!             --no-trace disables stage-span tracing (BOBA_NO_TRACE=1
+//!             does the same), --slow-trace-ms logs slower traces to
+//!             stderr as one-line JSON
 //!   loadgen   [--addr H:P] [--conns C] [--requests R] [--dataset N]
 //!             [--scheme S] [--mix spmv:7,pagerank:3] [--pr-iters I]
 //!             [--compare] [--coalesce] [--batch-queries K]
-//!             [--compare-coalesced] [--json F] [--spawn]
+//!             [--compare-coalesced] [--scrape-metrics] [--json F]
+//!             [--spawn]
 //!             drive a server; --coalesce sends K-query batches through
 //!             POST /query/batch (with --compare it appends a
 //!             single-vs-coalesced pricing row; --compare-coalesced
-//!             prices just that contrast)
+//!             prices just that contrast); --scrape-metrics diffs
+//!             GET /metrics around each run and embeds the server-side
+//!             percentiles/stage breakdown into the report
 //!   table1 | table3 | fig4 | fig5 | fig6 | fig7  regenerate a paper table/figure
 //!   repro     [--quick|--full] [--tables t1,t2,t3,t4] [--threads N]
 //!             [--datasets A,B] [--reps K] [--json F] [--md F]
@@ -190,6 +197,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 seed,
                 coalesce: args.flag("coalesce"),
                 batch: args.get_parse("batch-queries", 4),
+                scrape_metrics: args.flag("scrape-metrics"),
             };
             // --spawn: self-host an ephemeral server for the run (CI's
             // one-command benchmark mode).
@@ -361,6 +369,8 @@ fn server_config(args: &Args, seed: u64) -> ServerConfig {
         read_timeout: default.read_timeout,
         batch_window_us: args.get_parse("batch-window-us", default.batch_window_us),
         max_batch: args.get_parse("max-batch", default.max_batch),
+        trace: !args.flag("no-trace"),
+        slow_trace_ms: args.get("slow-trace-ms").and_then(|v| v.parse().ok()),
     }
 }
 

@@ -1,0 +1,192 @@
+//! Concurrent log2 latency histograms — the shared measurement
+//! primitive of the observability subsystem.
+//!
+//! This type started life in `server::stats` as the `/stats` endpoint
+//! histogram; it moved here when the `/metrics` exposition and the
+//! stage-span tracer needed the same primitive without dragging in the
+//! server layer. `server::stats` re-exports it, so existing paths keep
+//! working.
+//!
+//! Buckets are powers of two over microseconds: bucket `i` counts
+//! samples in `[2^(i-1), 2^i)` µs (bucket 0 is `< 1 µs`). Factor-of-two
+//! resolution is plenty for p50/p99 dashboards, and the fixed layout is
+//! what lets the Prometheus exposition emit *cumulative* `le` buckets
+//! without any locking — every cell is an independent relaxed atomic.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log2 buckets: the top bucket covers latencies up to
+/// ~2^42 µs ≈ 50 days — effectively unbounded.
+pub const BUCKETS: usize = 43;
+
+/// A concurrent log2 latency histogram (microsecond domain).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// New empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        ((64 - us.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+
+    /// Upper bound (µs) of bucket `i` — the `le` boundary the exposition
+    /// publishes and the value quantiles report for samples that landed
+    /// there.
+    pub fn bucket_upper_us(i: usize) -> u64 {
+        1u64 << i
+    }
+
+    /// Record one sample.
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    /// Record one sample given in microseconds.
+    pub fn record_us(&self, us: u64) {
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all samples in microseconds (the exposition's `_sum`).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the raw (non-cumulative) bucket counts, index =
+    /// bucket number, upper bound = [`Self::bucket_upper_us`].
+    pub fn bucket_counts(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Mean latency in milliseconds (0 when empty).
+    pub fn mean_ms(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64 / 1e3
+        }
+    }
+
+    /// Maximum latency in milliseconds.
+    pub fn max_ms(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Latency quantile in milliseconds, as the upper bound of the
+    /// bucket where the cumulative count crosses `q` (0 when empty),
+    /// clamped to the observed maximum — the top occupied bucket's upper
+    /// bound can overshoot the true max by up to 2×, and an unclamped
+    /// p99 > max reads as nonsense in `/stats`. Resolution is a factor
+    /// of two — plenty for p50/p99 dashboards.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                let upper = Self::bucket_upper_us(i) as f64 / 1e3;
+                return upper.min(self.max_ms());
+            }
+        }
+        self.max_ms()
+    }
+
+    /// JSON snapshot (count/mean/p50/p95/p99/p999/max) — the full
+    /// percentile ladder served by `/stats`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("mean_ms", Json::Num(self.mean_ms())),
+            ("p50_ms", Json::Num(self.quantile_ms(0.50))),
+            ("p95_ms", Json::Num(self.quantile_ms(0.95))),
+            ("p99_ms", Json::Num(self.quantile_ms(0.99))),
+            ("p999_ms", Json::Num(self.quantile_ms(0.999))),
+            ("max_ms", Json::Num(self.max_ms())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_is_clamped_to_observed_max() {
+        // Regression: the top occupied bucket's upper bound used to be
+        // returned verbatim, reporting p99 up to 2× the true max
+        // (100 ms lands in the (65.536, 131.072] ms bucket).
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record_us(100_000);
+        }
+        assert_eq!(h.max_ms(), 100.0);
+        assert_eq!(h.quantile_ms(0.99), 100.0, "p99 must never exceed max");
+        assert_eq!(h.quantile_ms(0.999), 100.0);
+        assert_eq!(h.quantile_ms(1.0), 100.0);
+        // A quantile resolved below the top bucket still reports the
+        // (un-clamped) bucket bound.
+        h.record_us(10);
+        assert!(h.quantile_ms(0.001) <= 0.016);
+    }
+
+    #[test]
+    fn percentile_ladder_is_monotone() {
+        let h = Histogram::new();
+        for i in 0..1000u64 {
+            h.record_us(i * 37 % 5000);
+        }
+        let p50 = h.quantile_ms(0.50);
+        let p95 = h.quantile_ms(0.95);
+        let p99 = h.quantile_ms(0.99);
+        let p999 = h.quantile_ms(0.999);
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= p999, "{p50} {p95} {p99} {p999}");
+        assert!(p999 <= h.max_ms());
+        let j = h.to_json();
+        assert!(j.get("p95_ms").is_some() && j.get("p999_ms").is_some());
+    }
+
+    #[test]
+    fn bucket_counts_match_total() {
+        let h = Histogram::new();
+        for us in [0u64, 1, 2, 100, 100_000, u64::MAX / 2] {
+            h.record_us(us);
+        }
+        let counts = h.bucket_counts();
+        assert_eq!(counts.iter().sum::<u64>(), h.count());
+        assert_eq!(h.sum_us() > 0, true);
+    }
+}

@@ -1,0 +1,213 @@
+//! Hand-rolled Prometheus text exposition (format version 0.0.4) — the
+//! serializer behind `GET /metrics`.
+//!
+//! No client library resolves offline, and the subset of the format the
+//! crate needs is small: `# HELP` / `# TYPE` headers per family,
+//! `name{labels} value` samples, and histograms as *cumulative* `le`
+//! buckets ending in `+Inf` plus `_sum` / `_count`. The builder owns
+//! exactly that subset so the emission rules (escaping, cumulative
+//! conversion, seconds units) live in one place and are testable
+//! without a server; the conformance suite in `tests/obs_conformance.rs`
+//! holds the output to the format contract via [`super::text`], the
+//! matching parser.
+//!
+//! Convention: time histograms are recorded in microseconds
+//! ([`Histogram`]) but *exposed* in seconds, per Prometheus base-unit
+//! practice — scrapers should never have to guess units from a name.
+
+use super::hist::{Histogram, BUCKETS};
+
+/// Incremental builder for one exposition document.
+#[derive(Default)]
+pub struct PromText {
+    out: String,
+}
+
+/// Render a sample value the way Prometheus expects: integers bare,
+/// floats in shortest form, infinities as `+Inf`/`-Inf`.
+fn fmt_value(v: f64) -> String {
+    if v.is_infinite() {
+        return if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() };
+    }
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Escape a label value (`\` → `\\`, `"` → `\"`, newline → `\n`).
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl PromText {
+    /// New empty document.
+    pub fn new() -> PromText {
+        PromText::default()
+    }
+
+    /// Start a metric family: emits the `# HELP` and `# TYPE` lines.
+    /// Call once per family, before its samples; `typ` is one of
+    /// `counter`, `gauge`, `histogram`.
+    pub fn family(&mut self, name: &str, typ: &str, help: &str) {
+        // HELP text escapes backslash and newline only (the format
+        // leaves quotes alone outside label values).
+        let help = help.replace('\\', "\\\\").replace('\n', "\\n");
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(&help);
+        self.out.push_str("\n# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(typ);
+        self.out.push('\n');
+    }
+
+    fn sample_name(&mut self, name: &str, labels: &[(&str, &str)]) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                self.out.push_str(&escape_label(v));
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+    }
+
+    /// Emit one sample line (`name{labels} value`). Used for counters
+    /// and gauges; histograms go through [`Self::histogram_us`] /
+    /// [`Self::histogram_buckets`].
+    pub fn value(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.sample_name(name, labels);
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(v));
+        self.out.push('\n');
+    }
+
+    /// Emit a histogram family's samples from explicit non-cumulative
+    /// buckets: `(upper_bound, count)` pairs in ascending bound order.
+    /// Converts to cumulative counts, trims trailing empty buckets
+    /// (keeping at least one finite bound so the shape is visible), and
+    /// always terminates with `+Inf`, `_sum`, `_count`.
+    pub fn histogram_buckets(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        buckets: &[(f64, u64)],
+        sum: f64,
+        count: u64,
+    ) {
+        let last_used = buckets.iter().rposition(|&(_, c)| c > 0).map_or(0, |i| i + 1);
+        let keep = last_used.max(1).min(buckets.len());
+        let mut cum = 0u64;
+        for &(bound, c) in &buckets[..keep] {
+            cum += c;
+            let mut with_le: Vec<(&str, &str)> = labels.to_vec();
+            let le = fmt_value(bound);
+            with_le.push(("le", &le));
+            self.value(&format!("{name}_bucket"), &with_le, cum as f64);
+        }
+        let mut with_le: Vec<(&str, &str)> = labels.to_vec();
+        with_le.push(("le", "+Inf"));
+        self.value(&format!("{name}_bucket"), &with_le, count as f64);
+        self.value(&format!("{name}_sum"), labels, sum);
+        self.value(&format!("{name}_count"), labels, count as f64);
+    }
+
+    /// Emit a [`Histogram`] (microsecond domain) as a seconds-unit
+    /// Prometheus histogram.
+    pub fn histogram_us(&mut self, name: &str, labels: &[(&str, &str)], h: &Histogram) {
+        let counts = h.bucket_counts();
+        let buckets: Vec<(f64, u64)> = (0..BUCKETS)
+            .map(|i| (Histogram::bucket_upper_us(i) as f64 / 1e6, counts[i]))
+            .collect();
+        self.histogram_buckets(name, labels, &buckets, h.sum_us() as f64 / 1e6, h.count());
+    }
+
+    /// Finish the document.
+    pub fn render(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn families_values_and_escaping() {
+        let mut p = PromText::new();
+        p.family("boba_requests_total", "counter", "Requests served.");
+        p.value("boba_requests_total", &[("endpoint", "spmv")], 42.0);
+        p.value("boba_requests_total", &[("endpoint", "a\"b\\c")], 1.0);
+        p.family("boba_uptime_seconds", "gauge", "Uptime.");
+        p.value("boba_uptime_seconds", &[], 1.5);
+        let text = p.render();
+        assert!(text.contains("# HELP boba_requests_total Requests served.\n"));
+        assert!(text.contains("# TYPE boba_requests_total counter\n"));
+        assert!(text.contains("boba_requests_total{endpoint=\"spmv\"} 42\n"));
+        assert!(text.contains("{endpoint=\"a\\\"b\\\\c\"} 1\n"));
+        assert!(text.contains("boba_uptime_seconds 1.5\n"));
+    }
+
+    #[test]
+    fn histogram_is_cumulative_and_ends_in_inf() {
+        let h = Histogram::new();
+        h.record_us(3); // bucket le 4µs
+        h.record_us(3);
+        h.record_us(900); // bucket le 1024µs
+        let mut p = PromText::new();
+        p.family("boba_stage_duration_seconds", "histogram", "Stage time.");
+        p.histogram_us("boba_stage_duration_seconds", &[("stage", "reorder")], &h);
+        let text = p.render();
+        // Cumulative: the 1024µs bucket already includes the two 3µs samples.
+        assert!(text.contains("le=\"0.000004\"} 2\n"), "{text}");
+        assert!(text.contains("le=\"0.001024\"} 3\n"), "{text}");
+        assert!(text.contains("le=\"+Inf\"} 3\n"));
+        assert!(text.contains("boba_stage_duration_seconds_sum{stage=\"reorder\"} 0.000906\n"));
+        assert!(text.contains("boba_stage_duration_seconds_count{stage=\"reorder\"} 3\n"));
+        // Trimmed: no empty top buckets beyond the last occupied one.
+        assert!(!text.contains("le=\"0.002048\""));
+    }
+
+    #[test]
+    fn empty_histogram_still_emits_a_complete_family() {
+        let h = Histogram::new();
+        let mut p = PromText::new();
+        p.histogram_us("x_seconds", &[], &h);
+        let text = p.render();
+        assert!(text.contains("x_seconds_bucket{le=\"+Inf\"} 0\n"));
+        assert!(text.contains("x_seconds_sum 0\n"));
+        assert!(text.contains("x_seconds_count 0\n"));
+    }
+
+    #[test]
+    fn explicit_buckets_for_batch_widths() {
+        let widths = [(1.0, 5u64), (2.0, 0), (3.0, 2), (4.0, 0)];
+        let mut p = PromText::new();
+        p.histogram_buckets("boba_coalesce_batch_width", &[("kind", "spmv")], &widths, 11.0, 7);
+        let text = p.render();
+        assert!(text.contains("le=\"1\"} 5\n"));
+        assert!(text.contains("le=\"2\"} 5\n"));
+        assert!(text.contains("le=\"3\"} 7\n"));
+        assert!(!text.contains("le=\"4\"}"), "trailing empty bucket trimmed: {text}");
+        assert!(text.contains("le=\"+Inf\"} 7\n"));
+    }
+}

@@ -1,0 +1,34 @@
+//! Observability: stage-span tracing, the `/metrics` exposition, and
+//! the scrape parser — std-only, shared by the serve path and loadgen.
+//!
+//! Three layers, bottom up:
+//!
+//! - [`hist`] — the concurrent log2 [`Histogram`], the one measurement
+//!   primitive everything else aggregates into (moved here from
+//!   `server::stats`, which re-exports it).
+//! - [`span`] — `obs::span("prepare.reorder", || ...)` wall-times named
+//!   stages into per-stage histograms and, when a request trace is open
+//!   ([`begin`]), into that request's span tree. Completed traces are
+//!   published to the lock-free [`ring`], served by
+//!   `GET /debug/traces?n=K`; slow ones are logged to stderr as
+//!   single-line JSON. `--no-trace` / `BOBA_NO_TRACE=1` reduce every
+//!   hook to one relaxed atomic load.
+//! - [`metrics`] + [`text`] — the hand-rolled Prometheus text builder
+//!   behind `GET /metrics` and the matching strict parser used by
+//!   `loadgen --scrape-metrics` and the conformance tests.
+//!
+//! The layering rule: `obs` depends only on `util` (and the vendored
+//! `anyhow`), never on `server` — the server threads `obs` through its
+//! handlers, not the other way around.
+
+pub mod hist;
+pub mod metrics;
+pub mod ring;
+pub mod span;
+pub mod text;
+
+pub use hist::Histogram;
+pub use metrics::PromText;
+pub use ring::TraceRing;
+pub use span::{begin, enabled, init_from_env, set_enabled, span, stage_histograms, stage_record,
+               Trace, TraceGuard};

@@ -1,0 +1,191 @@
+//! A fixed-size lock-free ring buffer of completed traces — the store
+//! behind `GET /debug/traces?n=K`.
+//!
+//! Writers (request worker threads) claim a slot with one
+//! `fetch_add` on the head and publish via an atomic pointer `swap`;
+//! readers borrow a slot's trace by swapping the pointer out, cloning
+//! the `Arc`, and CAS-ing the pointer back. Ownership of the heap trace
+//! always transfers atomically through the slot, so a reader can never
+//! observe a half-written trace and a concurrent writer can never free
+//! a trace a reader still holds. If a writer lapped the slot while the
+//! reader had it out (the CAS fails), the reader keeps its clone and
+//! drops its raw pointer — the newer trace simply wins the slot.
+//!
+//! The cost per completed request is one allocation (the `Arc<Trace>`,
+//! already built by the tracer) and two atomic ops; there is no lock to
+//! convoy on when all workers publish at once.
+
+use super::span::Trace;
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// Capacity of the process-wide ring served by `/debug/traces`.
+pub const GLOBAL_CAPACITY: usize = 256;
+
+/// Fixed-capacity multi-writer trace ring. Holds the `capacity` most
+/// recently published traces (approximately — concurrent writers may
+/// interleave slot order, never content).
+pub struct TraceRing {
+    slots: Vec<AtomicPtr<Trace>>,
+    head: AtomicUsize,
+    pushed: AtomicU64,
+}
+
+impl TraceRing {
+    /// New empty ring with `capacity` slots (minimum 1).
+    pub fn new(capacity: usize) -> TraceRing {
+        let capacity = capacity.max(1);
+        TraceRing {
+            slots: (0..capacity).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect(),
+            head: AtomicUsize::new(0),
+            pushed: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of slots.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total traces ever published (the `boba_traces_total` counter).
+    pub fn pushed(&self) -> u64 {
+        self.pushed.load(Ordering::Relaxed)
+    }
+
+    /// Publish a completed trace, displacing the oldest when full.
+    pub fn push(&self, trace: Arc<Trace>) {
+        let at = self.head.fetch_add(1, Ordering::Relaxed) % self.slots.len();
+        let fresh = Arc::into_raw(trace) as *mut Trace;
+        let old = self.slots[at].swap(fresh, Ordering::AcqRel);
+        if !old.is_null() {
+            // Reclaim the displaced trace's refcount.
+            unsafe { drop(Arc::from_raw(old)) };
+        }
+        self.pushed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot up to `n` most recent traces, newest first. Slots a
+    /// writer is mid-publish on (or that a concurrent reader has
+    /// borrowed) are skipped — the reader only ever sees complete
+    /// traces.
+    pub fn recent(&self, n: usize) -> Vec<Arc<Trace>> {
+        let cap = self.slots.len();
+        let head = self.head.load(Ordering::Acquire);
+        let mut out = Vec::with_capacity(n.min(cap));
+        for back in 1..=cap {
+            if out.len() >= n {
+                break;
+            }
+            let at = (head + cap - (back % cap)) % cap;
+            let raw = self.slots[at].swap(std::ptr::null_mut(), Ordering::AcqRel);
+            if raw.is_null() {
+                continue;
+            }
+            // Borrow: clone the Arc, then try to put the original back.
+            let owned = unsafe { Arc::from_raw(raw) };
+            out.push(owned.clone());
+            let back_in = Arc::into_raw(owned) as *mut Trace;
+            if self.slots[at]
+                .compare_exchange(
+                    std::ptr::null_mut(),
+                    back_in,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                )
+                .is_err()
+            {
+                // A writer lapped us; the newer trace keeps the slot.
+                unsafe { drop(Arc::from_raw(back_in)) };
+            }
+        }
+        out
+    }
+}
+
+impl Drop for TraceRing {
+    fn drop(&mut self) {
+        for slot in &self.slots {
+            let raw = slot.swap(std::ptr::null_mut(), Ordering::AcqRel);
+            if !raw.is_null() {
+                unsafe { drop(Arc::from_raw(raw)) };
+            }
+        }
+    }
+}
+
+/// The process-wide ring `/debug/traces` serves.
+pub fn global() -> &'static TraceRing {
+    static RING: OnceLock<TraceRing> = OnceLock::new();
+    RING.get_or_init(|| TraceRing::new(GLOBAL_CAPACITY))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(id: u64) -> Arc<Trace> {
+        Arc::new(Trace { id, endpoint: "spmv", status: 200, total_us: id * 10, spans: Vec::new() })
+    }
+
+    #[test]
+    fn recent_returns_newest_first_and_caps_at_capacity() {
+        let ring = TraceRing::new(4);
+        for id in 1..=6 {
+            ring.push(trace(id));
+        }
+        assert_eq!(ring.pushed(), 6);
+        let got = ring.recent(10);
+        let ids: Vec<u64> = got.iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![6, 5, 4, 3], "4 slots keep the last 4, newest first");
+        // A second read sees the same traces (reader puts slots back).
+        let again: Vec<u64> = ring.recent(2).iter().map(|t| t.id).collect();
+        assert_eq!(again, vec![6, 5]);
+    }
+
+    #[test]
+    fn empty_and_partial_rings() {
+        let ring = TraceRing::new(8);
+        assert!(ring.recent(5).is_empty());
+        ring.push(trace(1));
+        let got = ring.recent(5);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 1);
+    }
+
+    #[test]
+    fn concurrent_writers_and_reader_see_only_complete_traces() {
+        // The satellite stress test: many writers hammering a small
+        // ring while a reader snapshots continuously. Every trace a
+        // reader observes must be internally consistent (id encodes the
+        // expected total_us), and nothing deadlocks or leaks.
+        let ring = Arc::new(TraceRing::new(16));
+        let writers = 8;
+        let per = 500u64;
+        std::thread::scope(|s| {
+            for w in 0..writers {
+                let ring = ring.clone();
+                s.spawn(move || {
+                    for i in 0..per {
+                        let id = w * per + i + 1;
+                        ring.push(trace(id));
+                    }
+                });
+            }
+            let ring2 = ring.clone();
+            s.spawn(move || {
+                for _ in 0..200 {
+                    for t in ring2.recent(16) {
+                        assert_eq!(t.total_us, t.id * 10, "torn trace observed");
+                        assert_eq!(t.endpoint, "spmv");
+                    }
+                }
+            });
+        });
+        assert_eq!(ring.pushed(), writers as u64 * per);
+        let finals = ring.recent(16);
+        assert_eq!(finals.len(), 16, "full ring after the storm");
+        for t in &finals {
+            assert_eq!(t.total_us, t.id * 10);
+        }
+    }
+}

@@ -1,0 +1,338 @@
+//! Parser for the Prometheus text exposition — the consuming half of
+//! [`super::metrics`].
+//!
+//! Two callers share it: `loadgen --scrape-metrics` (snapshot `/metrics`
+//! before and after a run, diff the counters, embed server-side
+//! percentiles in BENCH_serve.json) and the conformance suite in
+//! `tests/obs_conformance.rs` (every family has HELP/TYPE, buckets are
+//! cumulative and end in `+Inf`, counters are monotone). The parser is
+//! deliberately strict — a sample without a preceding `# TYPE` for its
+//! family is an error, which is exactly the conformance property the
+//! tests want enforced.
+
+use anyhow::{bail, Context, Result};
+
+/// One parsed sample line (`name{labels} value`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Full sample name (may carry a `_bucket`/`_sum`/`_count` suffix).
+    pub name: String,
+    /// Label pairs in source order (values unescaped).
+    pub labels: Vec<(String, String)>,
+    /// Sample value (`+Inf` parses to `f64::INFINITY`).
+    pub value: f64,
+}
+
+impl Sample {
+    /// Label value lookup.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether this sample carries every `(key, value)` pair in `want`.
+    pub fn matches(&self, want: &[(&str, &str)]) -> bool {
+        want.iter().all(|(k, v)| self.label(k) == Some(*v))
+    }
+}
+
+/// One metric family: the HELP/TYPE header plus its samples.
+#[derive(Debug, Clone)]
+pub struct Family {
+    /// Family name (without sample suffixes).
+    pub name: String,
+    /// `counter` / `gauge` / `histogram`.
+    pub typ: String,
+    /// HELP text.
+    pub help: String,
+    /// Samples, in document order.
+    pub samples: Vec<Sample>,
+}
+
+/// A fully parsed exposition document.
+#[derive(Debug, Clone, Default)]
+pub struct Scrape {
+    /// Families in document order.
+    pub families: Vec<Family>,
+}
+
+impl Scrape {
+    /// Parse an exposition document. Strict: every sample must belong
+    /// to a family announced by `# HELP` + `# TYPE` (exact name or a
+    /// `_bucket`/`_sum`/`_count` suffix of it).
+    pub fn parse(text: &str) -> Result<Scrape> {
+        let mut scrape = Scrape::default();
+        let mut pending_help: Option<(String, String)> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim_end();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let (name, help) = rest.split_once(' ').unwrap_or((rest, ""));
+                pending_help = Some((name.to_string(), help.to_string()));
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let (name, typ) = rest
+                    .split_once(' ')
+                    .with_context(|| format!("line {}: TYPE without a type", lineno + 1))?;
+                let help = match pending_help.take() {
+                    Some((hname, help)) if hname == name => help,
+                    _ => bail!("line {}: TYPE for {name} without matching HELP", lineno + 1),
+                };
+                if scrape.families.iter().any(|f| f.name == name) {
+                    bail!("line {}: duplicate family {name}", lineno + 1);
+                }
+                scrape.families.push(Family {
+                    name: name.to_string(),
+                    typ: typ.trim().to_string(),
+                    help,
+                    samples: Vec::new(),
+                });
+                continue;
+            }
+            if line.starts_with('#') {
+                continue; // other comments are legal and ignored
+            }
+            let sample = parse_sample(line)
+                .with_context(|| format!("line {}: bad sample {line:?}", lineno + 1))?;
+            let fam = scrape
+                .families
+                .iter_mut()
+                .find(|f| {
+                    sample.name == f.name
+                        || ["_bucket", "_sum", "_count"].iter().any(|suf| {
+                            sample.name.strip_suffix(suf).is_some_and(|base| base == f.name)
+                        })
+                })
+                .with_context(|| {
+                    format!("line {}: sample {} has no HELP/TYPE family", lineno + 1, sample.name)
+                })?;
+            fam.samples.push(sample);
+        }
+        Ok(scrape)
+    }
+
+    /// Family lookup by name.
+    pub fn family(&self, name: &str) -> Option<&Family> {
+        self.families.iter().find(|f| f.name == name)
+    }
+
+    /// First sample with this exact name whose labels include `labels`.
+    pub fn sample(&self, name: &str, labels: &[(&str, &str)]) -> Option<&Sample> {
+        self.families
+            .iter()
+            .flat_map(|f| f.samples.iter())
+            .find(|s| s.name == name && s.matches(labels))
+    }
+
+    /// Scalar value lookup (counter/gauge).
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.sample(name, labels).map(|s| s.value)
+    }
+
+    /// Cumulative `(le, count)` buckets of a histogram family, in
+    /// ascending bound order, `+Inf` (as `f64::INFINITY`) last. Empty
+    /// when the family or label set is absent.
+    pub fn histogram(&self, family: &str, labels: &[(&str, &str)]) -> Vec<(f64, f64)> {
+        let name = format!("{family}_bucket");
+        let mut out: Vec<(f64, f64)> = self
+            .families
+            .iter()
+            .flat_map(|f| f.samples.iter())
+            .filter(|s| s.name == name && s.matches(labels))
+            .filter_map(|s| {
+                let le = parse_value(s.label("le")?).ok()?;
+                Some((le, s.value))
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        out
+    }
+}
+
+/// Estimate quantile `q` from cumulative `(le, count)` buckets (what
+/// `promql histogram_quantile` does, minus interpolation: the serving
+/// histograms are log2-bucketed, so the bound itself is the honest
+/// answer). Returns 0 when empty; a quantile landing in the `+Inf`
+/// bucket reports the largest finite bound.
+pub fn histogram_quantile(cum: &[(f64, f64)], q: f64) -> f64 {
+    let total = cum.last().map_or(0.0, |&(_, c)| c);
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let target = (q.clamp(0.0, 1.0) * total).ceil().max(1.0);
+    let mut last_finite = 0.0;
+    for &(le, c) in cum {
+        if le.is_finite() {
+            last_finite = le;
+        }
+        if c >= target {
+            return if le.is_finite() { le } else { last_finite };
+        }
+    }
+    last_finite
+}
+
+/// Subtract two cumulative bucket snapshots of the same family
+/// (`post - pre`), yielding the cumulative distribution of just the
+/// interval between the scrapes. Bounds present only in `post` (the
+/// exposition trims trailing empty buckets, so `pre` may be shorter)
+/// take `pre`'s total count as their baseline.
+pub fn histogram_delta(pre: &[(f64, f64)], post: &[(f64, f64)]) -> Vec<(f64, f64)> {
+    let pre_total = pre.last().map_or(0.0, |&(_, c)| c);
+    post.iter()
+        .map(|&(le, c)| {
+            let base = pre
+                .iter()
+                .find(|&&(ple, _)| ple == le)
+                .map(|&(_, pc)| pc)
+                .unwrap_or(if le.is_finite() { pre_total } else { 0.0 });
+            (le, (c - base).max(0.0))
+        })
+        .collect()
+}
+
+fn parse_value(text: &str) -> Result<f64> {
+    match text {
+        "+Inf" | "Inf" => Ok(f64::INFINITY),
+        "-Inf" => Ok(f64::NEG_INFINITY),
+        "NaN" => Ok(f64::NAN),
+        other => other.parse::<f64>().with_context(|| format!("bad value {other:?}")),
+    }
+}
+
+fn parse_sample(line: &str) -> Result<Sample> {
+    let bytes = line.as_bytes();
+    let mut at = 0;
+    while at < bytes.len()
+        && (bytes[at].is_ascii_alphanumeric() || bytes[at] == b'_' || bytes[at] == b':')
+    {
+        at += 1;
+    }
+    if at == 0 {
+        bail!("missing metric name");
+    }
+    let name = line[..at].to_string();
+    let mut labels = Vec::new();
+    let rest = &line[at..];
+    let rest = if let Some(inner) = rest.strip_prefix('{') {
+        let close = inner.rfind('}').context("unterminated label set")?;
+        let mut l = &inner[..close];
+        while !l.is_empty() {
+            let eq = l.find('=').context("label without '='")?;
+            let key = l[..eq].trim().to_string();
+            let after = &l[eq + 1..];
+            if !after.starts_with('"') {
+                bail!("unquoted label value");
+            }
+            // Scan to the closing quote, honouring escapes; `i` indexes
+            // into `after`, so `i + 1` is the byte just past the quote.
+            let mut val = String::new();
+            let mut chars = after.char_indices().skip(1);
+            let mut past_quote = None;
+            while let Some((i, c)) = chars.next() {
+                match c {
+                    '\\' => match chars.next() {
+                        Some((_, 'n')) => val.push('\n'),
+                        Some((_, e)) => val.push(e),
+                        None => bail!("dangling escape in label value"),
+                    },
+                    '"' => {
+                        past_quote = Some(i + 1);
+                        break;
+                    }
+                    c => val.push(c),
+                }
+            }
+            let past_quote = past_quote.context("unterminated label value")?;
+            labels.push((key, val));
+            l = after[past_quote..].trim_start_matches(',').trim_start();
+        }
+        &inner[close + 1..]
+    } else {
+        rest
+    };
+    let value_text = rest.trim();
+    // A trailing timestamp (rare, we never emit one) would be a second
+    // token; take the first.
+    let value_text = value_text.split_whitespace().next().context("missing value")?;
+    Ok(Sample { name, labels, value: parse_value(value_text)? })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = "\
+# HELP boba_requests_total Requests served.
+# TYPE boba_requests_total counter
+boba_requests_total{endpoint=\"spmv\"} 42
+boba_requests_total{endpoint=\"pagerank\"} 7
+# HELP boba_request_duration_seconds Request latency.
+# TYPE boba_request_duration_seconds histogram
+boba_request_duration_seconds_bucket{endpoint=\"spmv\",le=\"0.001\"} 30
+boba_request_duration_seconds_bucket{endpoint=\"spmv\",le=\"0.004\"} 40
+boba_request_duration_seconds_bucket{endpoint=\"spmv\",le=\"+Inf\"} 42
+boba_request_duration_seconds_sum{endpoint=\"spmv\"} 0.05
+boba_request_duration_seconds_count{endpoint=\"spmv\"} 42
+# HELP boba_uptime_seconds Uptime.
+# TYPE boba_uptime_seconds gauge
+boba_uptime_seconds 12.5
+";
+
+    #[test]
+    fn parses_families_samples_and_histograms() {
+        let s = Scrape::parse(DOC).unwrap();
+        assert_eq!(s.families.len(), 3);
+        assert_eq!(s.family("boba_requests_total").unwrap().typ, "counter");
+        assert_eq!(s.value("boba_requests_total", &[("endpoint", "spmv")]), Some(42.0));
+        assert_eq!(s.value("boba_uptime_seconds", &[]), Some(12.5));
+        let h = s.histogram("boba_request_duration_seconds", &[("endpoint", "spmv")]);
+        assert_eq!(h.len(), 3);
+        assert_eq!(h[0], (0.001, 30.0));
+        assert!(h[2].0.is_infinite());
+        assert_eq!(
+            s.value("boba_request_duration_seconds_count", &[("endpoint", "spmv")]),
+            Some(42.0)
+        );
+    }
+
+    #[test]
+    fn rejects_headerless_samples_and_orphan_type() {
+        assert!(Scrape::parse("boba_x_total 1\n").is_err(), "sample without family");
+        assert!(Scrape::parse("# TYPE boba_x_total counter\n").is_err(), "TYPE without HELP");
+        let dup = "# HELP a_total x\n# TYPE a_total counter\n# HELP a_total x\n# TYPE a_total counter\n";
+        assert!(Scrape::parse(dup).is_err(), "duplicate family");
+    }
+
+    #[test]
+    fn label_escapes_round_trip_with_the_builder() {
+        let mut p = super::super::metrics::PromText::new();
+        p.family("m_total", "counter", "x");
+        p.value("m_total", &[("k", "a\"b\\c\nd")], 3.0);
+        let s = Scrape::parse(&p.render()).unwrap();
+        assert_eq!(s.value("m_total", &[("k", "a\"b\\c\nd")]), Some(3.0));
+    }
+
+    #[test]
+    fn quantiles_from_cumulative_buckets() {
+        let cum = [(0.001, 30.0), (0.004, 40.0), (f64::INFINITY, 42.0)];
+        assert_eq!(histogram_quantile(&cum, 0.5), 0.001);
+        assert_eq!(histogram_quantile(&cum, 0.9), 0.004);
+        // p99 lands in +Inf; report the largest finite bound.
+        assert_eq!(histogram_quantile(&cum, 0.99), 0.004);
+        assert_eq!(histogram_quantile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn delta_handles_trimmed_pre_snapshots() {
+        // pre was trimmed at 0.001 (nothing slower had happened yet).
+        let pre = [(0.001, 10.0), (f64::INFINITY, 10.0)];
+        let post = [(0.001, 12.0), (0.004, 15.0), (f64::INFINITY, 16.0)];
+        let d = histogram_delta(&pre, &post);
+        assert_eq!(d, vec![(0.001, 2.0), (0.004, 5.0), (f64::INFINITY, 6.0)]);
+        let p50 = histogram_quantile(&d, 0.5);
+        assert_eq!(p50, 0.004);
+    }
+}

@@ -148,6 +148,9 @@ struct Pool {
     work: Condvar,
     /// Worker threads spawned so far (monotone; workers never exit).
     spawned: AtomicUsize,
+    /// Workers currently inside a task closure (the rest are parked on
+    /// the queue condvar).
+    busy: AtomicUsize,
     /// Dispatch generations published so far.
     generations: AtomicU64,
 }
@@ -160,6 +163,7 @@ impl Pool {
             queue: Mutex::new(VecDeque::new()),
             work: Condvar::new(),
             spawned: AtomicUsize::new(0),
+            busy: AtomicUsize::new(0),
             generations: AtomicU64::new(0),
         })
     }
@@ -204,7 +208,9 @@ impl Pool {
                     q = self.work.wait(q).unwrap();
                 }
             };
+            self.busy.fetch_add(1, Ordering::Relaxed);
             task.participate();
+            self.busy.fetch_sub(1, Ordering::Relaxed);
         }
     }
 
@@ -294,6 +300,34 @@ pub fn stats() -> (usize, u64) {
     (pool.spawned.load(Ordering::Relaxed), pool.generations.load(Ordering::Relaxed))
 }
 
+/// Point-in-time pool gauges for `/stats` and `/metrics`.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolStats {
+    /// Worker threads spawned so far (monotone).
+    pub spawned: usize,
+    /// Workers currently executing a task closure.
+    pub active: usize,
+    /// Workers parked on the queue condvar (`spawned - active`).
+    pub parked: usize,
+    /// Dispatch generations published so far (monotone).
+    pub dispatches: u64,
+}
+
+/// Snapshot the pool gauges. `active`/`parked` are instantaneous reads
+/// of a moving target — consistent with each other only approximately,
+/// which is all a scrape needs.
+pub fn snapshot() -> PoolStats {
+    let pool = Pool::global();
+    let spawned = pool.spawned.load(Ordering::Relaxed);
+    let active = pool.busy.load(Ordering::Relaxed).min(spawned);
+    PoolStats {
+        spawned,
+        active,
+        parked: spawned - active,
+        dispatches: pool.generations.load(Ordering::Relaxed),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -345,6 +379,20 @@ mod tests {
             after_burst <= ceiling,
             "pool grew per dispatch: {after_warm} -> {after_burst} (ceiling {ceiling})"
         );
+    }
+
+    #[test]
+    fn snapshot_gauges_are_consistent() {
+        let _g = ThreadGuard::pin(4);
+        parallel::par_for_chunks(1 << 16, 1 << 10, |_lo, _hi| {});
+        let s = super::snapshot();
+        assert_eq!(s.spawned, s.active + s.parked);
+        assert!(s.dispatches >= 1);
+        // Both counters are monotone; tests run concurrently, so the
+        // later read can only be >=.
+        let (spawned, generations) = stats();
+        assert!(spawned >= s.spawned);
+        assert!(generations >= s.dispatches);
     }
 
     #[test]

@@ -144,7 +144,7 @@ pub fn run_spmv_tile(graph: &PreparedGraph, seeds: &[Option<u64>]) -> Vec<f64> {
     for s in seeds {
         x.extend(rhs_vector(n, *s));
     }
-    let y = spmm::spmm_pull_parallel(&graph.csr, &x, k);
+    let y = crate::obs::span("kernel.spmv", || spmm::spmm_pull_parallel(&graph.csr, &x, k));
     (0..k)
         .map(|j| spmm::column(&y, n, j).iter().map(|&v| v as f64).sum())
         .collect()
@@ -157,7 +157,7 @@ pub fn run_sssp_tile(graph: &PreparedGraph, sources: &[u32]) -> Vec<(f64, usize)
     let s = sources.len();
     assert!((1..=sssp::MAX_SOURCES).contains(&s), "tile width {s}");
     let n = graph.csr.n();
-    let d = sssp::sssp_frontier_multi(&graph.csr, sources);
+    let d = crate::obs::span("kernel.sssp", || sssp::sssp_frontier_multi(&graph.csr, sources));
     (0..s)
         .map(|i| {
             let col = &d[i * n..(i + 1) * n];
@@ -226,6 +226,13 @@ impl BatchWidths {
     /// Queries answered across all batches.
     pub fn queries(&self) -> u64 {
         self.queries.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the per-width batch counts: index `i` holds the
+    /// number of batches executed at width `i + 1`. Feeds the
+    /// `boba_coalesce_batch_width` histogram on `/metrics`.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
     }
 
     /// JSON snapshot: totals, mean width, and the non-empty width
@@ -407,9 +414,12 @@ impl Coalescer {
             let width = batch.len();
             self.widths(kind).record(width);
             // Unwind-safe: a panicking kernel must not leave followers
-            // parked forever — they get an error result instead.
+            // parked forever — they get an error result instead. The
+            // span lands in the *leader's* trace (the kernel ran once,
+            // on this thread); followers' traces show the same interval
+            // as coalesce wait.
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                execute_batch(graph, &batch)
+                crate::obs::span("coalesce.exec", || execute_batch(graph, &batch))
             }));
             let mut st2 = group.state.lock().unwrap();
             st2.leader = false;

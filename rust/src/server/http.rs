@@ -155,6 +155,11 @@ pub struct Response {
     pub body: Vec<u8>,
     /// Whether to close the connection after writing.
     pub close: bool,
+    /// Additional response headers (name, value) — e.g. `x-request-id`.
+    /// Names must be lower-case ASCII; values must be header-safe (no
+    /// CR/LF). Framing headers (content-*, connection) are managed by
+    /// [`Self::write_to`] and must not appear here.
+    pub extra: Vec<(String, String)>,
 }
 
 impl Response {
@@ -165,6 +170,7 @@ impl Response {
             content_type: "application/json",
             body: body.into(),
             close: false,
+            extra: Vec::new(),
         }
     }
 
@@ -175,7 +181,30 @@ impl Response {
             content_type: "text/plain; charset=utf-8",
             body: body.into().into_bytes(),
             close: false,
+            extra: Vec::new(),
         }
+    }
+
+    /// Plain-text response with an explicit content type (the
+    /// `/metrics` exposition advertises `text/plain; version=0.0.4`).
+    pub fn text_with_type(
+        status: u16,
+        content_type: &'static str,
+        body: impl Into<String>,
+    ) -> Response {
+        Response {
+            status,
+            content_type,
+            body: body.into().into_bytes(),
+            close: false,
+            extra: Vec::new(),
+        }
+    }
+
+    /// Append an extra response header.
+    pub fn with_header(mut self, name: &str, value: String) -> Response {
+        self.extra.push((name.to_string(), value));
+        self
     }
 
     /// JSON error envelope: `{"error": "..."}`.
@@ -189,17 +218,21 @@ impl Response {
         )
     }
 
-    /// Serialize status line, framing headers, and body.
+    /// Serialize status line, framing headers, extra headers, and body.
     pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
         write!(
             w,
-            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n",
             self.status,
             reason(self.status),
             self.content_type,
             self.body.len(),
             if self.close { "close" } else { "keep-alive" },
         )?;
+        for (name, value) in &self.extra {
+            write!(w, "{name}: {value}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
         w.write_all(&self.body)
     }
 }
@@ -367,6 +400,17 @@ mod tests {
         assert!(text.contains("content-length: 12\r\n"));
         assert!(text.contains("connection: keep-alive\r\n"));
         assert!(text.ends_with("\r\n\r\n{\"ok\": true}"));
+    }
+
+    #[test]
+    fn extra_headers_are_emitted_before_the_blank_line() {
+        let resp = Response::json(200, "{}").with_header("x-request-id", "r-17".to_string());
+        let mut out = Vec::new();
+        resp.write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let (head, body) = text.split_once("\r\n\r\n").unwrap();
+        assert!(head.contains("\r\nx-request-id: r-17"));
+        assert_eq!(body, "{}");
     }
 
     #[test]

@@ -42,6 +42,10 @@ pub struct LoadgenConfig {
     pub coalesce: bool,
     /// Queries per batch request in coalesced mode (ignored otherwise).
     pub batch: usize,
+    /// Scrape `GET /metrics` before and after the run and embed the
+    /// delta (server-side latency percentiles, prepare-stage breakdown,
+    /// realized batch widths) into the report (`--scrape-metrics`).
+    pub scrape_metrics: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -57,6 +61,7 @@ impl Default for LoadgenConfig {
             seed: 42,
             coalesce: false,
             batch: 4,
+            scrape_metrics: false,
         }
     }
 }
@@ -116,12 +121,15 @@ pub struct Report {
     pub p99_ms: f64,
     /// Slowest request (ms).
     pub max_ms: f64,
+    /// Server-side evidence from the pre/post `/metrics` scrape delta
+    /// (`None` unless the run was configured with `scrape_metrics`).
+    pub server: Option<Json>,
 }
 
 impl Report {
     /// JSON rendering (the `BENCH_serve.json` rows).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut row = Json::obj(vec![
             ("dataset", Json::Str(self.dataset.clone())),
             ("scheme", Json::Str(self.scheme.clone())),
             (
@@ -140,7 +148,11 @@ impl Report {
             ("p50_ms", Json::Num(self.p50_ms)),
             ("p99_ms", Json::Num(self.p99_ms)),
             ("max_ms", Json::Num(self.max_ms)),
-        ])
+        ]);
+        if let (Json::Obj(pairs), Some(server)) = (&mut row, &self.server) {
+            pairs.push(("server".to_string(), server.clone()));
+        }
+        row
     }
 
     /// One-paragraph human rendering.
@@ -173,6 +185,11 @@ impl Report {
 /// Run one closed-loop load generation: prepare the graph, then hammer
 /// it with the query mix from `conns` concurrent connections.
 pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
+    // Pre-run scrape happens before the ingest so the delta captures
+    // the cold prepare's per-stage times, not just the query phase.
+    let pre_scrape =
+        if cfg.scrape_metrics { Some(scrape_metrics(&cfg.addr)?) } else { None };
+
     // ── setup: ingest + prepare once ──────────────────────────────
     let mut setup = HttpClient::connect(&cfg.addr)
         .with_context(|| format!("loadgen connecting to {}", cfg.addr))?;
@@ -321,6 +338,10 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
             .min(latencies.len() - 1);
         latencies[idx] as f64 / 1e3
     };
+    let server = match pre_scrape {
+        Some(pre) => Some(server_evidence(&pre, &scrape_metrics(&cfg.addr)?)),
+        None => None,
+    };
     Ok(Report {
         dataset: cfg.dataset.clone(),
         scheme: cfg.scheme.clone(),
@@ -341,7 +362,99 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
         p50_ms: pctl(0.50),
         p99_ms: pctl(0.99),
         max_ms: latencies.last().map_or(0.0, |&v| v as f64 / 1e3),
+        server,
     })
+}
+
+/// Scrape and parse the server's `/metrics` exposition. The strict
+/// parser makes every loadgen run with `--scrape-metrics` double as a
+/// conformance check on the exposition format.
+fn scrape_metrics(addr: &str) -> Result<crate::obs::text::Scrape> {
+    let mut c =
+        HttpClient::connect(addr).with_context(|| format!("scraping {addr}/metrics"))?;
+    let (status, body) = c.request("GET", "/metrics", b"")?;
+    anyhow::ensure!(status == 200, "GET /metrics answered {status}");
+    crate::obs::text::Scrape::parse(&String::from_utf8_lossy(&body))
+        .context("parsing /metrics exposition")
+}
+
+/// Diff two `/metrics` snapshots into the server-side evidence object
+/// embedded in `BENCH_serve.json`: what the *server* measured while
+/// this run was its traffic — latency percentiles free of client-side
+/// queueing, the cold prepare's stage breakdown, and realized batch
+/// widths.
+fn server_evidence(pre: &crate::obs::text::Scrape, post: &crate::obs::text::Scrape) -> Json {
+    use crate::obs::text::{histogram_delta, histogram_quantile};
+    let mut eps = Vec::new();
+    for ep in ["ingest", "spmv", "pagerank", "sssp", "tc", "batch"] {
+        let labels = [("endpoint", ep)];
+        let d = histogram_delta(
+            &pre.histogram("boba_request_duration_seconds", &labels),
+            &post.histogram("boba_request_duration_seconds", &labels),
+        );
+        let count = d.last().map_or(0.0, |b| b.1);
+        if count < 1.0 {
+            continue; // endpoint saw no traffic during this run
+        }
+        eps.push((
+            ep.to_string(),
+            Json::obj(vec![
+                ("count", Json::Num(count)),
+                ("p50_ms", Json::Num(histogram_quantile(&d, 0.50) * 1e3)),
+                ("p99_ms", Json::Num(histogram_quantile(&d, 0.99) * 1e3)),
+            ]),
+        ));
+    }
+    let mut stages = Vec::new();
+    for st in ["prepare.ingest", "prepare.reorder", "prepare.convert", "prepare.transpose"] {
+        let labels = [("stage", st)];
+        let sum = |s: &crate::obs::text::Scrape| {
+            s.value("boba_stage_duration_seconds_sum", &labels).unwrap_or(0.0)
+        };
+        let cnt = |s: &crate::obs::text::Scrape| {
+            s.value("boba_stage_duration_seconds_count", &labels).unwrap_or(0.0)
+        };
+        stages.push((
+            st.to_string(),
+            Json::obj(vec![
+                ("count", Json::Num(cnt(post) - cnt(pre))),
+                ("ms", Json::Num((sum(post) - sum(pre)) * 1e3)),
+            ]),
+        ));
+    }
+    let mut co = Vec::new();
+    for kind in ["spmv", "sssp"] {
+        let labels = [("kind", kind)];
+        let d = histogram_delta(
+            &pre.histogram("boba_coalesce_batch_width", &labels),
+            &post.histogram("boba_coalesce_batch_width", &labels),
+        );
+        let batches = d.last().map_or(0.0, |b| b.1);
+        let queries = post.value("boba_coalesce_batch_width_sum", &labels).unwrap_or(0.0)
+            - pre.value("boba_coalesce_batch_width_sum", &labels).unwrap_or(0.0);
+        co.push((
+            kind.to_string(),
+            Json::obj(vec![
+                ("batches", Json::Num(batches)),
+                ("queries", Json::Num(queries)),
+                (
+                    "mean_width",
+                    Json::Num(if batches > 0.0 { queries / batches } else { 0.0 }),
+                ),
+            ]),
+        ));
+    }
+    Json::obj(vec![
+        ("endpoints", Json::Obj(eps)),
+        ("prepare", Json::Obj(stages)),
+        ("coalesce", Json::Obj(co)),
+        (
+            "rss_peak_bytes",
+            Json::Num(
+                post.value("boba_process_resident_memory_peak_bytes", &[]).unwrap_or(0.0),
+            ),
+        ),
+    ])
 }
 
 /// The headline experiment: the same workload against `cfg.scheme`
@@ -449,6 +562,7 @@ mod tests {
             mix: vec![("spmv".to_string(), 3), ("pagerank".to_string(), 1)],
             pr_iters: 3,
             seed: 99,
+            ..Default::default()
         };
         let report = run(&cfg).unwrap();
         assert_eq!(report.requests, 40);
@@ -478,6 +592,51 @@ mod tests {
         let j = co.to_json().render();
         assert!(j.contains("\"mode\":\"coalesced\""), "{j}");
         assert!(run(&cfg).unwrap().to_json().render().contains("\"mode\":\"single\""));
+
+        // Scrape mode: a cold dataset so the pre/post delta captures
+        // the prepare stages, not just the query traffic. Stage spans
+        // ride the process-global tracing flag, which the obs
+        // kill-switch test flips momentarily — retry on a fresh cold
+        // dataset if a prepare raced that window.
+        let mut scraped = None;
+        for attempt in 0..3 {
+            crate::obs::set_enabled(true);
+            let scrape_cfg = LoadgenConfig {
+                dataset: format!("pa:{}:4", 2500 + attempt),
+                requests: 20,
+                scrape_metrics: true,
+                ..cfg.clone()
+            };
+            let report = run(&scrape_cfg).unwrap();
+            let evidence = report.server.as_ref().expect("scrape evidence embedded");
+            let traced = ["prepare.ingest", "prepare.reorder", "prepare.convert", "prepare.transpose"]
+                .iter()
+                .all(|st| {
+                    evidence
+                        .get("prepare")
+                        .and_then(|p| p.get(st))
+                        .and_then(|s| s.get("count"))
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0)
+                        >= 1.0
+                });
+            if traced {
+                scraped = Some(report);
+                break;
+            }
+        }
+        let scraped = scraped.expect("a fully traced cold prepare within three attempts");
+        let server_side = scraped.server.as_ref().unwrap();
+        let spmv = server_side.get("endpoints").unwrap().get("spmv").unwrap();
+        assert!(spmv.get("count").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(
+            spmv.get("p99_ms").unwrap().as_f64().unwrap()
+                >= spmv.get("p50_ms").unwrap().as_f64().unwrap()
+        );
+        assert!(server_side.get("coalesce").unwrap().get("spmv").is_some());
+        let rendered = scraped.to_json().render();
+        assert!(rendered.contains("\"server\""), "{rendered}");
+        assert!(rendered.contains("prepare.transpose"), "{rendered}");
         server.shutdown();
     }
 }

@@ -69,6 +69,12 @@ pub struct ServerConfig {
     /// Maximum coalesced queries per kernel pass (`--max-batch`,
     /// clamped to [`crate::algos::spmm::MAX_RHS`]).
     pub max_batch: usize,
+    /// Stage-span tracing (`--no-trace` clears it; the `BOBA_NO_TRACE`
+    /// environment variable overrides even `true`).
+    pub trace: bool,
+    /// Log traces slower than this many milliseconds to stderr as
+    /// one-line JSON (`--slow-trace-ms`; `None` = off).
+    pub slow_trace_ms: Option<f64>,
 }
 
 impl Default for ServerConfig {
@@ -83,6 +89,8 @@ impl Default for ServerConfig {
             read_timeout: Duration::from_secs(30),
             batch_window_us: 0,
             max_batch: 8,
+            trace: true,
+            slow_trace_ms: None,
         }
     }
 }
@@ -118,7 +126,16 @@ pub fn spawn(cfg: ServerConfig) -> Result<Server> {
         window: Duration::from_micros(cfg.batch_window_us),
         max_batch: cfg.max_batch,
     }));
-    let router = Arc::new(Router::new(registry.clone(), stats.clone(), coalescer.clone()));
+    // Tracing: the config flag gates it, the environment kill switch
+    // (BOBA_NO_TRACE) wins over both. Process-global, so an in-process
+    // test server shares the flag with everything else.
+    if !cfg.trace {
+        crate::obs::set_enabled(false);
+    }
+    crate::obs::init_from_env();
+    let mut router = Router::new(registry.clone(), stats.clone(), coalescer.clone());
+    router.slow_trace_ms = cfg.slow_trace_ms;
+    let router = Arc::new(router);
     let shutdown = Arc::new(AtomicBool::new(false));
 
     let n_workers = cfg.workers.max(1);

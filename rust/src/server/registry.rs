@@ -46,12 +46,15 @@ pub struct PrepReport {
     pub reorder_ms: f64,
     /// COO→CSR conversion wall time.
     pub convert_ms: f64,
+    /// Transpose (`Aᵀ` structure) wall time — the pull operand cached
+    /// for PageRank.
+    pub transpose_ms: f64,
 }
 
 impl PrepReport {
     /// Total preparation time in milliseconds.
     pub fn total_ms(&self) -> f64 {
-        self.ingest_ms + self.reorder_ms + self.convert_ms
+        self.ingest_ms + self.reorder_ms + self.convert_ms + self.transpose_ms
     }
 
     /// JSON rendering for ingest responses.
@@ -61,6 +64,7 @@ impl PrepReport {
             ("batches", Json::Num(self.batches as f64)),
             ("reorder_ms", Json::Num(self.reorder_ms)),
             ("convert_ms", Json::Num(self.convert_ms)),
+            ("transpose_ms", Json::Num(self.transpose_ms)),
             ("total_ms", Json::Num(self.total_ms())),
         ])
     }
@@ -86,6 +90,10 @@ pub struct PreparedGraph {
     pub scheme: String,
     /// The CSR every query runs on.
     pub csr: Arc<Csr>,
+    /// The transpose structure (`Aᵀ`), built eagerly at prepare time —
+    /// PageRank's pull operand, cached so repeated queries skip the
+    /// per-call O(m) transpose (ROADMAP's first-class-transpose item).
+    pub transpose: Arc<Csr>,
     /// Old→new relabeling applied (None for [`SCHEME_NONE`]).
     pub perm: Option<Arc<Permutation>>,
     /// Stage timings of the preparation run.
@@ -333,8 +341,11 @@ impl GraphRegistry {
                 }
             }
         }
-        // Waiter path: park until the in-flight prepare publishes.
-        match flight.wait() {
+        // Waiter path: park until the in-flight prepare publishes. The
+        // span makes single-flight convoys visible in traces: a request
+        // that spent 2 s in `prepare.join` was parked behind another
+        // requester's pipeline run, not doing work of its own.
+        match crate::obs::span("prepare.join", || flight.wait()) {
             Ok(g) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 Ok((g, true))
@@ -435,6 +446,27 @@ impl GraphRegistry {
         self.prepares.load(Ordering::Relaxed)
     }
 
+    /// Prepare-cache hits (see [`Self::get_or_prepare`]) — exported to
+    /// `/metrics` as `boba_registry_hits_total`.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Prepare-cache misses.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// LRU evictions.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Configured LRU capacity.
+    pub fn capacity(&self) -> usize {
+        self.cfg.capacity
+    }
+
     /// Cache counters as JSON (for `/stats`).
     pub fn stats_json(&self) -> Json {
         Json::obj(vec![
@@ -454,14 +486,21 @@ impl GraphRegistry {
 
         // ── source + batched ingest ───────────────────────────────
         // Generated specs get the paper's randomized-label input model;
-        // files are served with the labels they carry.
-        let source = load_source(dataset, self.cfg.seed)
-            .with_context(|| format!("ingesting dataset {dataset:?}"))?;
+        // files are served with the labels they carry. The span (and
+        // ingest_ms) covers source acquisition *plus* the streaming
+        // assembly: for generated specs the generation + randomization
+        // is real request work, and leaving it untimed would leave a
+        // hole in the trace the stage sum can't explain.
         let sw = Stopwatch::start();
-        let (producer, stream) =
-            StreamingIngest::from_coo(source, self.cfg.batch, self.cfg.in_flight);
-        let (coo, batches) = stream.collect();
-        producer.join().ok();
+        let (coo, batches) = crate::obs::span("prepare.ingest", || -> Result<(Coo, usize)> {
+            let source = load_source(dataset, self.cfg.seed)
+                .with_context(|| format!("ingesting dataset {dataset:?}"))?;
+            let (producer, stream) =
+                StreamingIngest::from_coo(source, self.cfg.batch, self.cfg.in_flight);
+            let out = stream.collect();
+            producer.join().ok();
+            Ok(out)
+        })?;
         prep.ingest_ms = sw.ms();
         prep.batches = batches;
 
@@ -471,7 +510,8 @@ impl GraphRegistry {
         } else {
             let reorderer = reorder::by_name(scheme, self.cfg.seed)?;
             let sw = Stopwatch::start();
-            let (perm, relabeled) = reorderer.reorder_relabel(&coo);
+            let (perm, relabeled) =
+                crate::obs::span("prepare.reorder", || reorderer.reorder_relabel(&coo));
             prep.reorder_ms = sw.ms();
             (Some(Arc::new(perm)), relabeled)
         };
@@ -482,14 +522,23 @@ impl GraphRegistry {
         // its output is bit-identical to the sequential converter, so
         // digests still compare across schemes and thread counts.
         let sw = Stopwatch::start();
-        let csr = convert::coo_to_csr_parallel(&working);
+        let csr = crate::obs::span("prepare.convert", || convert::coo_to_csr_parallel(&working));
         prep.convert_ms = sw.ms();
+
+        // ── transpose ─────────────────────────────────────────────
+        // Eagerly build the pull operand (`Aᵀ` structure) so PageRank
+        // queries never pay a per-call transpose; priced as its own
+        // stage in PrepReport and the prepare trace.
+        let sw = Stopwatch::start();
+        let transpose = crate::obs::span("prepare.transpose", || csr.transposed_structure());
+        prep.transpose_ms = sw.ms();
 
         Ok(PreparedGraph {
             id: Self::id_of(dataset, scheme),
             dataset: dataset.to_string(),
             scheme: scheme.to_string(),
             csr: Arc::new(csr),
+            transpose: Arc::new(transpose),
             perm,
             prep,
             queries: AtomicU64::new(0),
@@ -559,6 +608,27 @@ mod tests {
             spmv::spmv_pull(csr, &x).iter().map(|&v| v as f64).sum()
         };
         assert!((digest(&g.csr) - digest(&h.csr)).abs() < 1e-6 * g.m() as f64);
+    }
+
+    #[test]
+    fn prepare_caches_the_transpose() {
+        let r = registry(2);
+        let (g, _) = r.get_or_prepare("pa:1500:4", "boba").unwrap();
+        assert!(g.prep.transpose_ms >= 0.0);
+        assert_eq!(g.transpose.n(), g.n());
+        assert_eq!(g.transpose.m(), g.m());
+        assert!(g.transpose.vals.is_none(), "structure only — no weight array");
+        let full = g.csr.transposed_structure();
+        assert_eq!(g.transpose.row_ptr, full.row_ptr);
+        assert_eq!(g.transpose.col_idx, full.col_idx);
+        let j = g.prep.to_json();
+        assert!(j.get("transpose_ms").is_some());
+        let total = j.get("total_ms").unwrap().as_f64().unwrap();
+        let sum = ["ingest_ms", "reorder_ms", "convert_ms", "transpose_ms"]
+            .iter()
+            .map(|k| j.get(k).unwrap().as_f64().unwrap())
+            .sum::<f64>();
+        assert!((total - sum).abs() < 1e-9);
     }
 
     #[test]

@@ -1,7 +1,12 @@
 //! Lock-free per-endpoint latency statistics: power-of-two bucketed
 //! histograms over microseconds, recorded by worker threads and read by
-//! `GET /stats` — the service-side analogue of the offline bench
-//! harness's median/MAD summaries.
+//! `GET /stats` and the `/metrics` exposition — the service-side
+//! analogue of the offline bench harness's median/MAD summaries.
+//!
+//! The histogram type itself lives in [`crate::obs::hist`] (the
+//! observability subsystem shares it with stage-span tracing); it is
+//! re-exported here so existing `server::stats::Histogram` paths keep
+//! working.
 
 use crate::util::human;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -9,110 +14,7 @@ use std::time::Duration;
 
 use super::json::Json;
 
-/// Number of log2 buckets: bucket `i` counts samples in
-/// `[2^(i-1), 2^i)` µs (bucket 0 is `< 1 µs`), so the top bucket covers
-/// latencies up to ~2^42 µs ≈ 50 days — effectively unbounded.
-const BUCKETS: usize = 43;
-
-/// A concurrent log2 latency histogram (microsecond domain).
-#[derive(Debug)]
-pub struct Histogram {
-    buckets: [AtomicU64; BUCKETS],
-    count: AtomicU64,
-    sum_us: AtomicU64,
-    max_us: AtomicU64,
-}
-
-impl Default for Histogram {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Histogram {
-    /// New empty histogram.
-    pub fn new() -> Histogram {
-        Histogram {
-            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
-            count: AtomicU64::new(0),
-            sum_us: AtomicU64::new(0),
-            max_us: AtomicU64::new(0),
-        }
-    }
-
-    fn bucket_of(us: u64) -> usize {
-        ((64 - us.leading_zeros()) as usize).min(BUCKETS - 1)
-    }
-
-    /// Upper bound (µs) of bucket `i` — the value reported for samples
-    /// that landed there.
-    fn bucket_upper_us(i: usize) -> u64 {
-        1u64 << i
-    }
-
-    /// Record one sample.
-    pub fn record(&self, d: Duration) {
-        self.record_us(d.as_micros() as u64);
-    }
-
-    /// Record one sample given in microseconds.
-    pub fn record_us(&self, us: u64) {
-        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
-        self.max_us.fetch_max(us, Ordering::Relaxed);
-    }
-
-    /// Samples recorded.
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    /// Mean latency in milliseconds (0 when empty).
-    pub fn mean_ms(&self) -> f64 {
-        let c = self.count();
-        if c == 0 {
-            0.0
-        } else {
-            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64 / 1e3
-        }
-    }
-
-    /// Maximum latency in milliseconds.
-    pub fn max_ms(&self) -> f64 {
-        self.max_us.load(Ordering::Relaxed) as f64 / 1e3
-    }
-
-    /// Latency quantile in milliseconds, as the upper bound of the
-    /// bucket where the cumulative count crosses `q` (0 when empty).
-    /// Resolution is a factor of two — plenty for p50/p99 dashboards.
-    pub fn quantile_ms(&self, q: f64) -> f64 {
-        let total = self.count();
-        if total == 0 {
-            return 0.0;
-        }
-        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
-        let mut cum = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            cum += b.load(Ordering::Relaxed);
-            if cum >= target {
-                return Self::bucket_upper_us(i) as f64 / 1e3;
-            }
-        }
-        self.max_ms()
-    }
-
-    /// JSON snapshot (count/mean/p50/p99/max).
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("count", Json::Num(self.count() as f64)),
-            ("mean_ms", Json::Num(self.mean_ms())),
-            ("p50_ms", Json::Num(self.quantile_ms(0.50))),
-            ("p99_ms", Json::Num(self.quantile_ms(0.99))),
-            ("max_ms", Json::Num(self.max_ms())),
-        ])
-    }
-}
+pub use crate::obs::hist::Histogram;
 
 /// The service's request endpoints (stats slots).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -135,11 +37,15 @@ pub enum Endpoint {
     Healthz,
     /// `GET /stats`.
     Stats,
+    /// `GET /metrics` — Prometheus exposition.
+    Metrics,
+    /// `GET /debug/traces`.
+    Traces,
 }
 
 impl Endpoint {
     /// All endpoints, display order.
-    pub const ALL: [Endpoint; 9] = [
+    pub const ALL: [Endpoint; 11] = [
         Endpoint::Ingest,
         Endpoint::List,
         Endpoint::Spmv,
@@ -149,9 +55,11 @@ impl Endpoint {
         Endpoint::Batch,
         Endpoint::Healthz,
         Endpoint::Stats,
+        Endpoint::Metrics,
+        Endpoint::Traces,
     ];
 
-    /// Stable name used in /stats keys.
+    /// Stable name used in /stats keys and /metrics labels.
     pub fn name(self) -> &'static str {
         match self {
             Endpoint::Ingest => "ingest",
@@ -163,6 +71,8 @@ impl Endpoint {
             Endpoint::Batch => "batch",
             Endpoint::Healthz => "healthz",
             Endpoint::Stats => "stats",
+            Endpoint::Metrics => "metrics",
+            Endpoint::Traces => "traces",
         }
     }
 
@@ -181,7 +91,7 @@ impl Endpoint {
 /// Aggregated per-endpoint stats for one server instance.
 #[derive(Debug)]
 pub struct ServerStats {
-    slots: [(Histogram, AtomicU64); 9], // (latencies, error count)
+    slots: [(Histogram, AtomicU64); 11], // (latencies, error count)
     started: std::time::Instant,
 }
 
@@ -255,7 +165,8 @@ impl ServerStats {
         ])
     }
 
-    /// Aligned text table (for humans: `GET /stats?format=text`).
+    /// Aligned text table (for humans: `GET /stats?format=text`) — the
+    /// full percentile ladder, p50 through p999.
     pub fn render_text(&self) -> String {
         let rows: Vec<Vec<String>> = Endpoint::ALL
             .iter()
@@ -267,14 +178,16 @@ impl ServerStats {
                     h.count().to_string(),
                     human::ms(h.mean_ms()),
                     human::ms(h.quantile_ms(0.50)),
+                    human::ms(h.quantile_ms(0.95)),
                     human::ms(h.quantile_ms(0.99)),
+                    human::ms(h.quantile_ms(0.999)),
                     human::ms(h.max_ms()),
                     self.errors(*ep).to_string(),
                 ]
             })
             .collect();
         human::table(
-            &["endpoint", "count", "mean", "p50", "p99", "max", "errors"],
+            &["endpoint", "count", "mean", "p50", "p95", "p99", "p999", "max", "errors"],
             &rows,
         )
     }
@@ -329,9 +242,22 @@ mod tests {
         assert!(eps.get("spmv").is_some());
         assert!(eps.get("tc").is_none(), "idle endpoints are omitted");
         assert_eq!(eps.get("spmv").unwrap().get("count").unwrap().as_u64(), Some(2));
+        let spmv = eps.get("spmv").unwrap();
+        assert!(spmv.get("p95_ms").is_some() && spmv.get("p999_ms").is_some());
         let text = s.render_text();
         assert!(text.contains("spmv"));
         assert!(text.contains("ingest"));
+        assert!(text.contains("p95") && text.contains("p999"));
+    }
+
+    #[test]
+    fn metrics_and_traces_have_stats_slots() {
+        let s = ServerStats::new();
+        s.record(Endpoint::Metrics, Duration::from_micros(90), true);
+        s.record(Endpoint::Traces, Duration::from_micros(120), true);
+        assert_eq!(s.histogram(Endpoint::Metrics).count(), 1);
+        assert_eq!(s.histogram(Endpoint::Traces).count(), 1);
+        assert_eq!(Endpoint::ALL.len(), 11);
     }
 
     #[test]

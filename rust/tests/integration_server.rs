@@ -59,6 +59,32 @@ fn raw_post(addr: &std::net::SocketAddr, path: &str, body: &str) -> (u16, Json) 
     (status, Json::parse(json_body).expect("JSON body"))
 }
 
+/// Like [`raw_post`] but returns the raw header block too (for
+/// asserting response headers like `x-request-id`).
+fn raw_exchange(
+    addr: &std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, String, Json) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nhost: smoke\r\nconnection: close\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    s.flush().unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).expect("read response");
+    let text = String::from_utf8_lossy(&raw);
+    let (head, json_body) = text.split_once("\r\n\r\n").expect("header/body separator");
+    let status: u16 =
+        head.split_whitespace().nth(1).expect("status line").parse().expect("numeric status");
+    (status, head.to_string(), Json::parse(json_body).expect("JSON body"))
+}
+
 #[test]
 fn smoke_ingest_query_validate_shutdown() {
     let server = spawn_server();
@@ -198,6 +224,97 @@ fn batch_endpoint_matches_direct_queries_over_http() {
     let co = stats.get("coalescer").unwrap();
     assert!(co.get("spmv").unwrap().get("batches").unwrap().as_u64().unwrap() >= 1);
     drop(client);
+    server.shutdown();
+}
+
+/// The observability acceptance path: a cold prepare's trace must
+/// attribute (essentially) the whole request to its named stages, the
+/// request id must come back as a response header, and `/metrics` must
+/// expose the full family set in parseable exposition format.
+#[test]
+fn traces_account_for_the_cold_prepare_and_metrics_expose_families() {
+    let server = spawn_server();
+    let addr = server.addr();
+
+    // Cold prepare of a non-trivial graph (2^14 vertices, 2^17 edges):
+    // big enough that routing/JSON overhead is noise next to the
+    // ingest/reorder/convert/transpose stages.
+    let (status, head, ingest) = raw_exchange(
+        &addr,
+        "POST",
+        "/graphs",
+        "{\"dataset\": \"rmat:14:8\", \"scheme\": \"boba\"}",
+    );
+    assert_eq!(status, 201, "{}", ingest.render());
+    assert!(head.contains("x-request-id: r-"), "response headers: {head}");
+    let prep = ingest.get("prep").expect("cold prepare report");
+    assert!(prep.get("transpose_ms").is_some(), "prep breakdown: {}", prep.render());
+
+    // The trace ring has the request, newest first.
+    let (status, _head, traces) = raw_exchange(&addr, "GET", "/debug/traces?n=8", "");
+    assert_eq!(status, 200);
+    let rows = match traces.get("traces").unwrap() {
+        Json::Arr(items) => items.clone(),
+        other => panic!("traces not an array: {other:?}"),
+    };
+    let t = rows
+        .iter()
+        .find(|t| t.get("endpoint").and_then(Json::as_str) == Some("ingest"))
+        .expect("the ingest trace is in the ring");
+    let total_us = t.get("total_us").unwrap().as_f64().unwrap();
+    let spans_us = t.get("spans_us").unwrap().as_f64().unwrap();
+    assert!(total_us > 0.0);
+    assert!(spans_us <= total_us, "spans cannot exceed the request ({spans_us} > {total_us})");
+    assert!(
+        spans_us >= 0.9 * total_us,
+        "prepare stages must account for ≥90% of the cold request \
+         (spans {spans_us} µs of {total_us} µs)"
+    );
+    let spans = match t.get("spans").unwrap() {
+        Json::Arr(items) => items.clone(),
+        other => panic!("spans not an array: {other:?}"),
+    };
+    for stage in ["prepare.ingest", "prepare.reorder", "prepare.convert", "prepare.transpose"] {
+        assert!(
+            spans.iter().any(|s| s.get("name").and_then(Json::as_str) == Some(stage)),
+            "missing stage {stage} in {spans:?}"
+        );
+    }
+
+    // Queries land kernel spans too.
+    let (status, _, _) = raw_exchange(&addr, "POST", "/graphs/rmat:14:8@boba/pagerank", "");
+    assert_eq!(status, 200);
+    let (_, _, traces) = raw_exchange(&addr, "GET", "/debug/traces?n=4", "");
+    let rows = match traces.get("traces").unwrap() {
+        Json::Arr(items) => items.clone(),
+        other => panic!("traces not an array: {other:?}"),
+    };
+    let pr = rows
+        .iter()
+        .find(|t| t.get("endpoint").and_then(Json::as_str) == Some("pagerank"))
+        .expect("the pagerank trace is in the ring");
+    let names: Vec<&str> = match pr.get("spans").unwrap() {
+        Json::Arr(items) => {
+            items.iter().filter_map(|s| s.get("name").and_then(Json::as_str)).collect()
+        }
+        _ => Vec::new(),
+    };
+    assert!(names.contains(&"kernel.pagerank"), "pagerank spans: {names:?}");
+
+    // /metrics: parseable, complete, and correctly typed (the loadgen
+    // scrape parser is strict about HELP/TYPE and bucket shape).
+    let mut client = HttpClient::connect(&addr.to_string()).unwrap();
+    let (status, raw) = client.request("GET", "/metrics", b"").unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8(raw).unwrap();
+    let scrape = boba::obs::text::Scrape::parse(&text).expect("conformant exposition");
+    assert!(scrape.families.len() >= 10, "only {} families", scrape.families.len());
+    assert!(
+        scrape.value("boba_registry_prepares_total", &[]).unwrap() >= 1.0,
+        "the cold prepare must be counted"
+    );
+    let stages = scrape.histogram("boba_stage_duration_seconds", &[("stage", "prepare.reorder")]);
+    assert!(stages.last().unwrap().1 >= 1.0, "reorder stage histogram populated");
     server.shutdown();
 }
 

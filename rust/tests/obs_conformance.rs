@@ -1,0 +1,179 @@
+//! Prometheus exposition conformance under live traffic: scrape
+//! `GET /metrics` twice with concurrent load between the scrapes and
+//! assert the properties a real scraper relies on — every sample lives
+//! under a `# HELP`/`# TYPE` header, histogram buckets are cumulative
+//! and end in `+Inf` with consistent `_sum`/`_count`, and counters
+//! never move backwards between scrapes.
+
+use boba::obs::text::{Family, Scrape};
+use boba::server::http::HttpClient;
+use boba::server::{self, ServerConfig};
+use std::time::Duration;
+
+fn spawn_server() -> server::Server {
+    server::spawn(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        capacity: 4,
+        batch: 1 << 12,
+        in_flight: 2,
+        seed: 7,
+        read_timeout: Duration::from_secs(10),
+        ..Default::default()
+    })
+    .expect("server must bind an ephemeral port")
+}
+
+fn scrape(addr: &str) -> Scrape {
+    let mut c = HttpClient::connect(addr).expect("connect for scrape");
+    let (status, body) = c.request("GET", "/metrics", b"").expect("scrape");
+    assert_eq!(status, 200);
+    // Strict parse: headerless samples, orphan TYPE lines, and
+    // duplicate families are all parse errors.
+    Scrape::parse(&String::from_utf8_lossy(&body)).expect("conformant exposition")
+}
+
+/// Every histogram family: per label-set, buckets are cumulative,
+/// finish with `+Inf`, and `_count` equals the `+Inf` bucket.
+fn check_histograms(s: &Scrape) {
+    for fam in s.families.iter().filter(|f| f.typ == "histogram") {
+        let mut label_sets: Vec<Vec<(String, String)>> = Vec::new();
+        for sample in &fam.samples {
+            if !sample.name.ends_with("_bucket") {
+                continue;
+            }
+            let mut ls: Vec<(String, String)> = sample
+                .labels
+                .iter()
+                .filter(|(k, _)| k != "le")
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect();
+            ls.sort();
+            if !label_sets.contains(&ls) {
+                label_sets.push(ls);
+            }
+        }
+        for ls in label_sets {
+            let want: Vec<(&str, &str)> =
+                ls.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+            let buckets = s.histogram(&fam.name, &want);
+            assert!(!buckets.is_empty(), "{}: no buckets for {want:?}", fam.name);
+            assert_eq!(
+                buckets.last().unwrap().0,
+                f64::INFINITY,
+                "{}: bucket ladder must end in +Inf",
+                fam.name
+            );
+            for pair in buckets.windows(2) {
+                assert!(
+                    pair[1].1 >= pair[0].1,
+                    "{}: buckets must be cumulative ({pair:?})",
+                    fam.name
+                );
+            }
+            let count_name = format!("{}_count", fam.name);
+            let count = s.value(&count_name, &want).expect("histogram _count sample");
+            assert_eq!(
+                buckets.last().unwrap().1,
+                count,
+                "{}: +Inf bucket must equal _count",
+                fam.name
+            );
+            let sum_name = format!("{}_sum", fam.name);
+            assert!(s.value(&sum_name, &want).is_some(), "{}: missing _sum", fam.name);
+        }
+    }
+}
+
+/// Counter samples from `pre` must not exceed their `post` values.
+fn check_monotone(pre: &Scrape, post: &Scrape) {
+    for fam in pre.families.iter().filter(|f| f.typ == "counter") {
+        let after: Option<&Family> = post.families.iter().find(|f| f.name == fam.name);
+        let after = after.unwrap_or_else(|| panic!("family {} vanished", fam.name));
+        for sample in &fam.samples {
+            let want: Vec<(&str, &str)> =
+                sample.labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+            let newer = after
+                .samples
+                .iter()
+                .find(|s| s.name == sample.name && s.matches(&want))
+                .unwrap_or_else(|| panic!("sample {}{:?} vanished", sample.name, want));
+            assert!(
+                newer.value >= sample.value,
+                "counter {}{:?} moved backwards: {} -> {}",
+                sample.name,
+                want,
+                sample.value,
+                newer.value
+            );
+        }
+    }
+}
+
+#[test]
+fn metrics_are_conformant_and_counters_monotone_under_load() {
+    let server = spawn_server();
+    let addr = server.addr().to_string();
+
+    // Warm the cache so the load phase is pure queries.
+    let mut c = HttpClient::connect(&addr).unwrap();
+    let (status, _) = c
+        .request_json("POST", "/graphs", "{\"dataset\": \"pa:4000:4\", \"scheme\": \"boba\"}")
+        .unwrap();
+    assert_eq!(status, 201);
+    drop(c);
+
+    let pre = scrape(&addr);
+    assert!(pre.families.len() >= 10, "only {} families", pre.families.len());
+    for fam in &pre.families {
+        assert!(!fam.help.is_empty(), "{} has no HELP text", fam.name);
+        assert!(
+            matches!(fam.typ.as_str(), "counter" | "gauge" | "histogram"),
+            "{}: unexpected type {}",
+            fam.name,
+            fam.typ
+        );
+    }
+    check_histograms(&pre);
+
+    // Concurrent load between the scrapes: mixed queries + one batch.
+    let mut handles = Vec::new();
+    for w in 0..3 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = HttpClient::connect(&addr).unwrap();
+            for i in 0..10 {
+                let path = if (i + w) % 2 == 0 {
+                    "/graphs/pa:4000:4@boba/spmv"
+                } else {
+                    "/graphs/pa:4000:4@boba/sssp"
+                };
+                let (status, _) = c.request("POST", path, b"").unwrap();
+                assert_eq!(status, 200);
+            }
+            let batch = "{\"id\": \"pa:4000:4@boba\", \"queries\": [\
+                         {\"query\": \"spmv\"}, {\"query\": \"spmv\", \"seed\": 3}, \
+                         {\"query\": \"sssp\"}]}";
+            let (status, _) = c.request("POST", "/query/batch", batch.as_bytes()).unwrap();
+            assert_eq!(status, 200);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let post = scrape(&addr);
+    check_histograms(&post);
+    check_monotone(&pre, &post);
+
+    // The load is visible in the delta: 30 direct queries + 3 batches.
+    let count = |s: &Scrape, ep: &str| {
+        s.value("boba_requests_total", &[("endpoint", ep)]).unwrap_or(0.0)
+    };
+    let delta: f64 = ["spmv", "sssp", "batch"]
+        .iter()
+        .map(|ep| count(&post, ep) - count(&pre, ep))
+        .sum();
+    assert!(delta >= 33.0, "expected ≥33 requests between scrapes, saw {delta}");
+    server.shutdown();
+}
