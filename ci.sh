@@ -103,7 +103,7 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
         exec 3>&- 2>/dev/null
     }
     ./target/release/boba serve --addr "127.0.0.1:$OBS_PORT" --workers 4 \
-        --slow-trace-ms 5000 &
+        --slow-trace-ms 5000 --format delta &
     SERVE_PID=$!
     sleep 1
     if ! cargo run --release -- loadgen --addr "127.0.0.1:$OBS_PORT" \
@@ -118,7 +118,7 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
                boba_registry_prepares_total boba_pool_dispatches_total \
                boba_coalesce_batches_total boba_coalesce_batch_width \
                boba_stage_duration_seconds boba_process_resident_memory_bytes \
-               boba_traces_total; do
+               boba_traces_total boba_format_bytes_per_edge; do
         if ! grep -q "^# TYPE $fam " "$METRICS"; then
             echo "FAILED (required): /metrics lacks family $fam"
             FAILURES=$((FAILURES + 1))
@@ -132,7 +132,7 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
     wait "$SERVE_PID" 2>/dev/null
     rm -f "$METRICS"
 
-    # Paper-reproduction smoke run: T1–T4 on the generated quick trio,
+    # Paper-reproduction smoke run: T1–T5 on the generated quick trio,
     # writing the trajectory JSON and regenerating docs/RESULTS.md from
     # the same records (uploaded as a CI artifact). The run itself is the
     # first determinism gate: T2 errors out if the deterministic parallel
@@ -150,6 +150,10 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
     elif ! grep -q 'ingest_ms' "$ROOT/BENCH_repro.json"; then
         # Schema boba-repro/2: T3 prices the ingest stage per dataset.
         echo "FAILED (required): BENCH_repro.json has no T3 ingest_ms rows"
+        FAILURES=$((FAILURES + 1))
+    elif ! grep -q 'bytes_per_edge' "$ROOT/BENCH_repro.json"; then
+        # Schema boba-repro/3: T5 prices the compressed kernel formats.
+        echo "FAILED (required): BENCH_repro.json has no T5 bytes_per_edge rows"
         FAILURES=$((FAILURES + 1))
     fi
 
@@ -180,6 +184,17 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
     note "micro_batch smoke"
     if ! cargo bench --bench micro_batch -- --smoke; then
         echo "FAILED (required): micro_batch smoke"
+        FAILURES=$((FAILURES + 1))
+    fi
+
+    # Kernel-format microbench smoke: one iteration of encode + SpMV
+    # per format on both orderings. The bench gates every format
+    # bit-identical to spmv_pull before timing, so this doubles as a
+    # determinism gate (full numbers: `cargo bench --bench
+    # micro_format`, docs/EXPERIMENTS.md §Formats).
+    note "micro_format smoke"
+    if ! cargo bench --bench micro_format -- --smoke; then
+        echo "FAILED (required): micro_format smoke"
         FAILURES=$((FAILURES + 1))
     fi
 

@@ -1,0 +1,89 @@
+//! Micro-benchmark of the compressed kernel-format family
+//! ([`boba::runtime::format`]): encode cost and parallel-SpMV time for
+//! every registered format, on a BOBA-ordered and a randomized-label
+//! CSR.
+//!
+//! What to look for: `bytes/edge` is the story — delta narrows to
+//! ~2 B/edge when a labeling clusters each 64-row block's columns
+//! (BOBA's whole point), and the SpMV rows show whether the thinner
+//! index stream buys wall-clock on a memory-bound kernel. sell/ell pad
+//! (bytes/edge above 4 on skewed rows) and buy regularity instead;
+//! tiled trades a second pass over y for x reuse inside an L2-sized
+//! column window. Every format is gated bit-identical to `spmv_pull`
+//! before any timing runs — a divergence aborts the bench.
+//!
+//! Run: `cargo bench --bench micro_format` (`-- --smoke` for the
+//! 1-shot CI gate). docs/EXPERIMENTS.md §Formats records the
+//! trajectory; `boba repro` T5 commits the same measurement shape.
+
+use boba::algos::spmv;
+use boba::bench::{black_box, Bench, Report};
+use boba::convert;
+use boba::graph::gen::{self, GenParams};
+use boba::reorder::{boba::Boba, Reorderer};
+use boba::runtime::format::{self, SpmvFormat, FORMAT_NAMES};
+use std::time::Duration;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (bench, scale, edge_factor) = if smoke {
+        (Bench { warmup: 0, iters: 1, max_total: Duration::from_secs(60) }, 13u32, 8u32)
+    } else {
+        (Bench::quick(), 17, 16)
+    };
+    // The paper's input model: randomized labels are the baseline BOBA
+    // recovers locality from.
+    let g = gen::rmat(&GenParams::rmat(scale, edge_factor), 42).randomized(43);
+    let mut rand_csr = convert::coo_to_csr_parallel(&g);
+    let mut boba_csr = {
+        let (_perm, h) = Boba::parallel().reorder_relabel(&g);
+        convert::coo_to_csr_parallel(&h)
+    };
+    // Sorted rows so the tiled format can take its u16 column tiles
+    // (unsorted rows fall back to the raw irregular stream).
+    rand_csr.sort_rows();
+    boba_csr.sort_rows();
+    let n = rand_csr.n();
+    let m = rand_csr.m() as u64;
+    println!("micro_format: rmat{scale} n={n} m={m} (encode + parallel SpMV per format)\n");
+
+    let x: Vec<f32> = (0..n)
+        .map(|i| ((i as u32).wrapping_mul(2654435761) % 1000) as f32 * 0.001)
+        .collect();
+    let mut report = Report::new("micro: kernel formats (encode cost, SpMV time)");
+    for (order, csr) in [("rand", &rand_csr), ("boba", &boba_csr)] {
+        let want = spmv::spmv_pull(csr, &x);
+        for name in FORMAT_NAMES {
+            let enc = format::encode(name, csr).expect("registered format encodes");
+            // Equivalence gate first: the bench is only meaningful if
+            // the format computes the same bits as the reference.
+            for (kernel, got) in
+                [("seq", enc.spmv(&x)), ("par", enc.spmv_parallel(&x))]
+            {
+                assert!(
+                    want.len() == got.len()
+                        && want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{order}/{name}: {kernel} SpMV must be bit-identical to spmv_pull"
+                );
+            }
+            println!(
+                "{order}/{name}: {:.2} bytes/edge ({} B index + {} B overhead)",
+                enc.bytes_per_edge(),
+                enc.index_bytes(),
+                enc.overhead_bytes()
+            );
+            report.push(bench.run_with_items(&format!("{order}/{name}/encode"), m, || {
+                black_box(format::encode(name, csr).expect("encoded a moment ago"))
+            }));
+            report.push(bench.run_with_items(&format!("{order}/{name}/spmv"), m, || {
+                black_box(enc.spmv_parallel(&x))
+            }));
+        }
+    }
+    report.print();
+    println!(
+        "\nread bytes/edge against the SpMV rows: a thinner index stream only pays\n\
+         off if the kernel is memory-bound on it — boba/delta vs rand/csr is the\n\
+         headline contrast; repro T5 prices the same against a stream roofline."
+    );
+}

@@ -29,13 +29,22 @@ pub(crate) const PF_DIST: usize = 32;
 /// `tasks + 1` row bounds; shared by [`spmv_pull_parallel`] and the
 /// multi-RHS [`super::spmm`] kernel so both balance hub rows identically.
 pub(crate) fn edge_balanced_row_bounds(csr: &Csr, tasks: usize) -> Vec<usize> {
-    let n = csr.n();
-    let m = csr.m();
+    edge_balanced_bounds(&csr.row_ptr, tasks)
+}
+
+/// The same edge-balanced partition over any CSR-style prefix array
+/// (`ptr[i]` = cumulative work before item `i`, `ptr.len() = items+1`).
+/// The compressed kernel formats ([`crate::runtime::format`]) reuse it
+/// to balance rows, SELL slices, tile segments, and ELL row tiles with
+/// the exact same boundary choices as `spmv_pull_parallel`.
+pub(crate) fn edge_balanced_bounds(ptr: &[u64], tasks: usize) -> Vec<usize> {
+    let n = ptr.len().saturating_sub(1);
+    let m = ptr.last().copied().unwrap_or(0) as usize;
     let edges_per_task = m.div_ceil(tasks.max(1));
     let mut bounds = Vec::with_capacity(tasks + 1);
     for t in 0..=tasks {
         let target = (t * edges_per_task).min(m) as u64;
-        let row = csr.row_ptr.partition_point(|&p| p < target);
+        let row = ptr.partition_point(|&p| p < target);
         bounds.push(row.min(n));
     }
     bounds[0] = 0;

@@ -86,6 +86,28 @@ pub fn rss_bytes() -> Option<u64> {
     proc_status_kb("VmRSS:").map(|kb| kb * 1024)
 }
 
+/// Measured single-thread streaming-copy bandwidth in GB/s — the
+/// roofline denominator of repro T5's effective-GB/s column. Copies a
+/// 32 MiB `f32` buffer (far beyond any LLC) three times after a warmup
+/// pass and counts read + write traffic. A plain copy, not a triad:
+/// it bounds what a single core's demand stream can move, which is the
+/// honest ceiling for the single-artifact SpMV it is compared against.
+pub fn stream_bandwidth_gbs() -> f64 {
+    const WORDS: usize = 8 << 20; // 32 MiB source + 32 MiB destination
+    const REPS: u32 = 3;
+    let src = vec![1.0f32; WORDS];
+    let mut dst = vec![0.0f32; WORDS];
+    dst.copy_from_slice(&src); // warmup: faults both buffers in
+    let start = std::time::Instant::now();
+    for _ in 0..REPS {
+        dst.copy_from_slice(&src);
+        crate::bench::black_box(&dst);
+    }
+    let secs = start.elapsed().as_secs_f64().max(1e-9);
+    let bytes = 2.0 * (WORDS * 4) as f64 * REPS as f64;
+    bytes / secs / 1e9
+}
+
 fn proc_status_kb(key: &str) -> Option<u64> {
     let status = std::fs::read_to_string("/proc/self/status").ok()?;
     for line in status.lines() {
@@ -119,6 +141,12 @@ mod tests {
         let back = Json::parse(&j.render()).unwrap();
         assert_eq!(back.get("os").unwrap().as_str(), Some(m.os.as_str()));
         assert_eq!(back.get("threads").unwrap().as_u64(), Some(m.threads as u64));
+    }
+
+    #[test]
+    fn stream_bandwidth_is_positive_and_finite() {
+        let gbs = stream_bandwidth_gbs();
+        assert!(gbs.is_finite() && gbs > 0.0, "got {gbs}");
     }
 
     #[cfg(target_os = "linux")]

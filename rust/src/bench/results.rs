@@ -20,16 +20,19 @@ use anyhow::{bail, Context, Result};
 
 /// Schema identifier written to every document. Version 2 added the
 /// T3 `ingest_ms` stage rows (the pipeline's front door is now a
-/// priced stage); [`ResultsDoc::parse`] still reads version-1
-/// documents — they simply carry no ingest rows.
-pub const SCHEMA: &str = "boba-repro/2";
+/// priced stage); version 3 adds the T5 kernel-format table
+/// (`bytes_per_edge`, `encode_ms`, `spmv_ms`, `effective_gbs` per
+/// scheme × format, plus one `stream_gbs` roofline row).
+/// [`ResultsDoc::parse`] still reads older documents — they simply
+/// carry fewer tables.
+pub const SCHEMA: &str = "boba-repro/3";
 
 /// Older schema identifiers [`ResultsDoc::parse`] accepts (committed
 /// trajectory points from earlier PRs stay readable).
-pub const LEGACY_SCHEMAS: [&str; 1] = ["boba-repro/1"];
+pub const LEGACY_SCHEMAS: [&str; 2] = ["boba-repro/1", "boba-repro/2"];
 
 /// The repro table identifiers, in report order.
-pub const TABLE_IDS: [&str; 4] = ["T1", "T2", "T3", "T4"];
+pub const TABLE_IDS: [&str; 5] = ["T1", "T2", "T3", "T4", "T5"];
 
 /// Human title for a repro table id (used by both renderers).
 pub fn table_title(id: &str) -> &'static str {
@@ -38,6 +41,7 @@ pub fn table_title(id: &str) -> &'static str {
         "T2" => "T2 — COO→CSR conversion time, pre/post reorder",
         "T3" => "T3 — end-to-end pipeline time (ingest + reorder + [sort] + convert + app) and batched SpMV (spmm k-rows)",
         "T4" => "T4 — simulated cache hit rates (V100-scaled hierarchy)",
+        "T5" => "T5 — kernel formats: bytes/edge, encode + SpMV time, effective GB/s vs the measured stream roofline",
         _ => "unknown table",
     }
 }
@@ -406,12 +410,14 @@ mod tests {
 
     #[test]
     fn parse_accepts_legacy_schema() {
-        // Committed v1 trajectory points (pre-ingest-stage) stay
-        // readable.
+        // Committed v1/v2 trajectory points (pre-ingest-stage,
+        // pre-format-table) stay readable.
         let doc = sample_doc();
-        let text = doc.to_json().render().replace(SCHEMA, "boba-repro/1");
-        let back = ResultsDoc::parse(&text).unwrap();
-        assert_eq!(back.records.len(), doc.records.len());
+        for legacy in LEGACY_SCHEMAS {
+            let text = doc.to_json().render().replace(SCHEMA, legacy);
+            let back = ResultsDoc::parse(&text).unwrap();
+            assert_eq!(back.records.len(), doc.records.len());
+        }
     }
 
     #[test]

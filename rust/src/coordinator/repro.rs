@@ -26,7 +26,14 @@
 //!   `spmm_k{1,4,8}_ms` rows pricing the multi-RHS SpMV the serving
 //!   coalescer amortizes concurrent queries with;
 //! * **T4** — simulated L1/L2 hit rates and DRAM fraction per workload:
-//!   the paper's Fig. 7 profiler numbers (7–52% L1 / 11–67% L2 gains).
+//!   the paper's Fig. 7 profiler numbers (7–52% L1 / 11–67% L2 gains);
+//! * **T5** — compressed kernel formats ([`crate::runtime::format`]):
+//!   bytes/edge of the column stream, encode time, SpMV time, and
+//!   effective GB/s against a measured single-thread stream roofline
+//!   ([`machine::stream_bandwidth_gbs`]), per scheme × format. Every
+//!   format is bit-compared against `spmv_pull` before it is timed —
+//!   a divergence fails the run, the same contract the serving
+//!   registry enforces at prepare time.
 //!
 //! Methodology (after Faldu et al.'s critique of ad-hoc reordering
 //! evaluations): inputs are pre-randomized (the paper's §5 model), every
@@ -124,14 +131,14 @@ pub fn parse_tables(spec: &str) -> Result<Vec<String>> {
     for part in spec.split(',').filter(|s| !s.is_empty()) {
         let id = part.trim().to_uppercase();
         if !crate::bench::results::TABLE_IDS.contains(&id.as_str()) {
-            bail!("unknown repro table {part:?} (expected t1|t2|t3|t4|all)");
+            bail!("unknown repro table {part:?} (expected t1|t2|t3|t4|t5|all)");
         }
         if !out.contains(&id) {
             out.push(id);
         }
     }
     if out.is_empty() {
-        bail!("--tables selected nothing (expected t1|t2|t3|t4|all)");
+        bail!("--tables selected nothing (expected t1|t2|t3|t4|t5|all)");
     }
     Ok(out)
 }
@@ -264,6 +271,7 @@ pub fn run(opts: &ReproOptions) -> Result<ReproRun> {
             "T2" => t2_conversion(opts, &data, &mut doc, &mut console)?,
             "T3" => t3_end_to_end(opts, &data, &mut doc, &mut console)?,
             "T4" => t4_cache_rates(opts, &data, &mut doc, &mut console)?,
+            "T5" => t5_formats(opts, &data, &mut doc, &mut console)?,
             other => bail!("unknown repro table {other:?}"),
         }
     }
@@ -774,6 +782,134 @@ fn t4_cache_rates(
         "\n== {} ==\n{}",
         crate::bench::results::table_title("T4"),
         human::table(&["dataset", "app", "scheme", "L1 %", "L2 %", "DRAM %"], &rows)
+    ));
+    Ok(())
+}
+
+// ───────────────────────── T5: kernel formats ────────────────────────
+
+fn t5_formats(
+    opts: &ReproOptions,
+    data: &[(String, Coo)],
+    doc: &mut ResultsDoc,
+    console: &mut String,
+) -> Result<()> {
+    use crate::runtime::format::{self, SpmvFormat, FORMAT_NAMES};
+    let mut rows = Vec::new();
+    // One roofline row per run: the measured single-thread streaming
+    // copy every effective-GB/s cell below is read against.
+    let stream = machine::stream_bandwidth_gbs();
+    doc.push(Record {
+        table: "T5".into(),
+        dataset: String::new(),
+        scheme: String::new(),
+        app: String::new(),
+        metric: "stream_gbs".into(),
+        unit: "GB/s".into(),
+        summary: Summary::single(stream),
+        items_per_sec: None,
+        digest: None,
+    });
+    rows.push(vec![
+        "(machine)".into(),
+        String::new(),
+        "stream_gbs".into(),
+        format!("{stream:.2} GB/s"),
+        String::new(),
+        String::new(),
+        String::new(),
+    ]);
+    let bench = bench_for(opts, false);
+    for (dname, g) in data {
+        for scheme in ["random", "boba"] {
+            // Same labeling contrast as T3's spmm rows; rows are
+            // additionally sorted so the tiled format's column tiles
+            // engage (sort order is labeling-independent per row, so
+            // the scheme contrast is untouched).
+            let mut csr = if scheme == "random" {
+                convert::coo_to_csr_parallel(g)
+            } else {
+                let (_p, h) = Boba::parallel().reorder_relabel(g);
+                convert::coo_to_csr_parallel(&h)
+            };
+            csr.sort_rows();
+            let x: Vec<f32> =
+                (0..csr.n()).map(|i| ((i % 17) as f32) * 0.25).collect();
+            let want = crate::algos::spmv::spmv_pull(&csr, &x);
+            for name in FORMAT_NAMES {
+                let enc = format::encode(name, &csr)
+                    .with_context(|| format!("encoding {name} for {dname}@{scheme}"))?;
+                // The bit-identity gate the registry enforces at
+                // prepare time — a format that diverges from spmv_pull
+                // must never produce a timing row.
+                for (kernel, got) in
+                    [("sequential", enc.spmv(&x)), ("parallel", enc.spmv_parallel(&x))]
+                {
+                    let same = want.len() == got.len()
+                        && want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits());
+                    if !same {
+                        bail!(
+                            "{dname}@{scheme}: {name} {kernel} SpMV diverges bitwise \
+                             from spmv_pull — the format-equivalence contract is broken"
+                        );
+                    }
+                }
+                let bpe = enc.bytes_per_edge();
+                let m_enc = bench.run_with_items(
+                    &format!("{dname}/{scheme}/{name}/encode"),
+                    csr.m() as u64,
+                    || format::encode(name, &csr).expect("encoded a moment ago"),
+                );
+                let m_spmv = bench.run_with_items(
+                    &format!("{dname}/{scheme}/{name}/spmv"),
+                    csr.m() as u64,
+                    || enc.spmv_parallel(&x),
+                );
+                // Effective bandwidth: bytes the kernel must stream
+                // (column + control structure + the f32 value stream
+                // and y writes, 8·n) over the median SpMV time.
+                let traffic = (enc.index_bytes()
+                    + enc.overhead_bytes()
+                    + csr.bytes_vals()
+                    + 8 * csr.n() as u64) as f64;
+                let eff = traffic / (m_spmv.summary.median_ms / 1e3).max(1e-12) / 1e9;
+                for (metric, unit, v) in [
+                    ("bytes_per_edge", "B/edge", bpe),
+                    ("encode_ms", "ms", m_enc.summary.median_ms),
+                    ("spmv_ms", "ms", m_spmv.summary.median_ms),
+                    ("effective_gbs", "GB/s", eff),
+                ] {
+                    doc.push(Record {
+                        table: "T5".into(),
+                        dataset: dname.clone(),
+                        scheme: scheme.into(),
+                        app: name.to_string(),
+                        metric: metric.into(),
+                        unit: unit.into(),
+                        summary: Summary::single(v),
+                        items_per_sec: None,
+                        digest: None,
+                    });
+                }
+                rows.push(vec![
+                    dname.clone(),
+                    scheme.to_string(),
+                    name.to_string(),
+                    format!("{bpe:.2} B/e"),
+                    human::ms(m_enc.summary.median_ms),
+                    human::ms(m_spmv.summary.median_ms),
+                    format!("{eff:.2} ({:.0}% of stream)", 100.0 * eff / stream.max(1e-9)),
+                ]);
+            }
+        }
+    }
+    console.push_str(&format!(
+        "\n== {} ==\n{}",
+        crate::bench::results::table_title("T5"),
+        human::table(
+            &["dataset", "scheme", "format", "bytes/edge", "encode", "spmv", "eff GB/s"],
+            &rows
+        )
     ));
     Ok(())
 }

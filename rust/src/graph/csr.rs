@@ -179,6 +179,13 @@ impl Csr {
     pub fn bytes_indices(&self) -> u64 {
         (self.col_idx.len() * 4) as u64
     }
+
+    /// Bytes of the value array (0 for unweighted graphs). Completes
+    /// the inventory triple for the kernel-format byte accounting
+    /// ([`crate::runtime::format`]).
+    pub fn bytes_vals(&self) -> u64 {
+        self.vals.as_ref().map_or(0, |v| (v.len() * 4) as u64)
+    }
 }
 
 #[cfg(test)]

@@ -10,11 +10,13 @@
 //!   pipeline  --app A --algo S [--dataset N] [--batch B] [--in-flight K]
 //!   serve     [--addr H:P] [--workers W] [--cache C] [--batch B]
 //!             [--in-flight K] [--batch-window-us U] [--max-batch K]
-//!             [--no-trace] [--slow-trace-ms T]
+//!             [--no-trace] [--slow-trace-ms T] [--format F]
 //!                                      run the graph-analytics service;
 //!             --no-trace disables stage-span tracing (BOBA_NO_TRACE=1
 //!             does the same), --slow-trace-ms logs slower traces to
-//!             stderr as one-line JSON
+//!             stderr as one-line JSON, --format encodes a compressed
+//!             kernel variant (csr|delta|sell|tiled|ell) per artifact,
+//!             gated bit-identical at prepare and exposed on /metrics
 //!   loadgen   [--addr H:P] [--conns C] [--requests R] [--dataset N]
 //!             [--scheme S] [--mix spmv:7,pagerank:3] [--pr-iters I]
 //!             [--compare] [--coalesce] [--batch-queries K]
@@ -27,10 +29,12 @@
 //!             GET /metrics around each run and embeds the server-side
 //!             percentiles/stage breakdown into the report
 //!   table1 | table3 | fig4 | fig5 | fig6 | fig7  regenerate a paper table/figure
-//!   repro     [--quick|--full] [--tables t1,t2,t3,t4] [--threads N]
+//!   repro     [--quick|--full] [--tables t1,t2,t3,t4,t5] [--threads N]
 //!             [--datasets A,B] [--reps K] [--json F] [--md F]
 //!             run the paper-reproduction harness: T1 reorder time,
-//!             T2 COO→CSR conversion, T3 end-to-end, T4 cache rates;
+//!             T2 COO→CSR conversion, T3 end-to-end, T4 cache rates,
+//!             T5 kernel formats (bytes/edge, encode/SpMV time,
+//!             effective GB/s vs a measured stream roofline);
 //!             writes BENCH_repro.json + docs/RESULTS.md
 //!   spmv-pjrt [--dataset N] [--pallas]           SpMV through the AOT artifacts
 //!                                                (needs the `pjrt` build feature)
@@ -371,6 +375,7 @@ fn server_config(args: &Args, seed: u64) -> ServerConfig {
         max_batch: args.get_parse("max-batch", default.max_batch),
         trace: !args.flag("no-trace"),
         slow_trace_ms: args.get("slow-trace-ms").and_then(|v| v.parse().ok()),
+        format: args.get("format").map(|v| v.to_string()),
     }
 }
 

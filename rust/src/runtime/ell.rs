@@ -18,10 +18,24 @@
 //! a row's entries into fewer segments, producing fewer passes (the
 //! pass count is reported by [`EllPlan::passes`] and benchmarked in
 //! docs/EXPERIMENTS.md).
+//!
+//! The module also hosts [`EllFormat`], the **CPU** ELL variant behind
+//! the [`super::format::SpmvFormat`] trait. It deliberately differs
+//! from [`EllPlan`] in two ways. First, it does not segment the column
+//! space (the CPU can address all of `x`), because segment-grouping
+//! reorders a row's edges and would break bit-identity with
+//! `spmv_pull` on unsorted rows. Second — the fix the differential
+//! harness demanded — padding slots are skipped by per-lane **length
+//! guards** instead of the `col = 0, val = 0.0` annihilation trick:
+//! `0.0 · x[0]` is only zero while `x[0]` is finite, so the old scheme
+//! silently turns padding into NaN the moment a query carries ±∞ (and
+//! burns gather bandwidth on x[0] even when it doesn't).
+//! `tests/format_equiv.rs` pins both properties.
 
 use super::Meta;
 #[cfg(feature = "pjrt")]
 use super::{Engine, SpmvKind};
+use crate::algos::spmv::edge_balanced_bounds;
 use crate::graph::Csr;
 use anyhow::Result;
 
@@ -169,6 +183,215 @@ impl EllPlan {
     }
 }
 
+/// Geometry of the CPU [`EllFormat`]: 128-row tiles bound the padding
+/// blow-up a hub row inflicts on its tile-mates (the per-pass slot
+/// count is `lanes·k`, paid until the longest row drains), and `k = 8`
+/// edges per pass keeps short rows near one pass.
+pub const CPU_ELL_META: Meta = Meta { n_tile: 128, k: 8 };
+
+/// One pass of one row tile: each lane's next ≤ `k` edges, in original
+/// CSR order, with a per-lane count guarding the padding slots.
+struct RowPass {
+    /// Column ids, lane-major: `cols[lane·k + slot]`; padding slots 0
+    /// but never read (see `lens`).
+    cols: Vec<u32>,
+    /// Values aligned with `cols` (weighted graphs only).
+    vals: Option<Vec<f32>>,
+    /// Edges this pass actually holds per lane (≤ k).
+    lens: Vec<u16>,
+}
+
+/// Row-tiled ELL behind the `SpmvFormat` trait — the CPU sibling of
+/// [`EllPlan`] (see the module docs for why the two differ).
+pub struct EllFormat {
+    n: usize,
+    m: usize,
+    meta: Meta,
+    /// Pass index range per row tile: tile `rt` owns
+    /// `passes[tile_ptr[rt] .. tile_ptr[rt+1]]`.
+    tile_ptr: Vec<usize>,
+    /// Cumulative stored edges per row tile (for edge-balanced
+    /// parallel partitioning).
+    tile_edge_ptr: Vec<u64>,
+    passes: Vec<RowPass>,
+}
+
+impl EllFormat {
+    /// Pack `csr` with the [`CPU_ELL_META`] geometry.
+    pub fn encode(csr: &Csr) -> EllFormat {
+        Self::encode_with(csr, CPU_ELL_META)
+    }
+
+    /// Pack `csr` with an explicit tile geometry.
+    pub fn encode_with(csr: &Csr, meta: Meta) -> EllFormat {
+        let n = csr.n();
+        let nt = meta.n_tile;
+        let k = meta.k;
+        let row_tiles = n.div_ceil(nt);
+        let mut tile_ptr = Vec::with_capacity(row_tiles + 1);
+        tile_ptr.push(0usize);
+        let mut tile_edge_ptr = Vec::with_capacity(row_tiles + 1);
+        tile_edge_ptr.push(0u64);
+        let mut passes: Vec<RowPass> = Vec::new();
+        for rt in 0..row_tiles {
+            let r0 = rt * nt;
+            let r1 = ((rt + 1) * nt).min(n);
+            let lanes = r1 - r0;
+            let max_deg = (r0..r1).map(|v| csr.degree(v)).max().unwrap_or(0);
+            for p in 0..max_deg.div_ceil(k) {
+                let mut cols = vec![0u32; lanes * k];
+                let mut vals = csr.vals.as_ref().map(|_| vec![0f32; lanes * k]);
+                let mut lens = vec![0u16; lanes];
+                for (lr, v) in (r0..r1).enumerate() {
+                    let nbrs = csr.neighbors(v);
+                    let start = p * k;
+                    if start >= nbrs.len() {
+                        continue;
+                    }
+                    let cnt = (nbrs.len() - start).min(k);
+                    lens[lr] = cnt as u16;
+                    cols[lr * k..lr * k + cnt].copy_from_slice(&nbrs[start..start + cnt]);
+                    if let (Some(pv), Some(rv)) = (vals.as_mut(), csr.row_vals(v)) {
+                        pv[lr * k..lr * k + cnt].copy_from_slice(&rv[start..start + cnt]);
+                    }
+                }
+                passes.push(RowPass { cols, vals, lens });
+            }
+            tile_ptr.push(passes.len());
+            let edges: u64 = csr.row_ptr[r1] - csr.row_ptr[r0];
+            tile_edge_ptr.push(tile_edge_ptr[rt] + edges);
+        }
+        EllFormat { n, m: csr.m(), meta, tile_ptr, tile_edge_ptr, passes }
+    }
+
+    /// Total tile passes (the CPU analogue of [`EllPlan::passes`]).
+    pub fn pass_count(&self) -> usize {
+        self.passes.len()
+    }
+
+    /// Process row tiles `[t0, t1)`. A row's passes all live in its
+    /// tile, so tile ranges write disjoint rows.
+    fn run_tiles(&self, t0: usize, t1: usize, x: &[f32], y: crate::parallel::SendPtr<f32>) {
+        let nt = self.meta.n_tile;
+        let k = self.meta.k;
+        let mut acc = vec![0f32; nt];
+        for rt in t0..t1 {
+            let r0 = rt * nt;
+            let lanes = ((rt + 1) * nt).min(self.n) - r0;
+            acc[..lanes].fill(0.0);
+            for pass in &self.passes[self.tile_ptr[rt]..self.tile_ptr[rt + 1]] {
+                match &pass.vals {
+                    Some(pv) => {
+                        for lr in 0..lanes {
+                            for slot in 0..pass.lens[lr] as usize {
+                                acc[lr] +=
+                                    pv[lr * k + slot] * x[pass.cols[lr * k + slot] as usize];
+                            }
+                        }
+                    }
+                    None => {
+                        for lr in 0..lanes {
+                            for slot in 0..pass.lens[lr] as usize {
+                                acc[lr] += x[pass.cols[lr * k + slot] as usize];
+                            }
+                        }
+                    }
+                }
+            }
+            for lr in 0..lanes {
+                // SAFETY: tile ranges are disjoint across callers.
+                unsafe { *y.get().add(r0 + lr) = acc[lr] };
+            }
+        }
+    }
+}
+
+impl super::format::SpmvFormat for EllFormat {
+    fn name(&self) -> &'static str {
+        "ell"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn index_bytes(&self) -> u64 {
+        // Padded slots are streamed whether used or not: charge them.
+        self.passes.iter().map(|p| 4 * p.cols.len() as u64).sum()
+    }
+
+    fn overhead_bytes(&self) -> u64 {
+        let lens: u64 = self.passes.iter().map(|p| 2 * p.lens.len() as u64).sum();
+        lens + 8 * (self.tile_ptr.len() + self.tile_edge_ptr.len()) as u64
+    }
+
+    fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0f32; self.n];
+        let tiles = self.tile_ptr.len() - 1;
+        self.run_tiles(0, tiles, x, crate::parallel::SendPtr(y.as_mut_ptr()));
+        y
+    }
+
+    fn spmv_parallel(&self, x: &[f32]) -> Vec<f32> {
+        if self.m < super::format::PAR_MIN_EDGES {
+            return self.spmv(x);
+        }
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0f32; self.n];
+        let tasks = (crate::parallel::threads() * 8).max(1);
+        let bounds = edge_balanced_bounds(&self.tile_edge_ptr, tasks);
+        let y_ptr = crate::parallel::SendPtr(y.as_mut_ptr());
+        crate::parallel::par_for_chunks(tasks, 1, |t_lo, t_hi| {
+            for t in t_lo..t_hi {
+                self.run_tiles(bounds[t], bounds[t + 1], x, y_ptr);
+            }
+        });
+        y
+    }
+
+    fn decode(&self) -> Csr {
+        let nt = self.meta.n_tile;
+        let k = self.meta.k;
+        let mut row_ptr = vec![0u64; self.n + 1];
+        for rt in 0..self.tile_ptr.len() - 1 {
+            let r0 = rt * nt;
+            for pass in &self.passes[self.tile_ptr[rt]..self.tile_ptr[rt + 1]] {
+                for (lr, &cnt) in pass.lens.iter().enumerate() {
+                    row_ptr[r0 + lr + 1] += cnt as u64;
+                }
+            }
+        }
+        for v in 0..self.n {
+            row_ptr[v + 1] += row_ptr[v];
+        }
+        let mut col_idx = vec![0u32; self.m];
+        let mut vals =
+            self.passes.iter().find_map(|p| p.vals.as_ref()).map(|_| vec![0f32; self.m]);
+        let mut cursor: Vec<u64> = row_ptr[..self.n].to_vec();
+        for rt in 0..self.tile_ptr.len() - 1 {
+            let r0 = rt * nt;
+            for pass in &self.passes[self.tile_ptr[rt]..self.tile_ptr[rt + 1]] {
+                for (lr, &cnt) in pass.lens.iter().enumerate() {
+                    for slot in 0..cnt as usize {
+                        let at = cursor[r0 + lr] as usize;
+                        col_idx[at] = pass.cols[lr * k + slot];
+                        if let (Some(dv), Some(pv)) = (vals.as_mut(), pass.vals.as_ref()) {
+                            dv[at] = pv[lr * k + slot];
+                        }
+                        cursor[r0 + lr] += 1;
+                    }
+                }
+            }
+        }
+        Csr { row_ptr, col_idx, vals }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -227,6 +450,50 @@ mod tests {
             "boba {} vs rand {}",
             plan_boba.passes(),
             plan_rand.passes()
+        );
+    }
+
+    #[test]
+    fn cpu_ell_matches_spmv_pull_bitwise_and_roundtrips() {
+        use super::super::format::SpmvFormat;
+        use crate::algos::spmv::spmv_pull;
+        let g = gen::rmat(&gen::GenParams::rmat(10, 8), 3).randomized(4);
+        let csr = coo_to_csr(&g);
+        let f = EllFormat::encode(&csr);
+        assert_eq!(f.decode(), csr);
+        let x: Vec<f32> = (0..csr.n()).map(|i| (i % 23) as f32 * 0.5 - 5.0).collect();
+        let want = spmv_pull(&csr, &x);
+        let got = f.spmv(&x);
+        assert!(want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn cpu_ell_padding_survives_infinite_inputs() {
+        // The historical failure mode: padding slots as col=0/val=0.0
+        // give 0.0·x[0] = NaN when x[0] = ∞. The length-guarded kernel
+        // must stay bit-identical to spmv_pull regardless of x[0].
+        use super::super::format::SpmvFormat;
+        use crate::algos::spmv::spmv_pull;
+        let n = 300usize;
+        let mut src: Vec<u32> = Vec::new();
+        let mut dst: Vec<u32> = Vec::new();
+        for v in 1..n as u32 {
+            // Hub row 0 forces multiple passes; short rows 1.. leave
+            // padding slots in every pass after their first.
+            src.push(0);
+            dst.push(v);
+            src.push(v);
+            dst.push(v - 1);
+        }
+        let csr = coo_to_csr(&crate::graph::Coo::new(n, src, dst));
+        let f = EllFormat::encode(&csr);
+        let mut x: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+        x[0] = f32::INFINITY;
+        let want = spmv_pull(&csr, &x);
+        let got = f.spmv(&x);
+        assert!(
+            want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "length guards must keep padding out of the accumulators"
         );
     }
 }

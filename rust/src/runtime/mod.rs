@@ -15,8 +15,19 @@
 //! (it needs the `xla` crate, which does not resolve offline — see
 //! Cargo.toml); [`Meta`] parsing and the [`ell`] packing plan are pure
 //! and always available.
+//!
+//! The module also hosts the **CPU kernel-format family** behind the
+//! [`format::SpmvFormat`] trait — compressed/tiled CSR layouts
+//! ([`delta`], [`sell`], [`tiled`], plus [`ell::EllFormat`]) whose
+//! SpMV kernels are bit-identical to `spmv_pull` at every thread
+//! count. These are pure std and always available; `serve --format`
+//! and repro table T5 build on them.
 
+pub mod delta;
 pub mod ell;
+pub mod format;
+pub mod sell;
+pub mod tiled;
 
 #[cfg(feature = "pjrt")]
 use crate::graph::Csr;

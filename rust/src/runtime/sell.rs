@@ -1,0 +1,284 @@
+//! SELL-C-σ — sliced ELL with σ-window length sorting.
+//!
+//! Kreutzer et al.'s format, tuned here for the CPU pool: rows are
+//! sorted by degree (descending, stable) within windows of
+//! [`SELL_SIGMA`] consecutive rows of the *current* ordering — so a
+//! BOBA-reordered CSR keeps its locality, the sort only shuffles
+//! within small windows — then packed into slices of [`SELL_C`] rows.
+//! Each slice is padded to its longest member and stored slot-major
+//! (`cols[slice_base + slot·C + lane]`), which is the
+//! vectorization-friendly layout; per-lane row ids and lengths are
+//! kept alongside for the scatter and the padding guards.
+//!
+//! Two properties give bit-identity with `spmv_pull` structurally:
+//! a row's slots hold its edges in original CSR order (slot `i` =
+//! edge `i`), and padding slots are skipped by a **length guard**
+//! (`slot < lens[lane]`) rather than annihilated by a `0.0` value —
+//! so padding can never contribute to an accumulator, not even a
+//! `0.0·∞ = NaN`. Each row lives in exactly one lane of one slice,
+//! so parallel slice ranges write disjoint rows.
+
+use crate::algos::spmv::edge_balanced_bounds;
+use crate::graph::Csr;
+use crate::parallel::{self, SendPtr};
+
+use super::format::{SpmvFormat, PAR_MIN_EDGES};
+
+/// Slice height (rows per slice) — 8 lanes matches a 256-bit f32
+/// vector and keeps the per-slice accumulator block in registers.
+pub const SELL_C: usize = 8;
+
+/// Length-sort window. Sorting only within 256-row windows bounds how
+/// far the packing strays from the input (BOBA) order while still
+/// grouping similar-length rows into slices (less padding).
+pub const SELL_SIGMA: usize = 256;
+
+/// Lane marker for padding lanes of the final partial slice.
+const PAD_ROW: u32 = u32::MAX;
+
+/// A SELL-C-σ encoded operator. See the module docs for the layout.
+pub struct SellCs {
+    n: usize,
+    m: usize,
+    /// Source row of each lane, slice-major: `rows[s·C + lane]`
+    /// (`PAD_ROW` for padding lanes of the last slice).
+    rows: Vec<u32>,
+    /// Stored edge count of each lane (same indexing as `rows`).
+    lens: Vec<u32>,
+    /// Padded-slot offsets per slice: slice `s` owns
+    /// `cols[slice_ptr[s] .. slice_ptr[s+1]]`.
+    slice_ptr: Vec<u64>,
+    /// Column indices, slot-major within each slice; padding slots 0.
+    cols: Vec<u32>,
+    /// Edge values aligned with `cols` (weighted graphs only).
+    vals: Option<Vec<f32>>,
+}
+
+impl SellCs {
+    /// Encode `csr`: σ-window stable length sort, then C-row slices
+    /// padded to their longest member.
+    pub fn encode(csr: &Csr) -> SellCs {
+        let n = csr.n();
+        let m = csr.m();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        for w0 in (0..n).step_by(SELL_SIGMA) {
+            let w1 = (w0 + SELL_SIGMA).min(n);
+            // Stable: equal-length rows keep their (BOBA) order.
+            order[w0..w1].sort_by_key(|&r| std::cmp::Reverse(csr.degree(r as usize)));
+        }
+        let n_slices = n.div_ceil(SELL_C);
+        let mut rows = vec![PAD_ROW; n_slices * SELL_C];
+        let mut lens = vec![0u32; n_slices * SELL_C];
+        let mut slice_ptr = Vec::with_capacity(n_slices + 1);
+        slice_ptr.push(0u64);
+        let mut slots = 0u64;
+        for s in 0..n_slices {
+            let mut width = 0usize;
+            for lane in 0..SELL_C {
+                let g = s * SELL_C + lane;
+                if g < n {
+                    let r = order[g];
+                    rows[g] = r;
+                    let d = csr.degree(r as usize);
+                    lens[g] = d as u32;
+                    width = width.max(d);
+                }
+            }
+            slots += (width * SELL_C) as u64;
+            slice_ptr.push(slots);
+        }
+        let mut cols = vec![0u32; slots as usize];
+        let mut vals = csr.vals.as_ref().map(|_| vec![0f32; slots as usize]);
+        for s in 0..n_slices {
+            let base = slice_ptr[s] as usize;
+            for lane in 0..SELL_C {
+                let g = s * SELL_C + lane;
+                let r = rows[g];
+                if r == PAD_ROW {
+                    continue;
+                }
+                let nbrs = csr.neighbors(r as usize);
+                let rv = csr.row_vals(r as usize);
+                for (slot, &c) in nbrs.iter().enumerate() {
+                    cols[base + slot * SELL_C + lane] = c;
+                    if let (Some(v), Some(rv)) = (vals.as_mut(), rv) {
+                        v[base + slot * SELL_C + lane] = rv[slot];
+                    }
+                }
+            }
+        }
+        SellCs { n, m, rows, lens, slice_ptr, cols, vals }
+    }
+
+    /// Process slices `[s0, s1)`, writing each lane's accumulator to
+    /// its source row. Caller guarantees the slice ranges are
+    /// disjoint (each row lives in exactly one slice).
+    fn run_slices(&self, s0: usize, s1: usize, x: &[f32], y: SendPtr<f32>) {
+        for s in s0..s1 {
+            let base = self.slice_ptr[s] as usize;
+            let width = (self.slice_ptr[s + 1] - self.slice_ptr[s]) as usize / SELL_C;
+            let lane0 = s * SELL_C;
+            let mut acc = [0f32; SELL_C];
+            match &self.vals {
+                Some(vals) => {
+                    for slot in 0..width {
+                        let off = base + slot * SELL_C;
+                        for l in 0..SELL_C {
+                            if (slot as u32) < self.lens[lane0 + l] {
+                                acc[l] += vals[off + l] * x[self.cols[off + l] as usize];
+                            }
+                        }
+                    }
+                }
+                None => {
+                    for slot in 0..width {
+                        let off = base + slot * SELL_C;
+                        for l in 0..SELL_C {
+                            if (slot as u32) < self.lens[lane0 + l] {
+                                acc[l] += x[self.cols[off + l] as usize];
+                            }
+                        }
+                    }
+                }
+            }
+            for l in 0..SELL_C {
+                let r = self.rows[lane0 + l];
+                if r != PAD_ROW {
+                    // SAFETY: each row lives in exactly one lane, and
+                    // slice ranges are disjoint across callers.
+                    unsafe { *y.get().add(r as usize) = acc[l] };
+                }
+            }
+        }
+    }
+}
+
+impl SpmvFormat for SellCs {
+    fn name(&self) -> &'static str {
+        "sell"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn index_bytes(&self) -> u64 {
+        // Padding slots are real bytes the kernel streams: charge them.
+        4 * self.cols.len() as u64
+    }
+
+    fn overhead_bytes(&self) -> u64 {
+        4 * self.rows.len() as u64 + 4 * self.lens.len() as u64 + 8 * self.slice_ptr.len() as u64
+    }
+
+    fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0f32; self.n];
+        let n_slices = self.slice_ptr.len() - 1;
+        self.run_slices(0, n_slices, x, SendPtr(y.as_mut_ptr()));
+        y
+    }
+
+    fn spmv_parallel(&self, x: &[f32]) -> Vec<f32> {
+        if self.m < PAR_MIN_EDGES {
+            return self.spmv(x);
+        }
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0f32; self.n];
+        let tasks = (parallel::threads() * 8).max(1);
+        // Balance tasks by padded slots — the slice-granular analogue
+        // of edge-balanced row bounds.
+        let bounds = edge_balanced_bounds(&self.slice_ptr, tasks);
+        let y_ptr = SendPtr(y.as_mut_ptr());
+        parallel::par_for_chunks(tasks, 1, |t_lo, t_hi| {
+            for t in t_lo..t_hi {
+                self.run_slices(bounds[t], bounds[t + 1], x, y_ptr);
+            }
+        });
+        y
+    }
+
+    fn decode(&self) -> Csr {
+        let mut row_ptr = vec![0u64; self.n + 1];
+        for (g, &r) in self.rows.iter().enumerate() {
+            if r != PAD_ROW {
+                row_ptr[r as usize + 1] = self.lens[g] as u64;
+            }
+        }
+        for v in 0..self.n {
+            row_ptr[v + 1] += row_ptr[v];
+        }
+        let mut col_idx = vec![0u32; self.m];
+        let mut vals = self.vals.as_ref().map(|_| vec![0f32; self.m]);
+        let n_slices = self.slice_ptr.len() - 1;
+        for s in 0..n_slices {
+            let base = self.slice_ptr[s] as usize;
+            for lane in 0..SELL_C {
+                let g = s * SELL_C + lane;
+                let r = self.rows[g];
+                if r == PAD_ROW {
+                    continue;
+                }
+                let lo = row_ptr[r as usize] as usize;
+                for slot in 0..self.lens[g] as usize {
+                    col_idx[lo + slot] = self.cols[base + slot * SELL_C + lane];
+                    if let (Some(dv), Some(sv)) = (vals.as_mut(), self.vals.as_ref()) {
+                        dv[lo + slot] = sv[base + slot * SELL_C + lane];
+                    }
+                }
+            }
+        }
+        Csr { row_ptr, col_idx, vals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::spmv::spmv_pull;
+    use crate::convert;
+    use crate::graph::gen::{self, GenParams};
+
+    #[test]
+    fn skewed_graph_roundtrips_and_matches_bitwise() {
+        let g = gen::rmat(&GenParams::rmat(10, 8), 11).randomized(13);
+        let csr = convert::coo_to_csr(&g);
+        let f = SellCs::encode(&csr);
+        assert_eq!(f.decode(), csr);
+        let x: Vec<f32> = (0..csr.n()).map(|i| (i % 13) as f32 * 0.5 - 3.0).collect();
+        let want = spmv_pull(&csr, &x);
+        let got = f.spmv(&x);
+        assert!(want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn padding_is_guarded_not_annihilated() {
+        // Row 0 is a hub; its slice-mates are short rows whose padding
+        // slots would read x[0] if unguarded. x[0] = ∞ turns any
+        // 0.0·x[0] annihilation into NaN — the guard must keep every
+        // short row finite and bit-identical.
+        let n = 64usize;
+        let mut src: Vec<u32> = Vec::new();
+        let mut dst: Vec<u32> = Vec::new();
+        for v in 0..n as u32 {
+            src.push(0);
+            dst.push(v);
+            src.push(v);
+            dst.push((v + 1) % n as u32);
+        }
+        let csr = convert::coo_to_csr(&crate::graph::Coo::new(n, src, dst));
+        let f = SellCs::encode(&csr);
+        let mut x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        x[0] = f32::INFINITY;
+        let want = spmv_pull(&csr, &x);
+        let got = f.spmv(&x);
+        assert!(
+            want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "guarded padding must match spmv_pull bit-for-bit under ±∞ inputs"
+        );
+    }
+}

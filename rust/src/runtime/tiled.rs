@@ -1,0 +1,433 @@
+//! Cache-blocked tiled SpMV — column tiles sized to L2.
+//!
+//! Columns are split into tiles of [`TILE_COLS`] (32768 columns × 4
+//! bytes = a 128 KiB slab of `x`, sized to stay L2-resident). A row
+//! whose column sequence is **tile-monotone** (tile indices
+//! non-decreasing left to right — which is what `Csr::sort_rows`
+//! produces, and nearly free under a BOBA ordering) is split into one
+//! segment per tile; the kernel then walks tiles outermost, so every
+//! gather inside a tile hits the same hot 128 KiB of `x`. Local
+//! columns within a tile fit in a `u16` (`TILE_COLS ≤ 65536`), so
+//! tiling doubles as 2-byte compression. Rows that are not
+//! tile-monotone, or whose segments would average fewer than 4 edges
+//! (`segments·4 > edges` — segment bookkeeping would outweigh the
+//! u16 savings), fall back to an **irregular** plain-CSR stream
+//! processed row-at-a-time.
+//!
+//! Bit-identity with `spmv_pull` is structural: a tiled row's
+//! segments are visited in ascending tile order, which *is* its
+//! original edge order (that's what monotone means), each resuming
+//! from the row's running `y` value; irregular rows replay their
+//! edges verbatim. Within one tile a row owns at most one segment, so
+//! the parallel path (segments of a tile split edge-balanced across
+//! the pool, tiles barriered in sequence) writes disjoint rows.
+
+use crate::algos::spmv::edge_balanced_bounds;
+use crate::graph::Csr;
+use crate::parallel::{self, SendPtr};
+
+use super::format::{SpmvFormat, PAR_MIN_EDGES};
+
+/// Columns per tile: 32768 × 4-byte `x` entries = 128 KiB, sized to
+/// sit in a typical per-core L2; also the largest width whose local
+/// offsets fit a `u16`.
+pub const TILE_COLS: usize = 1 << 15;
+
+/// A column-tiled operator with an irregular fallback stream. See the
+/// module docs for the layout and the tiling acceptance rule.
+pub struct TiledCsr {
+    n: usize,
+    m: usize,
+    n_tiles: usize,
+    /// Segment index range per tile: tile `t` owns segments
+    /// `tile_ptr[t] .. tile_ptr[t+1]` (segments stored tile-major).
+    tile_ptr: Vec<u64>,
+    /// Destination row of each segment.
+    seg_row: Vec<u32>,
+    /// Edge count of each segment.
+    seg_len: Vec<u32>,
+    /// Offset of each segment's first edge in `tcols`.
+    seg_off: Vec<u64>,
+    /// Tile-local column offsets (`col − tile·TILE_COLS`).
+    tcols: Vec<u16>,
+    /// Values aligned with `tcols` (weighted graphs only).
+    tvals: Option<Vec<f32>>,
+    /// Rows routed to the irregular fallback, in ascending order.
+    irr_rows: Vec<u32>,
+    /// CSR-style offsets into `irr_cols` per irregular row.
+    irr_ptr: Vec<u64>,
+    /// Raw columns of the irregular rows, original edge order.
+    irr_cols: Vec<u32>,
+    /// Values aligned with `irr_cols` (weighted graphs only).
+    irr_vals: Option<Vec<f32>>,
+}
+
+/// Split decision for one row: segments-per-tile if tiled, edge count
+/// if irregular, nothing if empty.
+enum RowPlan {
+    Tiled,
+    Irregular,
+    Empty,
+}
+
+fn plan_row(cols: &[u32]) -> RowPlan {
+    if cols.is_empty() {
+        return RowPlan::Empty;
+    }
+    let mut segs = 1usize;
+    let mut prev = cols[0] as usize / TILE_COLS;
+    for &c in &cols[1..] {
+        let t = c as usize / TILE_COLS;
+        if t < prev {
+            return RowPlan::Irregular;
+        }
+        if t > prev {
+            segs += 1;
+            prev = t;
+        }
+    }
+    // Tiling must pay for its segment bookkeeping: require an average
+    // of ≥ 4 edges per segment, else the row streams cheaper as raw CSR.
+    if segs * 4 <= cols.len() {
+        RowPlan::Tiled
+    } else {
+        RowPlan::Irregular
+    }
+}
+
+impl TiledCsr {
+    /// Encode `csr`. Two passes: classify rows and count segments per
+    /// tile, then fill the tile-major segment streams.
+    pub fn encode(csr: &Csr) -> TiledCsr {
+        let n = csr.n();
+        let m = csr.m();
+        let n_tiles = n.div_ceil(TILE_COLS);
+        // Pass 1: classify rows, count segments and edges per tile.
+        let mut plans: Vec<RowPlan> = Vec::with_capacity(n);
+        let mut segs_per_tile = vec![0u64; n_tiles];
+        let mut edges_per_tile = vec![0u64; n_tiles];
+        let mut irr_edges = 0usize;
+        let mut irr_count = 0usize;
+        for v in 0..n {
+            let plan = plan_row(csr.neighbors(v));
+            match plan {
+                RowPlan::Tiled => {
+                    let cols = csr.neighbors(v);
+                    let mut prev = usize::MAX;
+                    for &c in cols {
+                        let t = c as usize / TILE_COLS;
+                        if t != prev {
+                            segs_per_tile[t] += 1;
+                            prev = t;
+                        }
+                        edges_per_tile[t] += 1;
+                    }
+                }
+                RowPlan::Irregular => {
+                    irr_edges += csr.degree(v);
+                    irr_count += 1;
+                }
+                RowPlan::Empty => {}
+            }
+            plans.push(plan);
+        }
+        let mut tile_ptr = Vec::with_capacity(n_tiles + 1);
+        tile_ptr.push(0u64);
+        let mut tile_edge_base = Vec::with_capacity(n_tiles);
+        let mut seg_total = 0u64;
+        let mut edge_total = 0u64;
+        for t in 0..n_tiles {
+            tile_edge_base.push(edge_total);
+            seg_total += segs_per_tile[t];
+            edge_total += edges_per_tile[t];
+            tile_ptr.push(seg_total);
+        }
+        // Pass 2: fill, with running cursors per tile.
+        let mut seg_row = vec![0u32; seg_total as usize];
+        let mut seg_len = vec![0u32; seg_total as usize];
+        let mut seg_off = vec![0u64; seg_total as usize];
+        let mut tcols = vec![0u16; edge_total as usize];
+        let mut tvals = csr.vals.as_ref().map(|_| vec![0f32; edge_total as usize]);
+        let mut seg_cursor: Vec<u64> = tile_ptr[..n_tiles].to_vec();
+        let mut edge_cursor = tile_edge_base;
+        let mut irr_rows = Vec::with_capacity(irr_count);
+        let mut irr_ptr = Vec::with_capacity(irr_count + 1);
+        irr_ptr.push(0u64);
+        let mut irr_cols = Vec::with_capacity(irr_edges);
+        let mut irr_vals = csr.vals.as_ref().map(|_| Vec::with_capacity(irr_edges));
+        for v in 0..n {
+            match plans[v] {
+                RowPlan::Tiled => {
+                    let cols = csr.neighbors(v);
+                    let rv = csr.row_vals(v);
+                    let mut i = 0usize;
+                    while i < cols.len() {
+                        let t = cols[i] as usize / TILE_COLS;
+                        let run_start = i;
+                        while i < cols.len() && cols[i] as usize / TILE_COLS == t {
+                            i += 1;
+                        }
+                        let s = seg_cursor[t] as usize;
+                        seg_cursor[t] += 1;
+                        let off = edge_cursor[t];
+                        seg_row[s] = v as u32;
+                        seg_len[s] = (i - run_start) as u32;
+                        seg_off[s] = off;
+                        for (k, &c) in cols[run_start..i].iter().enumerate() {
+                            tcols[off as usize + k] = (c as usize - t * TILE_COLS) as u16;
+                            if let (Some(tv), Some(rv)) = (tvals.as_mut(), rv) {
+                                tv[off as usize + k] = rv[run_start + k];
+                            }
+                        }
+                        edge_cursor[t] += (i - run_start) as u64;
+                    }
+                }
+                RowPlan::Irregular => {
+                    irr_rows.push(v as u32);
+                    irr_cols.extend_from_slice(csr.neighbors(v));
+                    if let (Some(iv), Some(rv)) = (irr_vals.as_mut(), csr.row_vals(v)) {
+                        iv.extend_from_slice(rv);
+                    }
+                    irr_ptr.push(irr_cols.len() as u64);
+                }
+                RowPlan::Empty => {}
+            }
+        }
+        TiledCsr {
+            n,
+            m,
+            n_tiles,
+            tile_ptr,
+            seg_row,
+            seg_len,
+            seg_off,
+            tcols,
+            tvals,
+            irr_rows,
+            irr_ptr,
+            irr_cols,
+            irr_vals,
+        }
+    }
+
+    /// Edges stored in the tiled (u16) stream.
+    pub fn tiled_edges(&self) -> usize {
+        self.tcols.len()
+    }
+
+    /// Edges that fell back to the irregular (u32) stream.
+    pub fn irregular_edges(&self) -> usize {
+        self.irr_cols.len()
+    }
+
+    /// Process segments `[s_lo, s_hi)` (global indices) of tile `t`.
+    /// Reads and resumes each row's running `y`; callers guarantee no
+    /// two concurrent calls share a row (one segment per row per tile).
+    fn run_tile_segs(&self, t: usize, s_lo: usize, s_hi: usize, x: &[f32], y: SendPtr<f32>) {
+        let x_base = t * TILE_COLS;
+        for s in s_lo..s_hi {
+            let row = self.seg_row[s] as usize;
+            let off = self.seg_off[s] as usize;
+            let len = self.seg_len[s] as usize;
+            // SAFETY: rows are disjoint across concurrent callers;
+            // prior tiles were barriered before this call.
+            let mut acc = unsafe { *y.get().add(row) };
+            match &self.tvals {
+                Some(tv) => {
+                    for k in 0..len {
+                        acc += tv[off + k] * x[x_base + self.tcols[off + k] as usize];
+                    }
+                }
+                None => {
+                    for k in 0..len {
+                        acc += x[x_base + self.tcols[off + k] as usize];
+                    }
+                }
+            }
+            unsafe { *y.get().add(row) = acc };
+        }
+    }
+
+    /// Process irregular rows `[k_lo, k_hi)` (indices into `irr_rows`).
+    fn run_irr(&self, k_lo: usize, k_hi: usize, x: &[f32], y: SendPtr<f32>) {
+        for k in k_lo..k_hi {
+            let row = self.irr_rows[k] as usize;
+            let lo = self.irr_ptr[k] as usize;
+            let hi = self.irr_ptr[k + 1] as usize;
+            let mut acc = 0f32;
+            match &self.irr_vals {
+                Some(iv) => {
+                    for e in lo..hi {
+                        acc += iv[e] * x[self.irr_cols[e] as usize];
+                    }
+                }
+                None => {
+                    for e in lo..hi {
+                        acc += x[self.irr_cols[e] as usize];
+                    }
+                }
+            }
+            // SAFETY: irregular rows are disjoint across callers and
+            // never appear in the tiled streams.
+            unsafe { *y.get().add(row) = acc };
+        }
+    }
+}
+
+impl SpmvFormat for TiledCsr {
+    fn name(&self) -> &'static str {
+        "tiled"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn index_bytes(&self) -> u64 {
+        2 * self.tcols.len() as u64 + 4 * self.irr_cols.len() as u64
+    }
+
+    fn overhead_bytes(&self) -> u64 {
+        8 * self.tile_ptr.len() as u64
+            + (4 + 4 + 8) * self.seg_row.len() as u64
+            + 4 * self.irr_rows.len() as u64
+            + 8 * self.irr_ptr.len() as u64
+    }
+
+    fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0f32; self.n];
+        let y_ptr = SendPtr(y.as_mut_ptr());
+        for t in 0..self.n_tiles {
+            self.run_tile_segs(t, self.tile_ptr[t] as usize, self.tile_ptr[t + 1] as usize, x, y_ptr);
+        }
+        self.run_irr(0, self.irr_rows.len(), x, y_ptr);
+        y
+    }
+
+    fn spmv_parallel(&self, x: &[f32]) -> Vec<f32> {
+        if self.m < PAR_MIN_EDGES {
+            return self.spmv(x);
+        }
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0f32; self.n];
+        let tasks = (parallel::threads() * 8).max(1);
+        let y_ptr = SendPtr(y.as_mut_ptr());
+        // Tiles run in sequence (each par_for_chunks is a barrier, so
+        // a row's running y is complete before the next tile resumes
+        // it); segments within a tile split edge-balanced.
+        for t in 0..self.n_tiles {
+            let s0 = self.tile_ptr[t] as usize;
+            let s1 = self.tile_ptr[t + 1] as usize;
+            if s0 == s1 {
+                continue;
+            }
+            let mut ptr = Vec::with_capacity(s1 - s0 + 1);
+            ptr.push(0u64);
+            let mut run = 0u64;
+            for s in s0..s1 {
+                run += self.seg_len[s] as u64;
+                ptr.push(run);
+            }
+            let bounds = edge_balanced_bounds(&ptr, tasks);
+            parallel::par_for_chunks(tasks, 1, |t_lo, t_hi| {
+                for task in t_lo..t_hi {
+                    self.run_tile_segs(t, s0 + bounds[task], s0 + bounds[task + 1], x, y_ptr);
+                }
+            });
+        }
+        if !self.irr_rows.is_empty() {
+            let bounds = edge_balanced_bounds(&self.irr_ptr, tasks);
+            parallel::par_for_chunks(tasks, 1, |t_lo, t_hi| {
+                for task in t_lo..t_hi {
+                    self.run_irr(bounds[task], bounds[task + 1], x, y_ptr);
+                }
+            });
+        }
+        y
+    }
+
+    fn decode(&self) -> Csr {
+        let mut row_ptr = vec![0u64; self.n + 1];
+        for (i, &r) in self.seg_row.iter().enumerate() {
+            row_ptr[r as usize + 1] += self.seg_len[i] as u64;
+        }
+        for (k, &r) in self.irr_rows.iter().enumerate() {
+            row_ptr[r as usize + 1] += self.irr_ptr[k + 1] - self.irr_ptr[k];
+        }
+        for v in 0..self.n {
+            row_ptr[v + 1] += row_ptr[v];
+        }
+        let mut col_idx = vec![0u32; self.m];
+        let mut vals = self.tvals.as_ref().or(self.irr_vals.as_ref()).map(|_| vec![0f32; self.m]);
+        let mut cursor: Vec<u64> = row_ptr[..self.n].to_vec();
+        // Tiled rows: ascending tiles replay original edge order.
+        for t in 0..self.n_tiles {
+            for s in self.tile_ptr[t] as usize..self.tile_ptr[t + 1] as usize {
+                let row = self.seg_row[s] as usize;
+                let off = self.seg_off[s] as usize;
+                for k in 0..self.seg_len[s] as usize {
+                    let at = cursor[row] as usize;
+                    col_idx[at] = (t * TILE_COLS + self.tcols[off + k] as usize) as u32;
+                    if let (Some(dv), Some(tv)) = (vals.as_mut(), self.tvals.as_ref()) {
+                        dv[at] = tv[off + k];
+                    }
+                    cursor[row] += 1;
+                }
+            }
+        }
+        for (k, &r) in self.irr_rows.iter().enumerate() {
+            let row = r as usize;
+            for e in self.irr_ptr[k] as usize..self.irr_ptr[k + 1] as usize {
+                let at = cursor[row] as usize;
+                col_idx[at] = self.irr_cols[e];
+                if let (Some(dv), Some(iv)) = (vals.as_mut(), self.irr_vals.as_ref()) {
+                    dv[at] = iv[e];
+                }
+                cursor[row] += 1;
+            }
+        }
+        Csr { row_ptr, col_idx, vals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::spmv::spmv_pull;
+    use crate::convert;
+    use crate::graph::gen::{self, GenParams};
+
+    #[test]
+    fn sorted_rows_engage_the_tiled_stream() {
+        let g = gen::rmat(&GenParams::rmat(12, 8), 5).randomized(6);
+        let mut csr = convert::coo_to_csr(&g);
+        csr.sort_rows();
+        let f = TiledCsr::encode(&csr);
+        assert!(f.tiled_edges() > 0, "sorted rmat rows must tile");
+        assert_eq!(f.decode(), csr);
+        let x: Vec<f32> = (0..csr.n()).map(|i| (i % 31) as f32 * 0.25).collect();
+        let want = spmv_pull(&csr, &x);
+        let got = f.spmv(&x);
+        assert!(want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn unsorted_rows_fall_back_irregular_and_stay_exact() {
+        // Descending columns are tile-non-monotone on any multi-tile
+        // graph — and on a single-tile graph they tile trivially;
+        // either way the bits must match.
+        let g = gen::rmat(&GenParams::rmat(10, 8), 5).randomized(8);
+        let csr = convert::coo_to_csr(&g); // unsorted neighbor lists
+        let f = TiledCsr::encode(&csr);
+        assert_eq!(f.decode(), csr);
+        let x: Vec<f32> = (0..csr.n()).map(|i| (i % 17) as f32 - 8.0).collect();
+        let want = spmv_pull(&csr, &x);
+        let got = f.spmv(&x);
+        assert!(want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+}

@@ -75,6 +75,10 @@ pub struct ServerConfig {
     /// Log traces slower than this many milliseconds to stderr as
     /// one-line JSON (`--slow-trace-ms`; `None` = off).
     pub slow_trace_ms: Option<f64>,
+    /// Compressed kernel format every prepared artifact carries
+    /// (`--format`, a [`crate::runtime::format::FORMAT_NAMES`] name);
+    /// `None` serves plain CSR only.
+    pub format: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -91,6 +95,7 @@ impl Default for ServerConfig {
             max_batch: 8,
             trace: true,
             slow_trace_ms: None,
+            format: None,
         }
     }
 }
@@ -120,6 +125,7 @@ pub fn spawn(cfg: ServerConfig) -> Result<Server> {
         batch: cfg.batch,
         in_flight: cfg.in_flight,
         seed: cfg.seed,
+        format: cfg.format.clone(),
     }));
     let stats = Arc::new(ServerStats::new());
     let coalescer = Arc::new(Coalescer::new(CoalesceConfig {

@@ -49,12 +49,15 @@ pub struct PrepReport {
     /// Transpose (`Aᵀ` structure) wall time — the pull operand cached
     /// for PageRank.
     pub transpose_ms: f64,
+    /// Kernel-format encode + equivalence-probe wall time, 0 when the
+    /// registry serves plain CSR only (no `--format`).
+    pub format_ms: f64,
 }
 
 impl PrepReport {
     /// Total preparation time in milliseconds.
     pub fn total_ms(&self) -> f64 {
-        self.ingest_ms + self.reorder_ms + self.convert_ms + self.transpose_ms
+        self.ingest_ms + self.reorder_ms + self.convert_ms + self.transpose_ms + self.format_ms
     }
 
     /// JSON rendering for ingest responses.
@@ -65,6 +68,7 @@ impl PrepReport {
             ("reorder_ms", Json::Num(self.reorder_ms)),
             ("convert_ms", Json::Num(self.convert_ms)),
             ("transpose_ms", Json::Num(self.transpose_ms)),
+            ("format_ms", Json::Num(self.format_ms)),
             ("total_ms", Json::Num(self.total_ms())),
         ])
     }
@@ -96,6 +100,11 @@ pub struct PreparedGraph {
     pub transpose: Arc<Csr>,
     /// Old→new relabeling applied (None for [`SCHEME_NONE`]).
     pub perm: Option<Arc<Permutation>>,
+    /// Optional compressed kernel-format variant (`serve --format`),
+    /// encoded from the served CSR and verified **bit-identical** to
+    /// `spmv_pull` at prepare time — exposed on `/metrics` as
+    /// `boba_format_bytes_per_edge`.
+    pub format: Option<Arc<dyn crate::runtime::format::SpmvFormat>>,
     /// Stage timings of the preparation run.
     pub prep: PrepReport,
     /// Queries served from this artifact.
@@ -154,7 +163,7 @@ impl PreparedGraph {
 
     /// JSON row for `GET /graphs`.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("id", Json::Str(self.id.clone())),
             ("dataset", Json::Str(self.dataset.clone())),
             ("scheme", Json::Str(self.scheme.clone())),
@@ -162,7 +171,12 @@ impl PreparedGraph {
             ("m", Json::Num(self.m() as f64)),
             ("queries", Json::Num(self.queries.load(Ordering::Relaxed) as f64)),
             ("prep", self.prep.to_json()),
-        ])
+        ];
+        if let Some(f) = &self.format {
+            fields.push(("format", Json::Str(f.name().to_string())));
+            fields.push(("format_bytes_per_edge", Json::Num(f.bytes_per_edge())));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -177,11 +191,15 @@ pub struct RegistryConfig {
     pub in_flight: usize,
     /// Seed for dataset generation and label randomization.
     pub seed: u64,
+    /// Kernel format to encode for every prepared artifact (a
+    /// [`crate::runtime::format::FORMAT_NAMES`] name); `None` serves
+    /// plain CSR only.
+    pub format: Option<String>,
 }
 
 impl Default for RegistryConfig {
     fn default() -> Self {
-        Self { capacity: 8, batch: 1 << 16, in_flight: 4, seed: 42 }
+        Self { capacity: 8, batch: 1 << 16, in_flight: 4, seed: 42, format: None }
     }
 }
 
@@ -533,6 +551,34 @@ impl GraphRegistry {
         let transpose = crate::obs::span("prepare.transpose", || csr.transposed_structure());
         prep.transpose_ms = sw.ms();
 
+        // ── kernel format (optional) ──────────────────────────────
+        // Encode the compressed variant and gate it behind the repo's
+        // determinism bar right here: a probe SpMV must be bit-
+        // identical to spmv_pull before the artifact is published, so
+        // a bad encode can never serve a single wrong query.
+        let format = match self.cfg.format.as_deref() {
+            None => None,
+            Some(name) => {
+                let sw = Stopwatch::start();
+                let enc = crate::obs::span("prepare.format", || {
+                    crate::runtime::format::encode(name, &csr)
+                })
+                .with_context(|| format!("encoding kernel format for {dataset}@{scheme}"))?;
+                let x: Vec<f32> =
+                    (0..csr.n()).map(|i| ((i % 251) as f32).mul_add(0.25, -31.0)).collect();
+                let want = crate::algos::spmv::spmv_pull(&csr, &x);
+                let got = enc.spmv(&x);
+                anyhow::ensure!(
+                    want.len() == got.len()
+                        && want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "format {name:?} SpMV diverges bitwise from spmv_pull on \
+                     {dataset}@{scheme} — refusing to publish the artifact"
+                );
+                prep.format_ms = sw.ms();
+                Some(Arc::from(enc))
+            }
+        };
+
         Ok(PreparedGraph {
             id: Self::id_of(dataset, scheme),
             dataset: dataset.to_string(),
@@ -540,6 +586,7 @@ impl GraphRegistry {
             csr: Arc::new(csr),
             transpose: Arc::new(transpose),
             perm,
+            format,
             prep,
             queries: AtomicU64::new(0),
             default_source: OnceLock::new(),
@@ -575,6 +622,7 @@ mod tests {
             batch: 500,
             in_flight: 2,
             seed: 7,
+            format: None,
         })
     }
 
@@ -624,11 +672,39 @@ mod tests {
         let j = g.prep.to_json();
         assert!(j.get("transpose_ms").is_some());
         let total = j.get("total_ms").unwrap().as_f64().unwrap();
-        let sum = ["ingest_ms", "reorder_ms", "convert_ms", "transpose_ms"]
+        let sum = ["ingest_ms", "reorder_ms", "convert_ms", "transpose_ms", "format_ms"]
             .iter()
             .map(|k| j.get(k).unwrap().as_f64().unwrap())
             .sum::<f64>();
         assert!((total - sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn format_variant_is_prepared_and_gated() {
+        let r = GraphRegistry::new(RegistryConfig {
+            capacity: 2,
+            batch: 500,
+            in_flight: 2,
+            seed: 7,
+            format: Some("delta".to_string()),
+        });
+        let (g, _) = r.get_or_prepare("pa:1500:4", "boba").unwrap();
+        let f = g.format.as_ref().expect("artifact must carry the delta variant");
+        assert_eq!(f.name(), "delta");
+        assert_eq!(f.m(), g.m());
+        // The delta narrow rule makes ≤ 4 B/edge an invariant.
+        assert!(f.bytes_per_edge() <= 4.0 + 1e-12, "got {}", f.bytes_per_edge());
+        assert!(g.prep.format_ms > 0.0, "format stage must be priced");
+        let j = g.to_json();
+        assert_eq!(j.get("format").and_then(|v| v.as_str()), Some("delta"));
+        assert!(j.get("format_bytes_per_edge").is_some());
+
+        // Unknown names fail prepare, not serve time.
+        let bad = GraphRegistry::new(RegistryConfig {
+            format: Some("bitmap".to_string()),
+            ..RegistryConfig::default()
+        });
+        assert!(bad.get_or_prepare("pa:1000:4", "boba").is_err());
     }
 
     #[test]

@@ -223,6 +223,24 @@ impl Router {
         p.family("boba_registry_prepares_total", "counter", "Cold prepare pipelines executed.");
         p.value("boba_registry_prepares_total", &[], self.registry.prepares() as f64);
 
+        // Family header emitted unconditionally (dashboards key on it);
+        // samples only for artifacts carrying a compressed variant
+        // (`serve --format`).
+        p.family(
+            "boba_format_bytes_per_edge",
+            "gauge",
+            "Column-stream bytes per edge of each artifact's compressed kernel format.",
+        );
+        for g in self.registry.list() {
+            if let Some(f) = &g.format {
+                p.value(
+                    "boba_format_bytes_per_edge",
+                    &[("graph", g.id.as_str()), ("format", f.name())],
+                    f.bytes_per_edge(),
+                );
+            }
+        }
+
         let pool = crate::parallel::pool::snapshot();
         p.family(
             "boba_pool_threads",
@@ -705,12 +723,17 @@ mod tests {
     use crate::server::registry::RegistryConfig;
 
     fn router() -> Router {
+        router_with_format(None)
+    }
+
+    fn router_with_format(format: Option<&str>) -> Router {
         Router::new(
             Arc::new(GraphRegistry::new(RegistryConfig {
                 capacity: 4,
                 batch: 1000,
                 in_flight: 2,
                 seed: 5,
+                format: format.map(|s| s.to_string()),
             })),
             Arc::new(ServerStats::new()),
             Arc::new(Coalescer::new(CoalesceConfig::default())),
@@ -972,6 +995,7 @@ mod tests {
             "boba_registry_graphs",
             "boba_registry_hits_total",
             "boba_registry_prepares_total",
+            "boba_format_bytes_per_edge",
             "boba_pool_dispatches_total",
             "boba_coalesce_batches_total",
             "boba_coalesce_batch_width",
@@ -994,6 +1018,22 @@ mod tests {
             stages.samples.iter().any(|s| s.label("stage") == Some("prepare.reorder")),
             "cold prepare must record its reorder stage"
         );
+    }
+
+    #[test]
+    fn format_bytes_per_edge_gauge_tracks_artifacts() {
+        let r = router_with_format(Some("delta"));
+        r.handle(&req("POST", "/graphs", "{\"dataset\": \"pa:1200:4\"}"));
+        let resp = r.handle(&req("GET", "/metrics", ""));
+        let text = String::from_utf8(resp.body.clone()).unwrap();
+        let scrape = crate::obs::text::Scrape::parse(&text).expect("conformant exposition");
+        let bpe = scrape
+            .value(
+                "boba_format_bytes_per_edge",
+                &[("graph", "pa:1200:4@boba"), ("format", "delta")],
+            )
+            .expect("format-bearing artifact must publish a gauge sample");
+        assert!(bpe > 0.0 && bpe <= 4.0 + 1e-12, "got {bpe}");
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! Differential format-equivalence harness — the gate the compressed
+//! kernel-format family ([`boba::runtime::format`]) ships behind.
+//!
+//! The contract under test: every registered format (plain CSR, delta,
+//! SELL-C-σ, tiled, ELL) produces **bit-identical** SpMV output to the
+//! reference [`boba::algos::spmv::spmv_pull`] — same f32 accumulation
+//! order per destination row — from both its sequential and its
+//! pool-parallel kernel, at every pinned thread count, across reordering
+//! schemes (boba / random / degree), across graph shapes (power-law,
+//! road-like, weighted with zero and negative weights, and the
+//! degenerate family: empty, single-vertex, all-self-loops, hub row),
+//! and with sorted as well as unsorted adjacency lists (the tiled
+//! format takes a different code path for each). Each format must also
+//! decode back to the exact CSR it was built from.
+//!
+//! Everything is compared via `f32::to_bits` — approximate equality
+//! would hide reassociated additions, and reassociation is precisely
+//! the bug class this suite exists to catch.
+
+use boba::algos::spmv::spmv_pull;
+use boba::convert;
+use boba::graph::{gen, Coo, Csr};
+use boba::parallel::ThreadGuard;
+use boba::reorder::{self, Reorderer};
+use boba::runtime::format::{self, SpmvFormat, FORMAT_NAMES};
+
+/// A deterministic dense probe vector with negative, zero, and positive
+/// entries (i % 23 hits 0 ⇒ x contains exact -4.0 and a zero crossing).
+fn probe_x(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i % 23) as f32) * 0.375 - 4.0).collect()
+}
+
+fn assert_bits_equal(tag: &str, want: &[f32], got: &[f32]) {
+    assert_eq!(want.len(), got.len(), "{tag}: output length");
+    for (i, (a, b)) in want.iter().zip(got).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{tag}: y[{i}] = {b} (bits {:#010x}), expected {a} (bits {:#010x})",
+            b.to_bits(),
+            a.to_bits()
+        );
+    }
+}
+
+/// Run the full differential battery against one CSR: for every
+/// registered format, decode roundtrip + sequential bits + parallel
+/// bits at 1/2/4/8 pinned worker threads.
+fn check_csr(tag: &str, csr: &Csr) {
+    let x = probe_x(csr.n());
+    let want = spmv_pull(csr, &x);
+    for name in FORMAT_NAMES {
+        let enc = format::encode(name, csr)
+            .unwrap_or_else(|e| panic!("{tag}/{name}: encode failed: {e:#}"));
+        assert_eq!(enc.n(), csr.n(), "{tag}/{name}: n");
+        assert_eq!(enc.m(), csr.m(), "{tag}/{name}: m");
+        assert_eq!(&enc.decode(), csr, "{tag}/{name}: decode must roundtrip exactly");
+        assert_bits_equal(&format!("{tag}/{name}/seq"), &want, &enc.spmv(&x));
+        for threads in [1usize, 2, 4, 8] {
+            let _guard = ThreadGuard::pin(threads);
+            assert_bits_equal(
+                &format!("{tag}/{name}/par@{threads}"),
+                &want,
+                &enc.spmv_parallel(&x),
+            );
+        }
+    }
+}
+
+/// Relabel a graph under each scheme and check both the raw CSR (tiled
+/// takes its irregular fallback) and the row-sorted CSR (tiled engages
+/// its u16 column tiles; delta blocks get their best span).
+fn check_graph(tag: &str, g: &Coo) {
+    for scheme in ["boba", "random", "degree"] {
+        let r = reorder::by_name(scheme, 99).unwrap();
+        let (_perm, h) = r.reorder_relabel(g);
+        let csr = convert::coo_to_csr(&h);
+        check_csr(&format!("{tag}@{scheme}"), &csr);
+        let mut sorted = csr.clone();
+        sorted.sort_rows();
+        check_csr(&format!("{tag}@{scheme}+sorted"), &sorted);
+    }
+}
+
+#[test]
+fn formats_match_on_power_law_graph() {
+    // Above PAR_MIN_EDGES (1<<14) so the parallel kernels really fan
+    // out instead of taking their sequential fallback.
+    let g = gen::rmat(&gen::GenParams::rmat(12, 8), 77).randomized(78);
+    assert!(g.m() >= 1 << 14, "must exercise the parallel path, m = {}", g.m());
+    check_graph("rmat", &g);
+}
+
+#[test]
+fn formats_match_on_road_like_graph() {
+    let g = gen::grid_road(140, 120, 5).symmetrized();
+    check_graph("road", &g);
+}
+
+#[test]
+fn formats_match_on_weighted_graph() {
+    // Weights include exact zeros and negatives: a format that drops,
+    // reorders, or pads the value stream shows up immediately.
+    let g = gen::rmat(&gen::GenParams::rmat(12, 8), 31).randomized(32);
+    let vals: Vec<f32> = (0..g.m()).map(|i| ((i % 7) as f32) - 3.0).collect();
+    let w = Coo::with_vals(g.n(), g.src.clone(), g.dst.clone(), vals);
+    assert!(w.m() >= 1 << 14);
+    check_graph("weighted", &w);
+}
+
+#[test]
+fn formats_match_on_degenerate_graphs() {
+    // Empty graph: no edges, 16 isolated vertices.
+    check_graph("empty", &Coo::new(16, vec![], vec![]));
+    // Single vertex with a self-loop (one edge, one block, span 0).
+    check_graph("single", &Coo::new(1, vec![0], vec![0]));
+    // All self-loops: every row has exactly one edge, diagonal matrix.
+    let n = 64u32;
+    let ids: Vec<u32> = (0..n).collect();
+    check_graph("selfloops", &Coo::new(n as usize, ids.clone(), ids));
+}
+
+#[test]
+fn formats_match_on_hub_row_graph() {
+    // One row holding half the edges (row 0 → everyone) plus a ring:
+    // stresses SELL slice padding, the ELL multi-pass row tiles, and
+    // edge-balanced task splitting that lands mid-hub.
+    let n: u32 = 20_000;
+    let mut src = Vec::with_capacity(2 * n as usize);
+    let mut dst = Vec::with_capacity(2 * n as usize);
+    for v in 1..n {
+        src.push(0);
+        dst.push(v);
+    }
+    for v in 0..n {
+        src.push(v);
+        dst.push((v + 1) % n);
+    }
+    let g = Coo::new(n as usize, src, dst);
+    assert!(g.m() >= 1 << 14);
+    check_graph("hub", &g);
+}
+
+#[test]
+fn padding_never_reaches_the_accumulator() {
+    // The sharp probe for padded formats (sell, ell): x[0] = +∞. A
+    // guard-by-length implementation never touches a padded slot; a
+    // guard-by-annihilation implementation (col = 0, val = 0.0) would
+    // compute 0.0 × ∞ = NaN — or for the unweighted add-only kernels,
+    // ∞ + finite where the reference has finite — and diverge bitwise.
+    let g = gen::rmat(&gen::GenParams::rmat(12, 8), 51).randomized(52);
+    let csr = convert::coo_to_csr(&g);
+    let mut x = probe_x(csr.n());
+    x[0] = f32::INFINITY;
+    let want = spmv_pull(&csr, &x);
+    for name in FORMAT_NAMES {
+        let enc = format::encode(name, &csr).unwrap();
+        assert_bits_equal(&format!("inf/{name}/seq"), &want, &enc.spmv(&x));
+        let _guard = ThreadGuard::pin(4);
+        assert_bits_equal(&format!("inf/{name}/par"), &want, &enc.spmv_parallel(&x));
+    }
+}

@@ -1,0 +1,160 @@
+//! Seeded fuzz harness for the delta/narrow CSR encoder
+//! ([`boba::runtime::delta`]).
+//!
+//! The encoder's block structure has sharp corners worth hammering:
+//! column spans of exactly 65535 (the widest narrow block) and 65536
+//! (one past it), single-edge blocks (excluded from narrowing by the
+//! `edges ≥ 2` rule so the descriptor can never outweigh the stream),
+//! empty rows in the middle of occupied blocks, and hub rows crossing
+//! task boundaries. Every trial is driven by [`Xoshiro256`] from a
+//! fixed seed list and every assertion message embeds that seed, so a
+//! failure is replayable by pasting one number into a unit test.
+//!
+//! Invariants per trial: decode roundtrips to the exact input CSR,
+//! `bytes_per_edge` never exceeds plain CSR's 4 B/edge, and both SpMV
+//! kernels are bit-identical to [`spmv_pull`].
+
+use boba::algos::spmv::spmv_pull;
+use boba::convert;
+use boba::graph::{Coo, Csr};
+use boba::runtime::delta::{DeltaCsr, DELTA_BLOCK_ROWS};
+use boba::runtime::format::SpmvFormat;
+use boba::util::prng::Xoshiro256;
+
+/// One random graph: per 64-row block, pick a column window whose span
+/// is drawn from a menu that straddles the narrow/wide boundary, leave
+/// ~a third of the rows empty, and occasionally grow a hub row.
+fn random_graph(seed: u64) -> Coo {
+    let mut rng = Xoshiro256::stream(seed, 1);
+    // A quarter of the trials use a vertex range wide enough that spans
+    // of 65536+ are actually constructible.
+    let boundary = rng.below(4) == 0;
+    let n = if boundary {
+        66_000 + rng.below_usize(8_000)
+    } else {
+        DELTA_BLOCK_ROWS + rng.below_usize(4_000)
+    };
+    let span_menu = [1usize, 100, 65_535, 65_536, usize::MAX];
+    let mut src = Vec::new();
+    let mut dst = Vec::new();
+    for b in 0..n.div_ceil(DELTA_BLOCK_ROWS) {
+        let span = span_menu[rng.below_usize(span_menu.len())].min(n);
+        let lo = rng.below_usize(n - span + 1);
+        for r in 0..DELTA_BLOCK_ROWS {
+            let v = b * DELTA_BLOCK_ROWS + r;
+            if v >= n {
+                break;
+            }
+            if rng.below(3) == 0 {
+                continue; // empty row inside the block
+            }
+            let mut deg = 1 + rng.below_usize(8);
+            if rng.below(64) == 0 {
+                deg += rng.below_usize(512); // hub row
+            }
+            for _ in 0..deg {
+                src.push(v as u32);
+                dst.push((lo + rng.below_usize(span)) as u32);
+            }
+        }
+    }
+    if seed % 2 == 0 {
+        // Weighted half the time; exact zeros included deliberately.
+        let vals = (0..src.len())
+            .map(|_| if rng.below(10) == 0 { 0.0 } else { rng.next_f32() * 2.0 - 1.0 })
+            .collect();
+        Coo::with_vals(n, src, dst, vals)
+    } else {
+        Coo::new(n, src, dst)
+    }
+}
+
+fn check_delta(seed: u64, csr: &Csr) {
+    let enc = DeltaCsr::encode(csr);
+    assert_eq!(
+        &enc.decode(),
+        csr,
+        "seed {seed}: delta decode must roundtrip the input CSR exactly"
+    );
+    assert!(
+        enc.bytes_per_edge() <= 4.0 + 1e-9,
+        "seed {seed}: delta spends {} B/edge, more than plain CSR's 4.0 \
+         (narrow {} / wide {} blocks)",
+        enc.bytes_per_edge(),
+        enc.narrow_blocks(),
+        enc.wide_blocks()
+    );
+    let x: Vec<f32> = (0..csr.n()).map(|i| ((i % 13) as f32) * 0.5 - 3.0).collect();
+    let want = spmv_pull(csr, &x);
+    for (kernel, got) in [("sequential", enc.spmv(&x)), ("parallel", enc.spmv_parallel(&x))] {
+        assert_eq!(want.len(), got.len(), "seed {seed}: {kernel} output length");
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "seed {seed}: {kernel} y[{i}] = {b}, spmv_pull says {a}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fuzz_delta_encoder_roundtrip_and_bits() {
+    for trial in 0..16u64 {
+        let seed = 0xB0BA_0000 + trial;
+        let g = random_graph(seed);
+        check_delta(seed, &convert::coo_to_csr(&g));
+    }
+}
+
+#[test]
+fn span_65535_is_the_widest_narrow_block() {
+    // Row 0 holds columns {0, 65535}: span exactly u16::MAX with ≥ 2
+    // edges — the last configuration the narrow rule admits.
+    let g = Coo::new(70_000, vec![0, 0], vec![0, 65_535]);
+    let csr = convert::coo_to_csr(&g);
+    let enc = DeltaCsr::encode(&csr);
+    assert_eq!(enc.narrow_blocks(), 1, "span 65535 must encode narrow");
+    assert_eq!(enc.wide_blocks(), 0);
+    assert!((enc.bytes_per_edge() - 4.0).abs() < 1e-9, "2×u16 deltas + one u32 base over 2 edges");
+    check_delta(65_535, &csr);
+}
+
+#[test]
+fn span_65536_falls_back_to_wide() {
+    let g = Coo::new(70_000, vec![0, 0], vec![0, 65_536]);
+    let csr = convert::coo_to_csr(&g);
+    let enc = DeltaCsr::encode(&csr);
+    assert_eq!(enc.wide_blocks(), 1, "span 65536 no longer fits a u16 delta");
+    assert_eq!(enc.narrow_blocks(), 0);
+    assert!((enc.bytes_per_edge() - 4.0).abs() < 1e-9, "wide blocks stream raw u32 columns");
+    check_delta(65_536, &csr);
+}
+
+#[test]
+fn single_edge_blocks_stay_wide() {
+    // One edge in the block: narrowing would spend a 4-byte base to
+    // save 2 bytes of column — the `edges ≥ 2` rule forbids it, which
+    // is what makes `bytes_per_edge ≤ 4.0` an invariant, not a hope.
+    let g = Coo::new(128, vec![5], vec![90]);
+    let csr = convert::coo_to_csr(&g);
+    let enc = DeltaCsr::encode(&csr);
+    assert_eq!(enc.wide_blocks(), 1);
+    assert_eq!(enc.narrow_blocks(), 0);
+    check_delta(1, &csr);
+}
+
+#[test]
+fn empty_rows_inside_a_block_are_preserved() {
+    // Only rows 0 and 63 of the first block carry edges; the 62 empty
+    // rows between them must decode back as empty, and the block still
+    // narrows (span 40 across the two occupied rows).
+    let g = Coo::new(64, vec![0, 0, 63], vec![10, 50, 30]);
+    let csr = convert::coo_to_csr(&g);
+    for v in 1..63 {
+        assert_eq!(csr.degree(v), 0);
+    }
+    let enc = DeltaCsr::encode(&csr);
+    assert_eq!(enc.narrow_blocks(), 1);
+    check_delta(63, &csr);
+}

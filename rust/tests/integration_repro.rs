@@ -1,5 +1,5 @@
 //! End-to-end tests of the `boba repro` harness on tiny generated
-//! datasets: schema validity of the emitted JSON, coverage of all four
+//! datasets: schema validity of the emitted JSON, coverage of all five
 //! repro tables, markdown rendering, and the determinism claim — pinned
 //! worker-thread count must not change the permutation a deterministic
 //! scheme produces.
@@ -17,7 +17,7 @@
 use boba::bench::results::ResultsDoc;
 use boba::coordinator::repro::{self, ReproOptions};
 
-/// Tiny inputs so the full T1–T4 sweep stays CI-sized.
+/// Tiny inputs so the full T1–T5 sweep stays CI-sized.
 fn tiny_opts(seed: u64) -> ReproOptions {
     let mut opts = ReproOptions::quick(seed);
     opts.dataset_specs = vec!["rmat:10:4".into(), "grid:40:30".into()];
@@ -32,8 +32,8 @@ fn repro_covers_all_tables_with_valid_schema() {
     let run = repro::run(&tiny_opts(42)).unwrap();
     let doc = &run.doc;
 
-    // All four tables, ≥ 3 reorder schemes (the acceptance bar).
-    assert_eq!(doc.tables(), vec!["T1", "T2", "T3", "T4"]);
+    // All five tables, ≥ 3 reorder schemes (the acceptance bar).
+    assert_eq!(doc.tables(), vec!["T1", "T2", "T3", "T4", "T5"]);
     let schemes = doc.schemes();
     assert!(schemes.len() >= 3, "schemes: {schemes:?}");
     for s in ["boba", "boba-seq", "boba-atomic", "degree", "hub", "random"] {
@@ -128,6 +128,56 @@ fn repro_covers_all_tables_with_valid_schema() {
         );
     }
 
+    // T5 reports every kernel format per scheme with the full metric
+    // set, plus one machine roofline row.
+    let stream = doc.get("T5", "", "", "stream_gbs").expect("stream roofline row");
+    assert!(stream.summary.median_ms > 0.0, "stream GB/s must be positive");
+    for dataset in ["rmat:10:4", "grid:40:30"] {
+        for scheme in ["random", "boba"] {
+            for fmt in ["csr", "delta", "sell", "tiled", "ell"] {
+                for metric in ["bytes_per_edge", "encode_ms", "spmv_ms", "effective_gbs"] {
+                    let rec = doc
+                        .records
+                        .iter()
+                        .find(|r| r.table == "T5" && r.dataset == dataset
+                            && r.scheme == scheme && r.app == fmt && r.metric == metric)
+                        .unwrap_or_else(|| {
+                            panic!("no T5 {metric} row for {dataset}/{scheme}/{fmt}")
+                        });
+                    assert!(
+                        rec.summary.median_ms >= 0.0,
+                        "{dataset}/{scheme}/{fmt}/{metric} negative"
+                    );
+                }
+            }
+        }
+        // Plain CSR streams exactly 4 column bytes per edge; delta never
+        // exceeds it (the narrow rule is span ≤ 65535 *and* ≥ 2 edges).
+        let bpe = |scheme: &str, fmt: &str| {
+            doc.records
+                .iter()
+                .find(|r| r.table == "T5" && r.dataset == dataset && r.scheme == scheme
+                    && r.app == fmt && r.metric == "bytes_per_edge")
+                .unwrap()
+                .summary
+                .median_ms
+        };
+        assert!((bpe("random", "csr") - 4.0).abs() < 1e-9, "{dataset}: csr != 4 B/edge");
+        for scheme in ["random", "boba"] {
+            assert!(
+                bpe(scheme, "delta") <= 4.0 + 1e-9,
+                "{dataset}/{scheme}: delta exceeds plain CSR"
+            );
+        }
+        // The acceptance bar: BOBA's locality never loses to the random
+        // baseline on the delta encoding (equality is allowed — at quick
+        // scale n < 65536 makes every block narrow under any labeling).
+        assert!(
+            bpe("boba", "delta") <= bpe("random", "delta") + 1e-9,
+            "{dataset}: boba delta bytes/edge worse than random"
+        );
+    }
+
     // The emitted JSON round-trips through the strict parser.
     let text = doc.to_json().render();
     let back = ResultsDoc::parse(&text).expect("BENCH_repro.json must be schema-valid");
@@ -136,13 +186,13 @@ fn repro_covers_all_tables_with_valid_schema() {
 
     // The markdown page renders every table from the same records.
     let md = doc.render_markdown();
-    for t in ["## T1", "## T2", "## T3", "## T4"] {
+    for t in ["## T1", "## T2", "## T3", "## T4", "## T5"] {
         assert!(md.contains(t), "markdown missing {t}");
     }
     assert!(md.contains("boba repro"), "regeneration hint present");
 
     // The console rendering names every table too.
-    for t in ["T1 —", "T2 —", "T3 —", "T4 —"] {
+    for t in ["T1 —", "T2 —", "T3 —", "T4 —", "T5 —"] {
         assert!(run.console.contains(t), "console missing {t}");
     }
 }
