@@ -64,12 +64,16 @@ fi
 # single-vs-coalesced pricing row (--coalesce routes 4-query batches
 # through POST /query/batch), written to BENCH_serve.json at the repo
 # root. --spawn self-hosts an ephemeral server so the step is one
-# self-contained command.
+# self-contained command. --overload appends the resilience sweep:
+# open-loop traffic at ~2x measured capacity against an admission-
+# enabled server and an unprotected twin, pricing goodput and accepted-
+# request p99 under overload (retries honor Retry-After).
 if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
     note "serving benchmark (BENCH_serve.json)"
     if ! cargo run --release -- loadgen --spawn --compare --coalesce \
         --dataset rmat:14:8 --conns 4 --requests 600 \
         --mix spmv:7,pagerank:3 --pr-iters 5 --batch-queries 4 \
+        --overload --retries 2 \
         --scrape-metrics --json "$ROOT/BENCH_serve.json"; then
         echo "FAILED (required): serving benchmark"
         FAILURES=$((FAILURES + 1))
@@ -88,6 +92,17 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
         # stage breakdown (ingest/reorder/convert/transpose).
         echo "FAILED (required): BENCH_serve.json lacks the scraped server-side evidence"
         FAILURES=$((FAILURES + 1))
+    else
+        # The overload sweep must land with its resilience accounting:
+        # the serve-overload section (admission vs no_admission rows)
+        # and the new per-run counters.
+        for key in '"serve-overload"' '"overload"' '"no_admission"' \
+                   '"rejected"' '"deadline_exceeded"' '"retries"'; do
+            if ! grep -q "$key" "$ROOT/BENCH_serve.json"; then
+                echo "FAILED (required): BENCH_serve.json lacks $key"
+                FAILURES=$((FAILURES + 1))
+            fi
+        done
     fi
 
     # Observability gate: serve on a fixed port, drive real traffic,
@@ -103,9 +118,21 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
         exec 3>&- 2>/dev/null
     }
     ./target/release/boba serve --addr "127.0.0.1:$OBS_PORT" --workers 4 \
+        --max-inflight 8 --default-deadline-ms 5000 \
         --slow-trace-ms 5000 --format delta &
     SERVE_PID=$!
     sleep 1
+    # Liveness vs readiness split: /healthz answers from the first
+    # accept; /readyz reports ready on an idle, prepared-or-empty
+    # server.
+    if ! http_get /healthz | grep -q '"status":"ok"'; then
+        echo "FAILED (required): /healthz is not answering ok"
+        FAILURES=$((FAILURES + 1))
+    fi
+    if ! http_get /readyz | grep -q '"status":"ready"'; then
+        echo "FAILED (required): /readyz is not ready on an idle server"
+        FAILURES=$((FAILURES + 1))
+    fi
     if ! cargo run --release -- loadgen --addr "127.0.0.1:$OBS_PORT" \
         --dataset rmat:12:8 --conns 2 --requests 120 --mix spmv:3,pagerank:1; then
         echo "FAILED (required): loadgen against the fixed-port server"
@@ -118,7 +145,8 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
                boba_registry_prepares_total boba_pool_dispatches_total \
                boba_coalesce_batches_total boba_coalesce_batch_width \
                boba_stage_duration_seconds boba_process_resident_memory_bytes \
-               boba_traces_total boba_format_bytes_per_edge; do
+               boba_traces_total boba_format_bytes_per_edge \
+               boba_inflight boba_admission_rejected_total boba_deadline_exceeded_total; do
         if ! grep -q "^# TYPE $fam " "$METRICS"; then
             echo "FAILED (required): /metrics lacks family $fam"
             FAILURES=$((FAILURES + 1))

@@ -5,6 +5,12 @@
 //! must stay far below kernel time — the CI smoke gate asserts < 5 µs
 //! per span with tracing on.
 //!
+//! Also prices the resilience fast paths: a disarmed fault point
+//! (`chaos::should` with no `BOBA_FAULTS` spec) and an unscoped
+//! deadline checkpoint (`deadline::expired` with no deadline
+//! installed). Both guard hot loops — kernel iterations, registry
+//! stages — so the smoke gate holds them under 1 µs each.
+//!
 //! Run: `cargo bench --bench micro_obs` (`-- --smoke` for the 1-shot CI
 //! gate).
 
@@ -65,13 +71,43 @@ fn main() {
     let off_us = per_span_us(&off);
     obs::set_enabled(true);
 
+    // Disarmed fault point: with no spec armed `chaos::should` is one
+    // relaxed atomic load and an early return.
+    obs::chaos::clear();
+    let faults = bench.run_with_items("chaos/disarmed", SPANS, || {
+        let mut acc = 0u64;
+        for i in 0..SPANS {
+            acc = acc
+                .wrapping_add(obs::chaos::should("prepare-fail") as u64)
+                .wrapping_add(black_box(i));
+        }
+        acc
+    });
+    let faults_us = per_span_us(&faults);
+
+    // Unscoped deadline checkpoint: with no deadline installed,
+    // `deadline::expired` is one thread-local read.
+    let ddl = bench.run_with_items("deadline/unscoped", SPANS, || {
+        let mut acc = 0u64;
+        for i in 0..SPANS {
+            acc = acc
+                .wrapping_add(boba::util::deadline::expired() as u64)
+                .wrapping_add(black_box(i));
+        }
+        acc
+    });
+    let ddl_us = per_span_us(&ddl);
+
     report.push(on);
     report.push(in_trace);
     report.push(off);
+    report.push(faults);
+    report.push(ddl);
     report.print();
     println!(
         "per-span: stage-histogram {on_us:.4} µs, in-trace {in_trace_us:.4} µs, \
-         disabled {off_us:.4} µs"
+         disabled {off_us:.4} µs; per-check: disarmed fault {faults_us:.4} µs, \
+         unscoped deadline {ddl_us:.4} µs"
     );
 
     if smoke {
@@ -83,6 +119,17 @@ fn main() {
             in_trace_us < 5.0,
             "in-trace span overhead must stay under 5 µs, measured {in_trace_us:.4} µs"
         );
-        println!("smoke ok: span overhead within the 5 µs budget");
+        assert!(
+            faults_us < 1.0,
+            "disarmed fault-point check must stay under 1 µs, measured {faults_us:.4} µs"
+        );
+        assert!(
+            ddl_us < 1.0,
+            "unscoped deadline check must stay under 1 µs, measured {ddl_us:.4} µs"
+        );
+        println!(
+            "smoke ok: span overhead within the 5 µs budget, \
+             resilience checks within the 1 µs budget"
+        );
     }
 }

@@ -8,6 +8,7 @@ use super::spmv;
 use super::trace::{Region, Tracer};
 use crate::graph::Csr;
 use crate::parallel::{self, SendPtr};
+use crate::util::deadline;
 use std::sync::atomic::{AtomicU32, Ordering};
 
 /// PageRank parameters.
@@ -37,12 +38,23 @@ pub struct PrResult {
 }
 
 /// Sequential push-based PageRank.
+///
+/// Cooperatively checks the ambient request deadline
+/// ([`crate::util::deadline`]) before each power iteration: an expired
+/// budget stops the iterate-until-convergence loop early and returns
+/// the ranks computed so far (the serve path discards them and answers
+/// 504 — its post-kernel deadline check fires). With no deadline in
+/// scope the check is a thread-local load and the iteration count is
+/// unchanged, so results stay bit-identical.
 pub fn pagerank(csr: &Csr, p: PrParams) -> PrResult {
     let n = csr.n();
     let mut rank = vec![1.0f32 / n as f32; n];
     let mut next = vec![0f32; n];
     let mut iters = 0;
     for _ in 0..p.max_iters {
+        if deadline::expired() {
+            break;
+        }
         iters += 1;
         next.fill(0.0);
         let mut dangling = 0f32;
@@ -131,6 +143,11 @@ pub fn pagerank_parallel_pull(csr: &Csr, tr: &Csr, p: PrParams) -> PrResult {
     let chunk = parallel::default_chunk(n);
     let mut iters = 0;
     for _ in 0..p.max_iters {
+        // Same per-iteration deadline checkpoint as [`pagerank`]: bail
+        // between power iterations, never mid-pull.
+        if deadline::expired() {
+            break;
+        }
         iters += 1;
         // share[v] = rank[v]/deg(v) — element-wise, deterministic.
         {
@@ -396,6 +413,18 @@ mod tests {
         let b = pagerank_traced(&csr, PrParams::default(), 1, &mut t);
         assert_eq!(a.ranks, b.ranks);
         assert!(!t.addrs.is_empty());
+    }
+
+    #[test]
+    fn expired_deadline_stops_iterating_between_iterations() {
+        let g = gen::preferential_attachment(500, 3, 1);
+        let csr = coo_to_csr(&g);
+        let d = crate::util::deadline::scope(Some(std::time::Instant::now()));
+        let r = pagerank(&csr, PrParams::default());
+        assert_eq!(r.iters, 0, "spent budget must stop before the first iteration");
+        drop(d);
+        // With the scope gone the kernel iterates normally again.
+        assert!(pagerank(&csr, PrParams::default()).iters > 0);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 
 use super::trace::{Region, Tracer};
 use crate::graph::Csr;
+use crate::util::deadline;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -49,6 +50,13 @@ pub fn dijkstra(csr: &Csr, source: u32) -> Distances {
 
 /// Frontier-based relaxation (the GPU pattern): repeatedly relax all
 /// edges out of the active frontier until no distance changes.
+///
+/// Checks the ambient request deadline ([`crate::util::deadline`])
+/// between rounds: an expired budget abandons the remaining frontier
+/// and returns the (partial) distances relaxed so far — the serve
+/// path's post-kernel deadline check turns that into a 504 instead of
+/// serving them. Unscoped callers see a thread-local load per round and
+/// an unchanged fixpoint.
 pub fn sssp_frontier(csr: &Csr, source: u32) -> Distances {
     let n = csr.n();
     let mut dist = vec![f32::INFINITY; n];
@@ -56,6 +64,9 @@ pub fn sssp_frontier(csr: &Csr, source: u32) -> Distances {
     let mut frontier = vec![source];
     let mut in_next = vec![false; n];
     while !frontier.is_empty() {
+        if deadline::expired() {
+            break;
+        }
         let mut next = Vec::new();
         for &v in &frontier {
             let dv = dist[v as usize];
@@ -176,6 +187,12 @@ pub fn sssp_frontier_multi(csr: &Csr, sources: &[u32]) -> Vec<f32> {
         active[src] |= 1 << i;
     }
     while !frontier.is_empty() {
+        // Per-round deadline checkpoint, as in [`sssp_frontier`]: the
+        // whole batch aborts together (partial distances are discarded
+        // by the caller's post-kernel deadline check).
+        if deadline::expired() {
+            break;
+        }
         for &v in &frontier {
             let v = v as usize;
             let mask = active[v];
@@ -285,6 +302,22 @@ mod tests {
         assert_eq!(d[3 + 1], 0.0);
         assert_eq!(d[2 * 3 + 2], 0.0);
         assert!(d[0].is_infinite() && d[3].is_infinite());
+    }
+
+    #[test]
+    fn expired_deadline_abandons_remaining_rounds() {
+        let g = Coo::new(4, vec![0, 1, 2], vec![1, 2, 3]);
+        let csr = coo_to_csr(&g);
+        let d = crate::util::deadline::scope(Some(std::time::Instant::now()));
+        // Source distance is set before the first round, every other
+        // vertex stays unreached — the kernel never relaxed an edge.
+        let partial = sssp_frontier(&csr, 0);
+        assert_eq!(partial[0], 0.0);
+        assert!(partial[1..].iter().all(|v| v.is_infinite()));
+        let multi = sssp_frontier_multi(&csr, &[0, 1]);
+        assert!(multi[1].is_infinite() && multi[4 + 2].is_infinite());
+        drop(d);
+        assert_eq!(sssp_frontier(&csr, 0), vec![0.0, 1.0, 2.0, 3.0]);
     }
 
     #[test]

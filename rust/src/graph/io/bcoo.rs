@@ -10,14 +10,21 @@
 //! ```text
 //! offset  size  field
 //!      0     4  magic  b"BCOO"
-//!      4     4  version (u32, currently 1)
+//!      4     4  version (u32, currently 2; 1 still readable)
 //!      8     4  flags   (u32: bit 0 = has vals, bit 1 = dense-relabeled)
 //!     12     8  n       (u64 vertex count)
 //!     20     8  m       (u64 edge count)
 //!     28    4m  src     (m × u32)
 //!   28+4m   4m  dst     (m × u32)
 //!   28+8m   4m  vals    (m × f32, present iff flag bit 0)
+//!    end     8  FNV-64 checksum of every preceding byte (version ≥ 2)
 //! ```
+//!
+//! Version 2 appends an FNV-1a 64-bit checksum of the whole file body,
+//! so a bit-flipped or truncated cache is detected at load instead of
+//! silently changing answers (the length check alone cannot catch an
+//! in-place flip). Version-1 files (no trailer) are still read — an
+//! old cache keeps working until its source changes.
 //!
 //! The **sidecar cache**: the first text parse of `graph.mtx` writes
 //! `graph.mtx.bcoo` next to it; later loads take the binary path when
@@ -27,9 +34,13 @@
 //! names (`g.el.bcoo` preserve-ids, `g.el.dense.bcoo` dense) so mixed
 //! consumers keep both warm, and flag bit 1 additionally records the
 //! mode so a renamed file is never served for the wrong one. Set
-//! `BOBA_NO_BCOO_CACHE=1` to disable both sides of the cache; a stale,
-//! truncated, or foreign sidecar is ignored (the text is re-parsed and
-//! the sidecar rewritten), never an error.
+//! `BOBA_NO_BCOO_CACHE=1` to disable both sides of the cache; a stale
+//! or wrong-mode sidecar is silently ignored (the text is re-parsed and
+//! the sidecar rewritten), never an error. A sidecar that fails to
+//! *parse* — bad checksum, truncation, zero length — is **quarantined**:
+//! renamed to `<sidecar>.bad` (preserving the evidence for inspection)
+//! before the text re-parse rewrites a fresh one, so a corrupt cache
+//! can never be retried forever or silently deleted.
 
 use crate::graph::Coo;
 use crate::parallel;
@@ -39,8 +50,9 @@ use std::path::{Path, PathBuf};
 
 /// Magic bytes every `.bcoo` file starts with.
 pub const MAGIC: [u8; 4] = *b"BCOO";
-/// Format version this build reads and writes.
-pub const VERSION: u32 = 1;
+/// Format version this build writes (trailing FNV-64 checksum); it
+/// still reads version 1 (checksum-less) files.
+pub const VERSION: u32 = 2;
 /// Flag bit: the file carries an f32 values array.
 pub const FLAG_VALS: u32 = 1;
 /// Flag bit: the edge list was dense-relabeled (first-appearance order)
@@ -48,6 +60,22 @@ pub const FLAG_VALS: u32 = 1;
 pub const FLAG_DENSE: u32 = 1 << 1;
 
 const HEADER_LEN: usize = 28;
+/// Bytes of trailing checksum in a version ≥ 2 file.
+const SUM_LEN: usize = 8;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64-bit hash — the `.bcoo` integrity checksum. Not
+/// cryptographic: it detects bit flips and truncation, which is the
+/// failure model for an on-disk cache, at one multiply per byte.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
 
 /// Read a `.bcoo` file.
 pub fn read_bcoo(path: &Path) -> Result<Coo> {
@@ -71,23 +99,34 @@ fn parse_bcoo(bytes: &[u8]) -> Result<(Coo, u32)> {
     let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
     let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
     let version = u32_at(4);
-    if version != VERSION {
-        bail!("unsupported .bcoo version {version} (this reader understands {VERSION})");
+    if version != 1 && version != VERSION {
+        bail!("unsupported .bcoo version {version} (this reader understands 1..={VERSION})");
     }
+    let trailer = if version >= 2 { SUM_LEN as u64 } else { 0 };
     let flags = u32_at(8);
     let n = u64_at(12);
     let m = u64_at(20);
     let arrays = if flags & FLAG_VALS != 0 { 3u64 } else { 2 };
     let expected = m
         .checked_mul(4 * arrays)
-        .and_then(|b| b.checked_add(HEADER_LEN as u64))
+        .and_then(|b| b.checked_add(HEADER_LEN as u64 + trailer))
         .filter(|&b| b == bytes.len() as u64);
     if expected.is_none() {
         bail!(
             "truncated .bcoo: m={m} with flags {flags:#x} needs {} bytes, file has {}",
-            m.saturating_mul(4 * arrays).saturating_add(HEADER_LEN as u64),
+            m.saturating_mul(4 * arrays).saturating_add(HEADER_LEN as u64 + trailer),
             bytes.len()
         );
+    }
+    if version >= 2 {
+        let body = &bytes[..bytes.len() - SUM_LEN];
+        let stored = u64::from_le_bytes(bytes[bytes.len() - SUM_LEN..].try_into().unwrap());
+        let computed = fnv64(body);
+        if stored != computed {
+            bail!(
+                "corrupt .bcoo: FNV-64 checksum mismatch (stored {stored:#018x}, computed {computed:#018x})"
+            );
+        }
     }
     let (n, m) = (n as usize, m as usize);
     let src = u32s_from_le(&bytes[HEADER_LEN..HEADER_LEN + 4 * m]);
@@ -125,7 +164,10 @@ pub fn write_bcoo(coo: &Coo, path: &Path) -> Result<()> {
 pub(crate) fn write_bcoo_flagged(coo: &Coo, path: &Path, extra_flags: u32) -> Result<()> {
     let f = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
-    let mut w = std::io::BufWriter::with_capacity(1 << 20, f);
+    let mut w = HashingWriter {
+        inner: std::io::BufWriter::with_capacity(1 << 20, f),
+        hash: FNV_OFFSET,
+    };
     let mut flags = extra_flags;
     if coo.vals.is_some() {
         flags |= FLAG_VALS;
@@ -141,8 +183,32 @@ pub(crate) fn write_bcoo_flagged(coo: &Coo, path: &Path, extra_flags: u32) -> Re
         // f32 and u32 share size/alignment; serialize the bit patterns.
         write_f32s(&mut w, v)?;
     }
-    w.flush()?;
+    // The trailer hashes everything before it and is not self-hashed.
+    let sum = w.hash;
+    w.inner.write_all(&sum.to_le_bytes())?;
+    w.inner.flush()?;
     Ok(())
+}
+
+/// Folds every written byte into an FNV-1a state on the way to the
+/// underlying writer, so the version-2 trailer is computed in the same
+/// single pass that serializes the arrays.
+struct HashingWriter<W: Write> {
+    inner: W,
+    hash: u64,
+}
+
+impl<W: Write> Write for HashingWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        for &b in &buf[..n] {
+            self.hash = (self.hash ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+        Ok(n)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
 }
 
 /// Sidecar path for a text source in the default (preserve-ids / mtx)
@@ -177,7 +243,14 @@ pub fn cache_enabled() -> bool {
 /// filesystem timestamps: a source rewritten within the mtime
 /// granularity of the sidecar write re-parses (wasted work) instead of
 /// serving the old graph (wrong result). Any failure means "re-parse
-/// the text" — never an error.
+/// the text" — never an error — but a sidecar that fails to *parse*
+/// (checksum mismatch, truncation, zero length) is quarantined first:
+/// renamed to `<sidecar>.bad` so the corrupt bytes survive for
+/// inspection and the fresh rewrite cannot race a retry loop. A stale
+/// or wrong-mode sidecar is left in place untouched — it is valid, just
+/// not usable for this load. The `corrupt-sidecar` fault point
+/// ([`crate::obs::chaos`]) makes an otherwise-healthy read take the
+/// corrupt path, exercising quarantine + fallback end to end.
 pub(crate) fn try_sidecar(path: &Path, dense: bool) -> Option<Coo> {
     let sc = sidecar_path_for(path, dense);
     let source_mtime = mtime(path)?;
@@ -185,8 +258,33 @@ pub(crate) fn try_sidecar(path: &Path, dense: bool) -> Option<Coo> {
     if sidecar_mtime <= source_mtime {
         return None; // stale (or indistinguishable from stale)
     }
-    let (coo, flags) = read_bcoo_flagged(&sc).ok()?;
-    ((flags & FLAG_DENSE != 0) == dense).then_some(coo)
+    let parsed = if crate::obs::chaos::should("corrupt-sidecar") {
+        Err(anyhow::anyhow!("injected fault: corrupt-sidecar"))
+    } else {
+        read_bcoo_flagged(&sc)
+    };
+    match parsed {
+        Ok((coo, flags)) => ((flags & FLAG_DENSE != 0) == dense).then_some(coo),
+        Err(e) => {
+            quarantine(&sc, &e);
+            None
+        }
+    }
+}
+
+/// Rename a corrupt sidecar to `<sidecar>.bad` (best-effort) and log
+/// why — the text re-parse that follows rewrites a fresh cache.
+fn quarantine(sc: &Path, why: &anyhow::Error) {
+    let mut name = sc.as_os_str().to_os_string();
+    name.push(".bad");
+    let dest = PathBuf::from(name);
+    if std::fs::rename(sc, &dest).is_ok() {
+        eprintln!(
+            "[boba] quarantined corrupt sidecar {} -> {} ({why:#}); re-parsing text",
+            sc.display(),
+            dest.display()
+        );
+    }
 }
 
 /// Per-write tmp-name discriminator: the pid alone is not unique
@@ -318,8 +416,17 @@ mod tests {
         std::fs::remove_file(&p).ok();
     }
 
+    /// Recompute the version-2 trailer after editing payload bytes, so
+    /// a test can reach the checks that run *after* checksum
+    /// verification.
+    fn patch_sum(bytes: &mut [u8]) {
+        let len = bytes.len();
+        let sum = fnv64(&bytes[..len - SUM_LEN]);
+        bytes[len - SUM_LEN..].copy_from_slice(&sum.to_le_bytes());
+    }
+
     #[test]
-    fn rejects_bad_magic_version_truncation_and_bounds() {
+    fn rejects_bad_magic_version_truncation_checksum_and_bounds() {
         let g = Coo::new(3, vec![0, 1], vec![1, 2]);
         let p = tmp("bad.bcoo");
         write_bcoo(&g, &p).unwrap();
@@ -341,13 +448,40 @@ mod tests {
         assert!(chain(&p).contains("truncated"));
 
         let mut bad = good.clone();
+        bad[HEADER_LEN] ^= 0x01; // payload bit flip, trailer untouched
+        std::fs::write(&p, &bad).unwrap();
+        assert!(chain(&p).contains("checksum"));
+
+        let mut bad = good.clone();
         bad[HEADER_LEN] = 200; // src[0] = 200 ≥ n = 3
+        patch_sum(&mut bad); // honest trailer so the bounds check runs
         std::fs::write(&p, &bad).unwrap();
         assert!(chain(&p).contains("out of range"));
 
         std::fs::write(&p, b"BC").unwrap();
         assert!(read_bcoo(&p).is_err());
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn version_1_files_without_checksum_still_read() {
+        let g = Coo::new(4, vec![0, 3], vec![1, 2]);
+        let p = tmp("v1.bcoo");
+        write_bcoo(&g, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.truncate(bytes.len() - SUM_LEN); // strip the v2 trailer
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert_eq!(read_bcoo(&p).unwrap(), g, "checksum-less v1 caches stay readable");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn fnv64_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x8594_4171_f739_67e8);
     }
 
     #[test]

@@ -11,23 +11,38 @@
 //!   serve     [--addr H:P] [--workers W] [--cache C] [--batch B]
 //!             [--in-flight K] [--batch-window-us U] [--max-batch K]
 //!             [--no-trace] [--slow-trace-ms T] [--format F]
+//!             [--rate R] [--burst B] [--max-inflight K]
+//!             [--default-deadline-ms D]
 //!                                      run the graph-analytics service;
 //!             --no-trace disables stage-span tracing (BOBA_NO_TRACE=1
 //!             does the same), --slow-trace-ms logs slower traces to
 //!             stderr as one-line JSON, --format encodes a compressed
 //!             kernel variant (csr|delta|sell|tiled|ell) per artifact,
-//!             gated bit-identical at prepare and exposed on /metrics
+//!             gated bit-identical at prepare and exposed on /metrics;
+//!             --rate/--burst set the per-tenant token bucket (429 +
+//!             Retry-After when drained), --max-inflight caps
+//!             concurrent queries (expensive kinds shed first, 503),
+//!             --default-deadline-ms bounds requests that send no
+//!             x-deadline-ms header (504 past the budget); BOBA_FAULTS
+//!             arms deterministic fault injection (see /debug/faults)
 //!   loadgen   [--addr H:P] [--conns C] [--requests R] [--dataset N]
 //!             [--scheme S] [--mix spmv:7,pagerank:3] [--pr-iters I]
 //!             [--compare] [--coalesce] [--batch-queries K]
 //!             [--compare-coalesced] [--scrape-metrics] [--json F]
-//!             [--spawn]
+//!             [--spawn] [--target-qps Q] [--retries N] [--backoff-ms B]
+//!             [--overload]
 //!             drive a server; --coalesce sends K-query batches through
 //!             POST /query/batch (with --compare it appends a
 //!             single-vs-coalesced pricing row; --compare-coalesced
 //!             prices just that contrast); --scrape-metrics diffs
 //!             GET /metrics around each run and embeds the server-side
-//!             percentiles/stage breakdown into the report
+//!             percentiles/stage breakdown into the report;
+//!             --target-qps switches to an open-loop arrival schedule,
+//!             --retries/--backoff-ms retry 429/503 rejections with
+//!             jittered exponential backoff honoring Retry-After,
+//!             --overload appends an admission-on vs unprotected
+//!             overload sweep at 2x measured capacity (spawns its own
+//!             servers; composable with --compare)
 //!   table1 | table3 | fig4 | fig5 | fig6 | fig7  regenerate a paper table/figure
 //!   repro     [--quick|--full] [--tables t1,t2,t3,t4,t5] [--threads N]
 //!             [--datasets A,B] [--reps K] [--json F] [--md F]
@@ -202,6 +217,9 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 coalesce: args.flag("coalesce"),
                 batch: args.get_parse("batch-queries", 4),
                 scrape_metrics: args.flag("scrape-metrics"),
+                target_qps: args.get_parse("target-qps", 0.0),
+                retries: args.get_parse("retries", 0),
+                backoff_ms: args.get_parse("backoff-ms", 50),
             };
             // --spawn: self-host an ephemeral server for the run (CI's
             // one-command benchmark mode).
@@ -258,6 +276,21 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 let report = loadgen::run(&cfg)?;
                 println!("{}", report.render());
                 report.to_json()
+            };
+            // --overload: append the admission-on vs unprotected sweep
+            // (it provisions its own pair of ephemeral servers, so it
+            // composes with any of the modes above).
+            let doc = if args.flag("overload") {
+                let sweep = loadgen_overload(args, &cfg, seed)?;
+                match doc {
+                    boba::util::Json::Obj(mut pairs) => {
+                        pairs.push(("overload".to_string(), sweep));
+                        boba::util::Json::Obj(pairs)
+                    }
+                    other => other,
+                }
+            } else {
+                doc
             };
             if let Some(path) = args.get("json") {
                 std::fs::write(path, doc.render() + "\n")?;
@@ -376,7 +409,90 @@ fn server_config(args: &Args, seed: u64) -> ServerConfig {
         trace: !args.flag("no-trace"),
         slow_trace_ms: args.get("slow-trace-ms").and_then(|v| v.parse().ok()),
         format: args.get("format").map(|v| v.to_string()),
+        rate: args.get_parse("rate", default.rate),
+        burst: args.get_parse("burst", default.burst),
+        max_inflight: args.get_parse("max-inflight", default.max_inflight),
+        default_deadline_ms: args.get("default-deadline-ms").and_then(|v| v.parse().ok()),
     }
+}
+
+/// The `loadgen --overload` sweep: measure unloaded latency and
+/// closed-loop capacity against an admission-enabled server, then drive
+/// the same mix open-loop at 2× capacity against that server and
+/// against an unprotected twin. Both servers are ephemeral — the sweep
+/// never touches the `--addr` target.
+fn loadgen_overload(
+    args: &Args,
+    cfg: &loadgen::LoadgenConfig,
+    seed: u64,
+) -> anyhow::Result<boba::util::Json> {
+    // Admission-enabled server from the serve flags, defaulting the
+    // protections ON where the flags left them unconfigured (a sweep
+    // against an unprotected "protected" server prices nothing).
+    let mut scfg = server_config(args, seed);
+    scfg.addr = "127.0.0.1:0".to_string();
+    if scfg.max_inflight == 0 {
+        scfg.max_inflight = scfg.workers.max(2);
+    }
+    if scfg.default_deadline_ms.is_none() {
+        scfg.default_deadline_ms = Some(2_000);
+    }
+    let protected = server::spawn(scfg.clone())?;
+
+    // Unloaded reference: one closed-loop connection, small sample.
+    let mut unloaded_cfg = cfg.clone();
+    unloaded_cfg.addr = protected.addr().to_string();
+    unloaded_cfg.target_qps = 0.0;
+    unloaded_cfg.conns = 1;
+    unloaded_cfg.requests = cfg.requests.clamp(20, 100);
+    let unloaded = loadgen::run(&unloaded_cfg)?;
+
+    // Closed-loop capacity with the full connection count (the cached
+    // artifact, so this measures query service, not preparation).
+    let mut cap_cfg = cfg.clone();
+    cap_cfg.addr = protected.addr().to_string();
+    cap_cfg.target_qps = 0.0;
+    let capacity = loadgen::run(&cap_cfg)?;
+    let target =
+        if cfg.target_qps > 0.0 { cfg.target_qps } else { (capacity.qps * 2.0).max(1.0) };
+
+    // 2× overload against the protected server…
+    let mut over_cfg = cap_cfg.clone();
+    over_cfg.target_qps = target;
+    if over_cfg.retries == 0 {
+        over_cfg.retries = 2; // exercise the Retry-After-honoring backoff
+    }
+    let admission = loadgen::run(&over_cfg)?;
+    protected.shutdown();
+
+    // …and the same overload against an unprotected twin.
+    let mut base_scfg = scfg;
+    base_scfg.rate = 0.0;
+    base_scfg.burst = 0.0;
+    base_scfg.max_inflight = 0;
+    base_scfg.default_deadline_ms = None;
+    let unprotected = server::spawn(base_scfg)?;
+    let mut base_cfg = over_cfg.clone();
+    base_cfg.addr = unprotected.addr().to_string();
+    let no_admission = loadgen::run(&base_cfg)?;
+    unprotected.shutdown();
+
+    println!("unloaded     {}", unloaded.render());
+    println!("capacity     {}", capacity.render());
+    println!("admission    {}", admission.render());
+    println!("no-admission {}", no_admission.render());
+    let vs = |p99: f64| if unloaded.p99_ms > 0.0 { p99 / unloaded.p99_ms } else { 0.0 };
+    println!(
+        "overload @ {target:.0} q/s offered: admission p99 {:.3} ms ({:.2}x unloaded) vs \
+         unprotected p99 {:.3} ms ({:.2}x); goodput {:.0} vs {:.0} q/s",
+        admission.p99_ms,
+        vs(admission.p99_ms),
+        no_admission.p99_ms,
+        vs(no_admission.p99_ms),
+        admission.qps,
+        no_admission.qps,
+    );
+    Ok(loadgen::overload_comparison_json(&unloaded, &capacity, &admission, &no_admission, target))
 }
 
 /// Load a graph from `--in FILE` or build `--dataset NAME` (default

@@ -1,0 +1,234 @@
+//! Deterministic fault injection for the resilience test harness.
+//!
+//! Production code is sprinkled with named **fault points** —
+//! `chaos::fire("prepare-fail")` in the registry, `"conn-drop"` in the
+//! connection loop, `"corrupt-sidecar"` in the `.bcoo` cache read,
+//! `"slow-stage"` inside [`crate::obs::span`] — that do nothing unless
+//! a fault spec arms them. With nothing armed every hook is a single
+//! relaxed atomic load (the same kill-switch shape as the tracing
+//! `enabled()` check), so the hooks are free on the hot path; the
+//! `micro_obs` bench smoke asserts as much.
+//!
+//! Faults are armed by the `BOBA_FAULTS` environment variable at
+//! server start or programmatically / via `POST /debug/faults` in
+//! tests. The spec grammar is a comma-separated list of:
+//!
+//! ```text
+//! prepare-fail[:COUNT[:SKIP]]      fail the next COUNT prepares (after SKIP)
+//! conn-drop[:COUNT[:SKIP]]        drop the next COUNT connections pre-read
+//! corrupt-sidecar[:COUNT[:SKIP]]  treat the next COUNT sidecar reads as corrupt
+//! slow-stage:MS[:COUNT[:SKIP]]    delay the next COUNT stage spans by MS ms
+//! ```
+//!
+//! `COUNT` defaults to 1; `SKIP` (default 0) skips that many
+//! occurrences first, so "fail the third prepare" is
+//! `prepare-fail:1:2`. Firing is **counter-based and therefore fully
+//! deterministic**: the same spec against the same request sequence
+//! injects the same faults, which is what lets the integration tests
+//! assert exact outcomes instead of retry-until-flaky.
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// One armed fault point: optional parameter (milliseconds for
+/// `slow-stage`), remaining firing budget, occurrences to skip first.
+#[derive(Debug, Clone, Copy)]
+struct Fault {
+    param: u64,
+    budget: u64,
+    skip: u64,
+}
+
+/// Fast-path arm flag: one relaxed load decides "no faults configured"
+/// without touching the table lock.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static TABLE: Mutex<BTreeMap<String, Fault>> = Mutex::new(BTreeMap::new());
+
+/// Serializes every test that mutates the process-global fault table —
+/// this module's own unit tests and the router's `/debug/faults` test
+/// share it so they cannot clobber each other's armed state.
+#[cfg(test)]
+pub(crate) static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Fault-point names that take a leading numeric parameter in the spec.
+const PARAM_POINTS: &[&str] = &["slow-stage", "test-param"];
+/// All fault-point names the code base hooks — unknown names in a spec
+/// are an error so typos fail loudly instead of silently never firing.
+/// `test-point`/`test-param` are hooked by nothing: the unit tests use
+/// them to exercise arming/budget/skip mechanics without racing the
+/// real hooks that concurrently-running tests drive (the table is
+/// process-global).
+const KNOWN_POINTS: &[&str] =
+    &["prepare-fail", "conn-drop", "corrupt-sidecar", "slow-stage", "test-point", "test-param"];
+
+/// True when any fault point is armed. One relaxed atomic load — every
+/// hook checks this before touching the table.
+#[inline]
+pub fn enabled() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Fire the fault point `name` if it is armed with remaining budget:
+/// returns `Some(param)` (the `MS` field for `slow-stage`, 0 for the
+/// others) when the fault should be injected, `None` otherwise.
+/// Decrements the budget (or the skip counter) on each armed call.
+pub fn fire(name: &str) -> Option<u64> {
+    if !enabled() {
+        return None;
+    }
+    let mut table = TABLE.lock().unwrap();
+    let fired = match table.get_mut(name) {
+        Some(f) if f.skip > 0 => {
+            f.skip -= 1;
+            None
+        }
+        Some(f) if f.budget > 0 => {
+            f.budget -= 1;
+            Some(f.param)
+        }
+        _ => None,
+    };
+    if fired.is_some() && table.values().all(|f| f.budget == 0) {
+        ARMED.store(false, Ordering::Relaxed);
+    }
+    fired
+}
+
+/// Convenience wrapper: true when [`fire`] fires (for points whose
+/// parameter is unused).
+pub fn should(name: &str) -> bool {
+    fire(name).is_some()
+}
+
+/// Replace the armed fault table from a spec string (see the module
+/// docs for the grammar). An empty spec clears all faults.
+pub fn set_spec(spec: &str) -> anyhow::Result<()> {
+    let mut next: BTreeMap<String, Fault> = BTreeMap::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let mut parts = entry.split(':');
+        let name = parts.next().unwrap_or_default();
+        if !KNOWN_POINTS.contains(&name) {
+            anyhow::bail!("unknown fault point {name:?} (known: {})", KNOWN_POINTS.join(", "));
+        }
+        let mut nums = Vec::with_capacity(3);
+        for p in parts {
+            nums.push(
+                p.parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("fault {entry:?}: {p:?} is not a number"))?,
+            );
+        }
+        let takes_param = PARAM_POINTS.contains(&name);
+        if takes_param && nums.is_empty() {
+            anyhow::bail!("fault {name} needs a parameter, e.g. {name}:50");
+        }
+        if nums.len() > 2 + takes_param as usize {
+            anyhow::bail!("fault {entry:?}: too many fields");
+        }
+        let mut it = nums.into_iter();
+        let param = if takes_param { it.next().unwrap() } else { 0 };
+        let budget = it.next().unwrap_or(1);
+        let skip = it.next().unwrap_or(0);
+        next.insert(name.to_string(), Fault { param, budget, skip });
+    }
+    let armed = next.values().any(|f| f.budget > 0);
+    *TABLE.lock().unwrap() = next;
+    ARMED.store(armed, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Disarm every fault point.
+pub fn clear() {
+    TABLE.lock().unwrap().clear();
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+/// Arm faults from `BOBA_FAULTS` if set. A malformed spec is reported
+/// on stderr and ignored (a typo must not take the server down — the
+/// debug endpoint reports what is actually armed).
+pub fn init_from_env() {
+    if let Ok(spec) = std::env::var("BOBA_FAULTS") {
+        if let Err(e) = set_spec(&spec) {
+            eprintln!("[boba] ignoring BOBA_FAULTS: {e:#}");
+        }
+    }
+}
+
+/// The armed fault table as JSON (served by `GET /debug/faults`):
+/// `{"armed":bool,"faults":[{"point","param","remaining","skip"},..]}`.
+pub fn snapshot_json() -> Json {
+    let table = TABLE.lock().unwrap();
+    let faults: Vec<Json> = table
+        .iter()
+        .map(|(name, f)| {
+            Json::obj(vec![
+                ("point", Json::Str(name.clone())),
+                ("param", Json::Num(f.param as f64)),
+                ("remaining", Json::Num(f.budget as f64)),
+                ("skip", Json::Num(f.skip as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("armed", Json::Bool(enabled())), ("faults", Json::Arr(faults))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_is_free_and_never_fires() {
+        let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        clear();
+        assert!(!enabled());
+        assert!(fire("test-point").is_none());
+        assert!(!should("test-point"));
+    }
+
+    #[test]
+    fn budget_and_skip_are_deterministic() {
+        let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_spec("test-point:2:1").unwrap();
+        assert!(enabled());
+        assert!(!should("test-point"), "first occurrence skipped");
+        assert!(should("test-point"));
+        assert!(should("test-point"));
+        assert!(!should("test-point"), "budget exhausted");
+        assert!(!enabled(), "exhausting every budget disarms the fast path");
+        clear();
+    }
+
+    #[test]
+    fn param_points_carry_their_parameter() {
+        let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_spec("test-param:75:1").unwrap();
+        assert_eq!(fire("test-param"), Some(75));
+        assert_eq!(fire("test-param"), None);
+        clear();
+    }
+
+    #[test]
+    fn spec_errors_and_clearing() {
+        let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(set_spec("no-such-fault:1").is_err());
+        assert!(set_spec("slow-stage").is_err(), "slow-stage needs its ms parameter");
+        assert!(set_spec("prepare-fail:x").is_err());
+        assert!(set_spec("prepare-fail:1:2:3").is_err(), "too many fields");
+        set_spec("test-point:3").unwrap();
+        set_spec("").unwrap();
+        assert!(!enabled());
+        let snap = snapshot_json().render();
+        assert!(snap.contains("\"armed\":false"), "snapshot was {snap}");
+    }
+
+    #[test]
+    fn snapshot_lists_armed_points() {
+        let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_spec("test-point:2,test-param:10:4:1").unwrap();
+        let snap = snapshot_json().render();
+        assert!(snap.contains("\"point\":\"test-point\""), "snapshot was {snap}");
+        assert!(snap.contains("\"remaining\":4"), "snapshot was {snap}");
+        clear();
+    }
+}

@@ -21,6 +21,12 @@
 //! `anyhow`), never on `server` — the server threads `obs` through its
 //! handlers, not the other way around.
 
+//! A fourth, test-only layer rides along: [`chaos`], the deterministic
+//! fault-injection registry behind `BOBA_FAULTS` — armed only by the
+//! resilience tests and overload drills, a single relaxed atomic load
+//! otherwise.
+
+pub mod chaos;
 pub mod hist;
 pub mod metrics;
 pub mod ring;

@@ -234,6 +234,12 @@ pub fn begin() -> TraceGuard {
 /// is open. With tracing disabled this is a plain call (one relaxed
 /// load).
 pub fn span<T>(name: &'static str, f: impl FnOnce() -> T) -> T {
+    // Fault point: an armed `slow-stage` chaos spec delays named stages
+    // (simulating a seized disk or a cold cache) — when unarmed this is
+    // one relaxed atomic load inside `chaos::fire`.
+    if let Some(ms) = super::chaos::fire("slow-stage") {
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+    }
     if !enabled() {
         return f();
     }

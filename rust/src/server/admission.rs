@@ -1,0 +1,423 @@
+//! Admission control: per-tenant token buckets, a global in-flight
+//! gate with bounded parking, and the load-shedding ladder.
+//!
+//! Every query request passes three checks, cheapest first:
+//!
+//! 1. **Rate** — a token bucket per tenant (`x-tenant` header,
+//!    `"default"` otherwise) refilled at `--rate` tokens/sec up to
+//!    `--burst`. An empty bucket is a `429 Too Many Requests` with a
+//!    `Retry-After` priced from the refill rate.
+//! 2. **Shed** — when the in-flight gate is saturated, *expensive*
+//!    query kinds (triangle counting, PageRank) are refused immediately
+//!    with `503` instead of queueing: a cheap SpMV behind a parked TC
+//!    would otherwise inherit its whole queue delay, and the expensive
+//!    kinds are exactly the ones a loaded server cannot afford to
+//!    start. `/readyz` reports `degraded` while this ladder is active.
+//! 3. **Queue** — up to `--max-inflight` requests execute; up to the
+//!    same number again park on a condvar (FIFO by wakeup) waiting for
+//!    a slot. The parking is deadline-aware — a waiter whose
+//!    `x-deadline-ms` budget runs out detaches with `504` instead of
+//!    executing work nobody is waiting for — and `Server::shutdown`
+//!    releases every parked waiter with `503`. Beyond the parking cap
+//!    the request is refused with `503 queue full`.
+//!
+//! With both knobs at their defaults (`--rate 0 --max-inflight 0`) the
+//! whole module is two integer compares per request — the admission
+//! path adds nothing to an unconfigured server.
+//!
+//! Rejections are counted per `(tenant, reason)` and surfaced in
+//! `/stats` and the `boba_admission_rejected_total{tenant,reason}` and
+//! `boba_inflight` metric families.
+
+use crate::util::{deadline, Json};
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Tenant label used when the request carries no `x-tenant` header.
+pub const DEFAULT_TENANT: &str = "default";
+/// Distinct-tenant cap for the bucket and counter maps: tenants beyond
+/// it share one `"other"` bucket so a label-spraying client cannot
+/// balloon server memory or metric cardinality.
+pub const MAX_TENANTS: usize = 256;
+
+/// Admission knobs (all off by default — see the module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Token-bucket refill, tokens/sec per tenant; `0.0` disables rate
+    /// limiting.
+    pub rate: f64,
+    /// Token-bucket capacity; `0.0` defaults to `max(rate, 1)`.
+    pub burst: f64,
+    /// Concurrent-execution cap (an equal number may park behind it);
+    /// `0` disables the gate and the shed ladder.
+    pub max_inflight: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self { rate: 0.0, burst: 0.0, max_inflight: 0 }
+    }
+}
+
+/// Why a request was refused admission. Maps to the HTTP reply in
+/// `Router::handle`: 429 for rate, 503 for shed/queue/shutdown, 504
+/// for deadline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Reject {
+    /// Tenant bucket empty — retry after the bucket refills.
+    RateLimited {
+        /// Seconds until one token is available again.
+        retry_after_s: f64,
+    },
+    /// Expensive kind refused while the gate is saturated.
+    Shed,
+    /// Parking queue is full.
+    QueueFull,
+    /// Deadline expired while parked for a slot.
+    DeadlineExceeded,
+    /// Server is shutting down.
+    ShuttingDown,
+}
+
+impl Reject {
+    /// Stable reason label for counters and metrics.
+    pub fn reason(&self) -> &'static str {
+        match self {
+            Reject::RateLimited { .. } => "rate",
+            Reject::Shed => "shed",
+            Reject::QueueFull => "queue-full",
+            Reject::DeadlineExceeded => "deadline",
+            Reject::ShuttingDown => "shutdown",
+        }
+    }
+
+    /// Suggested `Retry-After` in integer seconds (HTTP wants whole
+    /// seconds; always at least 1 so clients actually back off).
+    pub fn retry_after(&self) -> u64 {
+        match self {
+            Reject::RateLimited { retry_after_s } => (retry_after_s.ceil() as u64).max(1),
+            Reject::Shed | Reject::QueueFull => 1,
+            Reject::DeadlineExceeded | Reject::ShuttingDown => 1,
+        }
+    }
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+#[derive(Default)]
+struct Gate {
+    inflight: usize,
+    queued: usize,
+    down: bool,
+}
+
+/// The shared admission state: one per server, threaded through the
+/// router alongside the registry.
+pub struct Admission {
+    cfg: AdmissionConfig,
+    buckets: Mutex<HashMap<String, Bucket>>,
+    gate: Mutex<Gate>,
+    cv: Condvar,
+    rejected: Mutex<BTreeMap<(String, &'static str), u64>>,
+    deadline_hits: AtomicU64,
+}
+
+/// RAII in-flight slot: dropping it releases the slot and wakes one
+/// parked waiter. Inactive when the gate is unconfigured.
+pub struct Permit<'a> {
+    adm: &'a Admission,
+    counted: bool,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        if self.counted {
+            let mut g = self.adm.gate.lock().unwrap();
+            g.inflight = g.inflight.saturating_sub(1);
+            drop(g);
+            self.adm.cv.notify_one();
+        }
+    }
+}
+
+impl Admission {
+    /// Build from config.
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        Self {
+            cfg,
+            buckets: Mutex::new(HashMap::new()),
+            gate: Mutex::new(Gate::default()),
+            cv: Condvar::new(),
+            rejected: Mutex::new(BTreeMap::new()),
+            deadline_hits: AtomicU64::new(0),
+        }
+    }
+
+    /// Effective burst capacity (see [`AdmissionConfig::burst`]).
+    fn burst(&self) -> f64 {
+        if self.cfg.burst > 0.0 {
+            self.cfg.burst
+        } else {
+            self.cfg.rate.max(1.0)
+        }
+    }
+
+    /// Run the admission ladder for one query request. `expensive`
+    /// marks shed-first kinds (tc, pagerank). Uses the thread-local
+    /// [`deadline`] while parked. On `Err` the rejection has already
+    /// been counted against `tenant`.
+    pub fn admit(&self, tenant: &str, expensive: bool) -> Result<Permit<'_>, Reject> {
+        if let Err(r) = self.take_token(tenant) {
+            return Err(self.reject(tenant, r));
+        }
+        if self.cfg.max_inflight == 0 {
+            return Ok(Permit { adm: self, counted: false });
+        }
+        let cap = self.cfg.max_inflight;
+        let mut g = self.gate.lock().unwrap();
+        if g.down {
+            return Err(self.reject(tenant, Reject::ShuttingDown));
+        }
+        if g.inflight < cap {
+            g.inflight += 1;
+            return Ok(Permit { adm: self, counted: true });
+        }
+        // Saturated: shed expensive kinds instead of parking them.
+        if expensive {
+            return Err(self.reject(tenant, Reject::Shed));
+        }
+        if g.queued >= cap {
+            return Err(self.reject(tenant, Reject::QueueFull));
+        }
+        g.queued += 1;
+        loop {
+            // Deadline-aware park: wake on a freed slot, shutdown, or
+            // the request deadline running out (250 ms poll bounds the
+            // no-deadline shutdown race without busy-waiting).
+            let budget = deadline::remaining().unwrap_or(Duration::from_millis(250));
+            if budget.is_zero() {
+                g.queued -= 1;
+                return Err(self.reject(tenant, Reject::DeadlineExceeded));
+            }
+            let (gg, _timeout) =
+                self.cv.wait_timeout(g, budget.min(Duration::from_millis(250))).unwrap();
+            g = gg;
+            if g.down {
+                g.queued -= 1;
+                return Err(self.reject(tenant, Reject::ShuttingDown));
+            }
+            if g.inflight < cap {
+                g.queued -= 1;
+                g.inflight += 1;
+                return Ok(Permit { adm: self, counted: true });
+            }
+            if deadline::expired() {
+                g.queued -= 1;
+                return Err(self.reject(tenant, Reject::DeadlineExceeded));
+            }
+        }
+    }
+
+    fn take_token(&self, tenant: &str) -> Result<(), Reject> {
+        if self.cfg.rate <= 0.0 {
+            return Ok(());
+        }
+        let burst = self.burst();
+        let mut buckets = self.buckets.lock().unwrap();
+        let key = if buckets.len() >= MAX_TENANTS && !buckets.contains_key(tenant) {
+            "other"
+        } else {
+            tenant
+        };
+        let now = Instant::now();
+        let b = buckets
+            .entry(key.to_string())
+            .or_insert_with(|| Bucket { tokens: burst, last: now });
+        b.tokens = (b.tokens + now.duration_since(b.last).as_secs_f64() * self.cfg.rate)
+            .min(burst);
+        b.last = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err(Reject::RateLimited { retry_after_s: (1.0 - b.tokens) / self.cfg.rate })
+        }
+    }
+
+    fn reject(&self, tenant: &str, r: Reject) -> Reject {
+        let mut m = self.rejected.lock().unwrap();
+        let key = if m.len() >= MAX_TENANTS && !m.keys().any(|(t, _)| t == tenant) {
+            "other"
+        } else {
+            tenant
+        };
+        *m.entry((key.to_string(), r.reason())).or_insert(0) += 1;
+        r
+    }
+
+    /// Count a deadline expiry observed *after* admission (at dequeue,
+    /// pre-dispatch, or mid-kernel) — feeds
+    /// `boba_deadline_exceeded_total`.
+    pub fn note_deadline_hit(&self) {
+        self.deadline_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total post-admission deadline expiries.
+    pub fn deadline_hits(&self) -> u64 {
+        self.deadline_hits.load(Ordering::Relaxed)
+    }
+
+    /// Currently executing requests (the `boba_inflight` gauge; 0 when
+    /// the gate is unconfigured).
+    pub fn inflight(&self) -> usize {
+        self.gate.lock().unwrap().inflight
+    }
+
+    /// True while the gate is saturated (executing at cap or waiters
+    /// parked) — the shed ladder is active and `/readyz` degrades.
+    pub fn pressured(&self) -> bool {
+        if self.cfg.max_inflight == 0 {
+            return false;
+        }
+        let g = self.gate.lock().unwrap();
+        g.inflight >= self.cfg.max_inflight || g.queued > 0
+    }
+
+    /// Release every parked waiter with [`Reject::ShuttingDown`]; new
+    /// admissions are refused from now on.
+    pub fn shutdown(&self) {
+        self.gate.lock().unwrap().down = true;
+        self.cv.notify_all();
+    }
+
+    /// Snapshot of the per-`(tenant, reason)` rejection counters.
+    pub fn rejected_snapshot(&self) -> Vec<(String, &'static str, u64)> {
+        self.rejected
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|((t, r), n)| (t.clone(), *r, *n))
+            .collect()
+    }
+
+    /// Admission state for `/stats`:
+    /// `{"inflight":..,"pressured":..,"deadline_exceeded":..,"rejected":{"tenant:reason":n}}`.
+    pub fn to_json(&self) -> Json {
+        let rejected = Json::Obj(
+            self.rejected_snapshot()
+                .into_iter()
+                .map(|(t, r, n)| (format!("{t}:{r}"), Json::Num(n as f64)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("inflight", Json::Num(self.inflight() as f64)),
+            ("pressured", Json::Bool(self.pressured())),
+            ("deadline_exceeded", Json::Num(self.deadline_hits() as f64)),
+            ("rejected", rejected),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn adm(rate: f64, burst: f64, max_inflight: usize) -> Admission {
+        Admission::new(AdmissionConfig { rate, burst, max_inflight })
+    }
+
+    #[test]
+    fn unconfigured_admits_everything() {
+        let a = adm(0.0, 0.0, 0);
+        for _ in 0..1000 {
+            assert!(a.admit("t", true).is_ok());
+        }
+        assert_eq!(a.inflight(), 0);
+        assert!(!a.pressured());
+    }
+
+    #[test]
+    fn token_bucket_exhausts_and_prices_retry_after() {
+        let a = adm(10.0, 3.0, 0);
+        assert!(a.admit("t", false).is_ok());
+        assert!(a.admit("t", false).is_ok());
+        assert!(a.admit("t", false).is_ok());
+        match a.admit("t", false) {
+            Err(r @ Reject::RateLimited { retry_after_s }) => {
+                assert!(retry_after_s > 0.0 && retry_after_s <= 0.2, "got {retry_after_s}");
+                assert_eq!(r.reason(), "rate");
+                assert!(r.retry_after() >= 1);
+            }
+            other => panic!("expected rate limit, got {other:?}"),
+        }
+        // A different tenant has its own bucket.
+        assert!(a.admit("u", false).is_ok());
+        let rej = a.rejected_snapshot();
+        assert_eq!(rej, vec![("t".to_string(), "rate", 1)]);
+    }
+
+    #[test]
+    fn gate_parks_sheds_and_fills() {
+        let a = Arc::new(adm(0.0, 0.0, 1));
+        let p1 = a.admit("t", false).unwrap();
+        assert_eq!(a.inflight(), 1);
+        assert!(a.pressured());
+        // Saturated: expensive kinds shed immediately.
+        assert_eq!(a.admit("t", true).unwrap_err(), Reject::Shed);
+        // A cheap request parks; releasing the permit admits it.
+        let a2 = Arc::clone(&a);
+        let waiter = std::thread::spawn(move || a2.admit("t", false).map(|p| drop(p)).is_ok());
+        // With one parked, the next cheap request overflows the queue.
+        while a.gate.lock().unwrap().queued == 0 {
+            std::thread::yield_now();
+        }
+        assert_eq!(a.admit("t", false).unwrap_err(), Reject::QueueFull);
+        drop(p1);
+        assert!(waiter.join().unwrap(), "parked waiter admitted after release");
+        assert_eq!(a.inflight(), 0);
+    }
+
+    #[test]
+    fn parked_waiter_detaches_on_deadline() {
+        let a = adm(0.0, 0.0, 1);
+        let _p = a.admit("t", false).unwrap();
+        let _d = deadline::scope(Some(Instant::now() + Duration::from_millis(30)));
+        let sw = Instant::now();
+        assert_eq!(a.admit("t", false).unwrap_err(), Reject::DeadlineExceeded);
+        assert!(sw.elapsed() < Duration::from_secs(5));
+        assert_eq!(a.gate.lock().unwrap().queued, 0, "detached waiter left the queue");
+    }
+
+    #[test]
+    fn shutdown_releases_parked_waiters() {
+        let a = Arc::new(adm(0.0, 0.0, 1));
+        let _p = a.admit("t", false).unwrap();
+        let a2 = Arc::clone(&a);
+        let waiter = std::thread::spawn(move || a2.admit("t", false).unwrap_err());
+        while a.gate.lock().unwrap().queued == 0 {
+            std::thread::yield_now();
+        }
+        a.shutdown();
+        assert_eq!(waiter.join().unwrap(), Reject::ShuttingDown);
+        // New arrivals are refused outright.
+        assert_eq!(a.admit("t", false).unwrap_err(), Reject::ShuttingDown);
+    }
+
+    #[test]
+    fn stats_json_carries_counters() {
+        let a = adm(1000.0, 1.0, 0);
+        assert!(a.admit("acme", false).is_ok());
+        let _ = a.admit("acme", false); // bucket drained
+        a.note_deadline_hit();
+        let s = a.to_json().render();
+        assert!(s.contains("\"acme:rate\":1"), "stats were {s}");
+        assert!(s.contains("\"deadline_exceeded\":1"), "stats were {s}");
+    }
+}

@@ -47,6 +47,7 @@ use std::time::{Duration, Instant};
 
 use super::json::Json;
 use super::registry::PreparedGraph;
+use crate::util::deadline;
 use crate::util::prng::Xoshiro256;
 
 /// Coalescer tuning (CLI flags map 1:1 onto these fields).
@@ -385,20 +386,51 @@ impl Coalescer {
             let queued = st.queue.iter().any(|(t, _)| *t == ticket);
             if !queued || st.leader {
                 // Either an executing leader owns our request, or a
-                // forming batch will take it — park until woken.
+                // forming batch will take it — park until woken. A
+                // ticket still *queued* is withdrawable: if the request
+                // deadline lapses before any leader claims it, pull it
+                // back and answer the timeout. Once claimed (no longer
+                // queued) the kernel is running on our behalf and we
+                // park unconditionally for the result.
+                if queued {
+                    if let Some(budget) = deadline::remaining() {
+                        if budget.is_zero() {
+                            st.queue.retain(|(t, _)| *t != ticket);
+                            group.cv.notify_all();
+                            bail!("deadline exceeded while parked for coalescing");
+                        }
+                        let (g, _) = group
+                            .cv
+                            .wait_timeout(st, budget.min(Duration::from_millis(250)))
+                            .unwrap();
+                        st = g;
+                        continue;
+                    }
+                }
                 st = group.cv.wait(st).unwrap();
                 continue;
             }
             // Become the leader: optionally hold the window open.
             st.leader = true;
             if !self.cfg.window.is_zero() {
-                let deadline = Instant::now() + self.cfg.window;
+                let close = Instant::now() + self.cfg.window;
                 while st.queue.len() < self.cfg.max_batch && !st.shutdown {
                     let now = Instant::now();
-                    if now >= deadline {
+                    if now >= close {
                         break;
                     }
-                    let (g, _) = group.cv.wait_timeout(st, deadline - now).unwrap();
+                    // A leader whose own request deadline lapses stops
+                    // holding the window open and executes what is
+                    // already queued (followers still get answers; the
+                    // leader's own reply becomes a 504 in the router).
+                    if deadline::expired() {
+                        break;
+                    }
+                    let mut wait = close - now;
+                    if let Some(rem) = deadline::remaining() {
+                        wait = wait.min(rem.max(Duration::from_millis(1)));
+                    }
+                    let (g, _) = group.cv.wait_timeout(st, wait).unwrap();
                     st = g;
                 }
             }
@@ -512,6 +544,7 @@ mod tests {
             batch: 1000,
             in_flight: 2,
             seed: 3,
+            format: None,
         });
         r.get_or_prepare("pa:2000:4", "none").unwrap().0
     }
@@ -575,6 +608,7 @@ mod tests {
                 batch: 1000,
                 in_flight: 2,
                 seed,
+                format: None,
             });
             r.get_or_prepare("pa:2000:4", "none").unwrap().0
         };
@@ -627,5 +661,36 @@ mod tests {
         }
         // Post-shutdown submissions are refused outright.
         assert!(co.submit(&g, BatchQuery::Spmv { seed: None }).is_err());
+    }
+
+    #[test]
+    fn expired_deadline_withdraws_a_still_queued_follower() {
+        let g = prepared();
+        let co = Arc::new(Coalescer::new(CoalesceConfig {
+            window: Duration::from_secs(60),
+            max_batch: 16,
+        }));
+        let (co2, g2) = (co.clone(), g.clone());
+        let leader = std::thread::spawn(move || co2.submit(&g2, BatchQuery::Spmv { seed: None }));
+        // Wait until the spawned thread genuinely holds the window open.
+        loop {
+            let parked = {
+                let gs = co.groups.lock().unwrap();
+                gs.values().any(|gr| gr.state.lock().unwrap().leader)
+            };
+            if parked {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        // A follower whose budget is already spent withdraws its queued
+        // ticket promptly instead of parking for the full window.
+        let d = deadline::scope(Some(Instant::now()));
+        let err = co.submit(&g, BatchQuery::Spmv { seed: Some(7) }).unwrap_err();
+        assert!(format!("{err:#}").contains("deadline"), "got {err:#}");
+        drop(d);
+        // The group is unharmed: the leader still gets released cleanly.
+        co.shutdown();
+        assert!(leader.join().unwrap().is_err());
     }
 }

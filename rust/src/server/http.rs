@@ -138,8 +138,10 @@ pub fn reason(status: u16) -> &'static str {
         404 => "Not Found",
         405 => "Method Not Allowed",
         422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     }
 }
@@ -239,20 +241,59 @@ impl Response {
 
 /// A blocking HTTP/1.1 client over one persistent TCP connection —
 /// the loadgen worker's and the smoke test's view of the server.
+///
+/// Every stream carries connect, read, **and** write timeouts (see
+/// [`HttpClient::connect_timeout`]): a stalled or unresponsive server
+/// turns into an error the caller can retry, never a benchmark that
+/// hangs forever.
 pub struct HttpClient {
     reader: BufReader<TcpStream>,
+    /// `Retry-After` (integer seconds) from the most recent response,
+    /// if the server sent one — 429/503 rejections price their own
+    /// backoff and the loadgen retry loop honors it.
+    retry_after: Option<u64>,
 }
 
+/// Default connect timeout for [`HttpClient::connect`].
+pub const DEFAULT_CONNECT_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
+/// Default read/write timeout for [`HttpClient::connect`] — generous
+/// because prepares of large datasets legitimately take a while.
+pub const DEFAULT_IO_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(120);
+
 impl HttpClient {
-    /// Connect to `addr` (e.g. `127.0.0.1:7171`).
+    /// Connect to `addr` (e.g. `127.0.0.1:7171`) with the default
+    /// timeouts.
     pub fn connect(addr: &str) -> Result<HttpClient> {
-        let stream =
-            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        Self::connect_timeout(addr, DEFAULT_CONNECT_TIMEOUT, DEFAULT_IO_TIMEOUT)
+    }
+
+    /// Connect with explicit timeouts: `connect` bounds the TCP
+    /// handshake, `io` bounds every subsequent read and write. A write
+    /// timeout matters as much as the read one — a server that stops
+    /// draining its socket would otherwise park the client in `write`
+    /// forever once the kernel buffers fill.
+    pub fn connect_timeout(
+        addr: &str,
+        connect: std::time::Duration,
+        io: std::time::Duration,
+    ) -> Result<HttpClient> {
+        use std::net::ToSocketAddrs;
+        let sa = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .next()
+            .with_context(|| format!("{addr} resolved to no address"))?;
+        let stream = TcpStream::connect_timeout(&sa, connect)
+            .with_context(|| format!("connecting to {addr}"))?;
         stream.set_nodelay(true).ok();
-        stream
-            .set_read_timeout(Some(std::time::Duration::from_secs(120)))
-            .ok();
-        Ok(HttpClient { reader: BufReader::new(stream) })
+        stream.set_read_timeout(Some(io)).ok();
+        stream.set_write_timeout(Some(io)).ok();
+        Ok(HttpClient { reader: BufReader::new(stream), retry_after: None })
+    }
+
+    /// `Retry-After` seconds from the most recent response, if any.
+    pub fn retry_after(&self) -> Option<u64> {
+        self.retry_after
     }
 
     /// Issue one request, reusing the connection. Returns
@@ -286,6 +327,7 @@ impl HttpClient {
 
         let mut content_length: Option<usize> = None;
         let mut close = false;
+        self.retry_after = None;
         loop {
             let mut hl = String::new();
             if self.reader.read_line(&mut hl)? == 0 {
@@ -302,6 +344,8 @@ impl HttpClient {
                     content_length = Some(value.parse().context("bad content-length")?);
                 } else if name == "connection" && value.eq_ignore_ascii_case("close") {
                     close = true;
+                } else if name == "retry-after" {
+                    self.retry_after = value.parse().ok();
                 }
             }
         }
@@ -419,5 +463,37 @@ mod tests {
         let body = String::from_utf8(resp.body).unwrap();
         assert!(body.starts_with("{\"error\":"));
         assert!(body.contains("\\\"x\\\""));
+    }
+
+    #[test]
+    fn unresponsive_server_times_out_instead_of_hanging() {
+        // A listener that accepts the connection and then never reads
+        // nor answers — the client's I/O timeout must surface an error
+        // in bounded time (the pre-timeout client hung here forever).
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let hold = std::thread::spawn(move || {
+            let (_sock, _) = listener.accept().unwrap();
+            let _ = rx.recv(); // hold the socket open, never answering
+        });
+        let mut c = HttpClient::connect_timeout(
+            &addr,
+            std::time::Duration::from_secs(5),
+            std::time::Duration::from_millis(200),
+        )
+        .unwrap();
+        let sw = std::time::Instant::now();
+        assert!(
+            c.request("GET", "/healthz", b"").is_err(),
+            "an unanswered request must error, not hang"
+        );
+        assert!(
+            sw.elapsed() < std::time::Duration::from_secs(3),
+            "the error must arrive near the configured timeout, took {:?}",
+            sw.elapsed()
+        );
+        drop(tx);
+        hold.join().unwrap();
     }
 }

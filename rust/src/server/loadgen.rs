@@ -1,17 +1,28 @@
-//! `boba loadgen` — a closed-loop load generator for the service.
+//! `boba loadgen` — a closed- or open-loop load generator for the
+//! service.
 //!
-//! Each worker owns one persistent connection and issues its next query
-//! the moment the previous response lands (closed-loop), so offered
-//! load tracks service capacity and the reported number is sustained
-//! throughput, not queueing artifacts. The headline experiment is
-//! [`compare`]: the same mixed SpMV/PageRank workload against the same
-//! dataset prepared with BOBA vs served with random labels — the
-//! paper's end-to-end claim (§6) restated as queries/second.
+//! In the default closed loop each worker owns one persistent
+//! connection and issues its next query the moment the previous
+//! response lands, so offered load tracks service capacity and the
+//! reported number is sustained throughput, not queueing artifacts.
+//! With `target_qps` set the workers instead pace an **open-loop**
+//! schedule — each sends on its 1/conns share of the target arrival
+//! times and never slows down when the server backs up — which is what
+//! makes overload measurable: offered load stays above capacity, and
+//! the report prices what admission control did about it (`rejected`,
+//! `deadline_exceeded`, `retries`, goodput `qps`). Rejected requests
+//! (429/503) are retried up to a budget with jittered exponential
+//! backoff that honors the server's `Retry-After` pricing. The headline
+//! experiment is [`compare`]: the same mixed SpMV/PageRank workload
+//! against the same dataset prepared with BOBA vs served with random
+//! labels — the paper's end-to-end claim (§6) restated as
+//! queries/second.
 
 use crate::util::prng::Xoshiro256;
 use crate::util::timer::Stopwatch;
 use anyhow::{bail, Context, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
 
 use super::http::HttpClient;
 use super::json::Json;
@@ -46,6 +57,18 @@ pub struct LoadgenConfig {
     /// delta (server-side latency percentiles, prepare-stage breakdown,
     /// realized batch widths) into the report (`--scrape-metrics`).
     pub scrape_metrics: bool,
+    /// Open-loop target offered load in queries/sec (`--target-qps`;
+    /// 0 = closed loop). Workers send on a fixed arrival schedule and
+    /// never wait for a late slot, so offered load holds at the target
+    /// even when the server saturates.
+    pub target_qps: f64,
+    /// Retry budget per request rejected with 429/503 (`--retries`;
+    /// 0 = fail fast, the pre-admission behavior).
+    pub retries: usize,
+    /// Base retry backoff in ms (`--backoff-ms`), doubled per attempt
+    /// with ±50% deterministic jitter; the server's `Retry-After`
+    /// pricing is used as a floor when it is larger.
+    pub backoff_ms: u64,
 }
 
 impl Default for LoadgenConfig {
@@ -62,6 +85,9 @@ impl Default for LoadgenConfig {
             coalesce: false,
             batch: 4,
             scrape_metrics: false,
+            target_qps: 0.0,
+            retries: 0,
+            backoff_ms: 50,
         }
     }
 }
@@ -103,6 +129,15 @@ pub struct Report {
     pub requests: usize,
     /// Queries that failed (non-200 or transport error).
     pub failed: usize,
+    /// Queries answered 429/503 by admission control — counts every
+    /// rejection observed, including ones a later retry completed.
+    pub rejected: usize,
+    /// Queries answered 504 (deadline exceeded).
+    pub deadline_exceeded: usize,
+    /// Retry attempts performed after 429/503 rejections.
+    pub retries: usize,
+    /// Open-loop target offered load (0 = closed loop).
+    pub target_qps: f64,
     /// Whether queries went through `POST /query/batch`.
     pub coalesced: bool,
     /// Queries per batch request (1 in single / direct-endpoint mode).
@@ -142,6 +177,10 @@ impl Report {
             ("prep_ms", Json::Num(self.prep_ms)),
             ("requests", Json::Num(self.requests as f64)),
             ("failed", Json::Num(self.failed as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("deadline_exceeded", Json::Num(self.deadline_exceeded as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("target_qps", Json::Num(self.target_qps)),
             ("elapsed_s", Json::Num(self.elapsed_s)),
             ("qps", Json::Num(self.qps)),
             ("mean_ms", Json::Num(self.mean_ms)),
@@ -157,14 +196,24 @@ impl Report {
 
     /// One-paragraph human rendering.
     pub fn render(&self) -> String {
+        let resilience = if self.rejected > 0 || self.deadline_exceeded > 0 || self.retries > 0 {
+            format!(
+                " ({} rejected, {} deadline-exceeded, {} retries)",
+                self.rejected, self.deadline_exceeded, self.retries
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{} via {}{}: {} queries over {:.2} s → {:.0} q/s \
              (p50 {:.3} ms, p99 {:.3} ms, max {:.3} ms, mean {:.3} ms), \
-             {} failed; prep {:.1} ms{}",
+             {} failed{resilience}; prep {:.1} ms{}",
             self.dataset,
             self.scheme,
             if self.coalesced {
                 format!(" (coalesced x{})", self.batch)
+            } else if self.target_qps > 0.0 {
+                format!(" (open-loop @ {:.0} q/s offered)", self.target_qps)
             } else {
                 String::new()
             },
@@ -230,7 +279,15 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
         latencies_us: Vec<u64>,
         completed: usize,
         failed: usize,
+        rejected: usize,
+        deadline_exceeded: usize,
+        retries: usize,
     }
+
+    // Open-loop pacing: each worker owns every conns-th slot of the
+    // target arrival schedule. A late worker sends immediately and
+    // never re-spaces, so offered load holds at the target.
+    let gap_s = if cfg.target_qps > 0.0 { conns as f64 / cfg.target_qps } else { 0.0 };
 
     let sw = Stopwatch::start();
     let outs: Vec<WorkerOut> = std::thread::scope(|scope| {
@@ -241,7 +298,16 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
             let id = &id;
             let pr_body = &pr_body;
             handles.push(scope.spawn(move || {
-                let mut out = WorkerOut { latencies_us: Vec::new(), completed: 0, failed: 0 };
+                let mut out = WorkerOut {
+                    latencies_us: Vec::new(),
+                    completed: 0,
+                    failed: 0,
+                    rejected: 0,
+                    deadline_exceeded: 0,
+                    retries: 0,
+                };
+                let start = Instant::now();
+                let mut sent = 0usize;
                 let mut client = match HttpClient::connect(&cfg.addr) {
                     Ok(c) => c,
                     Err(_) => return out, // counted below via remaining
@@ -294,19 +360,60 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
                         };
                         (format!("/graphs/{id}/{query}"), body)
                     };
-                    let lap = Stopwatch::start();
-                    match client.request("POST", &path, body.as_bytes()) {
-                        Ok((200, _)) => {
-                            out.latencies_us.push(lap.elapsed().as_micros() as u64);
-                            out.completed += take;
+                    if gap_s > 0.0 {
+                        let due = start + Duration::from_secs_f64(gap_s * sent as f64);
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
                         }
-                        Ok((_, _)) => out.failed += take,
-                        Err(_) => {
-                            out.failed += take;
-                            // One reconnect attempt; give up on repeat failure.
-                            match HttpClient::connect(&cfg.addr) {
-                                Ok(c) => client = c,
-                                Err(_) => return out,
+                    }
+                    sent += 1;
+                    let mut attempt = 0usize;
+                    loop {
+                        let lap = Stopwatch::start();
+                        match client.request("POST", &path, body.as_bytes()) {
+                            Ok((200, _)) => {
+                                out.latencies_us.push(lap.elapsed().as_micros() as u64);
+                                out.completed += take;
+                                break;
+                            }
+                            Ok((429 | 503, _)) => {
+                                out.rejected += take;
+                                if attempt >= cfg.retries {
+                                    out.failed += take;
+                                    break;
+                                }
+                                attempt += 1;
+                                out.retries += 1;
+                                // Jittered exponential backoff, floored
+                                // at the server's Retry-After pricing.
+                                let base = cfg.backoff_ms.max(1) << (attempt - 1).min(6);
+                                let floor = client
+                                    .retry_after()
+                                    .map_or(0, |s| s.saturating_mul(1000));
+                                let ms = base.max(floor);
+                                // Deterministic jitter in [ms/2, 3ms/2).
+                                let jittered = ms / 2 + rng.below(ms.max(1));
+                                std::thread::sleep(Duration::from_millis(jittered));
+                            }
+                            Ok((504, _)) => {
+                                out.deadline_exceeded += take;
+                                out.failed += take;
+                                break;
+                            }
+                            Ok((_, _)) => {
+                                out.failed += take;
+                                break;
+                            }
+                            Err(_) => {
+                                out.failed += take;
+                                // One reconnect attempt; give up on
+                                // repeat failure.
+                                match HttpClient::connect(&cfg.addr) {
+                                    Ok(c) => client = c,
+                                    Err(_) => return out,
+                                }
+                                break;
                             }
                         }
                     }
@@ -320,10 +427,16 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
     let mut latencies: Vec<u64> = Vec::new();
     let mut completed = 0usize;
     let mut failed = 0usize;
+    let mut rejected = 0usize;
+    let mut deadline_exceeded = 0usize;
+    let mut retries = 0usize;
     for o in &outs {
         latencies.extend_from_slice(&o.latencies_us);
         completed += o.completed;
         failed += o.failed;
+        rejected += o.rejected;
+        deadline_exceeded += o.deadline_exceeded;
+        retries += o.retries;
     }
     // Queries the workers never got to (early bail-outs) count as failed.
     let attempted = completed + failed;
@@ -350,6 +463,10 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
         prep_ms,
         requests: cfg.requests,
         failed,
+        rejected,
+        deadline_exceeded,
+        retries,
+        target_qps: cfg.target_qps,
         coalesced: cfg.coalesce,
         batch,
         elapsed_s,
@@ -502,6 +619,44 @@ pub fn batch_comparison_json(single: &Report, coalesced: &Report, speedup: f64) 
     ])
 }
 
+/// Render an overload sweep as the `overload` section of
+/// `BENCH_serve.json`: the same open-loop overload (`target_qps`,
+/// typically 2× measured capacity) against an admission-enabled server
+/// and an unprotected one, plus the unloaded reference run the p99
+/// degradation is priced against. The two derived ratios are the
+/// resilience claims in number form: accepted-request p99 under
+/// overload vs unloaded (admission should hold this near 1), and
+/// admission goodput vs the unprotected baseline's.
+pub fn overload_comparison_json(
+    unloaded: &Report,
+    capacity: &Report,
+    admission: &Report,
+    no_admission: &Report,
+    target_qps: f64,
+) -> Json {
+    let ratio = |num: f64, den: f64| if den > 0.0 { num / den } else { 0.0 };
+    Json::obj(vec![
+        ("bench", Json::Str("serve-overload".into())),
+        ("target_qps", Json::Num(target_qps)),
+        ("unloaded", unloaded.to_json()),
+        ("capacity", capacity.to_json()),
+        ("admission", admission.to_json()),
+        ("no_admission", no_admission.to_json()),
+        (
+            "p99_ratio_admission_vs_unloaded",
+            Json::Num(ratio(admission.p99_ms, unloaded.p99_ms)),
+        ),
+        (
+            "p99_ratio_no_admission_vs_unloaded",
+            Json::Num(ratio(no_admission.p99_ms, unloaded.p99_ms)),
+        ),
+        (
+            "goodput_ratio_admission_vs_no_admission",
+            Json::Num(ratio(admission.qps, no_admission.qps)),
+        ),
+    ])
+}
+
 /// Render the comparison as the `BENCH_serve.json` document. The
 /// optional `coalesced` triple appends the single-vs-coalesced rows
 /// ([`compare_coalesced`] on the reordered scheme) so one document
@@ -592,6 +747,18 @@ mod tests {
         let j = co.to_json().render();
         assert!(j.contains("\"mode\":\"coalesced\""), "{j}");
         assert!(run(&cfg).unwrap().to_json().render().contains("\"mode\":\"single\""));
+
+        // Open-loop pacing on the now-cached artifact: every query
+        // still succeeds, and the row carries the resilience fields the
+        // CI overload gate greps for.
+        let open_cfg = LoadgenConfig { target_qps: 500.0, requests: 30, ..cfg.clone() };
+        let open = run(&open_cfg).unwrap();
+        assert_eq!(open.failed, 0, "open-loop at a modest target must not fail: {open:?}");
+        assert_eq!(open.target_qps, 500.0);
+        let oj = open.to_json().render();
+        for field in ["\"rejected\":", "\"deadline_exceeded\":", "\"retries\":", "\"target_qps\":"] {
+            assert!(oj.contains(field), "{oj}");
+        }
 
         // Scrape mode: a cold dataset so the pre/post delta captures
         // the prepare stages, not just the query traffic. Stage spans

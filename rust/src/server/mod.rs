@@ -20,6 +20,7 @@
 //! closed-loop loadgen does exactly that). Shutdown sets a flag and
 //! wakes every blocked `accept()` with a dummy connection, then joins.
 
+pub mod admission;
 pub mod coalesce;
 pub mod http;
 pub mod loadgen;
@@ -39,6 +40,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use self::admission::{Admission, AdmissionConfig};
 use self::coalesce::{CoalesceConfig, Coalescer};
 use self::registry::{GraphRegistry, RegistryConfig};
 use self::router::Router;
@@ -79,6 +81,18 @@ pub struct ServerConfig {
     /// (`--format`, a [`crate::runtime::format::FORMAT_NAMES`] name);
     /// `None` serves plain CSR only.
     pub format: Option<String>,
+    /// Per-tenant token-bucket refill, tokens/sec (`--rate`; 0 = no
+    /// rate limiting).
+    pub rate: f64,
+    /// Token-bucket capacity (`--burst`; 0 = `max(rate, 1)`).
+    pub burst: f64,
+    /// Global concurrent-query cap with an equal-size parking queue
+    /// behind it (`--max-inflight`; 0 = unlimited).
+    pub max_inflight: usize,
+    /// Default request deadline in ms applied when the client sends no
+    /// `x-deadline-ms` header (`--default-deadline-ms`; `None` = no
+    /// default deadline).
+    pub default_deadline_ms: Option<u64>,
 }
 
 impl Default for ServerConfig {
@@ -96,6 +110,10 @@ impl Default for ServerConfig {
             trace: true,
             slow_trace_ms: None,
             format: None,
+            rate: 0.0,
+            burst: 0.0,
+            max_inflight: 0,
+            default_deadline_ms: None,
         }
     }
 }
@@ -113,6 +131,8 @@ pub struct Server {
     pub stats: Arc<ServerStats>,
     /// Shared query coalescer (exposed for in-process inspection).
     pub coalescer: Arc<Coalescer>,
+    /// Shared admission state (exposed for in-process inspection).
+    pub admission: Arc<Admission>,
 }
 
 /// Bind and start serving on a fixed worker pool.
@@ -132,6 +152,11 @@ pub fn spawn(cfg: ServerConfig) -> Result<Server> {
         window: Duration::from_micros(cfg.batch_window_us),
         max_batch: cfg.max_batch,
     }));
+    let admission = Arc::new(Admission::new(AdmissionConfig {
+        rate: cfg.rate,
+        burst: cfg.burst,
+        max_inflight: cfg.max_inflight,
+    }));
     // Tracing: the config flag gates it, the environment kill switch
     // (BOBA_NO_TRACE) wins over both. Process-global, so an in-process
     // test server shares the flag with everything else.
@@ -139,8 +164,13 @@ pub fn spawn(cfg: ServerConfig) -> Result<Server> {
         crate::obs::set_enabled(false);
     }
     crate::obs::init_from_env();
-    let mut router = Router::new(registry.clone(), stats.clone(), coalescer.clone());
+    // Fault injection: armed only when BOBA_FAULTS is set (or a test /
+    // the debug endpoint arms it programmatically).
+    crate::obs::chaos::init_from_env();
+    let mut router =
+        Router::new(registry.clone(), stats.clone(), coalescer.clone(), admission.clone());
     router.slow_trace_ms = cfg.slow_trace_ms;
+    router.default_deadline_ms = cfg.default_deadline_ms;
     let router = Arc::new(router);
     let shutdown = Arc::new(AtomicBool::new(false));
 
@@ -158,7 +188,7 @@ pub fn spawn(cfg: ServerConfig) -> Result<Server> {
                 .context("spawning worker")?,
         );
     }
-    Ok(Server { addr, shutdown, workers, registry, stats, coalescer })
+    Ok(Server { addr, shutdown, workers, registry, stats, coalescer, admission })
 }
 
 impl Server {
@@ -174,14 +204,15 @@ impl Server {
         }
     }
 
-    /// Graceful shutdown: stop accepting, release coalescer waiters,
-    /// wake blocked workers, join. Connections currently inside a
-    /// request finish it first (parked coalesced queries answer with an
-    /// error); idle keep-alive connections are abandoned to their read
-    /// timeout.
+    /// Graceful shutdown: stop accepting, release coalescer waiters
+    /// and admission-parked waiters, wake blocked workers, join.
+    /// Connections currently inside a request finish it first (parked
+    /// coalesced queries answer with an error); idle keep-alive
+    /// connections are abandoned to their read timeout.
     pub fn shutdown(self) {
         self.shutdown.store(true, Ordering::SeqCst);
         self.coalescer.shutdown();
+        self.admission.shutdown();
         for _ in 0..self.workers.len() {
             // Wake one blocked accept() per worker.
             if let Ok(s) = TcpStream::connect(self.addr) {
@@ -223,6 +254,13 @@ fn serve_connection(
     shutdown: &AtomicBool,
     read_timeout: Duration,
 ) -> Result<()> {
+    // Fault point: an armed `conn-drop` chaos spec abandons the
+    // connection before reading a byte — the client sees a clean TCP
+    // close/reset, exactly what a crashed peer or an LB failover looks
+    // like, and its retry/timeout handling is what gets tested.
+    if crate::obs::chaos::should("conn-drop") {
+        return Ok(());
+    }
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(read_timeout)).ok();
     let mut writer = stream.try_clone().context("cloning stream")?;

@@ -23,11 +23,13 @@ use crate::coordinator::datasets;
 use crate::coordinator::pipeline::StreamingIngest;
 use crate::graph::{Coo, Csr};
 use crate::reorder::{self, Permutation};
+use crate::util::deadline;
 use crate::util::timer::Stopwatch;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
 
 use super::json::Json;
 
@@ -216,12 +218,26 @@ impl InFlight {
         InFlight { done: Mutex::new(None), cv: Condvar::new() }
     }
 
+    /// Park until the leader publishes — or the *waiter's* thread-local
+    /// [`deadline`] runs out first, in which case it detaches with an
+    /// error of its own. Detaching never touches the leader: the
+    /// pipeline keeps running and publishes for the remaining waiters
+    /// (and the cache) as usual. The 250 ms poll bounds the
+    /// no-deadline case without busy-waiting.
     fn wait(&self) -> std::result::Result<Arc<PreparedGraph>, String> {
         let mut d = self.done.lock().unwrap();
-        while d.is_none() {
-            d = self.cv.wait(d).unwrap();
+        loop {
+            if let Some(r) = d.as_ref() {
+                return r.clone();
+            }
+            let budget = deadline::remaining().unwrap_or(Duration::from_millis(250));
+            if budget.is_zero() {
+                return Err("deadline exceeded while joining an in-flight prepare".to_string());
+            }
+            let (dd, _timeout) =
+                self.cv.wait_timeout(d, budget.min(Duration::from_millis(250))).unwrap();
+            d = dd;
         }
-        d.clone().unwrap()
     }
 
     fn publish(&self, r: std::result::Result<Arc<PreparedGraph>, String>) {
@@ -262,6 +278,10 @@ pub struct GraphRegistry {
     misses: AtomicU64,
     evictions: AtomicU64,
     prepares: AtomicU64,
+    /// Set once the first prepare completes successfully — before that,
+    /// a pending prepare means the server has nothing to serve yet and
+    /// `/readyz` reports it (see [`Self::mid_first_prepare`]).
+    first_ready: AtomicBool,
 }
 
 /// Removes the pending marker and publishes a failure if the preparing
@@ -297,7 +317,21 @@ impl GraphRegistry {
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             prepares: AtomicU64::new(0),
+            first_ready: AtomicBool::new(false),
         }
+    }
+
+    /// True while a prepare is in flight and *no* prepare has ever
+    /// completed: the server holds zero queryable artifacts and is
+    /// about to hold one, which `/readyz` reports as not-ready so
+    /// orchestrators delay traffic instead of eating cold 404s. Later
+    /// prepares (the cache already serves) never degrade readiness.
+    pub fn mid_first_prepare(&self) -> bool {
+        if self.first_ready.load(Ordering::Relaxed) {
+            return false;
+        }
+        let inner = self.inner.lock().unwrap();
+        inner.map.values().any(|s| matches!(s, Slot::Pending(_)))
     }
 
     /// Registry id for a (dataset, scheme) pair.
@@ -392,6 +426,7 @@ impl GraphRegistry {
                     .map
                     .insert(id.to_string(), Slot::Ready { graph: g.clone(), recency: clock });
                 self.evict_over_capacity(&mut inner);
+                self.first_ready.store(true, Ordering::Relaxed);
             }
             Err(_) => {
                 inner.map.remove(id);
@@ -498,7 +533,18 @@ impl GraphRegistry {
     }
 
     /// Run the Problem-3 pipeline once for `(dataset, scheme)`.
+    ///
+    /// The pipeline checks the thread-local [`deadline`] between stages:
+    /// a leader whose request budget lapses aborts cleanly (waiters get
+    /// the error and the key stays retryable) instead of finishing work
+    /// nobody is waiting for.
     fn prepare(&self, dataset: &str, scheme: &str) -> Result<PreparedGraph> {
+        // Fault point: an armed `prepare-fail` chaos spec fails the
+        // pipeline before it starts — the resilience harness uses it to
+        // drive the single-flight error path deterministically.
+        if crate::obs::chaos::should("prepare-fail") {
+            anyhow::bail!("injected fault: prepare-fail");
+        }
         self.prepares.fetch_add(1, Ordering::Relaxed);
         let mut prep = PrepReport::default();
 
@@ -521,6 +567,7 @@ impl GraphRegistry {
         })?;
         prep.ingest_ms = sw.ms();
         prep.batches = batches;
+        check_deadline("ingest")?;
 
         // ── reorder (+relabel) ────────────────────────────────────
         let (perm, working) = if scheme == SCHEME_NONE {
@@ -533,6 +580,7 @@ impl GraphRegistry {
             prep.reorder_ms = sw.ms();
             (Some(Arc::new(perm)), relabeled)
         };
+        check_deadline("reorder")?;
 
         // ── convert ───────────────────────────────────────────────
         // The deterministic parallel kernel: prepare is the serving hot
@@ -542,6 +590,7 @@ impl GraphRegistry {
         let sw = Stopwatch::start();
         let csr = crate::obs::span("prepare.convert", || convert::coo_to_csr_parallel(&working));
         prep.convert_ms = sw.ms();
+        check_deadline("convert")?;
 
         // ── transpose ─────────────────────────────────────────────
         // Eagerly build the pull operand (`Aᵀ` structure) so PageRank
@@ -550,6 +599,7 @@ impl GraphRegistry {
         let sw = Stopwatch::start();
         let transpose = crate::obs::span("prepare.transpose", || csr.transposed_structure());
         prep.transpose_ms = sw.ms();
+        check_deadline("transpose")?;
 
         // ── kernel format (optional) ──────────────────────────────
         // Encode the compressed variant and gate it behind the repo's
@@ -593,6 +643,17 @@ impl GraphRegistry {
             tc: OnceLock::new(),
         })
     }
+}
+
+/// Inter-stage deadline checkpoint for the prepare pipeline: errors
+/// when the requesting thread's [`deadline`] has lapsed, naming the
+/// stage that just finished.
+fn check_deadline(after_stage: &str) -> Result<()> {
+    anyhow::ensure!(
+        !deadline::expired(),
+        "deadline exceeded after prepare {after_stage} stage"
+    );
+    Ok(())
 }
 
 /// Load a dataset spec: a `.mtx`/`.el`/`.bcoo` file path, or a
@@ -787,6 +848,56 @@ mod tests {
         let s = g.default_source();
         assert_eq!(s, g.default_source());
         assert!((s as usize) < g.n());
+    }
+
+    #[test]
+    fn mid_first_prepare_reflects_pending_state() {
+        let r = registry(2);
+        assert!(!r.mid_first_prepare(), "an idle empty registry is ready");
+        r.inner
+            .lock()
+            .unwrap()
+            .map
+            .insert("x@y".to_string(), Slot::Pending(Arc::new(InFlight::new())));
+        assert!(r.mid_first_prepare(), "a cold first prepare degrades readiness");
+        r.inner.lock().unwrap().map.remove("x@y");
+        r.get_or_prepare("pa:800:4", "boba").unwrap();
+        // Once anything is servable, later prepares don't degrade.
+        r.inner
+            .lock()
+            .unwrap()
+            .map
+            .insert("x@y".to_string(), Slot::Pending(Arc::new(InFlight::new())));
+        assert!(!r.mid_first_prepare());
+        r.inner.lock().unwrap().map.remove("x@y");
+    }
+
+    #[test]
+    fn expired_deadline_aborts_prepare_between_stages() {
+        let r = registry(2);
+        let _d = deadline::scope(Some(std::time::Instant::now()));
+        let err = r.get_or_prepare("pa:900:4", "boba").unwrap_err();
+        assert!(
+            format!("{err:#}").contains("deadline exceeded after prepare"),
+            "{err:#}"
+        );
+        drop(_d);
+        // The key stays retryable once the budget pressure is gone.
+        assert!(r.get_or_prepare("pa:900:4", "boba").is_ok());
+    }
+
+    #[test]
+    fn waiter_detaches_on_deadline_without_touching_the_leader() {
+        let flight = InFlight::new();
+        let _d = deadline::scope(Some(std::time::Instant::now() + Duration::from_millis(20)));
+        let sw = std::time::Instant::now();
+        let out = flight.wait();
+        assert!(out.unwrap_err().contains("deadline"), "waiter detaches with its own error");
+        assert!(sw.elapsed() < Duration::from_secs(5), "detach is prompt, not a hang");
+        drop(_d);
+        // The flight is unpoisoned: a later publish reaches new waiters.
+        flight.publish(Err("real outcome".to_string()));
+        assert_eq!(flight.wait().unwrap_err(), "real outcome");
     }
 
     #[test]

@@ -3,10 +3,12 @@
 //!
 //! | Route | Effect |
 //! |---|---|
-//! | `GET  /healthz` | liveness + uptime |
+//! | `GET  /healthz` | liveness + uptime (never degrades) |
+//! | `GET  /readyz` | readiness: 503 while the first prepare runs or the shed ladder is active |
 //! | `GET  /stats` | per-endpoint latency histograms + cache counters (`?format=text` for a table) |
 //! | `GET  /metrics` | Prometheus text exposition of every counter/gauge/histogram |
 //! | `GET  /debug/traces?n=K` | the K most recent stage-span traces, newest first |
+//! | `GET/POST /debug/faults` | inspect / arm the deterministic fault-injection table |
 //! | `GET  /graphs` | list cached artifacts |
 //! | `POST /graphs` | `{"dataset": SPEC, "scheme": NAME}` → prepare (201) or cache hit (200) |
 //! | `POST /graphs/{id}/spmv` | one SpMV over the prepared CSR (`{"seed": S}` for a seeded RHS; coalesced) |
@@ -26,10 +28,13 @@
 //! smoke test asserts this against direct `algos::` calls.
 
 use crate::algos::{pagerank, spmm, sssp, tc};
+use crate::util::deadline;
 use crate::util::timer::Stopwatch;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use super::admission::{Admission, Reject};
 use super::coalesce::{self, BatchOut, BatchQuery, Coalescer};
 use super::http::{Request, Response};
 use super::json::Json;
@@ -48,19 +53,33 @@ pub struct Router {
     pub stats: Arc<ServerStats>,
     /// Per-artifact query coalescer (SpMV/SSSP batching).
     pub coalescer: Arc<Coalescer>,
+    /// Admission state: rate limits, the in-flight gate, shed ladder.
+    pub admission: Arc<Admission>,
     /// Traces slower than this are logged to stderr as one-line JSON
     /// (`None` disables slow-trace logging; set from `--slow-trace-ms`).
     pub slow_trace_ms: Option<f64>,
+    /// Deadline applied when the request carries no `x-deadline-ms`
+    /// header (`--default-deadline-ms`; `None` = no default).
+    pub default_deadline_ms: Option<u64>,
 }
 
 impl Router {
-    /// New router over shared registry, stats, and coalescer.
+    /// New router over shared registry, stats, coalescer, and admission
+    /// state.
     pub fn new(
         registry: Arc<GraphRegistry>,
         stats: Arc<ServerStats>,
         coalescer: Arc<Coalescer>,
+        admission: Arc<Admission>,
     ) -> Router {
-        Router { registry, stats, coalescer, slow_trace_ms: None }
+        Router {
+            registry,
+            stats,
+            coalescer,
+            admission,
+            slow_trace_ms: None,
+            default_deadline_ms: None,
+        }
     }
 
     /// Handle one request, recording latency under its endpoint slot.
@@ -74,6 +93,11 @@ impl Router {
     /// request id is echoed back in an `x-request-id` header.
     pub fn handle(&self, req: &Request) -> Response {
         let sw = Stopwatch::start();
+        // Install the request deadline (header wins over the server
+        // default) for everything below: admission parking, registry
+        // prepare stages, and the kernels' cooperative checkpoints all
+        // poll the same thread-local.
+        let _deadline = deadline::scope(self.request_deadline(req));
         let guard = crate::obs::begin();
         let (endpoint, mut resp) = self.route(req);
         if let Some(ep) = endpoint {
@@ -87,7 +111,11 @@ impl Router {
                 let introspection = matches!(
                     endpoint,
                     None | Some(
-                        Endpoint::Metrics | Endpoint::Traces | Endpoint::Stats | Endpoint::Healthz
+                        Endpoint::Metrics
+                            | Endpoint::Traces
+                            | Endpoint::Stats
+                            | Endpoint::Healthz
+                            | Endpoint::Readyz
                     )
                 );
                 if !introspection {
@@ -109,25 +137,122 @@ impl Router {
         match (req.method.as_str(), segs.as_slice()) {
             ("GET", []) => (None, Response::text(200, USAGE)),
             ("GET", ["healthz"]) => (Some(Endpoint::Healthz), self.healthz()),
+            ("GET", ["readyz"]) => (Some(Endpoint::Readyz), self.readyz()),
             ("GET", ["stats"]) => (Some(Endpoint::Stats), self.stats_page(req)),
             ("GET", ["metrics"]) => (Some(Endpoint::Metrics), self.metrics_page()),
             ("GET", ["debug", "traces"]) => (Some(Endpoint::Traces), self.traces_page(req)),
+            ("GET", ["debug", "faults"]) => {
+                (None, Response::json(200, crate::obs::chaos::snapshot_json().render()))
+            }
+            ("POST", ["debug", "faults"]) => (None, self.set_faults(req)),
             ("GET", ["graphs"]) => (Some(Endpoint::List), self.list()),
-            ("POST", ["graphs"]) => (Some(Endpoint::Ingest), self.ingest(req)),
-            ("POST", ["query", "batch"]) => (Some(Endpoint::Batch), self.query_batch(req)),
+            ("POST", ["graphs"]) => (
+                Some(Endpoint::Ingest),
+                self.admitted(req, Endpoint::Ingest, |r| self.ingest(r)),
+            ),
+            ("POST", ["query", "batch"]) => (
+                Some(Endpoint::Batch),
+                self.admitted(req, Endpoint::Batch, |r| self.query_batch(r)),
+            ),
             ("POST", ["graphs", id, query]) => match Endpoint::query_from(query) {
-                Some(ep) => (Some(ep), self.query(id, ep, req)),
+                Some(ep) => (Some(ep), self.admitted(req, ep, |r| self.query(id, ep, r))),
                 None => (
                     None,
                     Response::error(404, &format!("unknown query {query:?} (spmv|pagerank|sssp|tc)")),
                 ),
             },
             ("GET", ["debug", ..]) => (None, Response::error(404, "no such route")),
-            (_, ["healthz" | "stats" | "metrics" | "debug" | "graphs" | "query", ..]) => {
-                (None, Response::error(405, "method not allowed"))
-            }
+            (
+                _,
+                ["healthz" | "readyz" | "stats" | "metrics" | "debug" | "graphs" | "query", ..],
+            ) => (None, Response::error(405, "method not allowed")),
             _ => (None, Response::error(404, "no such route")),
         }
+    }
+
+    /// Deadline for this request: `x-deadline-ms` header if present
+    /// (capped at 1 h; `0` means the budget is already spent), else the
+    /// server default.
+    fn request_deadline(&self, req: &Request) -> Option<Instant> {
+        let ms = req
+            .header("x-deadline-ms")
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .or(self.default_deadline_ms)?;
+        Some(Instant::now() + Duration::from_millis(ms.min(3_600_000)))
+    }
+
+    /// Run a work endpoint behind the admission ladder (rate → shed →
+    /// in-flight gate; see [`super::admission`]) and the dequeue-time
+    /// deadline check. Introspection endpoints bypass this — a loaded
+    /// server must stay observable.
+    fn admitted(
+        &self,
+        req: &Request,
+        ep: Endpoint,
+        f: impl FnOnce(&Request) -> Response,
+    ) -> Response {
+        let tenant = req.header("x-tenant").unwrap_or(super::admission::DEFAULT_TENANT);
+        // The shed ladder refuses the kinds a saturated server cannot
+        // afford to start: whole-graph kernels (TC's oriented view,
+        // PageRank's iteration loop) queue behind nothing.
+        let expensive = matches!(ep, Endpoint::Tc | Endpoint::Pagerank);
+        let _permit = match self.admission.admit(tenant, expensive) {
+            Ok(p) => p,
+            Err(r) => return reject_response(r),
+        };
+        // Dequeue-time deadline check: the request may have parked in
+        // the admission queue past its budget.
+        if deadline::expired() {
+            self.admission.note_deadline_hit();
+            return deadline_response("deadline exceeded while queued for admission");
+        }
+        let resp = f(req);
+        // The permit drops here: the in-flight slot covers the whole
+        // handler, including coalesce parking and prepare joins.
+        resp
+    }
+
+    /// `POST /debug/faults`: arm the fault-injection table from
+    /// `{"spec": "..."}` (see [`crate::obs::chaos`] for the grammar; an
+    /// empty spec disarms). Test-harness surface — answers with the
+    /// armed table.
+    fn set_faults(&self, req: &Request) -> Response {
+        let body = match Json::parse(&req.body_str()) {
+            Ok(v) => v,
+            Err(e) => return Response::error(400, &format!("bad JSON body: {e:#}")),
+        };
+        let spec = match body.get("spec").and_then(Json::as_str) {
+            Some(s) => s,
+            None => return Response::error(422, "body must carry {\"spec\": \"...\"}"),
+        };
+        match crate::obs::chaos::set_spec(spec) {
+            Ok(()) => Response::json(200, crate::obs::chaos::snapshot_json().render()),
+            Err(e) => Response::error(422, &format!("{e:#}")),
+        }
+    }
+
+    /// `GET /readyz`: readiness, as opposed to `/healthz` liveness. 503
+    /// with the degradation reasons while the registry is running its
+    /// first prepare (nothing to serve yet) or admission pressure has
+    /// the shed ladder active; 200 otherwise.
+    fn readyz(&self) -> Response {
+        let mut reasons: Vec<Json> = Vec::new();
+        if self.registry.mid_first_prepare() {
+            reasons.push(Json::Str("first-prepare".into()));
+        }
+        if self.admission.pressured() {
+            reasons.push(Json::Str("shedding".into()));
+        }
+        let ready = reasons.is_empty();
+        Response::json(
+            if ready { 200 } else { 503 },
+            Json::obj(vec![
+                ("status", Json::Str(if ready { "ready" } else { "degraded" }.into())),
+                ("reasons", Json::Arr(reasons)),
+                ("inflight", Json::Num(self.admission.inflight() as f64)),
+            ])
+            .render(),
+        )
     }
 
     fn healthz(&self) -> Response {
@@ -152,6 +277,7 @@ impl Router {
         };
         body.push(("registry".to_string(), self.registry.stats_json()));
         body.push(("coalescer".to_string(), self.coalescer.stats_json()));
+        body.push(("admission".to_string(), self.admission.to_json()));
         let pool = crate::parallel::pool::snapshot();
         body.push((
             "pool".to_string(),
@@ -328,6 +454,34 @@ impl Router {
         p.family("boba_traces_total", "counter", "Request traces recorded into the debug ring.");
         p.value("boba_traces_total", &[], crate::obs::ring::global().pushed() as f64);
 
+        p.family(
+            "boba_inflight",
+            "gauge",
+            "Requests currently executing under the admission gate.",
+        );
+        p.value("boba_inflight", &[], self.admission.inflight() as f64);
+        // Family header emitted unconditionally; per-(tenant, reason)
+        // samples appear as rejections happen (cardinality is bounded
+        // by the admission module's tenant cap).
+        p.family(
+            "boba_admission_rejected_total",
+            "counter",
+            "Requests refused admission, by tenant and reason.",
+        );
+        for (tenant, reason, n) in self.admission.rejected_snapshot() {
+            p.value(
+                "boba_admission_rejected_total",
+                &[("tenant", tenant.as_str()), ("reason", reason)],
+                n as f64,
+            );
+        }
+        p.family(
+            "boba_deadline_exceeded_total",
+            "counter",
+            "Admitted requests that ran out of deadline at a checkpoint.",
+        );
+        p.value("boba_deadline_exceeded_total", &[], self.admission.deadline_hits() as f64);
+
         Response::text_with_type(200, "text/plain; version=0.0.4", p.render())
     }
 
@@ -388,7 +542,16 @@ impl Router {
                 let status = if cached { 200 } else { 201 };
                 Response::json(status, Json::Obj(pairs).render())
             }
-            Err(e) => Response::error(422, &format!("{e:#}")),
+            Err(e) => {
+                // A prepare aborted at a deadline checkpoint (or a
+                // waiter that detached from an in-flight prepare) is a
+                // timeout, not a bad request.
+                if deadline::expired() {
+                    self.admission.note_deadline_hit();
+                    return deadline_response(&format!("{e:#}"));
+                }
+                Response::error(422, &format!("{e:#}"))
+            }
         }
     }
 
@@ -410,6 +573,12 @@ impl Router {
                 Err(e) => return Response::error(400, &format!("bad JSON body: {e:#}")),
             }
         };
+        // Pre-dispatch deadline check: don't start a kernel whose
+        // answer nobody is waiting for.
+        if deadline::expired() {
+            self.admission.note_deadline_hit();
+            return deadline_response("deadline exceeded before kernel dispatch");
+        }
         let sw = Stopwatch::start();
         let result = match ep {
             // SpMV/SSSP go through the coalescer: concurrent queries
@@ -424,6 +593,13 @@ impl Router {
                 }),
             _ => run_query(&graph, ep, &body),
         };
+        // Post-kernel deadline check: an iterative kernel that bailed at
+        // a cooperative checkpoint returns a partial result — map it to
+        // 504 rather than serving it as an answer.
+        if deadline::expired() {
+            self.admission.note_deadline_hit();
+            return deadline_response("deadline exceeded during kernel execution");
+        }
         let mut pairs = match result {
             Ok(Json::Obj(p)) => p,
             Ok(_) => unreachable!("queries return objects"),
@@ -532,6 +708,13 @@ impl Router {
             .collect();
         let mut results: Vec<Option<Json>> = (0..plans.len()).map(|_| None).collect();
         for tile in spmv_idx.chunks(spmm::MAX_RHS) {
+            // Cooperative checkpoint between batch members: a deadline
+            // that lapsed mid-batch fails the whole request (batches
+            // are all-or-nothing) without running the remaining tiles.
+            if deadline::expired() {
+                self.admission.note_deadline_hit();
+                return deadline_response("deadline exceeded between batch tiles");
+            }
             let seeds: Vec<Option<u64>> = tile
                 .iter()
                 .map(|&i| match plans[i] {
@@ -552,6 +735,10 @@ impl Router {
             }
         }
         for tile in sssp_idx.chunks(sssp::MAX_SOURCES) {
+            if deadline::expired() {
+                self.admission.note_deadline_hit();
+                return deadline_response("deadline exceeded between batch tiles");
+            }
             let sources: Vec<u32> = tile
                 .iter()
                 .map(|&i| match plans[i] {
@@ -577,6 +764,10 @@ impl Router {
         let mut memo: Vec<(String, Json)> = Vec::new();
         for (i, plan) in plans.iter().enumerate() {
             if let Plan::Direct(ep, q) = plan {
+                if deadline::expired() {
+                    self.admission.note_deadline_hit();
+                    return deadline_response("deadline exceeded between batch members");
+                }
                 let key = format!("{}|{}", ep.name(), q.render());
                 let cached = memo.iter().find(|(k, _)| *k == key).map(|(_, v)| v.clone());
                 let out = match cached {
@@ -609,6 +800,50 @@ impl Router {
             .render(),
         )
     }
+}
+
+/// Map an admission rejection onto its HTTP reply: `429` for rate
+/// limiting, `503` for shed/queue-full/shutdown, `504` for a deadline
+/// that ran out while parked. Every rejection carries a `Retry-After`
+/// header (integer seconds, priced from the bucket refill for rate
+/// limits) and a JSON body naming the machine-readable `reason`.
+fn reject_response(r: Reject) -> Response {
+    let status = match r {
+        Reject::RateLimited { .. } => 429,
+        Reject::DeadlineExceeded => 504,
+        Reject::Shed | Reject::QueueFull | Reject::ShuttingDown => 503,
+    };
+    let detail = match r {
+        Reject::RateLimited { .. } => "tenant rate limit exceeded",
+        Reject::Shed => "shedding expensive queries under load",
+        Reject::QueueFull => "admission queue full",
+        Reject::DeadlineExceeded => "deadline exceeded while queued for admission",
+        Reject::ShuttingDown => "server shutting down",
+    };
+    let retry = r.retry_after();
+    Response::json(
+        status,
+        Json::obj(vec![
+            ("error", Json::Str(detail.into())),
+            ("reason", Json::Str(r.reason().into())),
+            ("retry_after_s", Json::Num(retry as f64)),
+        ])
+        .render(),
+    )
+    .with_header("retry-after", retry.to_string())
+}
+
+/// `504 deadline exceeded` reply for expiries observed after admission
+/// (at dequeue, pre-dispatch, or a kernel checkpoint).
+fn deadline_response(detail: &str) -> Response {
+    Response::json(
+        504,
+        Json::obj(vec![
+            ("error", Json::Str(detail.into())),
+            ("reason", Json::Str("deadline".into())),
+        ])
+        .render(),
+    )
 }
 
 /// Prefix a per-query result object with its query name (batch rows
@@ -702,10 +937,13 @@ fn run_query(g: &PreparedGraph, ep: Endpoint, body: &Json) -> anyhow::Result<Jso
 }
 
 const USAGE: &str = "boba graph-analytics service\n\
-  GET  /healthz\n\
+  GET  /healthz                      liveness only\n\
+  GET  /readyz                       503 while preparing or shedding\n\
   GET  /stats[?format=text]\n\
   GET  /metrics                      Prometheus text exposition\n\
   GET  /debug/traces[?n=K]           recent stage-span traces, newest first\n\
+  GET  /debug/faults                 armed fault-injection points\n\
+  POST /debug/faults                 {\"spec\": \"prepare-fail:1\"} (\"\" disarms)\n\
   GET  /graphs\n\
   POST /graphs                       {\"dataset\": \"rmat:16:16\", \"scheme\": \"boba\"}\n\
   POST /graphs/{id}/spmv             {\"seed\": 7}        (optional seeded RHS)\n\
@@ -714,19 +952,25 @@ const USAGE: &str = "boba graph-analytics service\n\
   POST /graphs/{id}/tc\n\
   POST /query/batch                  {\"id\": \"rmat:16:16@boba\",\n\
                                       \"queries\": [{\"query\": \"spmv\"},\n\
-                                                  {\"query\": \"sssp\", \"source\": 3}]}\n";
+                                                  {\"query\": \"sssp\", \"source\": 3}]}\n\
+  Headers: x-tenant (rate-limit bucket), x-deadline-ms (request deadline)\n";
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::server::admission::AdmissionConfig;
     use crate::server::coalesce::CoalesceConfig;
     use crate::server::registry::RegistryConfig;
 
     fn router() -> Router {
-        router_with_format(None)
+        router_with(None, AdmissionConfig::default())
     }
 
     fn router_with_format(format: Option<&str>) -> Router {
+        router_with(format, AdmissionConfig::default())
+    }
+
+    fn router_with(format: Option<&str>, adm: AdmissionConfig) -> Router {
         Router::new(
             Arc::new(GraphRegistry::new(RegistryConfig {
                 capacity: 4,
@@ -737,6 +981,7 @@ mod tests {
             })),
             Arc::new(ServerStats::new()),
             Arc::new(Coalescer::new(CoalesceConfig::default())),
+            Arc::new(Admission::new(adm)),
         )
     }
 
@@ -748,6 +993,18 @@ mod tests {
             headers: Vec::new(),
             body: body.as_bytes().to_vec(),
         }
+    }
+
+    fn req_with_headers(
+        method: &str,
+        path: &str,
+        body: &str,
+        headers: &[(&str, &str)],
+    ) -> Request {
+        let mut r = req(method, path, body);
+        r.headers =
+            headers.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        r
     }
 
     fn json_of(resp: &Response) -> Json {
@@ -1095,5 +1352,121 @@ mod tests {
             "{\"source\": 99999999}",
         ));
         assert_eq!(bad.status, 422);
+    }
+
+    #[test]
+    fn rate_limit_answers_429_with_retry_after() {
+        let r = router_with(None, AdmissionConfig { rate: 0.001, burst: 1.0, max_inflight: 0 });
+        let ok = r.handle(&req("POST", "/graphs", "{\"dataset\": \"pa:600:4\"}"));
+        assert_eq!(ok.status, 201, "{}", String::from_utf8_lossy(&ok.body));
+        let rej = r.handle(&req("POST", "/graphs", "{\"dataset\": \"pa:600:4\"}"));
+        assert_eq!(rej.status, 429);
+        let body = json_of(&rej);
+        assert_eq!(body.get("reason").unwrap().as_str(), Some("rate"));
+        let (_, ra) = rej
+            .extra
+            .iter()
+            .find(|(k, _)| k == "retry-after")
+            .expect("429 carries a Retry-After header");
+        assert!(ra.parse::<u64>().unwrap() >= 1, "retry-after was {ra:?}");
+        // A different tenant has its own bucket (and hits the cache).
+        let other = r.handle(&req_with_headers(
+            "POST",
+            "/graphs",
+            "{\"dataset\": \"pa:600:4\"}",
+            &[("x-tenant", "acme")],
+        ));
+        assert_eq!(other.status, 200);
+        // Introspection is never rate limited, and it reports the
+        // rejection under (tenant, reason).
+        let stats = json_of(&r.handle(&req("GET", "/stats", "")));
+        let adm = stats.get("admission").unwrap();
+        assert_eq!(adm.get("rejected").unwrap().get("default:rate").unwrap().as_u64(), Some(1));
+        let m = r.handle(&req("GET", "/metrics", ""));
+        let text = String::from_utf8(m.body.clone()).unwrap();
+        let scrape = crate::obs::text::Scrape::parse(&text).expect("conformant exposition");
+        assert_eq!(
+            scrape.value(
+                "boba_admission_rejected_total",
+                &[("tenant", "default"), ("reason", "rate")],
+            ),
+            Some(1.0)
+        );
+        assert!(scrape.family("boba_inflight").is_some());
+        assert!(scrape.family("boba_deadline_exceeded_total").is_some());
+    }
+
+    #[test]
+    fn spent_deadline_answers_504_without_dispatching() {
+        let r = router();
+        let resp = r.handle(&req("POST", "/graphs", "{\"dataset\": \"pa:700:4\"}"));
+        let id = json_of(&resp).get("id").unwrap().as_str().unwrap().to_string();
+        let resp = r.handle(&req_with_headers(
+            "POST",
+            &format!("/graphs/{id}/spmv"),
+            "",
+            &[("x-deadline-ms", "0")],
+        ));
+        assert_eq!(resp.status, 504, "{}", String::from_utf8_lossy(&resp.body));
+        assert_eq!(json_of(&resp).get("reason").unwrap().as_str(), Some("deadline"));
+        let stats = json_of(&r.handle(&req("GET", "/stats", "")));
+        assert!(
+            stats.get("admission").unwrap().get("deadline_exceeded").unwrap().as_u64().unwrap()
+                >= 1
+        );
+        // The expired deadline is scoped to its request: the next
+        // headerless request on this thread runs unconstrained.
+        assert_eq!(r.handle(&req("POST", &format!("/graphs/{id}/spmv"), "")).status, 200);
+    }
+
+    #[test]
+    fn saturated_gate_sheds_expensive_and_degrades_readyz() {
+        let r = router_with(None, AdmissionConfig { rate: 0.0, burst: 0.0, max_inflight: 1 });
+        let resp = r.handle(&req("POST", "/graphs", "{\"dataset\": \"pa:800:4\"}"));
+        assert_eq!(resp.status, 201);
+        let id = json_of(&resp).get("id").unwrap().as_str().unwrap().to_string();
+        assert_eq!(r.handle(&req("GET", "/readyz", "")).status, 200);
+
+        // Hold the single in-flight slot.
+        let permit = r.admission.admit("default", false).unwrap();
+        let shed = r.handle(&req("POST", &format!("/graphs/{id}/tc"), ""));
+        assert_eq!(shed.status, 503);
+        assert_eq!(json_of(&shed).get("reason").unwrap().as_str(), Some("shed"));
+        let ready = r.handle(&req("GET", "/readyz", ""));
+        assert_eq!(ready.status, 503);
+        assert!(String::from_utf8_lossy(&ready.body).contains("shedding"));
+        // A cheap query with an exhausted budget detaches from the
+        // parking queue instead of waiting forever.
+        let parked = r.handle(&req_with_headers(
+            "POST",
+            &format!("/graphs/{id}/spmv"),
+            "",
+            &[("x-deadline-ms", "0")],
+        ));
+        assert_eq!(parked.status, 504);
+
+        drop(permit);
+        assert_eq!(r.handle(&req("GET", "/readyz", "")).status, 200);
+        assert_eq!(r.handle(&req("POST", &format!("/graphs/{id}/spmv"), "")).status, 200);
+    }
+
+    #[test]
+    fn debug_faults_roundtrip() {
+        let _l = crate::obs::chaos::TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let r = router();
+        // test-point is hooked by nothing, so arming it cannot perturb
+        // other tests sharing this process's global fault table.
+        let armed = r.handle(&req("POST", "/debug/faults", "{\"spec\": \"test-point:2\"}"));
+        assert_eq!(armed.status, 200, "{}", String::from_utf8_lossy(&armed.body));
+        assert_eq!(json_of(&armed).get("armed").unwrap().as_bool(), Some(true));
+        let got = r.handle(&req("GET", "/debug/faults", ""));
+        assert!(String::from_utf8_lossy(&got.body).contains("test-point"));
+        // Bad inputs fail loudly without changing the table.
+        assert_eq!(r.handle(&req("POST", "/debug/faults", "{\"spec\": \"frobnicate\"}")).status, 422);
+        assert_eq!(r.handle(&req("POST", "/debug/faults", "not json")).status, 400);
+        assert_eq!(r.handle(&req("POST", "/debug/faults", "{}")).status, 422);
+        // The empty spec disarms.
+        let off = r.handle(&req("POST", "/debug/faults", "{\"spec\": \"\"}"));
+        assert_eq!(json_of(&off).get("armed").unwrap().as_bool(), Some(false));
     }
 }

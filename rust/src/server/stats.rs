@@ -33,8 +33,10 @@ pub enum Endpoint {
     Tc,
     /// `POST /query/batch` — heterogeneous query arrays.
     Batch,
-    /// `GET /healthz`.
+    /// `GET /healthz` — pure liveness.
     Healthz,
+    /// `GET /readyz` — readiness (503 while preparing or shedding).
+    Readyz,
     /// `GET /stats`.
     Stats,
     /// `GET /metrics` — Prometheus exposition.
@@ -45,7 +47,7 @@ pub enum Endpoint {
 
 impl Endpoint {
     /// All endpoints, display order.
-    pub const ALL: [Endpoint; 11] = [
+    pub const ALL: [Endpoint; 12] = [
         Endpoint::Ingest,
         Endpoint::List,
         Endpoint::Spmv,
@@ -54,6 +56,7 @@ impl Endpoint {
         Endpoint::Tc,
         Endpoint::Batch,
         Endpoint::Healthz,
+        Endpoint::Readyz,
         Endpoint::Stats,
         Endpoint::Metrics,
         Endpoint::Traces,
@@ -70,6 +73,7 @@ impl Endpoint {
             Endpoint::Tc => "tc",
             Endpoint::Batch => "batch",
             Endpoint::Healthz => "healthz",
+            Endpoint::Readyz => "readyz",
             Endpoint::Stats => "stats",
             Endpoint::Metrics => "metrics",
             Endpoint::Traces => "traces",
@@ -91,7 +95,7 @@ impl Endpoint {
 /// Aggregated per-endpoint stats for one server instance.
 #[derive(Debug)]
 pub struct ServerStats {
-    slots: [(Histogram, AtomicU64); 11], // (latencies, error count)
+    slots: [(Histogram, AtomicU64); 12], // (latencies, error count)
     started: std::time::Instant,
 }
 
@@ -257,7 +261,7 @@ mod tests {
         s.record(Endpoint::Traces, Duration::from_micros(120), true);
         assert_eq!(s.histogram(Endpoint::Metrics).count(), 1);
         assert_eq!(s.histogram(Endpoint::Traces).count(), 1);
-        assert_eq!(Endpoint::ALL.len(), 11);
+        assert_eq!(Endpoint::ALL.len(), 12);
     }
 
     #[test]

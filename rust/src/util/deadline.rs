@@ -1,0 +1,120 @@
+//! Request-deadline propagation: a thread-local budget that long
+//! kernels and prepare stages poll cooperatively.
+//!
+//! The serve path derives a deadline from the client's `x-deadline-ms`
+//! header (or the server's `--default-deadline-ms`) and installs it on
+//! the request thread with [`scope`] before dispatching. Anything
+//! running on that thread — registry prepare stages, PageRank
+//! iterations, SSSP rounds, batch tiles — calls [`expired`] at its
+//! natural checkpoint and returns early instead of burning a core on
+//! an answer nobody is waiting for; the router maps the early return
+//! to `504 Gateway Timeout`.
+//!
+//! The thread-local lives here in `util` (not `server`) so the
+//! algorithm kernels can poll it without a layering violation: `algos`
+//! may depend on `util`, never on `server`. With no deadline installed
+//! — every offline path: CLI runs, benches, repro — [`expired`] is one
+//! thread-local read of a `None`, no clock call, no branch misses.
+//! Worker-pool threads never see the request thread's deadline (the
+//! cell is thread-local and the pool predates the request); only the
+//! *orchestrating* loops poll, which is exactly the granularity the
+//! checkpoints want.
+
+use std::cell::Cell;
+use std::time::{Duration, Instant};
+
+thread_local! {
+    static DEADLINE: Cell<Option<Instant>> = const { Cell::new(None) };
+}
+
+/// RAII guard restoring the previous thread-local deadline on drop —
+/// scopes nest (a batch member may tighten, never loosen, the request
+/// deadline).
+pub struct Scope {
+    prev: Option<Instant>,
+}
+
+impl Drop for Scope {
+    fn drop(&mut self) {
+        DEADLINE.with(|d| d.set(self.prev));
+    }
+}
+
+/// Install `deadline` as the current thread's deadline for the guard's
+/// lifetime. `None` clears it (useful to shield sub-work that must run
+/// to completion).
+pub fn scope(deadline: Option<Instant>) -> Scope {
+    let prev = DEADLINE.with(|d| d.replace(deadline));
+    Scope { prev }
+}
+
+/// The current thread's deadline, if one is installed.
+pub fn current() -> Option<Instant> {
+    DEADLINE.with(|d| d.get())
+}
+
+/// True when a deadline is installed and has passed. The no-deadline
+/// path is a thread-local read — cheap enough for per-iteration
+/// checkpoints in kernels.
+pub fn expired() -> bool {
+    match current() {
+        Some(t) => Instant::now() >= t,
+        None => false,
+    }
+}
+
+/// Time left until the installed deadline: `None` when no deadline is
+/// set, `Some(ZERO)` when already past it.
+pub fn remaining() -> Option<Duration> {
+    current().map(|t| t.saturating_duration_since(Instant::now()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_deadline_never_expires() {
+        assert!(current().is_none());
+        assert!(!expired());
+        assert!(remaining().is_none());
+    }
+
+    #[test]
+    fn scope_installs_and_restores() {
+        let far = Instant::now() + Duration::from_secs(60);
+        {
+            let _g = scope(Some(far));
+            assert_eq!(current(), Some(far));
+            assert!(!expired());
+            assert!(remaining().unwrap() > Duration::from_secs(30));
+            {
+                let near = Instant::now() - Duration::from_millis(1);
+                let _inner = scope(Some(near));
+                assert!(expired());
+                assert_eq!(remaining(), Some(Duration::ZERO));
+            }
+            assert_eq!(current(), Some(far), "inner scope restored on drop");
+        }
+        assert!(current().is_none(), "outer scope restored on drop");
+    }
+
+    #[test]
+    fn scope_none_shields_sub_work() {
+        let _g = scope(Some(Instant::now() - Duration::from_millis(1)));
+        assert!(expired());
+        let _shield = scope(None);
+        assert!(!expired());
+    }
+
+    #[test]
+    fn deadline_is_thread_local() {
+        let _g = scope(Some(Instant::now() - Duration::from_millis(1)));
+        assert!(expired());
+        std::thread::spawn(|| {
+            assert!(!expired(), "other threads must not inherit the deadline");
+        })
+        .join()
+        .unwrap();
+    }
+}

@@ -1,13 +1,14 @@
 //! Small substrates the rest of the crate builds on: deterministic PRNGs
 //! (no `rand` crate resolves offline), a CLI argument parser (no `clap`),
-//! wall-clock stage timers, a JSON codec (no `serde`), and
-//! human-readable formatting.
+//! wall-clock stage timers, a JSON codec (no `serde`), thread-local
+//! request deadlines, and human-readable formatting.
 
 pub mod prng;
 pub mod args;
 pub mod timer;
 pub mod human;
 pub mod json;
+pub mod deadline;
 
 pub use json::Json;
 pub use prng::{SplitMix64, Xoshiro256};

@@ -497,6 +497,55 @@ fn corrupt_or_wrong_mode_sidecar_falls_back_to_text() {
 }
 
 #[test]
+fn corrupt_sidecars_are_quarantined_and_text_reparsed() {
+    let _env = env_guard();
+    let p = tmp("quarantine.el");
+    std::fs::write(&p, "0 1\n1 2\n").unwrap();
+    let sc = bcoo::sidecar_path_for(&p, false);
+    let bad = {
+        let mut n = sc.as_os_str().to_os_string();
+        n.push(".bad");
+        std::path::PathBuf::from(n)
+    };
+    std::fs::remove_file(&sc).ok();
+    std::fs::remove_file(&bad).ok();
+    // Seed a valid sidecar strictly newer than the source (the sleep
+    // outlasts 1-second filesystem mtime granularity), so every
+    // corrupted rewrite below is mtime-fresh and genuinely parsed.
+    std::thread::sleep(std::time::Duration::from_millis(1100));
+    let want = io::load_graph_file(&p, true).unwrap();
+    assert!(sc.exists());
+    let pristine = std::fs::read(&sc).unwrap();
+
+    // Bit flip in the payload: the checksum catches it, the file moves
+    // to `.bad` with its bytes intact, and the text re-parse serves the
+    // right graph and rewrites a fresh cache.
+    let mut flipped = pristine.clone();
+    let flip_at = pristine.len() / 2;
+    flipped[flip_at] ^= 0x40;
+    std::fs::write(&sc, &flipped).unwrap();
+    assert_eq!(io::load_graph_file(&p, true).unwrap(), want);
+    assert!(bad.exists(), "bit-flipped sidecar is quarantined to .bad");
+    assert_eq!(std::fs::read(&bad).unwrap(), flipped, "quarantine preserves the evidence");
+    assert!(sc.exists(), "fallback re-parse rewrote a fresh sidecar");
+    assert_eq!(bcoo::read_bcoo(&sc).unwrap(), want);
+    std::fs::remove_file(&bad).unwrap();
+
+    // Truncation (also caught without the checksum, by the length check).
+    std::fs::write(&sc, &pristine[..pristine.len() - 5]).unwrap();
+    assert_eq!(io::load_graph_file(&p, true).unwrap(), want);
+    assert!(bad.exists(), "truncated sidecar is quarantined");
+    std::fs::remove_file(&bad).unwrap();
+
+    // Zero length — shorter than the header, still quarantined cleanly.
+    std::fs::write(&sc, b"").unwrap();
+    assert_eq!(io::load_graph_file(&p, true).unwrap(), want);
+    assert!(bad.exists(), "zero-length sidecar is quarantined");
+    std::fs::remove_file(&bad).unwrap();
+    cleanup(&p);
+}
+
+#[test]
 fn cache_disable_env_is_respected() {
     let _env = env_guard();
     // Serialized against other env-reading tests by using a unique

@@ -1,0 +1,252 @@
+//! Resilience integration tests: chaos-driven failing prepares with
+//! concurrent single-flight waiters, admission-gate shutdown release,
+//! end-to-end deadline 504s, and `Retry-After` parseability on
+//! rejected requests.
+//!
+//! The chaos fault table is process-global state, so every test here
+//! serializes on the file-local `LOCK`. The library's own unit tests
+//! run in a separate binary (and arm only test-only points), so the
+//! production points exercised here cannot race them.
+
+use boba::server::admission::{Admission, AdmissionConfig};
+use boba::server::http::HttpClient;
+use boba::server::json::Json;
+use boba::server::{self, ServerConfig};
+use boba::util::deadline;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn spawn_server(tweak: impl FnOnce(&mut ServerConfig)) -> server::Server {
+    let mut cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        capacity: 4,
+        seed: 42,
+        read_timeout: Duration::from_secs(10),
+        ..Default::default()
+    };
+    tweak(&mut cfg);
+    server::spawn(cfg).expect("server must bind an ephemeral port")
+}
+
+fn client(srv: &server::Server) -> HttpClient {
+    HttpClient::connect(&srv.addr().to_string()).expect("connect")
+}
+
+/// One raw HTTP exchange with caller-supplied extra headers (the
+/// `HttpClient` helper deliberately has no header surface).
+fn raw_post(
+    addr: &std::net::SocketAddr,
+    path: &str,
+    body: &str,
+    headers: &[(&str, &str)],
+) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut req = format!("POST {path} HTTP/1.1\r\nhost: resilience\r\nconnection: close\r\n");
+    for (name, value) in headers {
+        req.push_str(&format!("{name}: {value}\r\n"));
+    }
+    req.push_str(&format!("content-length: {}\r\n\r\n{body}", body.len()));
+    s.write_all(req.as_bytes()).unwrap();
+    s.flush().unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).expect("read response");
+    let text = String::from_utf8_lossy(&raw);
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .expect("status line")
+        .parse()
+        .expect("numeric status");
+    let body = text.split("\r\n\r\n").nth(1).unwrap_or_default().to_string();
+    (status, body)
+}
+
+/// The single-flight failure contract: when the leader's prepare hits
+/// an armed `prepare-fail`, every joined waiter gets a clean error
+/// naming the fault (nobody hangs, nobody panics), the pending slot is
+/// fully torn down, and a retry after disarming succeeds.
+#[test]
+fn concurrent_waiters_on_a_failing_prepare_all_get_clean_errors_then_retry_succeeds() {
+    let _g = lock();
+    let srv = spawn_server(|_| {});
+    let mut c = client(&srv);
+    let (st, _) = c
+        .request("POST", "/debug/faults", b"{\"spec\": \"prepare-fail:1\"}")
+        .expect("arm fault table");
+    assert_eq!(st, 200);
+
+    // N concurrent ingests of the same artifact. The first leader's
+    // prepare consumes the fault budget and fails; everyone parked on
+    // that flight inherits the error. Stragglers that arrive after the
+    // teardown become fresh leaders and succeed (budget spent) — both
+    // outcomes are legal, hangs and opaque 5xxs are not.
+    const N: usize = 6;
+    let addr = srv.addr().to_string();
+    let results: Vec<(u16, String)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..N)
+            .map(|_| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut c = HttpClient::connect(&addr).expect("connect");
+                    let (st, body) = c
+                        .request("POST", "/graphs", b"{\"dataset\": \"rmat:10:8\"}")
+                        .expect("exchange completes");
+                    (st, String::from_utf8_lossy(&body).into_owned())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("no waiter panics")).collect()
+    });
+
+    let failed = results.iter().filter(|(st, _)| *st == 422).count();
+    assert!(failed >= 1, "the first leader must hit the armed fault: {results:?}");
+    for (st, body) in &results {
+        match st {
+            200 | 201 => {}
+            422 => assert!(
+                body.contains("injected fault"),
+                "failure must name the injected fault: {body}"
+            ),
+            other => panic!("unexpected status {other}: {body}"),
+        }
+    }
+
+    // Disarm explicitly and retry: the failed artifact must not be
+    // poisoned — a clean prepare publishes it.
+    let (st, _) = c.request("POST", "/debug/faults", b"{\"spec\": \"\"}").unwrap();
+    assert_eq!(st, 200);
+    let (st, body) = c.request("POST", "/graphs", b"{\"dataset\": \"rmat:10:8\"}").unwrap();
+    assert!(
+        st == 200 || st == 201,
+        "retry after disarm must succeed: {st} {}",
+        String::from_utf8_lossy(&body)
+    );
+    srv.shutdown();
+}
+
+/// Shutdown must release every waiter parked behind the in-flight
+/// gate — both the patient kind (no deadline) and the kind parked
+/// under a generous deadline — with the `shutdown` rejection, while a
+/// waiter whose own deadline runs out first leaves with `deadline`.
+#[test]
+fn shutdown_releases_admission_parked_and_deadline_parked_waiters() {
+    let _g = lock();
+    let adm = Arc::new(Admission::new(AdmissionConfig {
+        rate: 0.0,
+        burst: 0.0,
+        max_inflight: 1,
+    }));
+    let hold = adm.admit("t", false).expect("first admit fills the only slot");
+
+    // Waiter with a short deadline: must self-release as `deadline`
+    // without any help from shutdown.
+    let a = adm.clone();
+    let short = std::thread::spawn(move || {
+        let _scope = deadline::scope(Some(Instant::now() + Duration::from_millis(300)));
+        a.admit("t", false).map(|_| ()).map_err(|r| r.reason())
+    });
+    let reason = short.join().expect("short-deadline waiter returns");
+    assert_eq!(reason, Err("deadline"));
+
+    // Two parked waiters — one patient, one under a 60 s deadline —
+    // that only shutdown can release while `hold` pins the slot.
+    let b = adm.clone();
+    let patient = std::thread::spawn(move || b.admit("t", false).map(|_| ()).map_err(|r| r.reason()));
+    let c = adm.clone();
+    let deadlined = std::thread::spawn(move || {
+        let _scope = deadline::scope(Some(Instant::now() + Duration::from_secs(60)));
+        c.admit("t", false).map(|_| ()).map_err(|r| r.reason())
+    });
+    // Let both reach the parked state (the gate polls at 250 ms, so a
+    // generous settle beats any scheduling jitter).
+    std::thread::sleep(Duration::from_millis(400));
+    assert!(adm.pressured(), "gate must be saturated with parked waiters");
+
+    let released = Instant::now();
+    adm.shutdown();
+    assert_eq!(patient.join().expect("patient waiter returns"), Err("shutdown"));
+    assert_eq!(deadlined.join().expect("deadlined waiter returns"), Err("shutdown"));
+    assert!(
+        released.elapsed() < Duration::from_secs(5),
+        "shutdown release must be prompt, took {:?}",
+        released.elapsed()
+    );
+    drop(hold);
+}
+
+/// Deadline propagation end-to-end over HTTP: a request whose
+/// `x-deadline-ms` budget is already spent gets a 504 from the
+/// dequeue-time check, never a kernel run.
+#[test]
+fn spent_deadline_budget_yields_504_over_http() {
+    let _g = lock();
+    let srv = spawn_server(|_| {});
+    let mut c = client(&srv);
+    let (st, body) = c.request("POST", "/graphs", b"{\"dataset\": \"pa:800:4\"}").unwrap();
+    assert_eq!(st, 201, "{}", String::from_utf8_lossy(&body));
+    let ingest = Json::parse(&String::from_utf8_lossy(&body)).expect("JSON ingest reply");
+    let id = ingest.get("id").unwrap().as_str().unwrap().to_string();
+
+    let (status, body) = raw_post(
+        &srv.addr(),
+        &format!("/graphs/{id}/spmv"),
+        "",
+        &[("x-deadline-ms", "0")],
+    );
+    assert_eq!(status, 504, "{body}");
+    let err = Json::parse(&body).expect("JSON error body");
+    assert_eq!(err.get("reason").and_then(Json::as_str), Some("deadline"));
+
+    // The same query without a deadline header still serves normally.
+    let (st, _) = c.request("POST", &format!("/graphs/{id}/spmv"), b"").unwrap();
+    assert_eq!(st, 200);
+    srv.shutdown();
+}
+
+/// Rate-limited requests must carry a `Retry-After` a client can
+/// actually parse (the loadgen backoff floors on it) plus the JSON
+/// reason body.
+#[test]
+fn rate_limited_requests_carry_a_parseable_retry_after() {
+    let _g = lock();
+    let srv = spawn_server(|c| {
+        c.rate = 0.1; // one token every 10 s...
+        c.burst = 1.0; // ...and exactly one to start with
+    });
+    let mut c = client(&srv);
+    let (st, body) = c.request("POST", "/graphs", b"{\"dataset\": \"pa:600:4\"}").unwrap();
+    assert_eq!(st, 201, "{}", String::from_utf8_lossy(&body));
+
+    let (st, body) = c.request("POST", "/graphs", b"{\"dataset\": \"pa:600:4\"}").unwrap();
+    assert_eq!(st, 429, "{}", String::from_utf8_lossy(&body));
+    let ra = c.retry_after().expect("429 must carry Retry-After");
+    assert!(ra >= 1, "Retry-After rounds up to whole seconds, got {ra}");
+    let err = Json::parse(&String::from_utf8_lossy(&body)).expect("JSON error body");
+    assert_eq!(err.get("reason").and_then(Json::as_str), Some("rate"));
+    assert!(err.get("retry_after_s").and_then(Json::as_u64).unwrap_or(0) >= 1);
+
+    // The rejection shows up in /stats and /metrics under the default
+    // tenant with the `rate` reason.
+    let (st, stats) = c.request("GET", "/stats", b"").unwrap();
+    assert_eq!(st, 200);
+    let stats = String::from_utf8_lossy(&stats);
+    assert!(stats.contains("\"admission\""), "stats must expose admission: {stats}");
+    let (st, metrics) = c.request("GET", "/metrics", b"").unwrap();
+    assert_eq!(st, 200);
+    let metrics = String::from_utf8_lossy(&metrics);
+    assert!(
+        metrics.contains("boba_admission_rejected_total"),
+        "metrics must expose the rejection family: {metrics}"
+    );
+    srv.shutdown();
+}
