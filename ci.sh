@@ -67,13 +67,16 @@ fi
 # self-contained command. --overload appends the resilience sweep:
 # open-loop traffic at ~2x measured capacity against an admission-
 # enabled server and an unprotected twin, pricing goodput and accepted-
-# request p99 under overload (retries honor Retry-After).
+# request p99 under overload (retries honor Retry-After). --churn
+# appends the frozen-vs-mutating sweep: the same query mix with and
+# without a fraction of durable POST /mutate batches against a
+# WAL-enabled server, pricing what churn costs co-resident queries.
 if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
     note "serving benchmark (BENCH_serve.json)"
     if ! cargo run --release -- loadgen --spawn --compare --coalesce \
         --dataset rmat:14:8 --conns 4 --requests 600 \
         --mix spmv:7,pagerank:3 --pr-iters 5 --batch-queries 4 \
-        --overload --retries 2 \
+        --overload --retries 2 --churn --mutate-frac 0.3 \
         --scrape-metrics --json "$ROOT/BENCH_serve.json"; then
         echo "FAILED (required): serving benchmark"
         FAILURES=$((FAILURES + 1))
@@ -103,6 +106,18 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
                 FAILURES=$((FAILURES + 1))
             fi
         done
+        # The churn sweep must land with its mutation accounting: the
+        # serve-churn section (frozen vs mutating rows), the pricing
+        # ratios, and the scraped server-side mutation counters.
+        for key in '"churn"' '"serve-churn"' '"mutating"' \
+                   '"goodput_ratio_mutating_vs_frozen"' \
+                   '"p99_ratio_mutating_vs_frozen"' \
+                   '"server_mutations_total"' '"server_compactions_total"'; do
+            if ! grep -q "$key" "$ROOT/BENCH_serve.json"; then
+                echo "FAILED (required): BENCH_serve.json lacks $key"
+                FAILURES=$((FAILURES + 1))
+            fi
+        done
     fi
 
     # Observability gate: serve on a fixed port, drive real traffic,
@@ -111,9 +126,16 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
     # and the loadgen scraper key on.
     note "metrics exposition gate"
     OBS_PORT="${CI_OBS_PORT:-7199}"
-    http_get() {
-        exec 3<>"/dev/tcp/127.0.0.1/$OBS_PORT" || return 1
-        printf 'GET %s HTTP/1.1\r\nhost: ci\r\nconnection: close\r\n\r\n' "$1" >&3
+    http_get() {  # port path
+        exec 3<>"/dev/tcp/127.0.0.1/$1" || return 1
+        printf 'GET %s HTTP/1.1\r\nhost: ci\r\nconnection: close\r\n\r\n' "$2" >&3
+        cat <&3
+        exec 3>&- 2>/dev/null
+    }
+    http_post() {  # port path body
+        exec 3<>"/dev/tcp/127.0.0.1/$1" || return 1
+        printf 'POST %s HTTP/1.1\r\nhost: ci\r\nconnection: close\r\ncontent-length: %s\r\n\r\n%s' \
+            "$2" "${#3}" "$3" >&3
         cat <&3
         exec 3>&- 2>/dev/null
     }
@@ -125,11 +147,11 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
     # Liveness vs readiness split: /healthz answers from the first
     # accept; /readyz reports ready on an idle, prepared-or-empty
     # server.
-    if ! http_get /healthz | grep -q '"status":"ok"'; then
+    if ! http_get "$OBS_PORT" /healthz | grep -q '"status":"ok"'; then
         echo "FAILED (required): /healthz is not answering ok"
         FAILURES=$((FAILURES + 1))
     fi
-    if ! http_get /readyz | grep -q '"status":"ready"'; then
+    if ! http_get "$OBS_PORT" /readyz | grep -q '"status":"ready"'; then
         echo "FAILED (required): /readyz is not ready on an idle server"
         FAILURES=$((FAILURES + 1))
     fi
@@ -139,26 +161,108 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
         FAILURES=$((FAILURES + 1))
     fi
     METRICS="$ROOT/ci_metrics.txt"
-    http_get /metrics > "$METRICS" || true
+    http_get "$OBS_PORT" /metrics > "$METRICS" || true
     for fam in boba_uptime_seconds boba_requests_total boba_request_errors_total \
                boba_request_duration_seconds boba_registry_graphs boba_registry_hits_total \
                boba_registry_prepares_total boba_pool_dispatches_total \
                boba_coalesce_batches_total boba_coalesce_batch_width \
                boba_stage_duration_seconds boba_process_resident_memory_bytes \
                boba_traces_total boba_format_bytes_per_edge \
-               boba_inflight boba_admission_rejected_total boba_deadline_exceeded_total; do
+               boba_inflight boba_admission_rejected_total boba_deadline_exceeded_total \
+               boba_mutations_total boba_compactions_total boba_delta_entries \
+               boba_recovering boba_io_corruption_total; do
         if ! grep -q "^# TYPE $fam " "$METRICS"; then
             echo "FAILED (required): /metrics lacks family $fam"
             FAILURES=$((FAILURES + 1))
         fi
     done
-    if ! http_get '/debug/traces?n=8' | grep -q '"endpoint":"ingest"'; then
+    if ! http_get "$OBS_PORT" '/debug/traces?n=8' | grep -q '"endpoint":"ingest"'; then
         echo "FAILED (required): /debug/traces has no ingest trace"
         FAILURES=$((FAILURES + 1))
     fi
     kill "$SERVE_PID" 2>/dev/null
     wait "$SERVE_PID" 2>/dev/null
     rm -f "$METRICS"
+
+    # Crash-recovery smoke: a WAL-enabled fixed-port server is killed
+    # by the `crash-after-append` fault mid-churn (the process aborts
+    # *after* the record is fsync-durable — the SIGKILL window the WAL
+    # exists for), restarted over the same --wal-dir, and its replayed
+    # digest must equal a never-crashed twin that applied the same
+    # batches. The digest is the label-invariant edge-multiset hash, so
+    # equality holds even though the restart re-runs BOBA from scratch.
+    note "crash-recovery smoke"
+    WAL_DIR="$ROOT/ci_wal"
+    TWIN_DIR="$ROOT/ci_wal_twin"
+    rm -rf "$WAL_DIR" "$TWIN_DIR"
+    CRASH_PORT=$((OBS_PORT + 1))
+    TWIN_PORT=$((OBS_PORT + 2))
+    CRASH_DATASET='{"dataset": "pa:2000:4"}'
+    mutate_body() {
+        printf '{"ops": [{"op": "upsert", "u": %s, "v": %s, "w": 1.5}, {"op": "delete", "u": %s, "v": %s}]}' \
+            "$1" "$(((($1 + 7)) % 2000))" "$((($1 * 3) % 2000))" "$((($1 * 5) % 2000))"
+    }
+    wait_ready() {  # port
+        for _ in $(seq 1 150); do
+            if http_get "$1" /readyz 2>/dev/null | grep -q '"status":"ready"'; then
+                return 0
+            fi
+            sleep 0.2
+        done
+        return 1
+    }
+    # The 4th append aborts the server (skip 3, then fire once): three
+    # acked batches plus one durable-but-maybe-unacked record on disk.
+    BOBA_FAULTS='crash-after-append:1:3' ./target/release/boba serve \
+        --addr "127.0.0.1:$CRASH_PORT" --workers 2 --wal-dir "$WAL_DIR" &
+    CRASH_PID=$!
+    wait_ready "$CRASH_PORT"
+    GID=$(http_post "$CRASH_PORT" /graphs "$CRASH_DATASET" \
+        | grep -o '"id":"[^"]*"' | head -1 | cut -d'"' -f4)
+    for i in 1 2 3 4; do
+        http_post "$CRASH_PORT" "/graphs/$GID/mutate" "$(mutate_body "$i")" >/dev/null 2>&1 || true
+    done
+    wait "$CRASH_PID" 2>/dev/null
+    if kill -0 "$CRASH_PID" 2>/dev/null; then
+        echo "FAILED (required): crash-after-append did not kill the server"
+        FAILURES=$((FAILURES + 1))
+        kill -9 "$CRASH_PID" 2>/dev/null
+    fi
+    # The never-crashed twin applies the identical four batches (the
+    # 4th record was durable on the crash server, so replay includes it).
+    ./target/release/boba serve --addr "127.0.0.1:$TWIN_PORT" --workers 2 \
+        --wal-dir "$TWIN_DIR" &
+    TWIN_PID=$!
+    wait_ready "$TWIN_PORT"
+    TID=$(http_post "$TWIN_PORT" /graphs "$CRASH_DATASET" \
+        | grep -o '"id":"[^"]*"' | head -1 | cut -d'"' -f4)
+    for i in 1 2 3 4; do
+        http_post "$TWIN_PORT" "/graphs/$TID/mutate" "$(mutate_body "$i")" >/dev/null
+    done
+    TWIN_DIGEST=$(http_get "$TWIN_PORT" "/graphs/$TID/digest" | grep -o '"digest":"[0-9a-f]*"')
+    kill "$TWIN_PID" 2>/dev/null
+    wait "$TWIN_PID" 2>/dev/null
+    # Restart over the crash-state directory (no faults armed) and let
+    # WAL replay finish (/readyz drops its `recovering` reason).
+    ./target/release/boba serve --addr "127.0.0.1:$CRASH_PORT" --workers 2 \
+        --wal-dir "$WAL_DIR" &
+    CRASH_PID=$!
+    if ! wait_ready "$CRASH_PORT"; then
+        echo "FAILED (required): restarted server never finished WAL replay"
+        FAILURES=$((FAILURES + 1))
+    fi
+    CRASH_DIGEST=$(http_get "$CRASH_PORT" "/graphs/$GID/digest" | grep -o '"digest":"[0-9a-f]*"')
+    if [ -z "$TWIN_DIGEST" ] || [ "$CRASH_DIGEST" != "$TWIN_DIGEST" ]; then
+        echo "FAILED (required): replayed digest $CRASH_DIGEST != twin $TWIN_DIGEST"
+        FAILURES=$((FAILURES + 1))
+    fi
+    if ! http_get "$CRASH_PORT" /metrics | grep -q '^boba_mutations_total'; then
+        echo "FAILED (required): recovered server does not export boba_mutations_total"
+        FAILURES=$((FAILURES + 1))
+    fi
+    kill "$CRASH_PID" 2>/dev/null
+    wait "$CRASH_PID" 2>/dev/null
+    rm -rf "$WAL_DIR" "$TWIN_DIR"
 
     # Paper-reproduction smoke run: T1–T5 on the generated quick trio,
     # writing the trajectory JSON and regenerating docs/RESULTS.md from

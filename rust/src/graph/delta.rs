@@ -1,0 +1,833 @@
+//! Sorted delta COO overlay for live graph mutations.
+//!
+//! A [`DeltaOverlay`] is the in-memory write side of the mutation
+//! subsystem (ROADMAP item 1): `POST /mutate` batches land here after
+//! they are durable in the WAL ([`crate::server::wal`]), and every
+//! query kernel merges the overlay with the frozen base CSR at read
+//! time until the background compactor re-runs BOBA + convert and
+//! folds the delta into a fresh epoch.
+//!
+//! Representation: two sorted, pair-unique COO fragments over the
+//! base's vertex space —
+//!
+//! * **upserts** `(src, dst, w)`: the pair `(src, dst)` exists in the
+//!   live graph with weight `w`, regardless of what the base stores
+//!   (an upsert *replaces* every parallel base copy of the pair);
+//! * **tombstones** `(src, dst)`: the pair is deleted — every base
+//!   copy is masked out.
+//!
+//! Both fragments are kept sorted by `(src, dst)` *and* mirrored
+//! sorted by `(dst, src)` so pull kernels (PageRank over `Aᵀ`) can
+//! merge in-neighbor rows as cheaply as out-neighbor rows. The two
+//! sets are disjoint: applying an upsert clears the pair's tombstone
+//! and vice versa, so membership checks are two binary searches per
+//! touched row.
+//!
+//! ## Merge order and determinism
+//!
+//! Every merged kernel iterates one row as: **base edges in storage
+//! order, skipping masked pairs, then overlay upserts in ascending
+//! destination order**. That canonical order is shared by the
+//! sequential and parallel merge paths (rows never split across
+//! tasks), so the merged kernels are **bit-identical at every thread
+//! count** — the same determinism bar the converter, the formats, and
+//! deterministic PageRank already meet. SSSP's frontier relaxation is
+//! order-independent at its fixpoint (distances are mins over the same
+//! set of f32 path folds), which the unit tests assert bitwise.
+
+use crate::algos::pagerank::{PrParams, PrResult};
+use crate::graph::{Coo, Csr};
+use crate::parallel::{self, SendPtr};
+use crate::util::deadline;
+
+/// One logical mutation against a prepared artifact, in the artifact's
+/// (relabeled) vertex space.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DeltaOp {
+    /// Insert-or-replace the edge `(src, dst)` with weight `w` (pass
+    /// `1.0` for unweighted graphs — the registry normalizes).
+    Upsert {
+        /// Source vertex.
+        src: u32,
+        /// Destination vertex.
+        dst: u32,
+        /// Edge weight (`1.0` on unweighted artifacts).
+        w: f32,
+    },
+    /// Delete every copy of the edge `(src, dst)`.
+    Delete {
+        /// Source vertex.
+        src: u32,
+        /// Destination vertex.
+        dst: u32,
+    },
+}
+
+/// Immutable sorted overlay snapshot (copy-on-write: [`DeltaOverlay::apply`]
+/// builds the next snapshot, readers keep the old `Arc`).
+#[derive(Clone, Debug, Default)]
+pub struct DeltaOverlay {
+    n: usize,
+    // Upserts sorted by (src, dst), pair-unique.
+    up_src: Vec<u32>,
+    up_dst: Vec<u32>,
+    up_val: Vec<f32>,
+    // Tombstones sorted by (src, dst), pair-unique, disjoint from upserts.
+    del_src: Vec<u32>,
+    del_dst: Vec<u32>,
+    // The same two sets sorted by (dst, src) — the pull-kernel mirror.
+    tup_dst: Vec<u32>,
+    tup_src: Vec<u32>,
+    tdel_dst: Vec<u32>,
+    tdel_src: Vec<u32>,
+}
+
+/// Binary-search the contiguous row `[lo, hi)` of `key` in a sorted
+/// key column.
+fn row_range(keys: &[u32], key: u32) -> (usize, usize) {
+    let lo = keys.partition_point(|&k| k < key);
+    let hi = lo + keys[lo..].partition_point(|&k| k == key);
+    (lo, hi)
+}
+
+impl DeltaOverlay {
+    /// Empty overlay over `n` vertices.
+    pub fn empty(n: usize) -> DeltaOverlay {
+        DeltaOverlay { n, ..Default::default() }
+    }
+
+    /// Overlay built from an op sequence (later ops win per pair).
+    pub fn from_ops(n: usize, ops: &[DeltaOp]) -> DeltaOverlay {
+        DeltaOverlay::empty(n).apply(ops)
+    }
+
+    /// Vertex-space size.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Upsert count.
+    pub fn upserts(&self) -> usize {
+        self.up_src.len()
+    }
+
+    /// Tombstone count.
+    pub fn tombstones(&self) -> usize {
+        self.del_src.len()
+    }
+
+    /// Total overlay entries (upserts + tombstones) — the compaction
+    /// threshold is checked against this.
+    pub fn len(&self) -> usize {
+        self.upserts() + self.tombstones()
+    }
+
+    /// True when the overlay holds no entries (queries take the pure
+    /// base path).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Next snapshot with `ops` applied in order (last write per pair
+    /// wins). Panics if an op names a vertex `>= n` — callers validate
+    /// against the artifact before appending to the WAL.
+    pub fn apply(&self, ops: &[DeltaOp]) -> DeltaOverlay {
+        use std::collections::BTreeMap;
+        // Some(w) = upsert, None = tombstone.
+        let mut state: BTreeMap<(u32, u32), Option<f32>> = BTreeMap::new();
+        for i in 0..self.up_src.len() {
+            state.insert((self.up_src[i], self.up_dst[i]), Some(self.up_val[i]));
+        }
+        for i in 0..self.del_src.len() {
+            state.insert((self.del_src[i], self.del_dst[i]), None);
+        }
+        for op in ops {
+            match *op {
+                DeltaOp::Upsert { src, dst, w } => {
+                    assert!(
+                        (src as usize) < self.n && (dst as usize) < self.n,
+                        "delta op vertex out of range (n={})",
+                        self.n
+                    );
+                    state.insert((src, dst), Some(w));
+                }
+                DeltaOp::Delete { src, dst } => {
+                    assert!(
+                        (src as usize) < self.n && (dst as usize) < self.n,
+                        "delta op vertex out of range (n={})",
+                        self.n
+                    );
+                    state.insert((src, dst), None);
+                }
+            }
+        }
+        let mut next = DeltaOverlay::empty(self.n);
+        // BTreeMap iterates (src, dst)-sorted — the forward arrays come
+        // out sorted for free; the transposed mirror re-sorts.
+        let mut tup: Vec<(u32, u32, f32)> = Vec::new();
+        let mut tdel: Vec<(u32, u32)> = Vec::new();
+        for (&(s, d), &entry) in &state {
+            match entry {
+                Some(w) => {
+                    next.up_src.push(s);
+                    next.up_dst.push(d);
+                    next.up_val.push(w);
+                    tup.push((d, s, w));
+                }
+                None => {
+                    next.del_src.push(s);
+                    next.del_dst.push(d);
+                    tdel.push((d, s));
+                }
+            }
+        }
+        tup.sort_unstable_by_key(|&(d, s, _)| (d, s));
+        tdel.sort_unstable();
+        for (d, s, _) in &tup {
+            next.tup_dst.push(*d);
+            next.tup_src.push(*s);
+        }
+        for (d, s) in &tdel {
+            next.tdel_dst.push(*d);
+            next.tdel_src.push(*s);
+        }
+        next
+    }
+
+    /// True when the base pair `(src, dst)` is masked (tombstoned or
+    /// replaced by an upsert). Callers on hot paths should use the
+    /// per-row ranges instead; this is the spot-check form.
+    pub fn masked(&self, src: u32, dst: u32) -> bool {
+        let (dlo, dhi) = row_range(&self.del_src, src);
+        let (ulo, uhi) = row_range(&self.up_src, src);
+        self.del_dst[dlo..dhi].binary_search(&dst).is_ok()
+            || self.up_dst[ulo..uhi].binary_search(&dst).is_ok()
+    }
+
+    /// Out-row upsert slice for `src`: `(dsts, weights)` ascending.
+    pub fn row_upserts(&self, src: u32) -> (&[u32], &[f32]) {
+        let (lo, hi) = row_range(&self.up_src, src);
+        (&self.up_dst[lo..hi], &self.up_val[lo..hi])
+    }
+
+    /// Merged out-degree array: base degree minus masked base copies
+    /// plus one per upsert. Integer arithmetic — deterministic by
+    /// construction.
+    pub fn merged_out_degrees(&self, base: &Csr) -> Vec<u32> {
+        let mut deg: Vec<u32> = (0..base.n()).map(|v| base.degree(v) as u32).collect();
+        for v in self.touched_rows() {
+            let (dlo, dhi) = row_range(&self.del_src, v);
+            let (ulo, uhi) = row_range(&self.up_src, v);
+            let mut masked = 0u32;
+            for &c in base.neighbors(v as usize) {
+                if self.del_dst[dlo..dhi].binary_search(&c).is_ok()
+                    || self.up_dst[ulo..uhi].binary_search(&c).is_ok()
+                {
+                    masked += 1;
+                }
+            }
+            deg[v as usize] -= masked;
+        }
+        for &s in &self.up_src {
+            deg[s as usize] += 1;
+        }
+        deg
+    }
+
+    /// Merged edge count.
+    pub fn merged_m(&self, base: &Csr) -> usize {
+        self.merged_out_degrees(base).iter().map(|&d| d as usize).sum()
+    }
+
+    /// Distinct source rows carrying any overlay entry, ascending.
+    fn touched_rows(&self) -> Vec<u32> {
+        let mut rows: Vec<u32> = self.del_src.iter().chain(self.up_src.iter()).copied().collect();
+        rows.sort_unstable();
+        rows.dedup();
+        rows
+    }
+}
+
+/// One merged out-row accumulation: base edges in storage order (masked
+/// pairs skipped), then upserts ascending — the canonical order both
+/// the sequential and parallel SpMV share.
+#[inline]
+fn merged_row_acc(base: &Csr, d: &DeltaOverlay, x: &[f32], v: usize) -> f32 {
+    let (lo, hi) = (base.row_ptr[v] as usize, base.row_ptr[v + 1] as usize);
+    let (dlo, dhi) = row_range(&d.del_src, v as u32);
+    let (ulo, uhi) = row_range(&d.up_src, v as u32);
+    let mut acc = 0f32;
+    if dlo == dhi && ulo == uhi {
+        // Untouched row: the exact base loop (same adds, same order).
+        match &base.vals {
+            Some(vals) => {
+                for e in lo..hi {
+                    acc += vals[e] * x[base.col_idx[e] as usize];
+                }
+            }
+            None => {
+                for e in lo..hi {
+                    acc += x[base.col_idx[e] as usize];
+                }
+            }
+        }
+        return acc;
+    }
+    let dels = &d.del_dst[dlo..dhi];
+    let ups = &d.up_dst[ulo..uhi];
+    let masked = |c: u32| dels.binary_search(&c).is_ok() || ups.binary_search(&c).is_ok();
+    match &base.vals {
+        Some(vals) => {
+            for e in lo..hi {
+                let c = base.col_idx[e];
+                if !masked(c) {
+                    acc += vals[e] * x[c as usize];
+                }
+            }
+        }
+        None => {
+            for e in lo..hi {
+                let c = base.col_idx[e];
+                if !masked(c) {
+                    acc += x[c as usize];
+                }
+            }
+        }
+    }
+    for i in ulo..uhi {
+        acc += d.up_val[i] * x[d.up_dst[i] as usize];
+    }
+    acc
+}
+
+/// Sequential merged SpMV: `y = (base ⊕ delta)·x`.
+pub fn spmv_merged(base: &Csr, d: &DeltaOverlay, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), base.n());
+    (0..base.n()).map(|v| merged_row_acc(base, d, x, v)).collect()
+}
+
+/// Edge-balanced parallel merged SpMV — **bit-identical to
+/// [`spmv_merged`] at every thread count** (rows never split across
+/// tasks and the per-row body is shared).
+pub fn spmv_merged_parallel(base: &Csr, d: &DeltaOverlay, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), base.n());
+    let n = base.n();
+    if base.m() < 1 << 14 {
+        return spmv_merged(base, d, x);
+    }
+    let tasks = (parallel::threads() * 8).max(1);
+    let bounds = crate::algos::spmv::edge_balanced_row_bounds(base, tasks);
+    let mut y = vec![0f32; n];
+    let y_ptr = SendPtr(y.as_mut_ptr());
+    let bounds_ref = &bounds;
+    parallel::par_for_chunks(tasks, 1, |t_lo, t_hi| {
+        for t in t_lo..t_hi {
+            for v in bounds_ref[t]..bounds_ref[t + 1] {
+                // SAFETY: row ranges are disjoint across tasks.
+                unsafe { *y_ptr.get().add(v) = merged_row_acc(base, d, x, v) };
+            }
+        }
+    });
+    y
+}
+
+/// One merged in-row accumulation for pull PageRank: base in-neighbors
+/// ascending (masked pairs skipped), then upsert in-neighbors
+/// ascending. `tr` must be the stable transpose of the base.
+#[inline]
+fn merged_in_row_acc(tr: &Csr, d: &DeltaOverlay, share: &[f32], u: usize) -> f32 {
+    let (lo, hi) = (tr.row_ptr[u] as usize, tr.row_ptr[u + 1] as usize);
+    let (dlo, dhi) = row_range(&d.tdel_dst, u as u32);
+    let (ulo, uhi) = row_range(&d.tup_dst, u as u32);
+    let mut acc = 0f32;
+    if dlo == dhi && ulo == uhi {
+        for e in lo..hi {
+            acc += share[tr.col_idx[e] as usize];
+        }
+        return acc;
+    }
+    let dels = &d.tdel_src[dlo..dhi];
+    let ups = &d.tup_src[ulo..uhi];
+    let masked = |s: u32| dels.binary_search(&s).is_ok() || ups.binary_search(&s).is_ok();
+    for e in lo..hi {
+        let s = tr.col_idx[e];
+        if !masked(s) {
+            acc += share[s as usize];
+        }
+    }
+    for i in ulo..uhi {
+        acc += share[d.tup_src[i] as usize];
+    }
+    acc
+}
+
+/// Shared iteration core of the two merged PageRank entry points: the
+/// only difference between them is whether `share` and the pull rows
+/// are filled serially or by the pool — both orders of f32 addition
+/// are identical per element/row, so the results agree bitwise.
+fn pagerank_merged_impl(
+    base: &Csr,
+    tr: &Csr,
+    d: &DeltaOverlay,
+    p: PrParams,
+    par: bool,
+) -> PrResult {
+    let n = base.n();
+    debug_assert_eq!(tr.n(), n);
+    let deg = d.merged_out_degrees(base);
+    let mut rank = vec![1.0f32 / n as f32; n];
+    let mut share = vec![0f32; n];
+    let mut next = vec![0f32; n];
+    let chunk = parallel::default_chunk(n);
+    let mut iters = 0;
+    for _ in 0..p.max_iters {
+        if deadline::expired() {
+            break;
+        }
+        iters += 1;
+        // share[v] = rank[v]/deg(v) — element-wise.
+        if par {
+            let rank_ref = &rank;
+            let deg_ref = &deg;
+            let share_ptr = SendPtr(share.as_mut_ptr());
+            parallel::par_for_chunks(n, chunk, |lo, hi| {
+                for v in lo..hi {
+                    let dg = deg_ref[v];
+                    let s = if dg == 0 { 0.0 } else { rank_ref[v] / dg as f32 };
+                    // SAFETY: disjoint chunks.
+                    unsafe { *share_ptr.get().add(v) = s };
+                }
+            });
+        } else {
+            for v in 0..n {
+                share[v] = if deg[v] == 0 { 0.0 } else { rank[v] / deg[v] as f32 };
+            }
+        }
+        // Dangling mass: sequential fold in vertex order in both paths.
+        let mut dangling = 0f32;
+        for v in 0..n {
+            if deg[v] == 0 {
+                dangling += rank[v];
+            }
+        }
+        // next[u] = Σ share over merged in-neighbors, canonical order.
+        if par {
+            let tasks = (parallel::threads() * 8).max(1);
+            let bounds = crate::algos::spmv::edge_balanced_row_bounds(tr, tasks);
+            let next_ptr = SendPtr(next.as_mut_ptr());
+            let share_ref = &share;
+            let bounds_ref = &bounds;
+            parallel::par_for_chunks(tasks, 1, |t_lo, t_hi| {
+                for t in t_lo..t_hi {
+                    for u in bounds_ref[t]..bounds_ref[t + 1] {
+                        // SAFETY: row ranges are disjoint across tasks.
+                        unsafe {
+                            *next_ptr.get().add(u) = merged_in_row_acc(tr, d, share_ref, u)
+                        };
+                    }
+                }
+            });
+        } else {
+            for u in 0..n {
+                next[u] = merged_in_row_acc(tr, d, &share, u);
+            }
+        }
+        let base_rank = (1.0 - p.damping) / n as f32 + p.damping * dangling / n as f32;
+        let mut delta = 0f32;
+        for v in 0..n {
+            let nv = base_rank + p.damping * next[v];
+            delta += (nv - rank[v]).abs();
+            rank[v] = nv;
+        }
+        if delta < p.tol {
+            break;
+        }
+    }
+    PrResult { ranks: rank, iters }
+}
+
+/// Sequential merged PageRank (pull form over the cached base
+/// transpose plus the overlay's transposed mirror).
+pub fn pagerank_merged(base: &Csr, tr: &Csr, d: &DeltaOverlay, p: PrParams) -> PrResult {
+    pagerank_merged_impl(base, tr, d, p, false)
+}
+
+/// Parallel merged PageRank — bit-identical to [`pagerank_merged`] at
+/// every thread count (same share/dangling/update folds, same per-row
+/// pull order).
+pub fn pagerank_merged_parallel(base: &Csr, tr: &Csr, d: &DeltaOverlay, p: PrParams) -> PrResult {
+    if base.n() < 1 << 14 {
+        return pagerank_merged(base, tr, d, p);
+    }
+    pagerank_merged_impl(base, tr, d, p, true)
+}
+
+/// Frontier SSSP over the merged adjacency (weights from `base.vals`
+/// and the upsert weights; all-ones when the base is unweighted).
+/// Checks the ambient request deadline between rounds like
+/// [`crate::algos::sssp::sssp_frontier`].
+pub fn sssp_merged(base: &Csr, d: &DeltaOverlay, source: u32) -> Vec<f32> {
+    let n = base.n();
+    let mut dist = vec![f32::INFINITY; n];
+    dist[source as usize] = 0.0;
+    let mut frontier = vec![source];
+    let mut in_next = vec![false; n];
+    while !frontier.is_empty() {
+        if deadline::expired() {
+            break;
+        }
+        let mut next = Vec::new();
+        for &v in &frontier {
+            let dv = dist[v as usize];
+            relax_merged_row(base, d, v, dv, &mut |u, nd| {
+                if nd < dist[u as usize] {
+                    dist[u as usize] = nd;
+                    if !in_next[u as usize] {
+                        in_next[u as usize] = true;
+                        next.push(u);
+                    }
+                }
+            });
+        }
+        for &u in &next {
+            in_next[u as usize] = false;
+        }
+        frontier = next;
+    }
+    dist
+}
+
+/// Parallel merged SSSP: each round computes relaxation proposals from
+/// a snapshot of `dist` in parallel, then applies them sequentially.
+/// Rounds differ from the sequential kernel's (which relaxes through
+/// in-round updates), but the **fixpoint is bitwise identical**: every
+/// distance is the minimum over the same set of left-folded f32 path
+/// sums, and both kernels iterate until no relaxation applies.
+pub fn sssp_merged_parallel(base: &Csr, d: &DeltaOverlay, source: u32) -> Vec<f32> {
+    let n = base.n();
+    if base.m() < 1 << 14 {
+        return sssp_merged(base, d, source);
+    }
+    let mut dist = vec![f32::INFINITY; n];
+    dist[source as usize] = 0.0;
+    let mut frontier = vec![source];
+    let mut in_next = vec![false; n];
+    while !frontier.is_empty() {
+        if deadline::expired() {
+            break;
+        }
+        let chunk = parallel::default_chunk(frontier.len());
+        let dist_ref = &dist;
+        let frontier_ref = &frontier;
+        let proposals: Vec<Vec<(u32, f32)>> = {
+            let m = frontier.len().div_ceil(chunk);
+            let mut jobs: Vec<Box<dyn FnOnce() -> Vec<(u32, f32)> + Send>> =
+                Vec::with_capacity(m);
+            for c in 0..m {
+                let lo = c * chunk;
+                let hi = ((c + 1) * chunk).min(frontier.len());
+                jobs.push(Box::new(move || {
+                    let mut out = Vec::new();
+                    for &v in &frontier_ref[lo..hi] {
+                        let dv = dist_ref[v as usize];
+                        relax_merged_row(base, d, v, dv, &mut |u, nd| {
+                            if nd < dist_ref[u as usize] {
+                                out.push((u, nd));
+                            }
+                        });
+                    }
+                    out
+                }));
+            }
+            parallel::par_jobs(jobs)
+        };
+        let mut next = Vec::new();
+        for chunk in proposals {
+            for (u, nd) in chunk {
+                if nd < dist[u as usize] {
+                    dist[u as usize] = nd;
+                    if !in_next[u as usize] {
+                        in_next[u as usize] = true;
+                        next.push(u);
+                    }
+                }
+            }
+        }
+        for &u in &next {
+            in_next[u as usize] = false;
+        }
+        frontier = next;
+    }
+    dist
+}
+
+/// Relax every merged out-edge of `v` (base order minus masks, then
+/// upserts), calling `visit(dst, dv + w)` per live edge.
+#[inline]
+fn relax_merged_row(
+    base: &Csr,
+    d: &DeltaOverlay,
+    v: u32,
+    dv: f32,
+    visit: &mut impl FnMut(u32, f32),
+) {
+    let (lo, hi) = (base.row_ptr[v as usize] as usize, base.row_ptr[v as usize + 1] as usize);
+    let (dlo, dhi) = row_range(&d.del_src, v);
+    let (ulo, uhi) = row_range(&d.up_src, v);
+    let dels = &d.del_dst[dlo..dhi];
+    let ups = &d.up_dst[ulo..uhi];
+    let untouched = dels.is_empty() && ups.is_empty();
+    for e in lo..hi {
+        let c = base.col_idx[e];
+        if !untouched && (dels.binary_search(&c).is_ok() || ups.binary_search(&c).is_ok()) {
+            continue;
+        }
+        let w = base.vals.as_ref().map_or(1.0, |vv| vv[e]);
+        visit(c, dv + w);
+    }
+    for i in ulo..uhi {
+        visit(d.up_dst[i], dv + d.up_val[i]);
+    }
+}
+
+/// Materialize the merged graph as a COO in the canonical row-major
+/// order (per row: unmasked base edges in storage order, then upserts
+/// ascending). Weighted iff the base is weighted — upsert weights ride
+/// along there and are dropped on unweighted bases. This is what the
+/// compactor reorders and converts into the next epoch, and what the
+/// TC pipeline rebuilds its oriented view from.
+pub fn merged_coo(base: &Csr, d: &DeltaOverlay) -> Coo {
+    let n = base.n();
+    let weighted = base.vals.is_some();
+    let cap = base.m() + d.upserts();
+    let mut src = Vec::with_capacity(cap);
+    let mut dst = Vec::with_capacity(cap);
+    let mut vals = weighted.then(|| Vec::with_capacity(cap));
+    for v in 0..n {
+        let (lo, hi) = (base.row_ptr[v] as usize, base.row_ptr[v + 1] as usize);
+        let (dlo, dhi) = row_range(&d.del_src, v as u32);
+        let (ulo, uhi) = row_range(&d.up_src, v as u32);
+        let dels = &d.del_dst[dlo..dhi];
+        let ups = &d.up_dst[ulo..uhi];
+        let untouched = dels.is_empty() && ups.is_empty();
+        for e in lo..hi {
+            let c = base.col_idx[e];
+            if !untouched && (dels.binary_search(&c).is_ok() || ups.binary_search(&c).is_ok()) {
+                continue;
+            }
+            src.push(v as u32);
+            dst.push(c);
+            if let Some(vv) = vals.as_mut() {
+                vv.push(base.vals.as_ref().unwrap()[e]);
+            }
+        }
+        for i in ulo..uhi {
+            src.push(v as u32);
+            dst.push(d.up_dst[i]);
+            if let Some(vv) = vals.as_mut() {
+                vv.push(d.up_val[i]);
+            }
+        }
+    }
+    match vals {
+        Some(v) => Coo::with_vals(n, src, dst, v),
+        None => Coo::new(n, src, dst),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::spmv;
+    use crate::convert;
+    use crate::util::prng::Xoshiro256;
+
+    fn base_graph(seed: u64, n: usize, m: usize) -> Csr {
+        let mut rng = Xoshiro256::new(seed);
+        let src: Vec<u32> = (0..m).map(|_| (rng.next_u64() % n as u64) as u32).collect();
+        let dst: Vec<u32> = (0..m).map(|_| (rng.next_u64() % n as u64) as u32).collect();
+        convert::coo_to_csr(&Coo::new(n, src, dst))
+    }
+
+    fn random_ops(seed: u64, n: usize, count: usize) -> Vec<DeltaOp> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..count)
+            .map(|_| {
+                let src = (rng.next_u64() % n as u64) as u32;
+                let dst = (rng.next_u64() % n as u64) as u32;
+                if rng.next_u64() % 3 == 0 {
+                    DeltaOp::Delete { src, dst }
+                } else {
+                    DeltaOp::Upsert { src, dst, w: 1.0 }
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn apply_is_last_write_wins_and_sets_stay_disjoint() {
+        let d = DeltaOverlay::from_ops(
+            10,
+            &[
+                DeltaOp::Upsert { src: 1, dst: 2, w: 3.0 },
+                DeltaOp::Delete { src: 1, dst: 2 },
+                DeltaOp::Upsert { src: 1, dst: 2, w: 5.0 },
+                DeltaOp::Delete { src: 4, dst: 5 },
+            ],
+        );
+        assert_eq!(d.upserts(), 1);
+        assert_eq!(d.tombstones(), 1);
+        assert!(d.masked(1, 2), "an upsert masks the base pair");
+        assert!(d.masked(4, 5));
+        assert!(!d.masked(2, 1));
+        let (dsts, ws) = d.row_upserts(1);
+        assert_eq!((dsts, ws), (&[2u32][..], &[5.0f32][..]));
+    }
+
+    #[test]
+    fn merged_coo_matches_naive_edge_set() {
+        let base = base_graph(7, 50, 300);
+        let ops = random_ops(8, 50, 60);
+        let d = DeltaOverlay::from_ops(50, &ops);
+        let merged = merged_coo(&base, &d);
+        assert_eq!(merged.m(), d.merged_m(&base));
+        // Every surviving base edge is unmasked; every upsert appears
+        // exactly once.
+        for i in 0..merged.m() {
+            let (s, t) = (merged.src[i], merged.dst[i]);
+            let up = d.row_upserts(s).0.binary_search(&t).is_ok();
+            assert!(up || !d.masked(s, t), "edge ({s},{t}) must be live");
+        }
+        for i in 0..d.up_src.len() {
+            let (s, t) = (d.up_src[i], d.up_dst[i]);
+            let copies = (0..merged.m())
+                .filter(|&e| merged.src[e] == s && merged.dst[e] == t)
+                .count();
+            assert_eq!(copies, 1, "upsert ({s},{t}) appears exactly once");
+        }
+    }
+
+    #[test]
+    fn spmv_merged_matches_materialized_and_parallel_is_bit_identical() {
+        let base = base_graph(11, 2000, 40_000);
+        let ops = random_ops(12, 2000, 500);
+        let d = DeltaOverlay::from_ops(2000, &ops);
+        let x: Vec<f32> = (0..2000).map(|i| ((i % 97) as f32) * 0.125 - 6.0).collect();
+        let seq = spmv_merged(&base, &d, &x);
+        // The materialized merged CSR preserves the canonical row order,
+        // so the plain kernel over it reproduces the merge bitwise.
+        let mat = convert::coo_to_csr(&merged_coo(&base, &d));
+        let want = spmv::spmv_pull(&mat, &x);
+        assert_eq!(seq.len(), want.len());
+        for v in 0..seq.len() {
+            assert_eq!(seq[v].to_bits(), want[v].to_bits(), "row {v} diverges");
+        }
+        for threads in [1, 2, 4, 7] {
+            let _t = parallel::ThreadGuard::pin(threads);
+            let par = spmv_merged_parallel(&base, &d, &x);
+            for v in 0..seq.len() {
+                assert_eq!(
+                    seq[v].to_bits(),
+                    par[v].to_bits(),
+                    "thread count {threads}, row {v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_overlay_is_the_identity_for_spmv() {
+        let base = base_graph(13, 300, 2000);
+        let d = DeltaOverlay::empty(300);
+        let x: Vec<f32> = (0..300).map(|i| i as f32 * 0.5).collect();
+        let merged = spmv_merged(&base, &d, &x);
+        let plain = spmv::spmv_pull(&base, &x);
+        for v in 0..300 {
+            assert_eq!(merged[v].to_bits(), plain[v].to_bits());
+        }
+    }
+
+    #[test]
+    fn pagerank_merged_seq_par_bit_identical_and_close_to_materialized() {
+        let base = base_graph(17, 20_000, 120_000);
+        let tr = base.transposed_structure();
+        let ops = random_ops(18, 20_000, 2_000);
+        let d = DeltaOverlay::from_ops(20_000, &ops);
+        let p = PrParams { max_iters: 10, ..Default::default() };
+        let seq = pagerank_merged(&base, &tr, &d, p);
+        for threads in [1, 3, 6] {
+            let _t = parallel::ThreadGuard::pin(threads);
+            let par = pagerank_merged_parallel(&base, &tr, &d, p);
+            assert_eq!(seq.iters, par.iters);
+            for v in 0..base.n() {
+                assert_eq!(
+                    seq.ranks[v].to_bits(),
+                    par.ranks[v].to_bits(),
+                    "thread count {threads}, vertex {v}"
+                );
+            }
+        }
+        // Semantics check (not bitwise — summation orders differ): the
+        // merged kernel agrees with plain PageRank on the materialized
+        // merged graph to f32 tolerance.
+        let mat = convert::coo_to_csr(&merged_coo(&base, &d));
+        let want = crate::algos::pagerank::pagerank(&mat, p);
+        let err: f64 = seq
+            .ranks
+            .iter()
+            .zip(&want.ranks)
+            .map(|(&a, &b)| (a as f64 - b as f64).abs())
+            .sum();
+        assert!(err < 1e-4, "L1 divergence {err} from materialized PageRank");
+    }
+
+    #[test]
+    fn sssp_merged_respects_inserts_deletes_and_parallel_fixpoint() {
+        // Path 0→1→2→3 with a shortcut delete and an inserted bridge.
+        let base = convert::coo_to_csr(&Coo::new(
+            5,
+            vec![0, 1, 2, 0],
+            vec![1, 2, 3, 3],
+        ));
+        let d = DeltaOverlay::from_ops(
+            5,
+            &[
+                DeltaOp::Delete { src: 0, dst: 3 }, // remove the shortcut
+                DeltaOp::Upsert { src: 3, dst: 4, w: 1.0 },
+            ],
+        );
+        let dist = sssp_merged(&base, &d, 0);
+        assert_eq!(dist[3], 3.0, "shortcut deleted — path goes the long way");
+        assert_eq!(dist[4], 4.0, "inserted bridge reaches vertex 4");
+        // Random graph: parallel fixpoint is bitwise equal.
+        let big = base_graph(23, 3000, 30_000);
+        let ops = random_ops(24, 3000, 400);
+        let dd = DeltaOverlay::from_ops(3000, &ops);
+        let seq = sssp_merged(&big, &dd, 0);
+        for threads in [2, 5] {
+            let _t = parallel::ThreadGuard::pin(threads);
+            let par = sssp_merged_parallel(&big, &dd, 0);
+            for v in 0..3000 {
+                assert_eq!(seq[v].to_bits(), par[v].to_bits(), "vertex {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn merged_out_degrees_track_masks_and_upserts() {
+        let base = convert::coo_to_csr(&Coo::new(4, vec![0, 0, 0, 1], vec![1, 1, 2, 3]));
+        // Row 0 has a duplicate (0,1): an upsert collapses both copies
+        // into one edge; a delete of (0,2) masks one more.
+        let d = DeltaOverlay::from_ops(
+            4,
+            &[
+                DeltaOp::Upsert { src: 0, dst: 1, w: 1.0 },
+                DeltaOp::Delete { src: 0, dst: 2 },
+                DeltaOp::Upsert { src: 2, dst: 0, w: 1.0 },
+            ],
+        );
+        let deg = d.merged_out_degrees(&base);
+        assert_eq!(deg, vec![1, 1, 1, 0]);
+        assert_eq!(d.merged_m(&base), 3);
+    }
+}

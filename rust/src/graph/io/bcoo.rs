@@ -123,6 +123,7 @@ fn parse_bcoo(bytes: &[u8]) -> Result<(Coo, u32)> {
         let stored = u64::from_le_bytes(bytes[bytes.len() - SUM_LEN..].try_into().unwrap());
         let computed = fnv64(body);
         if stored != computed {
+            crate::obs::corrupt::inc("bcoo-checksum");
             bail!(
                 "corrupt .bcoo: FNV-64 checksum mismatch (stored {stored:#018x}, computed {computed:#018x})"
             );
@@ -279,6 +280,7 @@ fn quarantine(sc: &Path, why: &anyhow::Error) {
     name.push(".bad");
     let dest = PathBuf::from(name);
     if std::fs::rename(sc, &dest).is_ok() {
+        crate::obs::corrupt::inc("bcoo-quarantine");
         eprintln!(
             "[boba] quarantined corrupt sidecar {} -> {} ({why:#}); re-parsing text",
             sc.display(),

@@ -8,6 +8,7 @@
 
 pub mod coo;
 pub mod csr;
+pub mod delta;
 pub mod gen;
 pub mod io;
 

@@ -13,6 +13,7 @@
 //!             [--no-trace] [--slow-trace-ms T] [--format F]
 //!             [--rate R] [--burst B] [--max-inflight K]
 //!             [--default-deadline-ms D]
+//!             [--wal-dir DIR] [--compact-threshold N]
 //!                                      run the graph-analytics service;
 //!             --no-trace disables stage-span tracing (BOBA_NO_TRACE=1
 //!             does the same), --slow-trace-ms logs slower traces to
@@ -24,13 +25,18 @@
 //!             concurrent queries (expensive kinds shed first, 503),
 //!             --default-deadline-ms bounds requests that send no
 //!             x-deadline-ms header (504 past the budget); BOBA_FAULTS
-//!             arms deterministic fault injection (see /debug/faults)
+//!             arms deterministic fault injection (see /debug/faults);
+//!             --wal-dir enables durable POST /mutate (fsynced
+//!             write-ahead log + crash recovery on restart),
+//!             --compact-threshold sets the overlay size that triggers
+//!             a background BOBA re-run folding the delta into a fresh
+//!             epoch (0 = manual POST /graphs/{id}/compact only)
 //!   loadgen   [--addr H:P] [--conns C] [--requests R] [--dataset N]
 //!             [--scheme S] [--mix spmv:7,pagerank:3] [--pr-iters I]
 //!             [--compare] [--coalesce] [--batch-queries K]
 //!             [--compare-coalesced] [--scrape-metrics] [--json F]
 //!             [--spawn] [--target-qps Q] [--retries N] [--backoff-ms B]
-//!             [--overload]
+//!             [--overload] [--mutate-frac F] [--churn]
 //!             drive a server; --coalesce sends K-query batches through
 //!             POST /query/batch (with --compare it appends a
 //!             single-vs-coalesced pricing row; --compare-coalesced
@@ -42,7 +48,11 @@
 //!             jittered exponential backoff honoring Retry-After,
 //!             --overload appends an admission-on vs unprotected
 //!             overload sweep at 2x measured capacity (spawns its own
-//!             servers; composable with --compare)
+//!             servers; composable with --compare);
+//!             --mutate-frac mixes that fraction of POST /mutate
+//!             batches (zipfian vertex popularity) into the load,
+//!             --churn appends a frozen-vs-mutating pricing of query
+//!             p50/p99 and goodput (spawns its own WAL-enabled server)
 //!   table1 | table3 | fig4 | fig5 | fig6 | fig7  regenerate a paper table/figure
 //!   repro     [--quick|--full] [--tables t1,t2,t3,t4,t5] [--threads N]
 //!             [--datasets A,B] [--reps K] [--json F] [--md F]
@@ -220,6 +230,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 target_qps: args.get_parse("target-qps", 0.0),
                 retries: args.get_parse("retries", 0),
                 backoff_ms: args.get_parse("backoff-ms", 50),
+                mutate_frac: args.get_parse("mutate-frac", 0.0),
             };
             // --spawn: self-host an ephemeral server for the run (CI's
             // one-command benchmark mode).
@@ -285,6 +296,21 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
                 match doc {
                     boba::util::Json::Obj(mut pairs) => {
                         pairs.push(("overload".to_string(), sweep));
+                        boba::util::Json::Obj(pairs)
+                    }
+                    other => other,
+                }
+            } else {
+                doc
+            };
+            // --churn: append the frozen-vs-mutating pricing (it spawns
+            // its own WAL-enabled server, so it composes with any mode
+            // above and never mutates the --addr target).
+            let doc = if args.flag("churn") {
+                let section = loadgen_churn(args, &cfg, seed)?;
+                match doc {
+                    boba::util::Json::Obj(mut pairs) => {
+                        pairs.push(("churn".to_string(), section));
                         boba::util::Json::Obj(pairs)
                     }
                     other => other,
@@ -413,6 +439,8 @@ fn server_config(args: &Args, seed: u64) -> ServerConfig {
         burst: args.get_parse("burst", default.burst),
         max_inflight: args.get_parse("max-inflight", default.max_inflight),
         default_deadline_ms: args.get("default-deadline-ms").and_then(|v| v.parse().ok()),
+        wal_dir: args.get("wal-dir").map(std::path::PathBuf::from),
+        compact_threshold: args.get_parse("compact-threshold", default.compact_threshold),
     }
 }
 
@@ -493,6 +521,57 @@ fn loadgen_overload(
         no_admission.qps,
     );
     Ok(loadgen::overload_comparison_json(&unloaded, &capacity, &admission, &no_admission, target))
+}
+
+/// The `loadgen --churn` sweep: run the same workload read-only and
+/// with `--mutate-frac` (default 0.2) of request slots sent as durable
+/// mutations, against an ephemeral WAL-enabled server, and price what
+/// churn costs the co-resident queries (p50/p99/goodput ratios plus
+/// the server's mutation/compaction counters).
+fn loadgen_churn(
+    args: &Args,
+    cfg: &loadgen::LoadgenConfig,
+    seed: u64,
+) -> anyhow::Result<boba::util::Json> {
+    let mut scfg = server_config(args, seed);
+    scfg.addr = "127.0.0.1:0".to_string();
+    let scratch = scfg.wal_dir.is_none();
+    let wal_dir = scfg.wal_dir.clone().unwrap_or_else(|| {
+        std::env::temp_dir().join(format!("boba-churn-wal-{}", std::process::id()))
+    });
+    if scratch {
+        let _ = std::fs::remove_dir_all(&wal_dir);
+    }
+    std::fs::create_dir_all(&wal_dir)
+        .with_context(|| format!("creating {}", wal_dir.display()))?;
+    scfg.wal_dir = Some(wal_dir.clone());
+    if args.get("compact-threshold").is_none() {
+        // Low enough that a modest run triggers at least one background
+        // BOBA re-run — the amortization claim needs compactions to
+        // actually happen while queries flow.
+        scfg.compact_threshold = 512;
+    }
+    let srv = server::spawn(scfg)?;
+    let mut ccfg = cfg.clone();
+    ccfg.addr = srv.addr().to_string();
+    let (frozen, mutating, section) = loadgen::churn(&ccfg)?;
+    println!("frozen   {}", frozen.render());
+    println!("mutating {}", mutating.render());
+    println!(
+        "churn @ mutate-frac {:.2}: goodput {:.0} vs {:.0} q/s ({:.2}x), \
+         p99 {:.3} vs {:.3} ms",
+        mutating.mutate_frac,
+        mutating.qps,
+        frozen.qps,
+        if frozen.qps > 0.0 { mutating.qps / frozen.qps } else { 0.0 },
+        mutating.p99_ms,
+        frozen.p99_ms,
+    );
+    srv.shutdown();
+    if scratch {
+        std::fs::remove_dir_all(&wal_dir).ok();
+    }
+    Ok(section)
 }
 
 /// Load a graph from `--in FILE` or build `--dataset NAME` (default

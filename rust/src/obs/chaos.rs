@@ -18,6 +18,10 @@
 //! conn-drop[:COUNT[:SKIP]]        drop the next COUNT connections pre-read
 //! corrupt-sidecar[:COUNT[:SKIP]]  treat the next COUNT sidecar reads as corrupt
 //! slow-stage:MS[:COUNT[:SKIP]]    delay the next COUNT stage spans by MS ms
+//! wal-io-error[:COUNT[:SKIP]]     fail the next COUNT WAL appends before writing
+//! wal-torn-write[:COUNT[:SKIP]]   write a torn (partial) record, then poison the log
+//! crash-after-append[:COUNT[:SKIP]] abort() the process after a durable append
+//! compact-fail:STAGE[:COUNT[:SKIP]] abort compaction at stage (0=pre-, 1=post-checkpoint)
 //! ```
 //!
 //! `COUNT` defaults to 1; `SKIP` (default 0) skips that many
@@ -53,15 +57,25 @@ static TABLE: Mutex<BTreeMap<String, Fault>> = Mutex::new(BTreeMap::new());
 pub(crate) static TEST_LOCK: Mutex<()> = Mutex::new(());
 
 /// Fault-point names that take a leading numeric parameter in the spec.
-const PARAM_POINTS: &[&str] = &["slow-stage", "test-param"];
+const PARAM_POINTS: &[&str] = &["slow-stage", "compact-fail", "test-param"];
 /// All fault-point names the code base hooks — unknown names in a spec
 /// are an error so typos fail loudly instead of silently never firing.
 /// `test-point`/`test-param` are hooked by nothing: the unit tests use
 /// them to exercise arming/budget/skip mechanics without racing the
 /// real hooks that concurrently-running tests drive (the table is
 /// process-global).
-const KNOWN_POINTS: &[&str] =
-    &["prepare-fail", "conn-drop", "corrupt-sidecar", "slow-stage", "test-point", "test-param"];
+const KNOWN_POINTS: &[&str] = &[
+    "prepare-fail",
+    "conn-drop",
+    "corrupt-sidecar",
+    "slow-stage",
+    "wal-io-error",
+    "wal-torn-write",
+    "crash-after-append",
+    "compact-fail",
+    "test-point",
+    "test-param",
+];
 
 /// True when any fault point is armed. One relaxed atomic load — every
 /// hook checks this before touching the table.

@@ -1,0 +1,59 @@
+//! Process-wide I/O corruption counters.
+//!
+//! Silent corruption handling (`.bcoo` checksum rejects, quarantined
+//! sidecars, WAL torn-tail truncations) used to be visible only as
+//! `eprintln!` lines; these counters surface every such event to
+//! `/metrics` as `boba_io_corruption_total{kind="…"}` so scrapes and
+//! alerts see disk rot the moment recovery papers over it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The fixed corruption-kind label set. Every kind is exported on every
+/// scrape (zero-valued families are how dashboards learn a counter
+/// exists before the first incident).
+pub const KINDS: [&str; 3] = ["bcoo-checksum", "bcoo-quarantine", "wal-torn-tail"];
+
+static COUNTS: [AtomicU64; 3] = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+
+fn slot(kind: &str) -> usize {
+    KINDS.iter().position(|&k| k == kind).unwrap_or_else(|| {
+        panic!("unknown corruption kind {kind:?} (add it to obs::corrupt::KINDS)")
+    })
+}
+
+/// Record one corruption event of `kind` (must be one of [`KINDS`]).
+pub fn inc(kind: &str) {
+    COUNTS[slot(kind)].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Current count for `kind`.
+pub fn get(kind: &str) -> u64 {
+    COUNTS[slot(kind)].load(Ordering::Relaxed)
+}
+
+/// `(kind, count)` snapshot across all kinds, in [`KINDS`] order.
+pub fn snapshot() -> Vec<(&'static str, u64)> {
+    KINDS.iter().map(|&k| (k, get(k))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate_per_kind() {
+        let before = get("bcoo-checksum");
+        inc("bcoo-checksum");
+        inc("bcoo-checksum");
+        assert_eq!(get("bcoo-checksum"), before + 2);
+        let snap = snapshot();
+        assert_eq!(snap.len(), KINDS.len());
+        assert_eq!(snap[0].0, "bcoo-checksum");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown corruption kind")]
+    fn unknown_kind_panics() {
+        inc("not-a-kind");
+    }
+}

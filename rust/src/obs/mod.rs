@@ -27,6 +27,7 @@
 //! otherwise.
 
 pub mod chaos;
+pub mod corrupt;
 pub mod hist;
 pub mod metrics;
 pub mod ring;

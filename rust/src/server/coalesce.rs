@@ -544,7 +544,7 @@ mod tests {
             batch: 1000,
             in_flight: 2,
             seed: 3,
-            format: None,
+            ..RegistryConfig::default()
         });
         r.get_or_prepare("pa:2000:4", "none").unwrap().0
     }
@@ -608,7 +608,7 @@ mod tests {
                 batch: 1000,
                 in_flight: 2,
                 seed,
-                format: None,
+                ..RegistryConfig::default()
             });
             r.get_or_prepare("pa:2000:4", "none").unwrap().0
         };

@@ -1,0 +1,684 @@
+//! Live mutable graphs: the WAL-backed delta overlay, crash recovery,
+//! and the BOBA-driven background compactor.
+//!
+//! A [`LiveGraph`] pairs a registry artifact (the frozen base CSR,
+//! possibly relabeled by BOBA) with a [`DeltaOverlay`] of post-prepare
+//! mutations and the [`Wal`](super::wal::Wal) that makes them durable.
+//! The data flow for one `POST /graphs/{id}/mutate`:
+//!
+//! ```text
+//! validate (orig ids < n) → WAL append (group-commit fsync) → ACK
+//!        → map orig→artifact via the base perm → delta.apply (COW)
+//! ```
+//!
+//! Queries read an atomic `(base, delta, epoch)` snapshot and run the
+//! merged kernels in [`crate::graph::delta`]; a query admitted on epoch
+//! `e` finishes on epoch `e` even if the compactor swaps mid-flight
+//! (its snapshot holds `Arc`s).
+//!
+//! ## Epoch-swap protocol (compaction)
+//!
+//! When the overlay crosses `--compact-threshold` the compactor:
+//!
+//! 1. under the writer lock: snapshots `(base, delta, |pending|)` and
+//!    **rotates** the WAL so every snapshotted record lives in a
+//!    retired-eligible segment;
+//! 2. materializes base ⊕ delta and relabels it back to the original
+//!    label space (the artifact space dies with the old perm);
+//! 3. writes the checkpoint `.ckpt.bcoo` via tmp+rename — after this
+//!    rename, recovery prefers the checkpoint over re-ingesting;
+//! 4. **re-runs the full reorder pipeline (BOBA + convert + transpose
+//!    + format)** on the merged COO — the paper's "reordering is cheap
+//!    enough to re-run inside the pipeline" claim, live;
+//! 5. under the writer lock: swaps `base` to the new epoch and rebases
+//!    the post-rotation pending tail onto the new perm;
+//! 6. retires the rotated WAL prefix (only now — the checkpoint covers
+//!    it) and republishes the artifact in the registry.
+//!
+//! A crash at any point leaves a recoverable disk state: before the
+//! rename, recovery replays the old checkpoint/source + the full WAL;
+//! after it, the new checkpoint + the unretired segments — replay is
+//! idempotent (upsert/delete are absolute, last-write-wins per pair),
+//! so the checkpoint/WAL overlap in the post-rename window is harmless.
+//!
+//! ## Digests
+//!
+//! Crash-equivalence is asserted on [`digest`]: a commutative FNV-64
+//! multiset hash over **original-label** edges. Restart re-runs the
+//! racy Algorithm-3 reorder and generally lands on a different
+//! permutation, so an artifact-space hash would never compare equal;
+//! the original-space multiset hash is invariant under relabeling and
+//! under merge order, which makes it exact across crashes, restarts,
+//! and compactions.
+
+use crate::graph::delta::{merged_coo, DeltaOp, DeltaOverlay};
+use crate::graph::io::bcoo::{self, fnv64};
+use crate::graph::Coo;
+use crate::obs::chaos;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::registry::{GraphRegistry, PreparedGraph};
+use super::wal::{self, ScanReport, Wal, WalOp, OP_DELETE, OP_UPSERT};
+
+/// Acknowledgement for one durable mutation batch.
+#[derive(Debug, Clone, Copy)]
+pub struct MutateAck {
+    /// WAL sequence number of the batch record.
+    pub seq: u64,
+    /// Epoch the batch was applied on.
+    pub epoch: u64,
+    /// Overlay size after applying (upserts + tombstones).
+    pub delta_entries: usize,
+    /// Ops in the batch.
+    pub ops: usize,
+}
+
+/// The mutable state behind one live graph, swapped atomically at
+/// compaction.
+struct LiveInner {
+    base: Arc<PreparedGraph>,
+    delta: Arc<DeltaOverlay>,
+    /// Original-space ops acked since the last compaction snapshot —
+    /// the in-memory twin of the live WAL suffix.
+    pending: Vec<WalOp>,
+    epoch: u64,
+}
+
+/// A registry artifact opened for mutation: base + overlay + WAL.
+pub struct LiveGraph {
+    /// Registry id (`dataset@scheme`).
+    pub id: String,
+    dataset: String,
+    scheme: String,
+    wal: Wal,
+    /// Serializes mutators (and the compactor's snapshot/swap windows)
+    /// without blocking readers, who only take `inner` briefly.
+    write: Mutex<()>,
+    inner: Mutex<LiveInner>,
+    compacting: AtomicBool,
+    /// Acked mutation batches.
+    batches: AtomicU64,
+    /// Acked individual ops.
+    ops: AtomicU64,
+}
+
+impl LiveGraph {
+    /// Open the live state for `base`, replaying `scan` (the WAL replay
+    /// report — empty for a brand-new live graph). Ops that no longer
+    /// fit the vertex space are dropped with a warning instead of
+    /// poisoning recovery.
+    pub fn open(
+        dir: &Path,
+        base: Arc<PreparedGraph>,
+        epoch: u64,
+        scan: ScanReport,
+    ) -> Result<Arc<LiveGraph>> {
+        let key = wal::key_for(&base.id);
+        let wal = Wal::open(dir, &key, scan.last_seg, scan.next_seq)?;
+        let mapped = to_artifact_ops(&scan.ops, &base);
+        let delta = DeltaOverlay::from_ops(base.n(), &mapped);
+        Ok(Arc::new(LiveGraph {
+            id: base.id.clone(),
+            dataset: base.dataset.clone(),
+            scheme: base.scheme.clone(),
+            wal,
+            write: Mutex::new(()),
+            inner: Mutex::new(LiveInner {
+                base,
+                delta: Arc::new(delta),
+                pending: scan.ops,
+                epoch,
+            }),
+            compacting: AtomicBool::new(false),
+            batches: AtomicU64::new(0),
+            ops: AtomicU64::new(0),
+        }))
+    }
+
+    /// Atomic query snapshot: `(base, delta, epoch)`. Queries holding
+    /// the returned `Arc`s finish on this epoch regardless of
+    /// concurrent compaction.
+    pub fn view(&self) -> (Arc<PreparedGraph>, Arc<DeltaOverlay>, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.base.clone(), inner.delta.clone(), inner.epoch)
+    }
+
+    /// Overlay entries right now (the compaction-threshold signal).
+    pub fn delta_entries(&self) -> usize {
+        self.inner.lock().unwrap().delta.len()
+    }
+
+    /// Acked batch count.
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Acked op count.
+    pub fn ops(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+
+    /// True while a compaction is running.
+    pub fn compacting(&self) -> bool {
+        self.compacting.load(Ordering::Relaxed)
+    }
+
+    /// Apply one mutation batch: validate, append to the WAL (the ack
+    /// is durable before this returns), then fold into the overlay.
+    /// Vertex ids are **original labels**; a batch naming a vertex
+    /// `>= n` is rejected before any byte is written.
+    pub fn mutate(&self, ops: &[WalOp]) -> Result<MutateAck> {
+        let _w = self.write.lock().unwrap();
+        let n = {
+            let inner = self.inner.lock().unwrap();
+            inner.base.n()
+        };
+        for op in ops {
+            if op.u as usize >= n || op.v as usize >= n {
+                bail!("vertex id out of range: ({}, {}) on a graph of n={n}", op.u, op.v);
+            }
+            if op.kind != OP_UPSERT && op.kind != OP_DELETE {
+                bail!("unknown op kind {}", op.kind);
+            }
+        }
+        let seq = self.wal.append(ops)?;
+        let mut inner = self.inner.lock().unwrap();
+        let mapped = to_artifact_ops(ops, &inner.base);
+        inner.delta = Arc::new(inner.delta.apply(&mapped));
+        inner.pending.extend_from_slice(ops);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.ops.fetch_add(ops.len() as u64, Ordering::Relaxed);
+        Ok(MutateAck {
+            seq,
+            epoch: inner.epoch,
+            delta_entries: inner.delta.len(),
+            ops: ops.len(),
+        })
+    }
+
+    /// Current epoch.
+    pub fn epoch(&self) -> u64 {
+        self.inner.lock().unwrap().epoch
+    }
+
+    /// Original-space multiset digest of the live graph (see module
+    /// docs) — the crash-equivalence observable behind
+    /// `GET /graphs/{id}/digest`.
+    pub fn digest(&self) -> u64 {
+        let (base, delta, _) = self.view();
+        digest(&base, &delta)
+    }
+
+    /// JSON row appended to the artifact's `GET /graphs` entry.
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let (base, delta, epoch) = self.view();
+        Json::obj(vec![
+            ("epoch", Json::Num(epoch as f64)),
+            ("delta_entries", Json::Num(delta.len() as f64)),
+            ("merged_m", Json::Num(delta.merged_m(&base.csr) as f64)),
+            ("batches", Json::Num(self.batches() as f64)),
+            ("ops", Json::Num(self.ops() as f64)),
+            ("wal_bytes", Json::Num(self.wal.appended_bytes() as f64)),
+            ("compacting", Json::Bool(self.compacting())),
+        ])
+    }
+}
+
+/// Map original-space WAL ops onto a specific artifact: relabel through
+/// the artifact's perm (identity for `none`), normalize weights to 1.0
+/// on unweighted bases, and drop (with a warning) ops that no longer
+/// fit the vertex space — recovery must not die on a stale log.
+fn to_artifact_ops(ops: &[WalOp], base: &PreparedGraph) -> Vec<DeltaOp> {
+    let n = base.n();
+    let weighted = base.csr.vals.is_some();
+    let map = |x: u32| -> u32 {
+        match &base.perm {
+            Some(p) => p.new_of_old()[x as usize],
+            None => x,
+        }
+    };
+    let mut out = Vec::with_capacity(ops.len());
+    for op in ops {
+        if op.u as usize >= n || op.v as usize >= n {
+            eprintln!(
+                "[boba] dropping wal op ({}, {}) outside n={n} of {}",
+                op.u, op.v, base.id
+            );
+            continue;
+        }
+        out.push(match op.kind {
+            OP_UPSERT => DeltaOp::Upsert {
+                src: map(op.u),
+                dst: map(op.v),
+                w: if weighted { op.w } else { 1.0 },
+            },
+            _ => DeltaOp::Delete { src: map(op.u), dst: map(op.v) },
+        });
+    }
+    out
+}
+
+/// Label-invariant, order-invariant digest of base ⊕ delta: a wrapping
+/// sum of per-edge FNV-64 hashes over original-label edges, folded with
+/// the vertex count. Exact (integer) — equal iff the original-space
+/// edge multisets (and weights, when present) are equal.
+pub fn digest(base: &PreparedGraph, delta: &DeltaOverlay) -> u64 {
+    let coo = merged_coo(&base.csr, delta);
+    let old_of_new: Option<Vec<u32>> = base.perm.as_ref().map(|p| p.order());
+    let back = |x: u32| -> u32 {
+        match &old_of_new {
+            Some(m) => m[x as usize],
+            None => x,
+        }
+    };
+    let mut sum: u64 = 0;
+    let mut buf = [0u8; 12];
+    for i in 0..coo.m() {
+        buf[0..4].copy_from_slice(&back(coo.src[i]).to_le_bytes());
+        buf[4..8].copy_from_slice(&back(coo.dst[i]).to_le_bytes());
+        let wbits = coo.vals.as_ref().map_or(0u32, |v| v[i].to_bits());
+        buf[8..12].copy_from_slice(&wbits.to_le_bytes());
+        sum = sum.wrapping_add(fnv64(&buf));
+    }
+    sum ^ fnv64(&(coo.n() as u64).to_le_bytes())
+}
+
+/// Synchronous compaction (the `POST /graphs/{id}/compact` path and the
+/// body of the background compactor). Returns `Ok(false)` when another
+/// compaction holds the slot or the overlay is empty. See the module
+/// docs for the staged protocol and its crash windows.
+pub fn compact(registry: &GraphRegistry, live: &Arc<LiveGraph>) -> Result<bool> {
+    if live.compacting.swap(true, Ordering::SeqCst) {
+        return Ok(false);
+    }
+    let out = compact_inner(registry, live);
+    live.compacting.store(false, Ordering::SeqCst);
+    out
+}
+
+fn compact_inner(registry: &GraphRegistry, live: &Arc<LiveGraph>) -> Result<bool> {
+    let dir = registry
+        .wal_dir()
+        .context("compaction requires a wal dir")?
+        .to_path_buf();
+    let key = wal::key_for(&live.id);
+    // `compact-fail:STAGE` injects an abort at one staged crash window:
+    // 0 = pre-checkpoint, 1 = post-checkpoint (before the swap). The
+    // budget is consumed here, once per compaction attempt.
+    let fail_stage = chaos::fire("compact-fail");
+
+    // Stage 1 — snapshot + rotate, writers briefly excluded so the
+    // rotated prefix holds exactly the snapshotted records.
+    let (base, delta, pending_len, epoch, old_seg) = {
+        let _w = live.write.lock().unwrap();
+        let (base, delta, pending_len, epoch) = {
+            let inner = live.inner.lock().unwrap();
+            (inner.base.clone(), inner.delta.clone(), inner.pending.len(), inner.epoch)
+        };
+        let old_seg = live.wal.rotate()?;
+        (base, delta, pending_len, epoch, old_seg)
+    };
+    if delta.is_empty() {
+        return Ok(false);
+    }
+
+    // Stage 2 — materialize base ⊕ delta back in the original label
+    // space (the only space that survives the re-reorder).
+    let merged = merged_coo(&base.csr, &delta);
+    let orig = match &base.perm {
+        Some(p) => merged.relabeled(&p.order()),
+        None => merged,
+    };
+    if fail_stage == Some(0) {
+        bail!("injected compact-fail pre-checkpoint");
+    }
+
+    // Stage 3 — checkpoint via tmp+rename. After the rename, recovery
+    // prefers this file over re-ingesting the dataset spec.
+    let ckpt = wal::ckpt_path(&dir, &key);
+    let tmp = dir.join(format!("{key}.ckpt.tmp.{}", std::process::id()));
+    bcoo::write_bcoo(&orig, &tmp).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, &ckpt)
+        .with_context(|| format!("renaming checkpoint to {}", ckpt.display()))?;
+    if fail_stage == Some(1) {
+        bail!("injected compact-fail post-checkpoint");
+    }
+
+    // Stage 4 — re-run the reorder pipeline online: BOBA + convert +
+    // transpose (+ format) on the merged graph. This is the paper's
+    // amortization claim exercised live.
+    let next_epoch = epoch + 1;
+    let g = Arc::new(registry.rebuild_from_coo(&live.dataset, &live.scheme, orig, next_epoch)?);
+
+    // Stage 5 — swap: rebase the post-rotation pending tail onto the
+    // new perm and publish the new epoch. Queries admitted before this
+    // block finish on their old (base, delta) snapshot.
+    {
+        let _w = live.write.lock().unwrap();
+        let mut inner = live.inner.lock().unwrap();
+        let tail = inner.pending.split_off(pending_len);
+        inner.pending = tail;
+        let mapped = to_artifact_ops(&inner.pending, &g);
+        inner.delta = Arc::new(DeltaOverlay::from_ops(g.n(), &mapped));
+        inner.base = g.clone();
+        inner.epoch = next_epoch;
+    }
+    registry.publish(&live.id, g);
+    wal::write_meta(&dir, &key, &live.id, &live.dataset, &live.scheme, next_epoch)?;
+
+    // Stage 6 — only now is the rotated prefix redundant.
+    live.wal.retire_through(old_seg)?;
+    registry.note_compaction();
+    Ok(true)
+}
+
+/// Fire-and-forget background compaction when the overlay has crossed
+/// the registry's threshold and no compaction is running. The spawned
+/// thread is tracked by the registry's active-compaction gauge.
+pub fn maybe_compact_bg(registry: &Arc<GraphRegistry>, live: &Arc<LiveGraph>) {
+    let threshold = registry.compact_threshold();
+    if threshold == 0 || live.delta_entries() < threshold || live.compacting() {
+        return;
+    }
+    let registry = registry.clone();
+    let live = live.clone();
+    registry.clone().compaction_started();
+    let spawned = std::thread::Builder::new()
+        .name("boba-compact".to_string())
+        .spawn(move || {
+            match compact(&registry, &live) {
+                Ok(true) => {}
+                Ok(false) => {}
+                Err(e) => eprintln!("[boba] compaction of {} failed: {e:#}", live.id),
+            }
+            registry.compaction_finished();
+        });
+    if spawned.is_err() {
+        // Thread spawn failure: undo the gauge; the next mutate retries.
+        eprintln!("[boba] could not spawn compactor thread");
+    }
+}
+
+/// Recover every graph with WAL state in `dir`, sequentially, replaying
+/// each log into a fresh artifact and registering it. `shutdown` is
+/// honored between records and between graphs: a set flag aborts
+/// immediately **without truncating undamaged segments** (only
+/// proven-torn final-segment tails are ever truncated, and only while
+/// the flag is clear). The registry's `recovering` gauge must already
+/// count the metas (set synchronously at server start so `/readyz`
+/// reports `recovering` from the first request).
+pub fn recover_all(registry: &Arc<GraphRegistry>, shutdown: &AtomicBool) {
+    let Some(dir) = registry.wal_dir().map(Path::to_path_buf) else {
+        return;
+    };
+    let metas = match wal::list_metas(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("[boba] wal recovery: cannot list {}: {e:#}", dir.display());
+            registry.set_recovering(0);
+            return;
+        }
+    };
+    for meta in metas {
+        if shutdown.load(Ordering::Relaxed) {
+            registry.set_recovering(0);
+            return;
+        }
+        if let Err(e) = recover_one(registry, &dir, &meta, shutdown) {
+            eprintln!("[boba] wal recovery of {} failed: {e:#}", meta.id);
+        }
+        registry.dec_recovering();
+    }
+}
+
+fn recover_one(
+    registry: &Arc<GraphRegistry>,
+    dir: &Path,
+    meta: &wal::WalMeta,
+    shutdown: &AtomicBool,
+) -> Result<()> {
+    let report = wal::scan(dir, &meta.key, shutdown, true)?;
+    if report.aborted {
+        bail!("shutdown during replay (log left untouched)");
+    }
+    // Base: the checkpoint if one has landed, else the dataset recipe.
+    let ckpt = wal::ckpt_path(dir, &meta.key);
+    let coo: Coo = if ckpt.exists() {
+        bcoo::read_bcoo(&ckpt).with_context(|| format!("reading {}", ckpt.display()))?
+    } else {
+        registry.load_base_coo(&meta.dataset)?
+    };
+    if shutdown.load(Ordering::Relaxed) {
+        bail!("shutdown during replay (log left untouched)");
+    }
+    let g = Arc::new(registry.rebuild_from_coo(&meta.dataset, &meta.scheme, coo, meta.epoch)?);
+    let live = LiveGraph::open(dir, g.clone(), meta.epoch, report)?;
+    registry.publish(&meta.id, g);
+    registry.install_live(live);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::registry::RegistryConfig;
+
+    fn wal_registry(tag: &str) -> (Arc<GraphRegistry>, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "boba-live-{tag}-{}-{:x}",
+            std::process::id(),
+            fnv64(tag.as_bytes())
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = GraphRegistry::new(RegistryConfig {
+            capacity: 4,
+            batch: 500,
+            in_flight: 2,
+            seed: 7,
+            wal_dir: Some(dir.clone()),
+            compact_threshold: 0, // manual compaction in tests
+            ..RegistryConfig::default()
+        });
+        (Arc::new(r), dir)
+    }
+
+    fn up(u: u32, v: u32) -> WalOp {
+        WalOp { kind: OP_UPSERT, u, v, w: 1.0 }
+    }
+
+    fn del(u: u32, v: u32) -> WalOp {
+        WalOp { kind: OP_DELETE, u, v, w: 0.0 }
+    }
+
+    #[test]
+    fn mutate_applies_and_digest_tracks_edge_multiset() {
+        let (r, dir) = wal_registry("mutate");
+        let (g, _) = r.get_or_prepare("pa:1000:4", "boba").unwrap();
+        let live = r.live_for(&g).unwrap();
+        let d0 = live.digest();
+        let ack = live.mutate(&[up(1, 2), del(3, 4)]).unwrap();
+        assert_eq!(ack.seq, 0);
+        assert_eq!(ack.ops, 2);
+        let d1 = live.digest();
+        assert_ne!(d0, d1, "mutations must move the digest");
+        // Upserting an identical edge again is idempotent.
+        live.mutate(&[up(1, 2)]).unwrap();
+        assert_eq!(live.digest(), d1);
+        // Out-of-range ids are rejected before any WAL write.
+        let before = live.batches();
+        assert!(live.mutate(&[up(0, 1_000_000)]).is_err());
+        assert_eq!(live.batches(), before);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn digest_is_label_invariant_across_schemes() {
+        // The same dataset under boba and none serves the same original
+        // edge multiset, so the live digests agree even though the
+        // artifact CSRs are differently labeled.
+        let (r, dir) = wal_registry("label-inv");
+        let (a, _) = r.get_or_prepare("pa:800:4", "boba").unwrap();
+        let (b, _) = r.get_or_prepare("pa:800:4", "none").unwrap();
+        let la = r.live_for(&a).unwrap();
+        let lb = r.live_for(&b).unwrap();
+        assert_eq!(la.digest(), lb.digest());
+        la.mutate(&[up(5, 6), del(7, 8)]).unwrap();
+        lb.mutate(&[up(5, 6), del(7, 8)]).unwrap();
+        assert_eq!(la.digest(), lb.digest(), "same orig-space ops, same digest");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_folds_delta_and_preserves_digest() {
+        let (r, dir) = wal_registry("compact");
+        let (g, _) = r.get_or_prepare("pa:1200:4", "boba").unwrap();
+        let live = r.live_for(&g).unwrap();
+        for i in 0..40u32 {
+            live.mutate(&[up(i, (i + 13) % 1200), del((i * 3) % 1200, (i * 7) % 1200)])
+                .unwrap();
+        }
+        let before = live.digest();
+        let (_, _, epoch0) = live.view();
+        assert!(compact(&r, &live).unwrap());
+        let (base, delta, epoch1) = live.view();
+        assert_eq!(epoch1, epoch0 + 1, "compaction bumps the epoch");
+        assert!(delta.is_empty(), "the overlay folds into the new base");
+        assert_eq!(live.digest(), before, "digest is invariant under compaction");
+        assert_eq!(r.compactions(), 1);
+        // The registry now serves the new epoch.
+        let served = r.get(&live.id).expect("compacted artifact stays registered");
+        assert!(Arc::ptr_eq(&served, &base));
+        // Mutations keep working on the new epoch.
+        live.mutate(&[up(3, 9)]).unwrap();
+        assert_ne!(live.digest(), before);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovery_replays_into_equal_digest() {
+        let (r, dir) = wal_registry("recover");
+        let (g, _) = r.get_or_prepare("pa:900:4", "boba").unwrap();
+        let live = r.live_for(&g).unwrap();
+        for i in 0..25u32 {
+            live.mutate(&[up(i, (i + 41) % 900)]).unwrap();
+        }
+        live.mutate(&[del(0, 41)]).unwrap();
+        let want = live.digest();
+
+        // A "restarted" registry over the same wal dir (same seed).
+        let r2 = Arc::new(GraphRegistry::new(RegistryConfig {
+            capacity: 4,
+            batch: 500,
+            in_flight: 2,
+            seed: 7,
+            wal_dir: Some(dir.clone()),
+            ..RegistryConfig::default()
+        }));
+        r2.set_recovering(wal::list_metas(&dir).unwrap().len());
+        let stop = AtomicBool::new(false);
+        recover_all(&r2, &stop);
+        assert_eq!(r2.recovering(), 0, "recovery drains the gauge");
+        let live2 = r2.live_graph(&g.id).expect("recovered live graph");
+        assert_eq!(
+            live2.digest(),
+            want,
+            "restart + replay must reproduce the never-crashed digest"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovery_after_compaction_uses_the_checkpoint() {
+        let (r, dir) = wal_registry("recover-ckpt");
+        let (g, _) = r.get_or_prepare("pa:700:4", "boba").unwrap();
+        let live = r.live_for(&g).unwrap();
+        for i in 0..30u32 {
+            live.mutate(&[up((i * 5) % 700, (i * 11) % 700)]).unwrap();
+        }
+        assert!(compact(&r, &live).unwrap());
+        live.mutate(&[up(1, 2), del(3, 4)]).unwrap(); // post-compaction tail
+        let want = live.digest();
+        assert!(wal::ckpt_path(&dir, &wal::key_for(&g.id)).exists());
+
+        let r2 = Arc::new(GraphRegistry::new(RegistryConfig {
+            capacity: 4,
+            batch: 500,
+            in_flight: 2,
+            seed: 7,
+            wal_dir: Some(dir.clone()),
+            ..RegistryConfig::default()
+        }));
+        let stop = AtomicBool::new(false);
+        r2.set_recovering(1);
+        recover_all(&r2, &stop);
+        let live2 = r2.live_graph(&g.id).expect("recovered live graph");
+        assert_eq!(live2.digest(), want);
+        assert!(live2.epoch() >= 1, "epoch persisted through the meta");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_compaction_leaves_a_recoverable_equal_twin() {
+        for stage in [0u64, 1] {
+            let _l = chaos::TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+            let tag = format!("compact-fail-{stage}");
+            let (r, dir) = wal_registry(&tag);
+            let (g, _) = r.get_or_prepare("pa:600:4", "boba").unwrap();
+            let live = r.live_for(&g).unwrap();
+            for i in 0..20u32 {
+                live.mutate(&[up((i * 7) % 600, (i * 13) % 600)]).unwrap();
+            }
+            let want = live.digest();
+            chaos::set_spec(&format!("compact-fail:{stage}:1")).unwrap();
+            let err = compact(&r, &live).unwrap_err().to_string();
+            chaos::clear();
+            assert!(err.contains("compact-fail"), "stage {stage}: {err}");
+            // In-process state is untouched (the swap never ran)…
+            assert_eq!(live.digest(), want, "stage {stage}");
+            // …and a cold restart over the crash-state disk agrees too.
+            let r2 = Arc::new(GraphRegistry::new(RegistryConfig {
+                capacity: 4,
+                batch: 500,
+                in_flight: 2,
+                seed: 7,
+                wal_dir: Some(dir.clone()),
+                ..RegistryConfig::default()
+            }));
+            let stop = AtomicBool::new(false);
+            r2.set_recovering(1);
+            recover_all(&r2, &stop);
+            let live2 = r2.live_graph(&g.id).expect("recovered live graph");
+            assert_eq!(
+                live2.digest(),
+                want,
+                "mid-compaction crash at stage {stage} must recover digest-equal"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn merged_queries_match_materialized_base() {
+        use crate::algos::spmv;
+        use crate::convert;
+        use crate::graph::delta;
+        let (r, dir) = wal_registry("merged-query");
+        let (g, _) = r.get_or_prepare("pa:500:4", "boba").unwrap();
+        let live = r.live_for(&g).unwrap();
+        live.mutate(&[up(0, 7), up(3, 4), del(1, 0)]).unwrap();
+        let (base, d, _) = live.view();
+        let x: Vec<f32> = (0..base.n()).map(|i| (i % 13) as f32).collect();
+        let merged = delta::spmv_merged(&base.csr, &d, &x);
+        let mat = convert::coo_to_csr(&delta::merged_coo(&base.csr, &d));
+        let want = spmv::spmv_pull(&mat, &x);
+        for v in 0..base.n() {
+            assert_eq!(merged[v].to_bits(), want[v].to_bits(), "row {v}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

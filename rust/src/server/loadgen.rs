@@ -69,6 +69,12 @@ pub struct LoadgenConfig {
     /// with ±50% deterministic jitter; the server's `Retry-After`
     /// pricing is used as a floor when it is larger.
     pub backoff_ms: u64,
+    /// Fraction of request slots sent as `POST /mutate` batches instead
+    /// of queries (`--mutate-frac`; 0 = read-only). Mutated vertices
+    /// follow a zipf-like popularity (hubs churn most). Requires the
+    /// target server to run with `--wal-dir`; ignored in coalesced mode
+    /// (batch requests stay pure queries).
+    pub mutate_frac: f64,
 }
 
 impl Default for LoadgenConfig {
@@ -88,6 +94,7 @@ impl Default for LoadgenConfig {
             target_qps: 0.0,
             retries: 0,
             backoff_ms: 50,
+            mutate_frac: 0.0,
         }
     }
 }
@@ -156,6 +163,10 @@ pub struct Report {
     pub p99_ms: f64,
     /// Slowest request (ms).
     pub max_ms: f64,
+    /// Fraction of request slots configured as mutations.
+    pub mutate_frac: f64,
+    /// `POST /mutate` batches durably acked during the run.
+    pub mutations: usize,
     /// Server-side evidence from the pre/post `/metrics` scrape delta
     /// (`None` unless the run was configured with `scrape_metrics`).
     pub server: Option<Json>,
@@ -187,6 +198,8 @@ impl Report {
             ("p50_ms", Json::Num(self.p50_ms)),
             ("p99_ms", Json::Num(self.p99_ms)),
             ("max_ms", Json::Num(self.max_ms)),
+            ("mutate_frac", Json::Num(self.mutate_frac)),
+            ("mutations", Json::Num(self.mutations as f64)),
         ]);
         if let (Json::Obj(pairs), Some(server)) = (&mut row, &self.server) {
             pairs.push(("server".to_string(), server.clone()));
@@ -204,10 +217,15 @@ impl Report {
         } else {
             String::new()
         };
+        let churn = if self.mutations > 0 {
+            format!(" ({} mutation batches acked)", self.mutations)
+        } else {
+            String::new()
+        };
         format!(
             "{} via {}{}: {} queries over {:.2} s → {:.0} q/s \
              (p50 {:.3} ms, p99 {:.3} ms, max {:.3} ms, mean {:.3} ms), \
-             {} failed{resilience}; prep {:.1} ms{}",
+             {} failed{resilience}{churn}; prep {:.1} ms{}",
             self.dataset,
             self.scheme,
             if self.coalesced {
@@ -257,6 +275,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
         .context("ingest response missing id")?
         .to_string();
     let cached = body.get("cached").and_then(Json::as_bool).unwrap_or(false);
+    let n = body.get("n").and_then(Json::as_u64).unwrap_or(0) as usize;
     let prep_ms = if cached {
         0.0
     } else {
@@ -282,6 +301,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
         rejected: usize,
         deadline_exceeded: usize,
         retries: usize,
+        mutations: usize,
     }
 
     // Open-loop pacing: each worker owns every conns-th slot of the
@@ -305,6 +325,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
                     rejected: 0,
                     deadline_exceeded: 0,
                     retries: 0,
+                    mutations: 0,
                 };
                 let start = Instant::now();
                 let mut sent = 0usize;
@@ -335,7 +356,15 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
                         Ok(prev) => prev.min(batch),
                         Err(_) => return out,
                     };
-                    let (path, body) = if cfg.coalesce {
+                    // Churn: some single-mode request slots become
+                    // durable mutation batches instead of queries.
+                    let mutate = !cfg.coalesce
+                        && cfg.mutate_frac > 0.0
+                        && n > 0
+                        && rng.next_f64() < cfg.mutate_frac;
+                    let (path, body) = if mutate {
+                        (format!("/graphs/{id}/mutate"), mutate_body(&mut rng, n))
+                    } else if cfg.coalesce {
                         // One POST /query/batch carrying `take` queries:
                         // the server answers the SpMV/SSSP portion with
                         // one multi-RHS kernel pass per ≤16-wide tile.
@@ -375,6 +404,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
                             Ok((200, _)) => {
                                 out.latencies_us.push(lap.elapsed().as_micros() as u64);
                                 out.completed += take;
+                                if mutate {
+                                    out.mutations += 1;
+                                }
                                 break;
                             }
                             Ok((429 | 503, _)) => {
@@ -430,6 +462,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
     let mut rejected = 0usize;
     let mut deadline_exceeded = 0usize;
     let mut retries = 0usize;
+    let mut mutations = 0usize;
     for o in &outs {
         latencies.extend_from_slice(&o.latencies_us);
         completed += o.completed;
@@ -437,6 +470,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
         rejected += o.rejected;
         deadline_exceeded += o.deadline_exceeded;
         retries += o.retries;
+        mutations += o.mutations;
     }
     // Queries the workers never got to (early bail-outs) count as failed.
     let attempted = completed + failed;
@@ -479,8 +513,34 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
         p50_ms: pctl(0.50),
         p99_ms: pctl(0.99),
         max_ms: latencies.last().map_or(0.0, |&v| v as f64 / 1e3),
+        mutate_frac: cfg.mutate_frac,
+        mutations,
         server,
     })
+}
+
+/// Ops per `POST /mutate` batch the load generator sends.
+const MUTATE_OPS: usize = 8;
+
+/// Build one mutation batch. Vertex popularity is log-uniform over
+/// `[0, n)` — a zipf-like skew (hubs churn far more often than the
+/// tail) without per-draw harmonic sums — and roughly one op in four is
+/// a delete, so tombstones and upserts both stay exercised.
+fn mutate_body(rng: &mut Xoshiro256, n: usize) -> String {
+    let zipf = |rng: &mut Xoshiro256| -> usize {
+        (((n as f64).powf(rng.next_f64())) as usize).saturating_sub(1).min(n - 1)
+    };
+    let mut ops = Vec::with_capacity(MUTATE_OPS);
+    for _ in 0..MUTATE_OPS {
+        let (u, v) = (zipf(rng), zipf(rng));
+        if rng.below(4) == 0 {
+            ops.push(format!("{{\"op\": \"delete\", \"u\": {u}, \"v\": {v}}}"));
+        } else {
+            let w = rng.next_f32() * 4.0 + 0.25;
+            ops.push(format!("{{\"op\": \"upsert\", \"u\": {u}, \"v\": {v}, \"w\": {w}}}"));
+        }
+    }
+    format!("{{\"ops\": [{}]}}", ops.join(","))
 }
 
 /// Scrape and parse the server's `/metrics` exposition. The strict
@@ -608,6 +668,40 @@ pub fn compare_coalesced(cfg: &LoadgenConfig) -> Result<(Report, Report, f64)> {
     Ok((single, coalesced, speedup))
 }
 
+/// The churn experiment: the same workload once read-only (frozen
+/// graph) and once with `mutate_frac` of the request slots sent as
+/// durable `POST /mutate` batches — pricing what live mutation load
+/// (WAL fsyncs, merged kernels over the delta overlay, background
+/// compactions) costs the queries that share the server. Frozen runs
+/// first so the mutating run inherits a warm artifact; the returned
+/// section embeds both reports, the p50/p99/goodput ratios, and the
+/// server's mutation/compaction counters scraped after the runs.
+pub fn churn(cfg: &LoadgenConfig) -> Result<(Report, Report, Json)> {
+    let mut frozen_cfg = cfg.clone();
+    frozen_cfg.mutate_frac = 0.0;
+    frozen_cfg.coalesce = false;
+    let frozen = run(&frozen_cfg)?;
+    let mut mut_cfg = frozen_cfg.clone();
+    mut_cfg.mutate_frac = if cfg.mutate_frac > 0.0 { cfg.mutate_frac } else { 0.2 };
+    let mutating = run(&mut_cfg)?;
+    let scrape = scrape_metrics(&cfg.addr)?;
+    let counter =
+        |name: &str| scrape.value(name, &[]).unwrap_or(0.0);
+    let ratio = |num: f64, den: f64| if den > 0.0 { num / den } else { 0.0 };
+    let section = Json::obj(vec![
+        ("bench", Json::Str("serve-churn".into())),
+        ("frozen", frozen.to_json()),
+        ("mutating", mutating.to_json()),
+        ("mutate_frac", Json::Num(mut_cfg.mutate_frac)),
+        ("goodput_ratio_mutating_vs_frozen", Json::Num(ratio(mutating.qps, frozen.qps))),
+        ("p50_ratio_mutating_vs_frozen", Json::Num(ratio(mutating.p50_ms, frozen.p50_ms))),
+        ("p99_ratio_mutating_vs_frozen", Json::Num(ratio(mutating.p99_ms, frozen.p99_ms))),
+        ("server_mutations_total", Json::Num(counter("boba_mutations_total"))),
+        ("server_compactions_total", Json::Num(counter("boba_compactions_total"))),
+    ]);
+    Ok((frozen, mutating, section))
+}
+
 /// Render a [`compare_coalesced`] result as its own document
 /// (`loadgen --compare-coalesced`).
 pub fn batch_comparison_json(single: &Report, coalesced: &Report, speedup: f64) -> Json {
@@ -693,6 +787,54 @@ mod tests {
         assert!(parse_mix("").is_err());
         assert!(parse_mix("frobnicate:2").is_err());
         assert!(parse_mix("spmv:x").is_err());
+    }
+
+    #[test]
+    fn churn_against_wal_enabled_server() {
+        let dir =
+            std::env::temp_dir().join(format!("boba-loadgen-churn-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let server = crate::server::spawn(crate::server::ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 3,
+            capacity: 4,
+            batch: 4096,
+            in_flight: 2,
+            seed: 17,
+            read_timeout: std::time::Duration::from_secs(10),
+            wal_dir: Some(dir.clone()),
+            compact_threshold: 64, // background compaction under churn
+            ..Default::default()
+        })
+        .unwrap();
+        let cfg = LoadgenConfig {
+            addr: server.addr().to_string(),
+            conns: 2,
+            requests: 40,
+            dataset: "pa:2000:4".to_string(),
+            mix: vec![("spmv".to_string(), 3), ("sssp".to_string(), 1)],
+            seed: 7,
+            mutate_frac: 0.5,
+            ..Default::default()
+        };
+        let (frozen, mutating, section) = churn(&cfg).unwrap();
+        assert_eq!(frozen.mutations, 0, "frozen leg must stay read-only");
+        assert_eq!(frozen.failed, 0, "{frozen:?}");
+        assert!(mutating.mutations > 0, "half the slots mutate: {mutating:?}");
+        assert_eq!(mutating.failed, 0, "{mutating:?}");
+        let rendered = section.render();
+        for field in [
+            "\"bench\":\"serve-churn\"",
+            "goodput_ratio_mutating_vs_frozen",
+            "p99_ratio_mutating_vs_frozen",
+            "server_mutations_total",
+            "server_compactions_total",
+        ] {
+            assert!(rendered.contains(field), "missing {field} in {rendered}");
+        }
+        server.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

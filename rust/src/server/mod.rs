@@ -23,10 +23,12 @@
 pub mod admission;
 pub mod coalesce;
 pub mod http;
+pub mod live;
 pub mod loadgen;
 pub mod registry;
 pub mod router;
 pub mod stats;
+pub mod wal;
 
 /// The JSON codec lives in [`crate::util::json`] (it is a substrate, not
 /// a server detail); re-exported here so `server::json::Json` paths keep
@@ -93,6 +95,15 @@ pub struct ServerConfig {
     /// `x-deadline-ms` header (`--default-deadline-ms`; `None` = no
     /// default deadline).
     pub default_deadline_ms: Option<u64>,
+    /// Durability directory for live mutations (`--wal-dir`). `None`
+    /// disables `POST /mutate` entirely (503 with a pointer to the
+    /// flag). On restart the directory is scanned and every logged
+    /// graph is replayed before `/readyz` goes green.
+    pub wal_dir: Option<std::path::PathBuf>,
+    /// Overlay size that triggers background compaction — a BOBA re-run
+    /// folding the delta into a fresh epoch (`--compact-threshold`;
+    /// 0 = manual `POST /graphs/{id}/compact` only).
+    pub compact_threshold: usize,
 }
 
 impl Default for ServerConfig {
@@ -114,6 +125,8 @@ impl Default for ServerConfig {
             burst: 0.0,
             max_inflight: 0,
             default_deadline_ms: None,
+            wal_dir: None,
+            compact_threshold: 4096,
         }
     }
 }
@@ -146,6 +159,8 @@ pub fn spawn(cfg: ServerConfig) -> Result<Server> {
         in_flight: cfg.in_flight,
         seed: cfg.seed,
         format: cfg.format.clone(),
+        wal_dir: cfg.wal_dir.clone(),
+        compact_threshold: cfg.compact_threshold,
     }));
     let stats = Arc::new(ServerStats::new());
     let coalescer = Arc::new(Coalescer::new(CoalesceConfig {
@@ -173,6 +188,24 @@ pub fn spawn(cfg: ServerConfig) -> Result<Server> {
     router.default_deadline_ms = cfg.default_deadline_ms;
     let router = Arc::new(router);
     let shutdown = Arc::new(AtomicBool::new(false));
+
+    // WAL recovery: count the logged graphs *synchronously* so the very
+    // first `/readyz` already reports `recovering`, then replay them on
+    // a background thread (queries against other graphs keep flowing).
+    // The thread honors the shutdown flag between records: killing the
+    // server mid-replay exits cleanly without touching undamaged logs.
+    if let Some(dir) = cfg.wal_dir.as_deref() {
+        let pending = wal::list_metas(dir).map(|m| m.len()).unwrap_or(0);
+        registry.set_recovering(pending);
+        if pending > 0 {
+            let registry = registry.clone();
+            let shutdown = shutdown.clone();
+            std::thread::Builder::new()
+                .name("boba-recover".to_string())
+                .spawn(move || live::recover_all(&registry, &shutdown))
+                .context("spawning recovery thread")?;
+        }
+    }
 
     let n_workers = cfg.workers.max(1);
     let mut workers = Vec::with_capacity(n_workers);

@@ -26,10 +26,14 @@ use crate::reorder::{self, Permutation};
 use crate::util::deadline;
 use crate::util::timer::Stopwatch;
 use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
+
+use super::live::LiveGraph;
+use super::wal;
 
 use super::json::Json;
 
@@ -109,6 +113,12 @@ pub struct PreparedGraph {
     pub format: Option<Arc<dyn crate::runtime::format::SpmvFormat>>,
     /// Stage timings of the preparation run.
     pub prep: PrepReport,
+    /// Mutation epoch: 0 for a fresh prepare, bumped by every
+    /// compaction that folds the delta overlay into a rebuilt artifact
+    /// (see [`super::live`]). Queries snapshot `(artifact, epoch)`
+    /// atomically, so an in-flight query finishes on the epoch it was
+    /// admitted on even while the compactor swaps.
+    pub epoch: u64,
     /// Queries served from this artifact.
     pub queries: AtomicU64,
     /// Label-invariant SSSP default source (max total degree), computed
@@ -171,6 +181,7 @@ impl PreparedGraph {
             ("scheme", Json::Str(self.scheme.clone())),
             ("n", Json::Num(self.n() as f64)),
             ("m", Json::Num(self.m() as f64)),
+            ("epoch", Json::Num(self.epoch as f64)),
             ("queries", Json::Num(self.queries.load(Ordering::Relaxed) as f64)),
             ("prep", self.prep.to_json()),
         ];
@@ -197,11 +208,26 @@ pub struct RegistryConfig {
     /// [`crate::runtime::format::FORMAT_NAMES`] name); `None` serves
     /// plain CSR only.
     pub format: Option<String>,
+    /// Directory for mutation WALs, checkpoints, and recovery metas
+    /// (`serve --wal-dir`). `None` disables `POST /mutate` entirely.
+    pub wal_dir: Option<PathBuf>,
+    /// Overlay size (upserts + tombstones) at which a mutation batch
+    /// triggers background compaction; 0 disables the trigger (manual
+    /// `POST /graphs/{id}/compact` still works).
+    pub compact_threshold: usize,
 }
 
 impl Default for RegistryConfig {
     fn default() -> Self {
-        Self { capacity: 8, batch: 1 << 16, in_flight: 4, seed: 42, format: None }
+        Self {
+            capacity: 8,
+            batch: 1 << 16,
+            in_flight: 4,
+            seed: 42,
+            format: None,
+            wal_dir: None,
+            compact_threshold: 4096,
+        }
     }
 }
 
@@ -274,10 +300,22 @@ impl Inner {
 pub struct GraphRegistry {
     cfg: RegistryConfig,
     inner: Mutex<Inner>,
+    /// Live (mutable) state per artifact id — created lazily on first
+    /// `POST /mutate` (or by WAL recovery) and never evicted: the WAL
+    /// on disk is the durable identity, the map entry just caches its
+    /// open handle.
+    live: Mutex<HashMap<String, Arc<LiveGraph>>>,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
     prepares: AtomicU64,
+    /// Completed compactions (`boba_compactions_total`).
+    compactions: AtomicU64,
+    /// Compactor threads currently running.
+    active_compactions: AtomicU64,
+    /// Graphs still replaying their WAL at startup — `/readyz` reports
+    /// `recovering` while this is non-zero.
+    recovering: AtomicUsize,
     /// Set once the first prepare completes successfully — before that,
     /// a pending prepare means the server has nothing to serve yet and
     /// `/readyz` reports it (see [`Self::mid_first_prepare`]).
@@ -313,10 +351,14 @@ impl GraphRegistry {
         GraphRegistry {
             cfg,
             inner: Mutex::new(Inner { map: HashMap::new(), clock: 0 }),
+            live: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             prepares: AtomicU64::new(0),
+            compactions: AtomicU64::new(0),
+            active_compactions: AtomicU64::new(0),
+            recovering: AtomicUsize::new(0),
             first_ready: AtomicBool::new(false),
         }
     }
@@ -417,6 +459,9 @@ impl GraphRegistry {
     ) -> Result<(Arc<PreparedGraph>, bool)> {
         let mut guard = PendingGuard { registry: self, id, flight, armed: true };
         let result = self.prepare(dataset, scheme).map(Arc::new);
+        // Collect live (mutable) ids *before* taking the registry lock —
+        // the two mutexes are never nested, in either order.
+        let pinned = self.live_ids();
         let mut inner = self.inner.lock().unwrap();
         inner.clock += 1;
         let clock = inner.clock;
@@ -425,7 +470,7 @@ impl GraphRegistry {
                 inner
                     .map
                     .insert(id.to_string(), Slot::Ready { graph: g.clone(), recency: clock });
-                self.evict_over_capacity(&mut inner);
+                self.evict_over_capacity(&mut inner, &pinned);
                 self.first_ready.store(true, Ordering::Relaxed);
             }
             Err(_) => {
@@ -445,15 +490,20 @@ impl GraphRegistry {
 
     /// Evict min-recency ready artifacts down to capacity — the only
     /// O(n) scan left in the cache, and it runs at insert time, never on
-    /// the query hit path. Pending markers are not evictable.
-    fn evict_over_capacity(&self, inner: &mut Inner) {
+    /// the query hit path. Pending markers are not evictable, and
+    /// neither are `pinned` ids (artifacts with open live-mutation
+    /// state: evicting one would fork the registry's view of the graph
+    /// from the WAL's).
+    fn evict_over_capacity(&self, inner: &mut Inner, pinned: &HashSet<String>) {
         while inner.ready_count() > self.cfg.capacity.max(1) {
             let coldest = inner
                 .map
                 .iter()
                 .filter_map(|(k, s)| match s {
-                    Slot::Ready { recency, .. } => Some((*recency, k.clone())),
-                    Slot::Pending(_) => None,
+                    Slot::Ready { recency, .. } if !pinned.contains(k) => {
+                        Some((*recency, k.clone()))
+                    }
+                    _ => None,
                 })
                 .min()
                 .map(|(_, k)| k);
@@ -568,7 +618,35 @@ impl GraphRegistry {
         prep.ingest_ms = sw.ms();
         prep.batches = batches;
         check_deadline("ingest")?;
+        self.build_from_coo(dataset, scheme, coo, 0, prep)
+    }
 
+    /// Re-run the post-ingest pipeline (reorder → convert → transpose →
+    /// format) on an already-materialized COO, producing an artifact at
+    /// `epoch`. This is the compactor's path — it folds the delta
+    /// overlay into a merged COO and re-runs BOBA *online*, which is
+    /// the paper's amortization claim under churn — and WAL recovery's
+    /// (checkpoint or re-ingested source + replay). Counted separately
+    /// from [`Self::prepares`] via [`Self::compactions`].
+    pub fn rebuild_from_coo(
+        &self,
+        dataset: &str,
+        scheme: &str,
+        coo: Coo,
+        epoch: u64,
+    ) -> Result<PreparedGraph> {
+        self.build_from_coo(dataset, scheme, coo, epoch, PrepReport::default())
+    }
+
+    /// Shared tail of [`Self::prepare`] and [`Self::rebuild_from_coo`].
+    fn build_from_coo(
+        &self,
+        dataset: &str,
+        scheme: &str,
+        coo: Coo,
+        epoch: u64,
+        mut prep: PrepReport,
+    ) -> Result<PreparedGraph> {
         // ── reorder (+relabel) ────────────────────────────────────
         let (perm, working) = if scheme == SCHEME_NONE {
             (None, coo)
@@ -638,10 +716,128 @@ impl GraphRegistry {
             perm,
             format,
             prep,
+            epoch,
             queries: AtomicU64::new(0),
             default_source: OnceLock::new(),
             tc: OnceLock::new(),
         })
+    }
+
+    // ── live mutation state ───────────────────────────────────────
+
+    /// The configured WAL directory, if mutations are enabled.
+    pub fn wal_dir(&self) -> Option<&Path> {
+        self.cfg.wal_dir.as_deref()
+    }
+
+    /// The background-compaction trigger threshold (0 = disabled).
+    pub fn compact_threshold(&self) -> usize {
+        self.cfg.compact_threshold
+    }
+
+    /// Open (or return the cached) live-mutation handle for `graph`.
+    /// Errors when the registry has no `--wal-dir`. The first open for
+    /// a graph writes its recovery meta and replays any WAL already on
+    /// disk under its key.
+    pub fn live_for(&self, graph: &Arc<PreparedGraph>) -> Result<Arc<LiveGraph>> {
+        let Some(dir) = self.cfg.wal_dir.clone() else {
+            anyhow::bail!("mutations are disabled: the server was started without --wal-dir");
+        };
+        let mut live = self.live.lock().unwrap();
+        if let Some(l) = live.get(&graph.id) {
+            return Ok(l.clone());
+        }
+        let key = wal::key_for(&graph.id);
+        wal::write_meta(&dir, &key, &graph.id, &graph.dataset, &graph.scheme, graph.epoch)?;
+        let never = AtomicBool::new(false);
+        let report = wal::scan(&dir, &key, &never, true)?;
+        let l = LiveGraph::open(&dir, graph.clone(), graph.epoch, report)?;
+        live.insert(graph.id.clone(), l.clone());
+        Ok(l)
+    }
+
+    /// Cached live handle by artifact id (no side effects).
+    pub fn live_graph(&self, id: &str) -> Option<Arc<LiveGraph>> {
+        self.live.lock().unwrap().get(id).cloned()
+    }
+
+    /// Install a recovered live handle (WAL replay path).
+    pub fn install_live(&self, l: Arc<LiveGraph>) {
+        self.live.lock().unwrap().insert(l.id.clone(), l);
+    }
+
+    /// Every open live handle (metrics aggregation).
+    pub fn live_list(&self) -> Vec<Arc<LiveGraph>> {
+        self.live.lock().unwrap().values().cloned().collect()
+    }
+
+    /// Ids with open live-mutation state — pinned against LRU eviction.
+    fn live_ids(&self) -> HashSet<String> {
+        self.live.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Publish (or republish) a ready artifact under `id` — the
+    /// compactor's epoch swap and recovery both land artifacts here
+    /// without going through the prepare pipeline. Never evicts: the
+    /// published id is live-pinned by construction.
+    pub fn publish(&self, id: &str, graph: Arc<PreparedGraph>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        inner.map.insert(id.to_string(), Slot::Ready { graph, recency: clock });
+        self.first_ready.store(true, Ordering::Relaxed);
+    }
+
+    /// Record one completed compaction.
+    pub fn note_compaction(&self) {
+        self.compactions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Completed compactions (`boba_compactions_total`).
+    pub fn compactions(&self) -> u64 {
+        self.compactions.load(Ordering::Relaxed)
+    }
+
+    /// A background compactor thread started.
+    pub fn compaction_started(&self) {
+        self.active_compactions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A background compactor thread finished.
+    pub fn compaction_finished(&self) {
+        self.active_compactions.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Compactor threads currently running.
+    pub fn active_compactions(&self) -> u64 {
+        self.active_compactions.load(Ordering::Relaxed)
+    }
+
+    /// Set the number of graphs whose WALs still need replay — called
+    /// synchronously at server start (before the accept loop) so the
+    /// very first `/readyz` already reports `recovering`.
+    pub fn set_recovering(&self, n: usize) {
+        self.recovering.store(n, Ordering::SeqCst);
+    }
+
+    /// One graph finished (or abandoned) replay.
+    pub fn dec_recovering(&self) {
+        // Saturating: recovery may call this after an early set_recovering(0).
+        let _ = self.recovering.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+            Some(v.saturating_sub(1))
+        });
+    }
+
+    /// Graphs still replaying their WAL.
+    pub fn recovering(&self) -> usize {
+        self.recovering.load(Ordering::SeqCst)
+    }
+
+    /// Load the original-space COO for `dataset` exactly as the prepare
+    /// pipeline would (same seed, same randomization) — WAL recovery's
+    /// base when no checkpoint has landed yet.
+    pub fn load_base_coo(&self, dataset: &str) -> Result<Coo> {
+        load_source(dataset, self.cfg.seed)
     }
 }
 
@@ -683,7 +879,7 @@ mod tests {
             batch: 500,
             in_flight: 2,
             seed: 7,
-            format: None,
+            ..RegistryConfig::default()
         })
     }
 
@@ -748,6 +944,7 @@ mod tests {
             in_flight: 2,
             seed: 7,
             format: Some("delta".to_string()),
+            ..RegistryConfig::default()
         });
         let (g, _) = r.get_or_prepare("pa:1500:4", "boba").unwrap();
         let f = g.format.as_ref().expect("artifact must carry the delta variant");
@@ -780,6 +977,41 @@ mod tests {
         assert!(r.get("pa:1100:4@boba").is_none(), "coldest entry evicted");
         assert!(r.get("pa:1000:4@boba").is_some());
         assert!(r.get("pa:1200:4@boba").is_some());
+    }
+
+    #[test]
+    fn live_pinned_artifacts_survive_eviction() {
+        let dir = std::env::temp_dir()
+            .join(format!("boba-reg-pin-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = GraphRegistry::new(RegistryConfig {
+            capacity: 1,
+            batch: 500,
+            in_flight: 2,
+            seed: 7,
+            wal_dir: Some(dir.clone()),
+            ..RegistryConfig::default()
+        });
+        let (g1, _) = r.get_or_prepare("pa:1000:4", "boba").unwrap();
+        let _live = r.live_for(&g1).unwrap();
+        // Capacity 1 + a second prepare would normally evict g1 (it is
+        // the coldest) — the open live handle pins it instead.
+        r.get_or_prepare("pa:1100:4", "boba").unwrap();
+        assert!(
+            r.get("pa:1000:4@boba").is_some(),
+            "an artifact with live-mutation state must never be evicted"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mutations_disabled_without_wal_dir() {
+        let r = registry(2);
+        let (g, _) = r.get_or_prepare("pa:800:4", "boba").unwrap();
+        let err = r.live_for(&g).unwrap_err().to_string();
+        assert!(err.contains("--wal-dir"), "{err}");
+        assert_eq!(g.epoch, 0, "fresh prepares start at epoch 0");
     }
 
     #[test]

@@ -15,6 +15,9 @@
 //! | `POST /graphs/{id}/pagerank` | PageRank (`{"iters": N}`, default 20; deterministic parallel kernel) |
 //! | `POST /graphs/{id}/sssp` | frontier SSSP (`{"source": V}`, default max-degree vertex; coalesced) |
 //! | `POST /graphs/{id}/tc` | triangle count (lazy oriented view) |
+//! | `POST /graphs/{id}/mutate` | `{"ops": [{"op": "upsert"\|"delete", "u": U, "v": V}]}` → WAL-durable live mutation |
+//! | `POST /graphs/{id}/compact` | fold the delta overlay into a new epoch (re-runs BOBA) |
+//! | `GET  /graphs/{id}/digest` | label-invariant edge-multiset digest (crash-equivalence observable) |
 //! | `POST /query/batch` | `{"id": ID, "queries": [...]}` → heterogeneous batch, SpMV/SSSP tiled into multi-RHS passes |
 //!
 //! SpMV and SSSP queries route through the per-artifact
@@ -38,8 +41,11 @@ use super::admission::{Admission, Reject};
 use super::coalesce::{self, BatchOut, BatchQuery, Coalescer};
 use super::http::{Request, Response};
 use super::json::Json;
+use super::live;
 use super::registry::{GraphRegistry, PreparedGraph};
 use super::stats::{Endpoint, ServerStats};
+use super::wal::{WalOp, OP_DELETE, OP_UPSERT};
+use crate::graph::delta::DeltaOverlay;
 
 /// Upper bound on `/query/batch` array length (DoS guard; the array is
 /// tiled into ≤ [`spmm::MAX_RHS`]-wide kernel passes regardless).
@@ -154,6 +160,15 @@ impl Router {
                 Some(Endpoint::Batch),
                 self.admitted(req, Endpoint::Batch, |r| self.query_batch(r)),
             ),
+            ("POST", ["graphs", id, "mutate"]) => (
+                Some(Endpoint::Mutate),
+                self.admitted(req, Endpoint::Mutate, |r| self.mutate(id, r)),
+            ),
+            ("POST", ["graphs", id, "compact"]) => (
+                Some(Endpoint::Mutate),
+                self.admitted(req, Endpoint::Mutate, |_| self.compact_now(id)),
+            ),
+            ("GET", ["graphs", id, "digest"]) => (Some(Endpoint::Mutate), self.digest_page(id)),
             ("POST", ["graphs", id, query]) => match Endpoint::query_from(query) {
                 Some(ep) => (Some(ep), self.admitted(req, ep, |r| self.query(id, ep, r))),
                 None => (
@@ -237,6 +252,12 @@ impl Router {
     /// the shed ladder active; 200 otherwise.
     fn readyz(&self) -> Response {
         let mut reasons: Vec<Json> = Vec::new();
+        // WAL replay in progress: artifacts exist but their mutation
+        // suffixes are not applied yet — serving now could answer from
+        // a pre-crash state, so readiness degrades until replay drains.
+        if self.registry.recovering() > 0 {
+            reasons.push(Json::Str("recovering".into()));
+        }
         if self.registry.mid_first_prepare() {
             reasons.push(Json::Str("first-prepare".into()));
         }
@@ -482,6 +503,44 @@ impl Router {
         );
         p.value("boba_deadline_exceeded_total", &[], self.admission.deadline_hits() as f64);
 
+        let live = self.registry.live_list();
+        p.family(
+            "boba_mutations_total",
+            "counter",
+            "Mutation ops durably acked across live graphs.",
+        );
+        p.value("boba_mutations_total", &[], live.iter().map(|l| l.ops()).sum::<u64>() as f64);
+        p.family(
+            "boba_compactions_total",
+            "counter",
+            "Background compactions completed (BOBA re-run + epoch swap).",
+        );
+        p.value("boba_compactions_total", &[], self.registry.compactions() as f64);
+        p.family(
+            "boba_delta_entries",
+            "gauge",
+            "Uncompacted delta-overlay entries per live graph.",
+        );
+        for l in &live {
+            p.value("boba_delta_entries", &[("graph", l.id.as_str())], l.delta_entries() as f64);
+        }
+        p.family(
+            "boba_recovering",
+            "gauge",
+            "WAL-backed graphs still replaying after restart.",
+        );
+        p.value("boba_recovering", &[], self.registry.recovering() as f64);
+        // All kinds emitted even at zero so dashboards can alert on
+        // first increment without waiting for the series to appear.
+        p.family(
+            "boba_io_corruption_total",
+            "counter",
+            "Storage corruption events detected and contained, by kind.",
+        );
+        for (kind, n) in crate::obs::corrupt::snapshot() {
+            p.value("boba_io_corruption_total", &[("kind", kind)], n as f64);
+        }
+
         Response::text_with_type(200, "text/plain; version=0.0.4", p.render())
     }
 
@@ -510,8 +569,136 @@ impl Router {
     }
 
     fn list(&self) -> Response {
-        let rows: Vec<Json> = self.registry.list().iter().map(|g| g.to_json()).collect();
+        let rows: Vec<Json> = self
+            .registry
+            .list()
+            .iter()
+            .map(|g| {
+                let mut pairs = match g.to_json() {
+                    Json::Obj(p) => p,
+                    _ => unreachable!(),
+                };
+                if let Some(l) = self.registry.live_graph(&g.id) {
+                    pairs.push(("live".to_string(), l.to_json()));
+                }
+                Json::Obj(pairs)
+            })
+            .collect();
         Response::json(200, Json::Arr(rows).render())
+    }
+
+    /// `POST /graphs/{id}/mutate`: apply a batch of live mutations.
+    /// Body: `{"ops": [{"op": "upsert"|"delete", "u": U, "v": V,
+    /// "w": W?}, ...]}` with vertex ids in the **original** label space
+    /// (the ids the dataset was ingested with — the WAL stores these so
+    /// replay survives the nondeterministic reorder). The 200 reply is
+    /// the durability ack: the batch's WAL record is fsynced before the
+    /// overlay is touched.
+    fn mutate(&self, id: &str, req: &Request) -> Response {
+        let graph = match self.registry.get(id) {
+            Some(g) => g,
+            None => {
+                return Response::error(
+                    404,
+                    &format!("no prepared graph {id:?} (POST /graphs first)"),
+                )
+            }
+        };
+        let body = match Json::parse(&req.body_str()) {
+            Ok(v) => v,
+            Err(e) => return Response::error(400, &format!("bad JSON body: {e:#}")),
+        };
+        let ops = match parse_ops(&body, graph.n()) {
+            Ok(o) => o,
+            Err(e) => return Response::error(422, &format!("{e:#}")),
+        };
+        let live = match self.registry.live_for(&graph) {
+            Ok(l) => l,
+            Err(e) => return Response::error(503, &format!("{e:#}")),
+        };
+        match crate::obs::span("mutate.append", || live.mutate(&ops)) {
+            Ok(ack) => {
+                live::maybe_compact_bg(&self.registry, &live);
+                Response::json(
+                    200,
+                    Json::obj(vec![
+                        ("id", Json::Str(live.id.clone())),
+                        ("seq", Json::Num(ack.seq as f64)),
+                        ("epoch", Json::Num(ack.epoch as f64)),
+                        ("ops", Json::Num(ack.ops as f64)),
+                        ("delta_entries", Json::Num(ack.delta_entries as f64)),
+                        ("durable", Json::Bool(true)),
+                    ])
+                    .render(),
+                )
+            }
+            // Ops were validated above, so a mutate error here is the
+            // WAL refusing durability (I/O error, poisoned tail) — a
+            // server-side failure, not a bad request.
+            Err(e) => Response::error(503, &format!("{e:#}")),
+        }
+    }
+
+    /// `POST /graphs/{id}/compact`: synchronously fold the overlay into
+    /// a new epoch (the background compactor runs this same routine when
+    /// the overlay crosses `--compact-threshold`).
+    fn compact_now(&self, id: &str) -> Response {
+        let graph = match self.registry.get(id) {
+            Some(g) => g,
+            None => {
+                return Response::error(
+                    404,
+                    &format!("no prepared graph {id:?} (POST /graphs first)"),
+                )
+            }
+        };
+        let live = match self.registry.live_for(&graph) {
+            Ok(l) => l,
+            Err(e) => return Response::error(503, &format!("{e:#}")),
+        };
+        match crate::obs::span("compact", || live::compact(&self.registry, &live)) {
+            Ok(ran) => Response::json(
+                200,
+                Json::obj(vec![
+                    ("id", Json::Str(live.id.clone())),
+                    ("compacted", Json::Bool(ran)),
+                    ("epoch", Json::Num(live.epoch() as f64)),
+                    ("delta_entries", Json::Num(live.delta_entries() as f64)),
+                ])
+                .render(),
+            ),
+            Err(e) => Response::error(503, &format!("{e:#}")),
+        }
+    }
+
+    /// `GET /graphs/{id}/digest`: the label-invariant edge-multiset
+    /// digest of base ⊕ delta in the original label space — equal
+    /// across schemes, epochs, restarts, and crash recoveries iff the
+    /// logical graphs are equal (the crash-equivalence observable).
+    fn digest_page(&self, id: &str) -> Response {
+        let graph = match self.registry.get(id) {
+            Some(g) => g,
+            None => {
+                return Response::error(
+                    404,
+                    &format!("no prepared graph {id:?} (POST /graphs first)"),
+                )
+            }
+        };
+        let (digest, epoch, entries) = match self.registry.live_graph(id) {
+            Some(l) => (l.digest(), l.epoch(), l.delta_entries()),
+            None => (live::digest(&graph, &DeltaOverlay::empty(graph.n())), graph.epoch, 0),
+        };
+        Response::json(
+            200,
+            Json::obj(vec![
+                ("id", Json::Str(graph.id.clone())),
+                ("digest", Json::Str(format!("{digest:016x}"))),
+                ("epoch", Json::Num(epoch as f64)),
+                ("delta_entries", Json::Num(entries as f64)),
+            ])
+            .render(),
+        )
     }
 
     fn ingest(&self, req: &Request) -> Response {
@@ -579,11 +766,22 @@ impl Router {
             self.admission.note_deadline_hit();
             return deadline_response("deadline exceeded before kernel dispatch");
         }
+        // Live overlay: when this artifact has unfolded mutations, run
+        // the merged (base ⊕ delta) kernels over an atomic snapshot —
+        // bypassing the coalescer, whose batches are keyed to frozen
+        // artifact instances. The snapshot's base may be a newer epoch
+        // than `graph` if a compaction just swapped; either way the
+        // query sees one consistent (base, delta) pair end to end.
+        let overlay = self.registry.live_graph(&graph.id).and_then(|l| {
+            let (base, delta, _) = l.view();
+            (!delta.is_empty()).then_some((base, delta))
+        });
         let sw = Stopwatch::start();
-        let result = match ep {
+        let result = match (&overlay, ep) {
+            (Some((base, delta)), _) => run_merged_query(base, delta, ep, &body),
             // SpMV/SSSP go through the coalescer: concurrent queries
             // against this artifact share one multi-RHS kernel pass.
-            Endpoint::Spmv | Endpoint::Sssp => parse_coalescable(&graph, ep, &body)
+            (None, Endpoint::Spmv | Endpoint::Sssp) => parse_coalescable(&graph, ep, &body)
                 .and_then(|q| {
                     // The kernel span lands in the batch leader's trace;
                     // followers record only their coalesce wait here.
@@ -591,7 +789,7 @@ impl Router {
                         crate::obs::span("coalesce.submit", || self.coalescer.submit(&graph, q))?;
                     Ok(coalesced_json(q, out, width))
                 }),
-            _ => run_query(&graph, ep, &body),
+            (None, _) => run_query(&graph, ep, &body),
         };
         // Post-kernel deadline check: an iterative kernel that bailed at
         // a cooperative checkpoint returns a partial result — map it to
@@ -695,6 +893,51 @@ impl Router {
             }
         }
         let sw = Stopwatch::start();
+        // Live overlay: merged kernels don't coalesce (tiles are keyed
+        // to frozen artifact instances), so batch members run one by
+        // one against a single atomic (base, delta) snapshot — every
+        // member of the batch sees the same graph version.
+        let overlay = self.registry.live_graph(&graph.id).and_then(|l| {
+            let (base, delta, _) = l.view();
+            (!delta.is_empty()).then_some((base, delta))
+        });
+        if let Some((base, delta)) = overlay {
+            let mut rows = Vec::with_capacity(plans.len());
+            for (i, plan) in plans.iter().enumerate() {
+                if deadline::expired() {
+                    self.admission.note_deadline_hit();
+                    return deadline_response("deadline exceeded between batch members");
+                }
+                let (ep, body) = match plan {
+                    Plan::Spmv { seed } => (
+                        Endpoint::Spmv,
+                        Json::obj(
+                            seed.map(|s| vec![("seed", Json::Num(s as f64))]).unwrap_or_default(),
+                        ),
+                    ),
+                    Plan::Sssp { source } => {
+                        (Endpoint::Sssp, Json::obj(vec![("source", Json::Num(*source as f64))]))
+                    }
+                    Plan::Direct(ep, q) => (*ep, q.clone()),
+                };
+                match run_merged_query(&base, &delta, ep, &body) {
+                    Ok(v) => rows.push(with_query_name(ep.name(), v)),
+                    Err(e) => return Response::error(422, &format!("queries[{i}]: {e:#}")),
+                }
+            }
+            let count = plans.len();
+            graph.queries.fetch_add(count as u64, Ordering::Relaxed);
+            return Response::json(
+                200,
+                Json::obj(vec![
+                    ("id", Json::Str(graph.id.clone())),
+                    ("count", Json::Num(count as f64)),
+                    ("results", Json::Arr(rows)),
+                    ("ms", Json::Num(sw.ms())),
+                ])
+                .render(),
+            );
+        }
         // Tile the homogeneous groups: one kernel pass per tile.
         let spmv_idx: Vec<usize> = plans
             .iter()
@@ -936,6 +1179,131 @@ fn run_query(g: &PreparedGraph, ep: Endpoint, body: &Json) -> anyhow::Result<Jso
     }
 }
 
+/// Upper bound on ops per `POST /mutate` batch (one WAL record each).
+pub const MAX_MUTATE_OPS: usize = 1 << 16;
+
+/// Parse and validate a `POST /mutate` body into WAL ops (original
+/// label space, ids checked against `n` before any byte is written).
+fn parse_ops(body: &Json, n: usize) -> anyhow::Result<Vec<WalOp>> {
+    let entries = match body.get("ops") {
+        Some(Json::Arr(items)) if !items.is_empty() => items,
+        Some(Json::Arr(_)) => anyhow::bail!("ops array is empty"),
+        _ => anyhow::bail!("body must carry {{\"ops\": [...]}}"),
+    };
+    anyhow::ensure!(
+        entries.len() <= MAX_MUTATE_OPS,
+        "{} ops exceed the {MAX_MUTATE_OPS} per-batch cap",
+        entries.len()
+    );
+    let mut ops = Vec::with_capacity(entries.len());
+    for (i, e) in entries.iter().enumerate() {
+        let kind = match e.get("op").and_then(Json::as_str) {
+            Some("upsert") => OP_UPSERT,
+            Some("delete") => OP_DELETE,
+            Some(other) => anyhow::bail!("ops[{i}]: unknown op {other:?} (upsert|delete)"),
+            None => anyhow::bail!("ops[{i}] missing \"op\" (upsert|delete)"),
+        };
+        let vertex = |name: &str| -> anyhow::Result<u32> {
+            let v = e
+                .get(name)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow::anyhow!("ops[{i}] missing vertex {name:?}"))?;
+            anyhow::ensure!((v as usize) < n, "ops[{i}]: {name}={v} out of range (n={n})");
+            Ok(v as u32)
+        };
+        let (u, v) = (vertex("u")?, vertex("v")?);
+        let w = e.get("w").and_then(|j| j.as_f64()).unwrap_or(1.0) as f32;
+        anyhow::ensure!(w.is_finite(), "ops[{i}]: weight must be finite");
+        ops.push(WalOp { kind, u, v, w });
+    }
+    Ok(ops)
+}
+
+/// Execute one query against a live (base ⊕ delta) snapshot via the
+/// merged kernels in [`crate::graph::delta`]. Answer shapes mirror the
+/// frozen path exactly (same digests for the same logical graph), plus
+/// a `delta_entries` field as evidence the overlay was consulted.
+fn run_merged_query(
+    g: &PreparedGraph,
+    d: &DeltaOverlay,
+    ep: Endpoint,
+    body: &Json,
+) -> anyhow::Result<Json> {
+    use crate::graph::delta;
+    let entries = ("delta_entries", Json::Num(d.len() as f64));
+    match ep {
+        Endpoint::Spmv => {
+            let seed = body.get("seed").and_then(Json::as_u64);
+            let x = coalesce::rhs_vector(g.csr.n(), seed);
+            let y = crate::obs::span("kernel.spmv_merged", || {
+                delta::spmv_merged_parallel(&g.csr, d, &x)
+            });
+            let digest: f64 = y.iter().map(|&v| v as f64).sum();
+            let mut pairs = vec![("digest", Json::Num(digest))];
+            if let Some(s) = seed {
+                pairs.push(("seed", Json::Num(s as f64)));
+            }
+            pairs.push(entries);
+            Ok(Json::obj(pairs))
+        }
+        Endpoint::Sssp => {
+            let source = match body.get("source").and_then(Json::as_u64) {
+                Some(s) => {
+                    anyhow::ensure!((s as usize) < g.csr.n(), "source {s} out of range");
+                    s as u32
+                }
+                None => g.default_source(),
+            };
+            let dist = crate::obs::span("kernel.sssp_merged", || {
+                delta::sssp_merged_parallel(&g.csr, d, source)
+            });
+            let digest: f64 = dist.iter().filter(|v| v.is_finite()).map(|&v| v as f64).sum();
+            let reached = dist.iter().filter(|v| v.is_finite()).count();
+            Ok(Json::obj(vec![
+                ("digest", Json::Num(digest)),
+                ("source", Json::Num(source as f64)),
+                ("reached", Json::Num(reached as f64)),
+                entries,
+            ]))
+        }
+        Endpoint::Pagerank => {
+            let iters = body.get("iters").and_then(Json::as_u64).unwrap_or(20) as usize;
+            anyhow::ensure!(iters >= 1 && iters <= 10_000, "iters must be in 1..=10000");
+            let p = pagerank::PrParams { max_iters: iters, ..Default::default() };
+            let r = crate::obs::span("kernel.pagerank_merged", || {
+                delta::pagerank_merged_parallel(&g.csr, &g.transpose, d, p)
+            });
+            let digest: f64 = r.ranks.iter().map(|&v| v as f64).sum();
+            Ok(Json::obj(vec![
+                ("digest", Json::Num(digest)),
+                ("iters", Json::Num(r.iters as f64)),
+                entries,
+            ]))
+        }
+        Endpoint::Tc => {
+            // No incremental TC kernel: materialize the merged COO and
+            // run the same symmetrize → orient pipeline the frozen
+            // tc_view uses. Correctness over speed while the overlay is
+            // hot — compaction folds it and restores the cached view.
+            use crate::convert;
+            let merged = delta::merged_coo(&g.csr, d);
+            let und = merged.symmetrized().deduped();
+            let sorted = convert::sort_coo_by_src(&und);
+            let csr = convert::coo_to_csr_parallel(&sorted);
+            let rank = tc::degree_rank(&csr);
+            let dag = tc::orient_by_rank(&csr, &rank);
+            let triangles =
+                crate::obs::span("kernel.tc_merged", || tc::triangle_count_ranked(&dag, &rank));
+            Ok(Json::obj(vec![
+                ("digest", Json::Num(triangles as f64)),
+                ("triangles", Json::Num(triangles as f64)),
+                entries,
+            ]))
+        }
+        _ => anyhow::bail!("not a query endpoint"),
+    }
+}
+
 const USAGE: &str = "boba graph-analytics service\n\
   GET  /healthz                      liveness only\n\
   GET  /readyz                       503 while preparing or shedding\n\
@@ -950,6 +1318,11 @@ const USAGE: &str = "boba graph-analytics service\n\
   POST /graphs/{id}/pagerank         {\"iters\": 20}\n\
   POST /graphs/{id}/sssp             {\"source\": 0}\n\
   POST /graphs/{id}/tc\n\
+  POST /graphs/{id}/mutate           {\"ops\": [{\"op\": \"upsert\", \"u\": 1, \"v\": 2, \"w\": 0.5},\n\
+                                              {\"op\": \"delete\", \"u\": 3, \"v\": 4}]}\n\
+                                     (needs --wal-dir; acked after fsync)\n\
+  POST /graphs/{id}/compact          fold the delta into a fresh BOBA epoch now\n\
+  GET  /graphs/{id}/digest           label-invariant graph digest (crash evidence)\n\
   POST /query/batch                  {\"id\": \"rmat:16:16@boba\",\n\
                                       \"queries\": [{\"query\": \"spmv\"},\n\
                                                   {\"query\": \"sssp\", \"source\": 3}]}\n\
@@ -978,6 +1351,7 @@ mod tests {
                 in_flight: 2,
                 seed: 5,
                 format: format.map(|s| s.to_string()),
+                ..RegistryConfig::default()
             })),
             Arc::new(ServerStats::new()),
             Arc::new(Coalescer::new(CoalesceConfig::default())),
@@ -1259,8 +1633,20 @@ mod tests {
             "boba_stage_duration_seconds",
             "boba_process_resident_memory_bytes",
             "boba_traces_total",
+            "boba_mutations_total",
+            "boba_compactions_total",
+            "boba_io_corruption_total",
+            "boba_delta_entries",
+            "boba_recovering",
         ] {
             assert!(scrape.family(fam).is_some(), "missing family {fam}");
+        }
+        // Corruption counters pre-register every kind at zero.
+        for kind in crate::obs::corrupt::KINDS {
+            assert!(
+                scrape.value("boba_io_corruption_total", &[("kind", kind)]).is_some(),
+                "missing corruption kind {kind}"
+            );
         }
         assert!(scrape.value("boba_requests_total", &[("endpoint", "ingest")]).unwrap() >= 1.0);
         let hist = scrape.histogram("boba_request_duration_seconds", &[("endpoint", "spmv")]);
@@ -1275,6 +1661,120 @@ mod tests {
             stages.samples.iter().any(|s| s.label("stage") == Some("prepare.reorder")),
             "cold prepare must record its reorder stage"
         );
+    }
+
+    fn router_with_wal(tag: &str) -> (Router, std::path::PathBuf) {
+        let dir = std::env::temp_dir()
+            .join(format!("boba-router-wal-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = Router::new(
+            Arc::new(GraphRegistry::new(RegistryConfig {
+                capacity: 4,
+                batch: 1000,
+                in_flight: 2,
+                seed: 5,
+                wal_dir: Some(dir.clone()),
+                compact_threshold: 0, // manual /compact only
+                ..RegistryConfig::default()
+            })),
+            Arc::new(ServerStats::new()),
+            Arc::new(Coalescer::new(CoalesceConfig::default())),
+            Arc::new(Admission::new(AdmissionConfig::default())),
+        );
+        (r, dir)
+    }
+
+    #[test]
+    fn mutate_without_wal_dir_is_a_clean_503() {
+        let r = router();
+        let resp = r.handle(&req("POST", "/graphs", "{\"dataset\": \"pa:1000:4\"}"));
+        let id = json_of(&resp).get("id").unwrap().as_str().unwrap().to_string();
+        let m = r.handle(&req(
+            "POST",
+            &format!("/graphs/{id}/mutate"),
+            "{\"ops\": [{\"op\": \"upsert\", \"u\": 0, \"v\": 1}]}",
+        ));
+        assert_eq!(m.status, 503, "{}", String::from_utf8_lossy(&m.body));
+        assert!(String::from_utf8_lossy(&m.body).contains("--wal-dir"));
+        // The digest page still serves a base-only digest.
+        assert_eq!(r.handle(&req("GET", &format!("/graphs/{id}/digest"), "")).status, 200);
+    }
+
+    #[test]
+    fn mutate_compact_digest_roundtrip() {
+        let (r, dir) = router_with_wal("roundtrip");
+        let resp = r.handle(&req("POST", "/graphs", "{\"dataset\": \"pa:1500:4\"}"));
+        let id = json_of(&resp).get("id").unwrap().as_str().unwrap().to_string();
+        let m0 = json_of(&r.handle(&req("GET", &format!("/graphs/{id}/digest"), "")));
+        let frozen = m0.get("digest").unwrap().as_str().unwrap().to_string();
+
+        // Validation failures happen before any byte is written.
+        for bad in [
+            "{}",
+            "{\"ops\": []}",
+            "{\"ops\": [{\"op\": \"frob\", \"u\": 0, \"v\": 1}]}",
+            "{\"ops\": [{\"op\": \"upsert\", \"u\": 999999, \"v\": 1}]}",
+        ] {
+            let resp = r.handle(&req("POST", &format!("/graphs/{id}/mutate"), bad));
+            assert_eq!(resp.status, 422, "{bad} -> {}", String::from_utf8_lossy(&resp.body));
+        }
+
+        // Durable upserts + a delete; the ack carries the WAL seq.
+        let m = r.handle(&req(
+            "POST",
+            &format!("/graphs/{id}/mutate"),
+            "{\"ops\": [{\"op\": \"upsert\", \"u\": 1, \"v\": 2, \"w\": 2.5},\
+                        {\"op\": \"upsert\", \"u\": 3, \"v\": 4},\
+                        {\"op\": \"delete\", \"u\": 0, \"v\": 1}]}",
+        ));
+        assert_eq!(m.status, 200, "{}", String::from_utf8_lossy(&m.body));
+        let ack = json_of(&m);
+        assert_eq!(ack.get("durable").unwrap().as_bool(), Some(true));
+        assert_eq!(ack.get("ops").unwrap().as_u64(), Some(3));
+        assert!(ack.get("delta_entries").unwrap().as_u64().unwrap() >= 1);
+
+        // Merged queries answer and carry the overlay marker.
+        let q = json_of(&r.handle(&req("POST", &format!("/graphs/{id}/spmv"), "")));
+        assert!(q.get("delta_entries").unwrap().as_u64().unwrap() >= 1);
+        let pr = r.handle(&req("POST", &format!("/graphs/{id}/pagerank"), "{\"iters\": 5}"));
+        assert_eq!(pr.status, 200, "{}", String::from_utf8_lossy(&pr.body));
+        let tc = r.handle(&req("POST", &format!("/graphs/{id}/tc"), ""));
+        assert_eq!(tc.status, 200, "{}", String::from_utf8_lossy(&tc.body));
+        // Batch path uses the same merged snapshot.
+        let b = r.handle(&req(
+            "POST",
+            "/query/batch",
+            &format!("{{\"id\": \"{id}\", \"queries\": [{{\"query\": \"spmv\"}}, {{\"query\": \"sssp\"}}]}}"),
+        ));
+        assert_eq!(b.status, 200, "{}", String::from_utf8_lossy(&b.body));
+
+        // The mutated digest differs from frozen, survives compaction,
+        // and the epoch advances.
+        let live = json_of(&r.handle(&req("GET", &format!("/graphs/{id}/digest"), "")));
+        let mutated = live.get("digest").unwrap().as_str().unwrap().to_string();
+        assert_ne!(mutated, frozen, "mutations must change the digest");
+        let c = r.handle(&req("POST", &format!("/graphs/{id}/compact"), ""));
+        assert_eq!(c.status, 200, "{}", String::from_utf8_lossy(&c.body));
+        let cj = json_of(&c);
+        assert_eq!(cj.get("compacted").unwrap().as_bool(), Some(true));
+        assert_eq!(cj.get("delta_entries").unwrap().as_u64(), Some(0));
+        let after = json_of(&r.handle(&req("GET", &format!("/graphs/{id}/digest"), "")));
+        assert_eq!(after.get("digest").unwrap().as_str().unwrap(), mutated);
+        assert!(after.get("epoch").unwrap().as_u64().unwrap() >= 1);
+
+        // Post-compaction the overlay is empty: queries take the frozen
+        // path again (no delta_entries marker) on the new epoch.
+        let q2 = json_of(&r.handle(&req("POST", &format!("/graphs/{id}/spmv"), "")));
+        assert!(q2.get("delta_entries").is_none());
+
+        // Mutation traffic shows up in /metrics.
+        let text =
+            String::from_utf8(r.handle(&req("GET", "/metrics", "")).body.clone()).unwrap();
+        let scrape = crate::obs::text::Scrape::parse(&text).unwrap();
+        assert!(scrape.value("boba_mutations_total", &[]).unwrap() >= 3.0);
+        assert!(scrape.value("boba_compactions_total", &[]).unwrap() >= 1.0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -33,6 +33,9 @@ pub enum Endpoint {
     Tc,
     /// `POST /query/batch` — heterogeneous query arrays.
     Batch,
+    /// `POST /graphs/{id}/mutate` (plus the manual `/compact` and
+    /// `/digest` mutation-surface endpoints, which share the slot).
+    Mutate,
     /// `GET /healthz` — pure liveness.
     Healthz,
     /// `GET /readyz` — readiness (503 while preparing or shedding).
@@ -47,7 +50,7 @@ pub enum Endpoint {
 
 impl Endpoint {
     /// All endpoints, display order.
-    pub const ALL: [Endpoint; 12] = [
+    pub const ALL: [Endpoint; 13] = [
         Endpoint::Ingest,
         Endpoint::List,
         Endpoint::Spmv,
@@ -55,6 +58,7 @@ impl Endpoint {
         Endpoint::Sssp,
         Endpoint::Tc,
         Endpoint::Batch,
+        Endpoint::Mutate,
         Endpoint::Healthz,
         Endpoint::Readyz,
         Endpoint::Stats,
@@ -72,6 +76,7 @@ impl Endpoint {
             Endpoint::Sssp => "sssp",
             Endpoint::Tc => "tc",
             Endpoint::Batch => "batch",
+            Endpoint::Mutate => "mutate",
             Endpoint::Healthz => "healthz",
             Endpoint::Readyz => "readyz",
             Endpoint::Stats => "stats",
@@ -95,7 +100,7 @@ impl Endpoint {
 /// Aggregated per-endpoint stats for one server instance.
 #[derive(Debug)]
 pub struct ServerStats {
-    slots: [(Histogram, AtomicU64); 12], // (latencies, error count)
+    slots: [(Histogram, AtomicU64); 13], // (latencies, error count)
     started: std::time::Instant,
 }
 
@@ -261,7 +266,7 @@ mod tests {
         s.record(Endpoint::Traces, Duration::from_micros(120), true);
         assert_eq!(s.histogram(Endpoint::Metrics).count(), 1);
         assert_eq!(s.histogram(Endpoint::Traces).count(), 1);
-        assert_eq!(Endpoint::ALL.len(), 12);
+        assert_eq!(Endpoint::ALL.len(), 13);
     }
 
     #[test]

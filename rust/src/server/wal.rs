@@ -1,0 +1,812 @@
+//! Per-graph append-only write-ahead log for `POST /mutate`.
+//!
+//! Durability contract: a mutation batch is **acknowledged only after
+//! its record is fsync-durable**. Appends from concurrent handlers are
+//! batched through a group-commit fsync (one leader syncs for every
+//! waiter whose watermark the sync covers), so the per-ack cost under
+//! load is a fraction of an fsync.
+//!
+//! ## Record layout
+//!
+//! Everything is little-endian. One record per acknowledged batch:
+//!
+//! | bytes | field                                    |
+//! |-------|------------------------------------------|
+//! | 4     | `len` — payload length in bytes          |
+//! | 8     | `fnv64(payload)` checksum                |
+//! | `len` | payload                                  |
+//!
+//! payload:
+//!
+//! | bytes | field                                    |
+//! |-------|------------------------------------------|
+//! | 1     | version (`1`)                            |
+//! | 8     | `seq` — record sequence number           |
+//! | 4     | `nops`                                   |
+//! | 13·n  | ops: `kind:u8, u:u32, v:u32, w:f32` each |
+//!
+//! Vertex ids are in the **original label space** of the source COO —
+//! compaction re-runs the (racy, nondeterministic) BOBA reorder, so
+//! artifact-space ids would not survive an epoch swap; original ids do.
+//!
+//! ## Segments, rotation, retirement
+//!
+//! The log is a sequence of segment files `<key>.NNNNNN.wal`. The
+//! compactor rotates to a fresh segment before materializing a
+//! checkpoint, and retires the rotated prefix only after the new
+//! `.ckpt.bcoo` has landed via tmp+rename — so at every instant the
+//! checkpoint plus the live segments reconstruct the acked state.
+//!
+//! ## Recovery
+//!
+//! [`scan`] replays segments in order, verifying length, checksum, and
+//! sequence continuity. The first bad record **in the final segment**
+//! is a torn tail from a crash mid-write: the tail is truncated
+//! (counted as `boba_io_corruption_total{kind="wal-torn-tail"}`) and
+//! everything before it — exactly the acked prefix — is replayed.
+//! Corruption in a non-final segment is refused loudly: rotation
+//! fsyncs, so a damaged interior segment is disk rot, not a crash
+//! artifact, and silently dropping acked suffixes would be worse than
+//! failing. A shutdown flag is honored between records so Ctrl-C
+//! mid-replay exits cleanly **without truncating anything**.
+
+use crate::graph::io::bcoo::fnv64;
+use crate::obs::{chaos, corrupt};
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Upsert op kind byte.
+pub const OP_UPSERT: u8 = 0;
+/// Delete op kind byte.
+pub const OP_DELETE: u8 = 1;
+
+const RECORD_VERSION: u8 = 1;
+const HEADER_BYTES: usize = 4 + 8;
+const PAYLOAD_HEADER_BYTES: usize = 1 + 8 + 4;
+const OP_BYTES: usize = 1 + 4 + 4 + 4;
+/// Hard cap on ops per record (an 8 MiB request body cannot come close;
+/// this bounds what a corrupt length field can make recovery allocate).
+pub const MAX_OPS_PER_RECORD: usize = 1 << 20;
+const MAX_PAYLOAD_BYTES: usize = PAYLOAD_HEADER_BYTES + MAX_OPS_PER_RECORD * OP_BYTES;
+
+/// One durable mutation op, vertex ids in the original label space.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WalOp {
+    /// [`OP_UPSERT`] or [`OP_DELETE`].
+    pub kind: u8,
+    /// Source vertex (original label).
+    pub u: u32,
+    /// Destination vertex (original label).
+    pub v: u32,
+    /// Edge weight (ignored for deletes and unweighted graphs).
+    pub w: f32,
+}
+
+struct Appender {
+    file: std::sync::Arc<File>,
+    seg: u64,
+    next_seq: u64,
+    /// Monotonic bytes appended across all segments — the group-commit
+    /// watermark space.
+    total: u64,
+    /// Set after a torn write: the file tail holds garbage, so further
+    /// appends would put acked records behind bytes recovery discards.
+    poisoned: bool,
+}
+
+struct SyncState {
+    /// Watermark (in `Appender::total` space) known fsync-durable.
+    durable: u64,
+    /// True while some thread is the fsync leader.
+    syncing: bool,
+}
+
+/// An open per-graph write-ahead log.
+pub struct Wal {
+    dir: PathBuf,
+    key: String,
+    app: Mutex<Appender>,
+    sync: Mutex<SyncState>,
+    cv: Condvar,
+    /// Lifetime bytes appended (metrics).
+    appended: AtomicU64,
+}
+
+fn seg_path(dir: &Path, key: &str, seg: u64) -> PathBuf {
+    dir.join(format!("{key}.{seg:06}.wal"))
+}
+
+/// Checkpoint path for a graph key: `<dir>/<key>.ckpt.bcoo`.
+pub fn ckpt_path(dir: &Path, key: &str) -> PathBuf {
+    dir.join(format!("{key}.ckpt.bcoo"))
+}
+
+/// Meta path for a graph key: `<dir>/<key>.meta.json`.
+pub fn meta_path(dir: &Path, key: &str) -> PathBuf {
+    dir.join(format!("{key}.meta.json"))
+}
+
+/// Filesystem-safe key for a graph id: the sanitized id plus an FNV-64
+/// suffix so distinct ids can never collide after sanitization.
+pub fn key_for(id: &str) -> String {
+    let safe: String = id
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect();
+    format!("{safe}-{:016x}", fnv64(id.as_bytes()))
+}
+
+fn encode_record(seq: u64, ops: &[WalOp]) -> Vec<u8> {
+    let payload_len = PAYLOAD_HEADER_BYTES + ops.len() * OP_BYTES;
+    let mut rec = Vec::with_capacity(HEADER_BYTES + payload_len);
+    rec.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    rec.extend_from_slice(&[0u8; 8]); // checksum patched below
+    rec.push(RECORD_VERSION);
+    rec.extend_from_slice(&seq.to_le_bytes());
+    rec.extend_from_slice(&(ops.len() as u32).to_le_bytes());
+    for op in ops {
+        rec.push(op.kind);
+        rec.extend_from_slice(&op.u.to_le_bytes());
+        rec.extend_from_slice(&op.v.to_le_bytes());
+        rec.extend_from_slice(&op.w.to_le_bytes());
+    }
+    let sum = fnv64(&rec[HEADER_BYTES..]);
+    rec[4..12].copy_from_slice(&sum.to_le_bytes());
+    rec
+}
+
+fn decode_payload(payload: &[u8]) -> Result<(u64, Vec<WalOp>)> {
+    if payload.len() < PAYLOAD_HEADER_BYTES {
+        bail!("payload shorter than its header");
+    }
+    if payload[0] != RECORD_VERSION {
+        bail!("unsupported record version {}", payload[0]);
+    }
+    let seq = u64::from_le_bytes(payload[1..9].try_into().unwrap());
+    let nops = u32::from_le_bytes(payload[9..13].try_into().unwrap()) as usize;
+    if nops > MAX_OPS_PER_RECORD || payload.len() != PAYLOAD_HEADER_BYTES + nops * OP_BYTES {
+        bail!("op count {nops} disagrees with payload length {}", payload.len());
+    }
+    let mut ops = Vec::with_capacity(nops);
+    for i in 0..nops {
+        let o = PAYLOAD_HEADER_BYTES + i * OP_BYTES;
+        ops.push(WalOp {
+            kind: payload[o],
+            u: u32::from_le_bytes(payload[o + 1..o + 5].try_into().unwrap()),
+            v: u32::from_le_bytes(payload[o + 5..o + 9].try_into().unwrap()),
+            w: f32::from_le_bytes(payload[o + 9..o + 13].try_into().unwrap()),
+        });
+    }
+    Ok((seq, ops))
+}
+
+impl Wal {
+    /// Open (creating if absent) the log for `key`, appending to the
+    /// segment recovery left behind. `next_seq` and `seg` come from the
+    /// [`ScanReport`] (`0` / `0` for a brand-new graph).
+    pub fn open(dir: &Path, key: &str, seg: u64, next_seq: u64) -> Result<Wal> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating wal dir {}", dir.display()))?;
+        let path = seg_path(dir, key, seg);
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening wal segment {}", path.display()))?;
+        let existing = file.metadata().map(|m| m.len()).unwrap_or(0);
+        Ok(Wal {
+            dir: dir.to_path_buf(),
+            key: key.to_string(),
+            app: Mutex::new(Appender {
+                file: std::sync::Arc::new(file),
+                seg,
+                next_seq,
+                total: existing,
+                poisoned: false,
+            }),
+            // Whatever survived recovery is by definition the durable
+            // prefix.
+            sync: Mutex::new(SyncState { durable: existing, syncing: false }),
+            cv: Condvar::new(),
+            appended: AtomicU64::new(0),
+        })
+    }
+
+    /// Directory this log lives in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Graph key (filename stem) of this log.
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Lifetime bytes appended through this handle.
+    pub fn appended_bytes(&self) -> u64 {
+        self.appended.load(Ordering::Relaxed)
+    }
+
+    /// Append one batch and return its sequence number **after** it is
+    /// fsync-durable (group-commit: concurrent appenders share one
+    /// fsync). Fault points: `wal-io-error` fails before writing,
+    /// `wal-torn-write` writes a partial record and poisons the log,
+    /// `crash-after-append` aborts the process after durability (the
+    /// crash-recovery smoke drives this; the record *is* on disk).
+    pub fn append(&self, ops: &[WalOp]) -> Result<u64> {
+        if ops.is_empty() {
+            bail!("empty mutation batch");
+        }
+        if ops.len() > MAX_OPS_PER_RECORD {
+            bail!("mutation batch of {} ops exceeds {}", ops.len(), MAX_OPS_PER_RECORD);
+        }
+        let (seq, watermark) = {
+            let mut app = self.app.lock().unwrap();
+            if app.poisoned {
+                bail!("wal is poisoned by an earlier torn write; restart to recover");
+            }
+            if chaos::should("wal-io-error") {
+                bail!("injected wal-io-error");
+            }
+            let rec = encode_record(app.next_seq, ops);
+            if chaos::should("wal-torn-write") {
+                // Model a crash mid-write: half the record reaches the
+                // disk, then nothing. The appender is poisoned so no
+                // later record can land after the garbage tail.
+                let torn = &rec[..rec.len() / 2];
+                let _ = (&*app.file).write_all(torn);
+                let _ = app.file.sync_data();
+                app.poisoned = true;
+                bail!("injected wal-torn-write ({} of {} bytes)", torn.len(), rec.len());
+            }
+            (&*app.file)
+                .write_all(&rec)
+                .with_context(|| format!("appending to wal {}", self.key))?;
+            let seq = app.next_seq;
+            app.next_seq += 1;
+            app.total += rec.len() as u64;
+            self.appended.fetch_add(rec.len() as u64, Ordering::Relaxed);
+            (seq, app.total)
+        };
+        self.sync_to(watermark)?;
+        if chaos::should("crash-after-append") {
+            // The record is durable; an ack may or may not have left the
+            // socket — exactly the window crash-equivalence must cover.
+            eprintln!("[boba] chaos crash-after-append: aborting after seq {seq}");
+            std::process::abort();
+        }
+        Ok(seq)
+    }
+
+    /// Block until everything up to `watermark` is fsync-durable,
+    /// electing this thread as the fsync leader when none is active.
+    fn sync_to(&self, watermark: u64) -> Result<()> {
+        loop {
+            {
+                let mut st = self.sync.lock().unwrap();
+                loop {
+                    if st.durable >= watermark {
+                        return Ok(());
+                    }
+                    if !st.syncing {
+                        st.syncing = true;
+                        break;
+                    }
+                    st = self.cv.wait(st).unwrap();
+                }
+            }
+            // Leader: snapshot the current segment + watermark, sync it
+            // outside both locks. Older segments were fsynced by
+            // rotation, so syncing the current file covers `target`.
+            let (file, target) = {
+                let app = self.app.lock().unwrap();
+                (app.file.clone(), app.total)
+            };
+            let res = file.sync_data();
+            let mut st = self.sync.lock().unwrap();
+            st.syncing = false;
+            if res.is_ok() {
+                st.durable = st.durable.max(target);
+            }
+            self.cv.notify_all();
+            res.with_context(|| format!("fsync wal {}", self.key))?;
+        }
+    }
+
+    /// Fsync and close out the current segment, switch appends to a
+    /// fresh one, and return the rotated segment's index. The compactor
+    /// calls this before materializing a checkpoint so replay-relevant
+    /// suffix records land in segments that survive retirement.
+    pub fn rotate(&self) -> Result<u64> {
+        let mut app = self.app.lock().unwrap();
+        app.file.sync_data().context("fsync before wal rotation")?;
+        let old_seg = app.seg;
+        let new_seg = old_seg + 1;
+        let path = seg_path(&self.dir, &self.key, new_seg);
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening wal segment {}", path.display()))?;
+        app.file = std::sync::Arc::new(file);
+        app.seg = new_seg;
+        app.poisoned = false;
+        let total = app.total;
+        drop(app);
+        // Everything written before the rotation point is now durable.
+        let mut st = self.sync.lock().unwrap();
+        st.durable = st.durable.max(total);
+        drop(st);
+        self.cv.notify_all();
+        Ok(old_seg)
+    }
+
+    /// Delete every segment with index `<= seg` (never the current
+    /// one). Called only after the checkpoint covering them has landed
+    /// via tmp+rename.
+    pub fn retire_through(&self, seg: u64) -> Result<()> {
+        let current = self.app.lock().unwrap().seg;
+        for s in 0..=seg {
+            if s == current {
+                continue;
+            }
+            let path = seg_path(&self.dir, &self.key, s);
+            if path.exists() {
+                fs::remove_file(&path)
+                    .with_context(|| format!("retiring wal segment {}", path.display()))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Result of a recovery [`scan`].
+#[derive(Debug, Default)]
+pub struct ScanReport {
+    /// Every acked op across all surviving records, in append order.
+    pub ops: Vec<WalOp>,
+    /// Records replayed.
+    pub records: u64,
+    /// Segment files visited.
+    pub segments: u64,
+    /// Index of the last (now current) segment.
+    pub last_seg: u64,
+    /// True when a torn tail was found in the final segment.
+    pub torn: bool,
+    /// Bytes removed from the final segment (0 unless `repair`).
+    pub truncated_bytes: u64,
+    /// True when the shutdown flag aborted the scan early — the caller
+    /// must not open the log for appending or trust `ops`.
+    pub aborted: bool,
+    /// The next record sequence number after the surviving prefix.
+    pub next_seq: u64,
+}
+
+/// List the segment indices present for `key`, ascending.
+pub fn list_segments(dir: &Path, key: &str) -> Result<Vec<u64>> {
+    let mut segs = Vec::new();
+    let prefix = format!("{key}.");
+    if !dir.exists() {
+        return Ok(segs);
+    }
+    for entry in fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let name = entry?.file_name();
+        let name = name.to_string_lossy();
+        if let Some(rest) = name.strip_prefix(&prefix) {
+            if let Some(num) = rest.strip_suffix(".wal") {
+                if let Ok(seg) = num.parse::<u64>() {
+                    segs.push(seg);
+                }
+            }
+        }
+    }
+    segs.sort_unstable();
+    Ok(segs)
+}
+
+/// Replay the log for `key`, validating every record. With `repair`,
+/// a torn tail in the final segment is truncated away (and counted as
+/// `wal-torn-tail` corruption when bytes are actually removed); without
+/// it the scan is read-only. `shutdown` is checked between records: a
+/// set flag aborts the scan immediately, leaving every byte on disk
+/// untouched.
+pub fn scan(dir: &Path, key: &str, shutdown: &AtomicBool, repair: bool) -> Result<ScanReport> {
+    let segs = list_segments(dir, key)?;
+    let mut report = ScanReport::default();
+    let Some(&last) = segs.last() else {
+        return Ok(report);
+    };
+    report.last_seg = last;
+    for &seg in &segs {
+        let path = seg_path(dir, key, seg);
+        let bytes =
+            fs::read(&path).with_context(|| format!("reading wal {}", path.display()))?;
+        report.segments += 1;
+        let mut off = 0usize;
+        let bad_at: Option<(usize, &'static str)> = loop {
+            if shutdown.load(Ordering::Relaxed) {
+                report.aborted = true;
+                return Ok(report);
+            }
+            if off == bytes.len() {
+                break None;
+            }
+            if bytes.len() - off < HEADER_BYTES {
+                break Some((off, "short header"));
+            }
+            let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+            if len < PAYLOAD_HEADER_BYTES || len > MAX_PAYLOAD_BYTES {
+                break Some((off, "implausible record length"));
+            }
+            if bytes.len() - off - HEADER_BYTES < len {
+                break Some((off, "short payload"));
+            }
+            let sum = u64::from_le_bytes(bytes[off + 4..off + 12].try_into().unwrap());
+            let payload = &bytes[off + HEADER_BYTES..off + HEADER_BYTES + len];
+            if fnv64(payload) != sum {
+                break Some((off, "checksum mismatch"));
+            }
+            let (seq, mut ops) = match decode_payload(payload) {
+                Ok(v) => v,
+                Err(_) => break Some((off, "malformed payload")),
+            };
+            if report.records > 0 && seq != report.next_seq {
+                break Some((off, "sequence discontinuity"));
+            }
+            report.ops.append(&mut ops);
+            report.records += 1;
+            report.next_seq = seq + 1;
+            off += HEADER_BYTES + len;
+        };
+        if let Some((at, why)) = bad_at {
+            if seg != last {
+                bail!(
+                    "wal {}: corrupt record mid-log (segment {seg}, offset {at}: {why}) — \
+                     refusing to drop acked records; inspect or remove the log manually",
+                    path.display()
+                );
+            }
+            report.torn = true;
+            report.truncated_bytes = (bytes.len() - at) as u64;
+            if repair && report.truncated_bytes > 0 {
+                let f = OpenOptions::new()
+                    .write(true)
+                    .open(&path)
+                    .with_context(|| format!("truncating {}", path.display()))?;
+                f.set_len(at as u64)
+                    .with_context(|| format!("truncating {}", path.display()))?;
+                f.sync_data().ok();
+                corrupt::inc("wal-torn-tail");
+                eprintln!(
+                    "[boba] wal {}: truncated torn tail ({} bytes at offset {at}: {why})",
+                    path.display(),
+                    report.truncated_bytes
+                );
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Write (tmp+rename) the meta sidecar that lets recovery rebuild a
+/// graph without a request: the id plus its (dataset, scheme) recipe
+/// and the mutable epoch the artifact had reached.
+pub fn write_meta(
+    dir: &Path,
+    key: &str,
+    id: &str,
+    dataset: &str,
+    scheme: &str,
+    epoch: u64,
+) -> Result<()> {
+    fs::create_dir_all(dir)?;
+    let body = Json::obj(vec![
+        ("id", Json::Str(id.to_string())),
+        ("dataset", Json::Str(dataset.to_string())),
+        ("scheme", Json::Str(scheme.to_string())),
+        ("epoch", Json::Num(epoch as f64)),
+    ])
+    .render();
+    let path = meta_path(dir, key);
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    fs::write(&tmp, body.as_bytes())
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    fs::rename(&tmp, &path).with_context(|| format!("renaming to {}", path.display()))?;
+    Ok(())
+}
+
+/// One parsed meta sidecar.
+#[derive(Debug, Clone)]
+pub struct WalMeta {
+    /// Graph key (filename stem).
+    pub key: String,
+    /// Registry graph id.
+    pub id: String,
+    /// Dataset spec.
+    pub dataset: String,
+    /// Reorder scheme.
+    pub scheme: String,
+    /// Mutable epoch at the last meta write.
+    pub epoch: u64,
+}
+
+/// List every meta sidecar in `dir` (the set of graphs with WAL state
+/// to recover), sorted by key for deterministic replay order.
+pub fn list_metas(dir: &Path) -> Result<Vec<WalMeta>> {
+    let mut metas = Vec::new();
+    if !dir.exists() {
+        return Ok(metas);
+    }
+    for entry in fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let path = entry?.path();
+        let name = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+        let Some(key) = name.strip_suffix(".meta.json") else { continue };
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let field = |k: &str| -> Result<String> {
+            json.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("{}: missing field {k:?}", path.display()))
+        };
+        metas.push(WalMeta {
+            key: key.to_string(),
+            id: field("id")?,
+            dataset: field("dataset")?,
+            scheme: field("scheme")?,
+            epoch: json.get("epoch").and_then(Json::as_u64).unwrap_or(0),
+        });
+    }
+    metas.sort_by(|a, b| a.key.cmp(&b.key));
+    Ok(metas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "boba-wal-{tag}-{}-{:x}",
+            std::process::id(),
+            fnv64(tag.as_bytes())
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn ops_for(seed: u64, n: usize) -> Vec<WalOp> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n)
+            .map(|_| WalOp {
+                kind: (rng.next_u64() % 2) as u8,
+                u: rng.next_u32() % 1000,
+                v: rng.next_u32() % 1000,
+                w: 1.0,
+            })
+            .collect()
+    }
+
+    static LIVE: AtomicBool = AtomicBool::new(false);
+
+    #[test]
+    fn append_scan_roundtrip_across_segments() {
+        let dir = tmpdir("roundtrip");
+        let wal = Wal::open(&dir, "g", 0, 0).unwrap();
+        let mut all = Vec::new();
+        for batch in 0..6u64 {
+            let ops = ops_for(batch, 3 + batch as usize);
+            let seq = wal.append(&ops).unwrap();
+            assert_eq!(seq, batch);
+            all.extend(ops);
+            if batch == 2 {
+                assert_eq!(wal.rotate().unwrap(), 0);
+            }
+        }
+        let report = scan(&dir, "g", &LIVE, true).unwrap();
+        assert!(!report.torn);
+        assert_eq!(report.records, 6);
+        assert_eq!(report.segments, 2);
+        assert_eq!(report.next_seq, 6);
+        assert_eq!(report.ops, all);
+        // Reopening appends with continuity.
+        drop(wal);
+        let wal2 = Wal::open(&dir, "g", report.last_seg, report.next_seq).unwrap();
+        wal2.append(&ops_for(99, 2)).unwrap();
+        let report2 = scan(&dir, "g", &LIVE, true).unwrap();
+        assert_eq!(report2.records, 7);
+        assert_eq!(report2.next_seq, 7);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retire_keeps_current_segment() {
+        let dir = tmpdir("retire");
+        let wal = Wal::open(&dir, "g", 0, 0).unwrap();
+        wal.append(&ops_for(1, 2)).unwrap();
+        let old = wal.rotate().unwrap();
+        wal.append(&ops_for(2, 2)).unwrap();
+        wal.retire_through(old).unwrap();
+        assert_eq!(list_segments(&dir, "g").unwrap(), vec![1]);
+        let report = scan(&dir, "g", &LIVE, true).unwrap();
+        assert_eq!(report.records, 1, "only the post-rotation record survives retirement");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_write_fault_poisons_and_recovery_keeps_acked_prefix() {
+        let _l = chaos::TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let dir = tmpdir("torn");
+        let wal = Wal::open(&dir, "g", 0, 0).unwrap();
+        wal.append(&ops_for(1, 4)).unwrap();
+        chaos::set_spec("wal-torn-write:1").unwrap();
+        assert!(wal.append(&ops_for(2, 4)).is_err());
+        chaos::clear();
+        assert!(
+            wal.append(&ops_for(3, 4)).is_err(),
+            "poisoned appender must refuse further records"
+        );
+        let before = corrupt::get("wal-torn-tail");
+        let report = scan(&dir, "g", &LIVE, true).unwrap();
+        assert!(report.torn);
+        assert!(report.truncated_bytes > 0);
+        assert_eq!(report.records, 1, "exactly the acked prefix survives");
+        assert_eq!(report.ops, ops_for(1, 4));
+        assert_eq!(corrupt::get("wal-torn-tail"), before + 1);
+        // After repair the log is clean again.
+        let again = scan(&dir, "g", &LIVE, true).unwrap();
+        assert!(!again.torn);
+        assert_eq!(again.records, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn io_error_fault_rejects_without_writing() {
+        let _l = chaos::TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let dir = tmpdir("ioerr");
+        let wal = Wal::open(&dir, "g", 0, 0).unwrap();
+        wal.append(&ops_for(1, 2)).unwrap();
+        chaos::set_spec("wal-io-error:1").unwrap();
+        assert!(wal.append(&ops_for(2, 2)).is_err());
+        chaos::clear();
+        // The failed append left no bytes: the next one continues cleanly.
+        wal.append(&ops_for(3, 2)).unwrap();
+        let report = scan(&dir, "g", &LIVE, true).unwrap();
+        assert!(!report.torn);
+        assert_eq!(report.records, 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shutdown_aborts_scan_without_truncating() {
+        let dir = tmpdir("shutdown");
+        let wal = Wal::open(&dir, "g", 0, 0).unwrap();
+        wal.append(&ops_for(1, 3)).unwrap();
+        // Leave a torn tail on disk.
+        let path = seg_path(&dir, "g", 0);
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[0xde, 0xad, 0xbe]).unwrap();
+        drop(f);
+        let len_before = fs::metadata(&path).unwrap().len();
+        let stop = AtomicBool::new(true);
+        let report = scan(&dir, "g", &stop, true).unwrap();
+        assert!(report.aborted);
+        assert_eq!(
+            fs::metadata(&path).unwrap().len(),
+            len_before,
+            "aborted scan must not truncate"
+        );
+        // A live scan then repairs it.
+        let report = scan(&dir, "g", &LIVE, true).unwrap();
+        assert!(report.torn);
+        assert_eq!(report.records, 1);
+        assert_eq!(fs::metadata(&path).unwrap().len(), len_before - 3);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn interior_segment_corruption_is_refused() {
+        let dir = tmpdir("interior");
+        let wal = Wal::open(&dir, "g", 0, 0).unwrap();
+        wal.append(&ops_for(1, 2)).unwrap();
+        wal.rotate().unwrap();
+        wal.append(&ops_for(2, 2)).unwrap();
+        // Flip a byte in the retired (non-final) segment.
+        let path = seg_path(&dir, "g", 0);
+        let mut bytes = fs::read(&path).unwrap();
+        let at = bytes.len() - 1;
+        bytes[at] ^= 0xff;
+        fs::write(&path, &bytes).unwrap();
+        let err = scan(&dir, "g", &LIVE, true).unwrap_err().to_string();
+        assert!(err.contains("mid-log"), "unexpected error: {err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn meta_roundtrip_and_listing() {
+        let dir = tmpdir("meta");
+        write_meta(&dir, &key_for("g one"), "g one", "pa:100:4", "boba", 3).unwrap();
+        write_meta(&dir, &key_for("g-two"), "g-two", "rmat:10:8", "none", 0).unwrap();
+        let metas = list_metas(&dir).unwrap();
+        assert_eq!(metas.len(), 2);
+        let m = metas.iter().find(|m| m.id == "g one").unwrap();
+        assert_eq!(m.dataset, "pa:100:4");
+        assert_eq!(m.scheme, "boba");
+        assert_eq!(m.epoch, 3);
+        assert!(m.key.starts_with("g_one-"), "sanitized key, got {}", m.key);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// Satellite: truncate a multi-segment WAL at **every byte offset**
+    /// of the final record and assert replay recovers exactly the acked
+    /// prefix — no more, no less.
+    #[test]
+    fn truncation_at_every_final_record_offset_recovers_acked_prefix() {
+        const SEED: u64 = 20260808;
+        let dir = tmpdir("everybyte");
+        let wal = Wal::open(&dir, "g", 0, 0).unwrap();
+        let mut batches = Vec::new();
+        for batch in 0..5u64 {
+            let ops = ops_for(SEED + batch, 2 + batch as usize);
+            wal.append(&ops).unwrap();
+            batches.push(ops);
+            if batch == 1 {
+                wal.rotate().unwrap();
+            }
+        }
+        drop(wal);
+        let last = seg_path(&dir, "g", 1);
+        let full = fs::read(&last).unwrap();
+        // Offset (within the final segment) where the final record starts:
+        // records 2..=4 live here; the last one is the victim.
+        let final_rec_len = {
+            let ops = &batches[4];
+            HEADER_BYTES + PAYLOAD_HEADER_BYTES + ops.len() * OP_BYTES
+        };
+        let final_rec_start = full.len() - final_rec_len;
+        let work = tmpdir("everybyte-work");
+        for cut in final_rec_start..full.len() {
+            // Fresh copy of the log with the final segment cut at `cut`.
+            for seg in list_segments(&work, "g").unwrap() {
+                fs::remove_file(seg_path(&work, "g", seg)).unwrap();
+            }
+            fs::copy(seg_path(&dir, "g", 0), seg_path(&work, "g", 0)).unwrap();
+            fs::write(&seg_path(&work, "g", 1), &full[..cut]).unwrap();
+            let report = scan(&work, "g", &LIVE, true).unwrap_or_else(|e| {
+                panic!("seed {SEED}, cut offset {cut}: scan failed: {e:#}")
+            });
+            let want: Vec<WalOp> = batches[..4].iter().flatten().copied().collect();
+            assert_eq!(
+                report.records, 4,
+                "seed {SEED}, cut offset {cut}: expected the 4 acked records, got {}",
+                report.records
+            );
+            assert_eq!(
+                report.ops, want,
+                "seed {SEED}, cut offset {cut}: replayed ops diverge from the acked prefix"
+            );
+            assert_eq!(
+                report.torn,
+                cut != final_rec_start,
+                "seed {SEED}, cut offset {cut}: torn flag wrong (a cut exactly at the \
+                 record boundary is clean, anything later is torn)"
+            );
+        }
+        // And the uncut log replays everything.
+        let report = scan(&dir, "g", &LIVE, false).unwrap();
+        let want: Vec<WalOp> = batches.iter().flatten().copied().collect();
+        assert_eq!(report.records, 5, "seed {SEED}: uncut log must replay all records");
+        assert_eq!(report.ops, want);
+        let _ = fs::remove_dir_all(&dir);
+        let _ = fs::remove_dir_all(&work);
+    }
+}

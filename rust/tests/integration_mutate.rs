@@ -1,0 +1,406 @@
+//! Durable-mutation integration tests: crash-equivalence of WAL replay
+//! against a never-crashed twin, torn-tail repair with corruption
+//! accounting, injected WAL I/O errors, staged compaction crashes, and
+//! `/readyz` degradation while replay is in flight.
+//!
+//! A "crash" here is a server torn down without any checkpoint or WAL
+//! retirement (`Server::shutdown` writes nothing — every acked record
+//! is already fsynced), followed by a fresh `spawn` over the same
+//! `--wal-dir`. That is byte-for-byte the state a SIGKILL at a record
+//! boundary leaves behind; mid-record crashes are modelled by the
+//! `wal-torn-write` fault point, which leaves half a record on disk.
+//! The `crash-after-append` point calls `abort()` and is exercised by
+//! the ci.sh subprocess smoke, not in-process here.
+//!
+//! The chaos fault table is process-global, so every test serializes
+//! on the file-local `LOCK` (the library's unit tests run in a
+//! separate binary and cannot race these).
+
+use boba::obs::chaos;
+use boba::server::http::HttpClient;
+use boba::server::json::Json;
+use boba::server::{self, ServerConfig};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// A scratch WAL directory, wiped at the start of every test run.
+fn wal_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("boba-imut-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create wal dir");
+    dir
+}
+
+/// Spawn a WAL-enabled server on an ephemeral port. The seed is fixed
+/// so a restarted server regenerates the identical base dataset.
+fn spawn_wal(dir: &Path, compact_threshold: usize) -> server::Server {
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        capacity: 4,
+        seed: 42,
+        read_timeout: Duration::from_secs(10),
+        wal_dir: Some(dir.to_path_buf()),
+        compact_threshold,
+        ..Default::default()
+    };
+    server::spawn(cfg).expect("server must bind an ephemeral port")
+}
+
+fn client(srv: &server::Server) -> HttpClient {
+    HttpClient::connect(&srv.addr().to_string()).expect("connect")
+}
+
+const DATASET: &str = "pa:1500:4";
+const N: u32 = 1500;
+
+fn ingest(c: &mut HttpClient) -> String {
+    let body = format!("{{\"dataset\": \"{DATASET}\"}}");
+    let (st, resp) = c.request("POST", "/graphs", body.as_bytes()).expect("ingest");
+    assert!(st == 200 || st == 201, "ingest -> {st}: {}", String::from_utf8_lossy(&resp));
+    Json::parse(&String::from_utf8_lossy(&resp))
+        .expect("ingest json")
+        .get("id")
+        .and_then(Json::as_str)
+        .expect("ingest id")
+        .to_string()
+}
+
+/// A deterministic mutation batch: two upserts and a delete derived
+/// from `i`, identical across the crash server and its twin.
+fn batch_body(i: u32) -> String {
+    let base = (i * 97) % (N - 100);
+    format!(
+        "{{\"ops\": [\
+         {{\"op\": \"upsert\", \"u\": {}, \"v\": {}, \"w\": {}.5}},\
+         {{\"op\": \"upsert\", \"u\": {}, \"v\": {}}},\
+         {{\"op\": \"delete\", \"u\": {}, \"v\": {}}}]}}",
+        base,
+        (base + 3) % N,
+        i % 7,
+        (base + 11) % N,
+        (base + 29) % N,
+        (i * 13) % N,
+        (i * 17) % N,
+    )
+}
+
+fn mutate(c: &mut HttpClient, id: &str, body: &str) -> (u16, String) {
+    let (st, resp) = c
+        .request("POST", &format!("/graphs/{id}/mutate"), body.as_bytes())
+        .expect("mutate exchange");
+    (st, String::from_utf8_lossy(&resp).into_owned())
+}
+
+/// `GET /graphs/{id}/digest` → (digest hex, delta_entries, epoch).
+fn digest(c: &mut HttpClient, id: &str) -> (String, u64, u64) {
+    let (st, resp) =
+        c.request("GET", &format!("/graphs/{id}/digest"), b"").expect("digest exchange");
+    assert_eq!(st, 200, "digest -> {st}: {}", String::from_utf8_lossy(&resp));
+    let j = Json::parse(&String::from_utf8_lossy(&resp)).expect("digest json");
+    (
+        j.get("digest").and_then(Json::as_str).expect("digest field").to_string(),
+        j.get("delta_entries").and_then(Json::as_u64).unwrap_or(0),
+        j.get("epoch").and_then(Json::as_u64).unwrap_or(0),
+    )
+}
+
+fn arm(c: &mut HttpClient, spec: &str) {
+    let body = format!("{{\"spec\": \"{spec}\"}}");
+    let (st, resp) = c.request("POST", "/debug/faults", body.as_bytes()).expect("arm");
+    assert_eq!(st, 200, "arming {spec:?}: {}", String::from_utf8_lossy(&resp));
+}
+
+/// Poll until WAL replay has finished: `/readyz` back to 200 and the
+/// recovered graph answering its digest page.
+fn wait_recovered(srv: &server::Server, id: &str) -> (String, u64, u64) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut last = String::new();
+    while Instant::now() < deadline {
+        let mut c = client(srv);
+        let (st, body) = c.request("GET", "/readyz", b"").expect("readyz");
+        last = String::from_utf8_lossy(&body).into_owned();
+        if st == 200 {
+            let (st, _) = c.request("GET", &format!("/graphs/{id}/digest"), b"").expect("digest");
+            if st == 200 {
+                return digest(&mut c, id);
+            }
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    panic!("recovery did not finish within 60s; last /readyz: {last}");
+}
+
+/// Sizes of every `.wal` segment under `dir`, sorted by name.
+fn wal_sizes(dir: &Path) -> Vec<(String, u64)> {
+    let mut out: Vec<(String, u64)> = std::fs::read_dir(dir)
+        .expect("read wal dir")
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().is_some_and(|x| x == "wal"))
+        .map(|e| {
+            (e.file_name().to_string_lossy().into_owned(), e.metadata().expect("meta").len())
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+/// The tentpole contract: kill a WAL server at a record boundary (every
+/// acked record fsynced, nothing else on disk), restart it over the
+/// same directory, and the replayed digest equals both the pre-crash
+/// digest and a never-crashed twin that applied the same batches.
+#[test]
+fn restart_replay_matches_never_crashed_twin() {
+    let _g = lock();
+    chaos::clear();
+    let dir = wal_dir("replay");
+
+    let (id, want) = {
+        let srv = spawn_wal(&dir, 0);
+        let mut c = client(&srv);
+        let id = ingest(&mut c);
+        for i in 0..6 {
+            let (st, body) = mutate(&mut c, &id, &batch_body(i));
+            assert_eq!(st, 200, "batch {i}: {body}");
+            assert!(body.contains("\"durable\":true"), "ack must confirm fsync: {body}");
+        }
+        let (want, entries, _) = digest(&mut c, &id);
+        assert!(entries >= 1, "overlay must be populated before the crash");
+        srv.shutdown();
+        (id, want)
+    };
+
+    // The twin: a fresh WAL dir, identical ingest + batches, no crash.
+    let tdir = wal_dir("replay-twin");
+    {
+        let srv = spawn_wal(&tdir, 0);
+        let mut c = client(&srv);
+        let tid = ingest(&mut c);
+        for i in 0..6 {
+            assert_eq!(mutate(&mut c, &tid, &batch_body(i)).0, 200);
+        }
+        let (twin, _, _) = digest(&mut c, &tid);
+        assert_eq!(twin, want, "twin and crash server diverged before the crash");
+        srv.shutdown();
+    }
+
+    // Restart over the crash-state directory: replay must reconstruct
+    // the acked state exactly.
+    {
+        let srv = spawn_wal(&dir, 0);
+        let (got, entries, _) = wait_recovered(&srv, &id);
+        assert_eq!(got, want, "replayed digest must match the never-crashed twin");
+        assert!(entries >= 1, "replay must repopulate the overlay");
+        srv.shutdown();
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&tdir);
+}
+
+/// Mid-record crash: `wal-torn-write` leaves half a record on disk and
+/// poisons the appender. The un-acked batch is lost by design; restart
+/// truncates the torn tail (counting it in `boba_io_corruption_total`)
+/// and recovers exactly the acked prefix.
+#[test]
+fn torn_write_recovers_acked_prefix_and_counts_corruption() {
+    let _g = lock();
+    chaos::clear();
+    let dir = wal_dir("torn");
+    let torn_before = boba::obs::corrupt::get("wal-torn-tail");
+
+    let (id, want) = {
+        let srv = spawn_wal(&dir, 0);
+        let mut c = client(&srv);
+        let id = ingest(&mut c);
+        for i in 0..3 {
+            assert_eq!(mutate(&mut c, &id, &batch_body(i)).0, 200);
+        }
+        let (want, _, _) = digest(&mut c, &id);
+
+        arm(&mut c, "wal-torn-write:1");
+        let (st, body) = mutate(&mut c, &id, &batch_body(99));
+        assert_eq!(st, 503, "a torn append must not ack: {body}");
+        assert!(body.contains("torn"), "failure must name the torn write: {body}");
+        // Nothing un-acked may leak into query state…
+        let (d, _, _) = digest(&mut c, &id);
+        assert_eq!(d, want);
+        // …and the appender stays poisoned until restart.
+        let (st, body) = mutate(&mut c, &id, &batch_body(100));
+        assert_eq!(st, 503);
+        assert!(body.contains("poisoned"), "{body}");
+        arm(&mut c, "");
+        srv.shutdown();
+        (id, want)
+    };
+
+    {
+        let srv = spawn_wal(&dir, 0);
+        let (got, _, _) = wait_recovered(&srv, &id);
+        assert_eq!(got, want, "replay must recover exactly the acked prefix");
+        assert!(
+            boba::obs::corrupt::get("wal-torn-tail") > torn_before,
+            "the truncated tail must be counted"
+        );
+        let mut c = client(&srv);
+        let (st, body) = c.request("GET", "/metrics", b"").expect("metrics");
+        assert_eq!(st, 200);
+        let text = String::from_utf8_lossy(&body).into_owned();
+        assert!(
+            text.contains("boba_io_corruption_total{kind=\"wal-torn-tail\"}"),
+            "corruption family missing from /metrics"
+        );
+        srv.shutdown();
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// An injected WAL I/O error is a clean 503 that writes nothing and
+/// changes nothing; the very next append (budget spent) succeeds.
+#[test]
+fn wal_io_error_is_a_clean_503_that_changes_nothing() {
+    let _g = lock();
+    chaos::clear();
+    let dir = wal_dir("ioerr");
+    let srv = spawn_wal(&dir, 0);
+    let mut c = client(&srv);
+    let id = ingest(&mut c);
+    assert_eq!(mutate(&mut c, &id, &batch_body(0)).0, 200);
+    let (want, _, _) = digest(&mut c, &id);
+
+    arm(&mut c, "wal-io-error:1");
+    let (st, body) = mutate(&mut c, &id, &batch_body(1));
+    assert_eq!(st, 503, "{body}");
+    assert!(body.contains("wal-io-error"), "failure must name the fault: {body}");
+    let (d, _, _) = digest(&mut c, &id);
+    assert_eq!(d, want, "a failed append must not mutate query state");
+
+    // Budget spent: durability resumes without a restart.
+    let (st, body) = mutate(&mut c, &id, &batch_body(1));
+    assert_eq!(st, 200, "{body}");
+    let (d, _, _) = digest(&mut c, &id);
+    assert_ne!(d, want, "the retried batch must now be applied");
+    srv.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Mid-compaction crashes at both staged windows (pre-checkpoint and
+/// post-checkpoint) leave the served digest untouched, a retry
+/// compacts cleanly, and a restart over the compacted directory agrees.
+#[test]
+fn failed_compaction_preserves_digest_over_http_and_restart() {
+    let _g = lock();
+    chaos::clear();
+    let dir = wal_dir("compact");
+
+    let (id, want) = {
+        let srv = spawn_wal(&dir, 0);
+        let mut c = client(&srv);
+        let id = ingest(&mut c);
+        for i in 0..5 {
+            assert_eq!(mutate(&mut c, &id, &batch_body(i)).0, 200);
+        }
+        let (want, entries, _) = digest(&mut c, &id);
+        assert!(entries >= 1);
+
+        for stage in [0, 1] {
+            arm(&mut c, &format!("compact-fail:{stage}:1"));
+            let (st, body) = c
+                .request("POST", &format!("/graphs/{id}/compact"), b"")
+                .expect("compact exchange");
+            let body = String::from_utf8_lossy(&body).into_owned();
+            assert_eq!(st, 503, "stage {stage}: {body}");
+            assert!(body.contains("compact-fail"), "stage {stage}: {body}");
+            let (d, _, _) = digest(&mut c, &id);
+            assert_eq!(d, want, "a failed compaction must not change the digest");
+        }
+        arm(&mut c, "");
+
+        let (st, body) =
+            c.request("POST", &format!("/graphs/{id}/compact"), b"").expect("compact");
+        let body = String::from_utf8_lossy(&body).into_owned();
+        assert_eq!(st, 200, "{body}");
+        assert!(body.contains("\"compacted\":true"), "{body}");
+        let (d, entries, epoch) = digest(&mut c, &id);
+        assert_eq!(d, want, "compaction must preserve the logical graph");
+        assert_eq!(entries, 0, "compaction must drain the overlay");
+        assert!(epoch >= 1, "compaction must advance the epoch");
+        srv.shutdown();
+        (id, want)
+    };
+
+    // Restart over the compacted directory: recovery now boots from
+    // the checkpoint instead of the dataset recipe.
+    {
+        let srv = spawn_wal(&dir, 0);
+        let (got, _, _) = wait_recovered(&srv, &id);
+        assert_eq!(got, want);
+        srv.shutdown();
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// While replay is in flight `/readyz` degrades with the `recovering`
+/// reason, and a shutdown mid-replay exits without modifying a single
+/// byte of the undamaged segments. The stall is injected by arming
+/// `slow-stage` before the restart, which delays the recovery thread's
+/// own prepare spans.
+#[test]
+fn readyz_reports_recovering_and_shutdown_mid_replay_leaves_wal_bytes() {
+    let _g = lock();
+    chaos::clear();
+    let dir = wal_dir("recovering");
+
+    let (id, want) = {
+        let srv = spawn_wal(&dir, 0);
+        let mut c = client(&srv);
+        let id = ingest(&mut c);
+        for i in 0..8 {
+            assert_eq!(mutate(&mut c, &id, &batch_body(i)).0, 200);
+        }
+        let (want, _, _) = digest(&mut c, &id);
+        srv.shutdown();
+        (id, want)
+    };
+    let sizes = wal_sizes(&dir);
+    assert!(!sizes.is_empty(), "mutations must have produced WAL segments");
+
+    // Restart with the recovery thread stalled in its first prepare
+    // spans: the first /readyz lands inside the replay window.
+    chaos::set_spec("slow-stage:500:3").expect("arm slow-stage");
+    {
+        let srv = spawn_wal(&dir, 0);
+        let mut c = client(&srv);
+        let (st, body) = c.request("GET", "/readyz", b"").expect("readyz");
+        let body = String::from_utf8_lossy(&body).into_owned();
+        assert_eq!(st, 503, "readyz must degrade during replay: {body}");
+        assert!(body.contains("recovering"), "readyz must name the reason: {body}");
+        srv.shutdown();
+    }
+    chaos::clear();
+    // Let the detached recovery thread observe the flag and drain.
+    std::thread::sleep(Duration::from_millis(2200));
+    assert_eq!(wal_sizes(&dir), sizes, "an interrupted replay must not touch clean segments");
+
+    // A clean restart finishes replay and reports ready.
+    {
+        let srv = spawn_wal(&dir, 0);
+        let (got, _, _) = wait_recovered(&srv, &id);
+        assert_eq!(got, want);
+        let mut c = client(&srv);
+        let (st, body) = c.request("GET", "/readyz", b"").expect("readyz");
+        assert_eq!(st, 200, "{}", String::from_utf8_lossy(&body));
+        srv.shutdown();
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
