@@ -38,6 +38,15 @@ cd rust
 run_required cargo build --release
 run_required cargo test -q
 
+# Repo-invariant static analysis (ISSUE 10): the lexical rules guarding
+# the concurrency core (unsafe-safety, raw-spawn, panic-path,
+# atomic-ordering, ablation-reach) plus the drift rules that keep THIS
+# script's metrics gate and docs/ARCHITECTURE.md's tables in sync with
+# what the code actually emits (metrics-drift, chaos-drift). Required:
+# a violation is either a real hole in an invariant or a vocabulary
+# drift, and both rot fast once tolerated.
+run_required cargo run --release --quiet -- lint --json
+
 # Docs are part of the deliverable (ISSUE 2): the crate carries
 # #![deny(missing_docs)] and the doc build must be warning-free
 # (broken intra-doc links etc. fail here, doc-tests fail `cargo test`).
@@ -54,9 +63,52 @@ else
 fi
 
 if cargo clippy --version >/dev/null 2>&1; then
-    run_advisory cargo clippy --all-targets -- -D warnings
+    # No blanket -D warnings: the deny-list is pinned in Cargo.toml
+    # [lints.clippy], so this run and a developer's local `cargo clippy`
+    # enforce the same set regardless of toolchain drift.
+    run_advisory cargo clippy --all-targets
 else
     echo "cargo clippy unavailable — skipping"
+fi
+
+# Concurrency sanitizers (advisory): dynamic checking that complements
+# `boba lint`'s static rules. ThreadSanitizer races the pool, the
+# coalescer, the trace ring, and the WAL/live-mutation path under real
+# threads; Miri interprets the pointer-heavy single-thread kernels
+# (parallel::, the trace ring's slot recycling, the .bcoo mmap-style
+# decoder) with full provenance checking. Both need nightly — TSan
+# additionally rust-src for -Zbuild-std — so stable-only containers
+# skip them without failing the run.
+if cargo +nightly --version >/dev/null 2>&1; then
+    SYSROOT="$(rustc +nightly --print sysroot 2>/dev/null || true)"
+    if [ -n "$SYSROOT" ] && [ -d "$SYSROOT/lib/rustlib/src/rust/library" ]; then
+        note "ThreadSanitizer suites (nightly, advisory)"
+        TSAN_TARGET="$(rustc +nightly -vV | sed -n 's/^host: //p')"
+        tsan_test() {
+            RUSTFLAGS="-Zsanitizer=thread" TSAN_OPTIONS="halt_on_error=1" \
+                cargo +nightly test -q -Zbuild-std --target "$TSAN_TARGET" "$@"
+        }
+        if ! { tsan_test --test pool_stress \
+            && tsan_test --test integration_mutate \
+            && tsan_test --lib -- parallel:: server::coalesce obs::ring; }; then
+            echo "FAILED (advisory): ThreadSanitizer suites"
+            ADVISORY=$((ADVISORY + 1))
+        fi
+    else
+        echo "nightly rust-src unavailable — skipping TSan suites"
+    fi
+    if cargo +nightly miri --version >/dev/null 2>&1; then
+        note "Miri suites (nightly, advisory)"
+        if ! MIRIFLAGS="-Zmiri-disable-isolation" cargo +nightly miri test -q --lib -- \
+            parallel::par_concat graph::io::bcoo obs::ring; then
+            echo "FAILED (advisory): Miri suites"
+            ADVISORY=$((ADVISORY + 1))
+        fi
+    else
+        echo "miri unavailable — skipping Miri suites"
+    fi
+else
+    echo "nightly toolchain unavailable — skipping TSan/Miri suites"
 fi
 
 # Quick serving benchmark for the perf trajectory: BOBA-prepared vs
@@ -164,9 +216,13 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ] && [ "$FAILURES" -eq 0 ]; then
     http_get "$OBS_PORT" /metrics > "$METRICS" || true
     for fam in boba_uptime_seconds boba_requests_total boba_request_errors_total \
                boba_request_duration_seconds boba_registry_graphs boba_registry_hits_total \
-               boba_registry_prepares_total boba_pool_dispatches_total \
+               boba_registry_misses_total boba_registry_evictions_total \
+               boba_registry_capacity boba_registry_prepares_total \
+               boba_pool_dispatches_total boba_pool_threads boba_pool_threads_spawned \
                boba_coalesce_batches_total boba_coalesce_batch_width \
+               boba_coalesce_queries_total boba_coalesce_groups \
                boba_stage_duration_seconds boba_process_resident_memory_bytes \
+               boba_process_resident_memory_peak_bytes \
                boba_traces_total boba_format_bytes_per_edge \
                boba_inflight boba_admission_rejected_total boba_deadline_exceeded_total \
                boba_mutations_total boba_compactions_total boba_delta_entries \

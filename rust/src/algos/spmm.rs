@@ -46,6 +46,10 @@ fn prefetch_cols<const K: usize>(x: &[f32], n: usize, cols: &[u32], e: usize) {
         if pf < cols.len() {
             let c = cols[pf] as usize;
             for j in 0..K {
+                // SAFETY: _mm_prefetch is a non-faulting hint — the
+                // address is never dereferenced; `add` stays in bounds
+                // of the K×n matrix `x` because CSR construction
+                // validates every column id < n and j < K.
                 unsafe {
                     core::arch::x86_64::_mm_prefetch(
                         x.as_ptr().add(j * n + c) as *const i8,

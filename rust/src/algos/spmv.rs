@@ -58,6 +58,9 @@ fn prefetch_x(x: &[f32], cols: &[u32], e: usize) {
     {
         let pf = e + PF_DIST;
         if pf < cols.len() {
+            // SAFETY: _mm_prefetch is a non-faulting hint — the address
+            // is never dereferenced; `add` stays in bounds of `x`
+            // because CSR construction validates every column id < n.
             unsafe {
                 core::arch::x86_64::_mm_prefetch(
                     x.as_ptr().add(cols[pf] as usize) as *const i8,

@@ -1,0 +1,238 @@
+//! Comment/string-aware lexical masking for the lint rules.
+//!
+//! [`Scanned`] walks a Rust source file once and produces a *mask*: a
+//! byte string of the same length in which the contents of every
+//! comment, string literal (including raw strings), and char literal
+//! are blanked to spaces (newlines preserved, so line numbers line up).
+//! Rules match tokens against the mask — `unsafe` inside a doc comment
+//! or `"panic!"` inside a string can never false-positive — while the
+//! comment *text* is kept on the side for the marker rules
+//! (`// SAFETY:`, `// ordering:`, `lint: allow`).
+//!
+//! The scanner handles nested block comments, raw strings
+//! (`r"…"`/`r#"…"#`), escaped chars (`'\n'`), and the char-literal vs
+//! lifetime ambiguity (`'a'` is a char, `'a` in `&'a T` is not).
+
+/// One scanned source file: the raw text, its blanked mask, and every
+/// comment's text keyed by starting line.
+pub struct Scanned {
+    /// The raw source text.
+    pub text: String,
+    /// `text` with comment/string/char-literal contents blanked to
+    /// spaces (newlines kept). Same byte length as `text`.
+    pub mask: Vec<u8>,
+    /// `(start_line, comment_text)` per comment, 1-based lines. A
+    /// multi-line block comment appears once with its full text.
+    pub comments: Vec<(usize, String)>,
+}
+
+/// True for bytes that extend an identifier (`[A-Za-z0-9_]`).
+pub fn ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// 1-based line number of byte offset `pos` in `bytes`.
+pub fn line_of(bytes: &[u8], pos: usize) -> usize {
+    bytes[..pos.min(bytes.len())].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+impl Scanned {
+    /// Scan `text`, building the mask and the comment table.
+    pub fn new(text: &str) -> Scanned {
+        let t = text.as_bytes();
+        let n = t.len();
+        let mut mask = t.to_vec();
+        let mut comments: Vec<(usize, String)> = Vec::new();
+        let blank = |mask: &mut Vec<u8>, a: usize, b: usize| {
+            for m in mask.iter_mut().take(b.min(n)).skip(a) {
+                if *m != b'\n' {
+                    *m = b' ';
+                }
+            }
+        };
+        let mut i = 0;
+        while i < n {
+            let c = t[i];
+            if c == b'/' && i + 1 < n && t[i + 1] == b'/' {
+                let j = memfind(t, b"\n", i).unwrap_or(n);
+                comments.push((line_of(t, i), lossy(&t[i + 2..j])));
+                blank(&mut mask, i, j);
+                i = j;
+            } else if c == b'/' && i + 1 < n && t[i + 1] == b'*' {
+                let mut depth = 1usize;
+                let mut j = i + 2;
+                while j < n && depth > 0 {
+                    if t[j] == b'/' && j + 1 < n && t[j + 1] == b'*' {
+                        depth += 1;
+                        j += 2;
+                    } else if t[j] == b'*' && j + 1 < n && t[j + 1] == b'/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                comments.push((line_of(t, i), lossy(&t[i + 2..j.saturating_sub(2).max(i + 2)])));
+                blank(&mut mask, i, j);
+                i = j;
+            } else if c == b'"' {
+                let mut j = i + 1;
+                while j < n {
+                    if t[j] == b'\\' {
+                        j += 2;
+                    } else if t[j] == b'"' {
+                        j += 1;
+                        break;
+                    } else {
+                        j += 1;
+                    }
+                }
+                blank(&mut mask, i + 1, j.saturating_sub(1).max(i + 1));
+                i = j;
+            } else if c == b'r'
+                && i + 1 < n
+                && (t[i + 1] == b'#' || t[i + 1] == b'"')
+                && (i == 0 || !ident_byte(t[i - 1]))
+            {
+                // raw string r"…" / r#"…"#
+                let mut j = i + 1;
+                let mut hashes = 0usize;
+                while j < n && t[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && t[j] == b'"' {
+                    let mut close = vec![b'"'];
+                    close.extend(std::iter::repeat(b'#').take(hashes));
+                    let k = match memfind(t, &close, j + 1) {
+                        Some(p) => p + close.len(),
+                        None => n,
+                    };
+                    blank(&mut mask, i + 1, k);
+                    i = k;
+                } else {
+                    i += 1;
+                }
+            } else if c == b'\'' {
+                // char literal vs lifetime
+                if i + 1 < n && t[i + 1] == b'\\' {
+                    let j = match memfind(t, b"'", i + 2) {
+                        Some(p) => p + 1,
+                        None => n,
+                    };
+                    blank(&mut mask, i + 1, j.saturating_sub(1).max(i + 1));
+                    i = j;
+                } else if i + 2 < n && t[i + 2] == b'\'' && t[i + 1] != b'\'' {
+                    blank(&mut mask, i + 1, i + 2);
+                    i += 3;
+                } else {
+                    i += 1; // lifetime
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Scanned { text: text.to_string(), mask, comments }
+    }
+
+    /// Comment text fragments present on 1-based `line` (a multi-line
+    /// block comment contributes its spanning fragment to each line).
+    pub fn comments_on_line(&self, line: usize) -> Vec<&str> {
+        let mut out = Vec::new();
+        for (start, ctext) in &self.comments {
+            for (k, part) in ctext.split('\n').enumerate() {
+                if start + k == line {
+                    out.push(part);
+                }
+            }
+        }
+        out
+    }
+
+    /// Raw source line `line` (1-based), or "" out of range.
+    pub fn raw_line(&self, line: usize) -> &str {
+        self.text.split('\n').nth(line.saturating_sub(1)).unwrap_or("")
+    }
+
+    /// Masked line `line` (1-based) as lossy UTF-8, or "" out of range.
+    pub fn mask_line(&self, line: usize) -> String {
+        match self.mask.split(|&b| b == b'\n').nth(line.saturating_sub(1)) {
+            Some(seg) => lossy(seg),
+            None => String::new(),
+        }
+    }
+}
+
+/// Byte-wise substring search from `start`; `None` when absent.
+pub fn memfind(haystack: &[u8], needle: &[u8], start: usize) -> Option<usize> {
+    if needle.is_empty() || start >= haystack.len() {
+        return None;
+    }
+    haystack[start..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + start)
+}
+
+/// Word-boundary occurrences of `tok` in `mask` — byte positions.
+pub fn find_token(mask: &[u8], tok: &str) -> Vec<usize> {
+    let tok = tok.as_bytes();
+    let mut out = Vec::new();
+    let mut start = 0;
+    while let Some(p) = memfind(mask, tok, start) {
+        let before = if p > 0 { mask[p - 1] } else { b' ' };
+        let after = if p + tok.len() < mask.len() { mask[p + tok.len()] } else { b' ' };
+        if !ident_byte(before) && !ident_byte(after) {
+            out.push(p);
+        }
+        start = p + 1;
+    }
+    out
+}
+
+fn lossy(bytes: &[u8]) -> String {
+    String::from_utf8_lossy(bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_line_and_block_comments() {
+        let s = Scanned::new("let a = 1; // unsafe here\n/* unsafe\nblock */ let b;\n");
+        assert!(find_token(&s.mask, "unsafe").is_empty());
+        assert_eq!(s.comments.len(), 2);
+        assert_eq!(s.comments[0].1, " unsafe here");
+    }
+
+    #[test]
+    fn masks_strings_and_raw_strings() {
+        let s = Scanned::new(r##"let x = "unsafe"; let y = r#"panic!("no")"#;"##);
+        assert!(find_token(&s.mask, "unsafe").is_empty());
+        assert_eq!(memfind(&s.mask, b"panic!", 0), None);
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let s = Scanned::new("fn f<'a>(x: &'a str) { let q = 'x'; let esc = '\\n'; }");
+        // the lifetime 'a survives in the mask; char contents are blanked
+        assert!(memfind(&s.mask, b"'a>", 0).is_some());
+        assert_eq!(memfind(&s.mask, b"'x'", 0), None);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let s = Scanned::new("/* outer /* inner */ still comment */ let z = 1;");
+        assert!(memfind(&s.mask, b"let z", 0).is_some());
+        assert_eq!(memfind(&s.mask, b"inner", 0), None);
+    }
+
+    #[test]
+    fn newlines_preserved_for_line_numbers() {
+        let s = Scanned::new("// one\n// two\nunsafe {}\n");
+        let pos = find_token(&s.mask, "unsafe");
+        assert_eq!(pos.len(), 1);
+        assert_eq!(line_of(&s.mask, pos[0]), 3);
+    }
+}

@@ -1,0 +1,188 @@
+//! `boba lint` — a repo-invariant static analyzer for the concurrency
+//! core (L6 in the module map).
+//!
+//! The repo documents a set of cross-cutting invariants — every
+//! `unsafe` justifies itself, kernel parallelism goes through the pool,
+//! the serve path never aborts, atomic orderings name their pairings,
+//! the metrics/chaos vocabularies stay in sync across code, ci.sh, and
+//! docs — but until now nothing *checked* them; they rotted or held by
+//! review luck. This module is the checker: a std-only,
+//! comment/string-aware token scanner ([`lex`]) plus the rule engine
+//! ([`rules`]), wired as the `boba lint` subcommand and a required CI
+//! stage.
+//!
+//! Deliberately not a rustc plugin or syn-based AST pass: the rules
+//! are lexical (comments are *part of* what they check — a `// SAFETY:`
+//! annotation is invisible to an AST) and the zero-dependency scanner
+//! keeps the analyzer inside the repo's no-new-crates budget. The
+//! trade-off is precision at token granularity, which the mask (see
+//! [`lex::Scanned`]) makes sound against strings and comments.
+//!
+//! ```text
+//! $ boba lint [--root DIR] [--json]
+//! ```
+//!
+//! Exit is nonzero when any violation remains. Suppress a finding with
+//! `// lint: allow(<rule>): <reason>` — the reason is mandatory.
+
+pub mod lex;
+pub mod rules;
+
+pub use rules::{lint, RULES};
+
+use crate::util::Json;
+use std::path::{Path, PathBuf};
+
+/// One source file handed to the linter: its repo-relative path (used
+/// in whitelists and reports) and full text.
+pub struct SourceFile {
+    /// Path relative to `rust/src` (e.g. `server/router.rs`).
+    pub path: String,
+    /// The file's full text.
+    pub text: String,
+}
+
+/// Everything [`lint`] looks at: the Rust tree plus the two non-Rust
+/// artifacts the drift rules reconcile against (absent in fixture
+/// tests, which then skip those rules).
+pub struct LintInput {
+    /// Rust sources keyed by `rust/src`-relative path.
+    pub sources: Vec<SourceFile>,
+    /// `ci.sh` text, when present (metrics-drift gate).
+    pub ci_sh: Option<String>,
+    /// `docs/ARCHITECTURE.md` text, when present (metrics/chaos tables).
+    pub architecture_md: Option<String>,
+}
+
+/// One finding: which rule fired, where, and why.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Rule name (one of [`RULES`], or `allow-syntax` for bad allows).
+    pub rule: String,
+    /// Repo-relative file (`rust/src`-relative for sources; `ci.sh` /
+    /// `docs/ARCHITECTURE.md` for the drift rules).
+    pub file: String,
+    /// 1-based line, or 0 for whole-file findings.
+    pub line: usize,
+    /// Human-readable explanation.
+    pub msg: String,
+}
+
+impl Violation {
+    /// Build a violation (convenience used throughout the rules).
+    pub fn new(rule: &str, file: &str, line: usize, msg: &str) -> Violation {
+        Violation {
+            rule: rule.to_string(),
+            file: file.to_string(),
+            line,
+            msg: msg.to_string(),
+        }
+    }
+}
+
+/// Walk up from `start` to the repo root — the first ancestor holding
+/// both `ROADMAP.md` and `rust/src`. `None` when invoked outside the
+/// repo (callers then require an explicit `--root`).
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = Some(start.to_path_buf());
+    while let Some(d) = dir {
+        if d.join("ROADMAP.md").is_file() && d.join("rust").join("src").is_dir() {
+            return Some(d);
+        }
+        dir = d.parent().map(Path::to_path_buf);
+    }
+    None
+}
+
+/// Load the real tree under `root`: every `.rs` file below `rust/src`
+/// (sorted by path, so reports and fixtures are deterministic), plus
+/// `ci.sh` and `docs/ARCHITECTURE.md` when present.
+pub fn load_tree(root: &Path) -> std::io::Result<LintInput> {
+    let src = root.join("rust").join("src");
+    let mut paths: Vec<PathBuf> = Vec::new();
+    collect_rs(&src, &mut paths)?;
+    paths.sort();
+    let mut sources = Vec::with_capacity(paths.len());
+    for p in paths {
+        let rel = p
+            .strip_prefix(&src)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        sources.push(SourceFile { path: rel, text: std::fs::read_to_string(&p)? });
+    }
+    let read_opt = |p: PathBuf| match std::fs::read_to_string(&p) {
+        Ok(t) => Some(t),
+        Err(_) => None,
+    };
+    Ok(LintInput {
+        sources,
+        ci_sh: read_opt(root.join("ci.sh")),
+        architecture_md: read_opt(root.join("docs").join("ARCHITECTURE.md")),
+    })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Render violations as the human-facing aligned table, with a
+/// per-rule count trailer (empty string for a clean tree).
+pub fn render_table(violations: &[Violation]) -> String {
+    if violations.is_empty() {
+        return String::new();
+    }
+    let mut out = String::new();
+    let loc_w = violations
+        .iter()
+        .map(|v| format!("{}:{}", v.file, v.line).len())
+        .max()
+        .unwrap_or(0);
+    let rule_w = violations.iter().map(|v| v.rule.len()).max().unwrap_or(0);
+    for v in violations {
+        let loc = format!("{}:{}", v.file, v.line);
+        out.push_str(&format!("{loc:<loc_w$}  [{:<rule_w$}]  {}\n", v.rule, v.msg));
+    }
+    let mut counts: Vec<(String, usize)> = Vec::new();
+    for v in violations {
+        match counts.iter_mut().find(|(r, _)| *r == v.rule) {
+            Some((_, n)) => *n += 1,
+            None => counts.push((v.rule.clone(), 1)),
+        }
+    }
+    counts.sort();
+    let summary: Vec<String> = counts.iter().map(|(r, n)| format!("{r}={n}")).collect();
+    out.push_str(&format!("\n{} violation(s): {}\n", violations.len(), summary.join(", ")));
+    out
+}
+
+/// Render violations as the machine-facing JSON document
+/// (`{"version":"boba-lint/1","violations":[…],"count":N}`).
+pub fn render_json(violations: &[Violation]) -> String {
+    let rows: Vec<Json> = violations
+        .iter()
+        .map(|v| {
+            Json::Obj(vec![
+                ("rule".to_string(), Json::Str(v.rule.clone())),
+                ("file".to_string(), Json::Str(v.file.clone())),
+                ("line".to_string(), Json::Num(v.line as f64)),
+                ("msg".to_string(), Json::Str(v.msg.clone())),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("version".to_string(), Json::Str("boba-lint/1".to_string())),
+        ("violations".to_string(), Json::Arr(rows)),
+        ("count".to_string(), Json::Num(violations.len() as f64)),
+    ])
+    .render()
+}

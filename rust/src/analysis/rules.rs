@@ -1,0 +1,735 @@
+//! The repo-invariant rules `boba lint` enforces, each grounded in an
+//! invariant docs/ARCHITECTURE.md or a module doc already states:
+//!
+//! | rule | invariant |
+//! |---|---|
+//! | `unsafe-safety` | every `unsafe` carries a `// SAFETY:` (or `# Safety` doc section) and lives in a whitelisted module |
+//! | `raw-spawn` | kernel parallelism goes through `parallel::pool`; raw `thread::spawn`/`scope`/`Builder` only where whitelisted or in tests |
+//! | `panic-path` | the serve path answers with status codes — no `unwrap`/`expect`/`panic!`/`unreachable!` outside tests |
+//! | `atomic-ordering` | every non-counter `Ordering::` use names its pairing in an `// ordering:` comment |
+//! | `metrics-drift` | `boba_*` families emitted in code == ci.sh exposition gate == ARCHITECTURE.md table |
+//! | `chaos-drift` | `obs::chaos` fault points == the ARCHITECTURE.md fault table |
+//! | `ablation-reach` | `*_atomic` nondeterministic kernels referenced only from their module, repro, and tests |
+//!
+//! Escape hatch: `// lint: allow(<rule>): <reason>` suppresses the
+//! named rule on the comment's line, the rest of its comment block,
+//! and the first code line below. The reason is mandatory — a bare
+//! allow is itself a violation (`allow-syntax`).
+
+use super::lex::{find_token, ident_byte, line_of, memfind, Scanned};
+use super::{LintInput, Violation};
+use std::collections::BTreeSet;
+
+/// Every rule name `lint: allow(...)` may reference.
+pub const RULES: &[&str] = &[
+    "unsafe-safety",
+    "raw-spawn",
+    "panic-path",
+    "atomic-ordering",
+    "metrics-drift",
+    "chaos-drift",
+    "ablation-reach",
+];
+
+/// Files (relative to rust/src) allowed to contain `unsafe` code.
+pub const UNSAFE_OK: &[&str] = &[
+    "algos/pagerank.rs",
+    "algos/spmm.rs",
+    "algos/spmv.rs",
+    "convert/mod.rs",
+    "graph/delta.rs",
+    "graph/io/bcoo.rs",
+    "obs/ring.rs",
+    "parallel/mod.rs",
+    "parallel/pool.rs",
+    "reorder/boba.rs",
+    "runtime/delta.rs",
+    "runtime/ell.rs",
+    "runtime/sell.rs",
+    "runtime/tiled.rs",
+];
+
+/// Files allowed to spawn raw OS threads (the pool itself and the
+/// server's accept/worker threads); everything else annotates or uses
+/// the pool.
+pub const SPAWN_OK: &[&str] = &["parallel/pool.rs", "server/mod.rs"];
+
+/// The serve request path: no unwrap/expect/panic! outside tests.
+pub const PANIC_PATH_FILES: &[&str] = &[
+    "server/admission.rs",
+    "server/coalesce.rs",
+    "server/http.rs",
+    "server/live.rs",
+    "server/router.rs",
+    "server/wal.rs",
+];
+
+/// Files whose `Ordering::Relaxed` uses are pure counters/gauges (no
+/// synchronization piggybacks on them) — Relaxed needs no annotation
+/// there. Acquire/Release/AcqRel/SeqCst always need one.
+pub const RELAXED_COUNTER_OK: &[&str] = &[
+    "algos/pagerank.rs",
+    "algos/tc.rs",
+    "convert/mod.rs",
+    "graph/io/bcoo.rs",
+    "obs/chaos.rs",
+    "obs/corrupt.rs",
+    "obs/hist.rs",
+    "obs/ring.rs",
+    "obs/span.rs",
+    "parallel/atomic.rs",
+    "parallel/mod.rs",
+    "parallel/pool.rs",
+    "server/admission.rs",
+    "server/coalesce.rs",
+    "server/live.rs",
+    "server/loadgen.rs",
+    "server/mod.rs",
+    "server/registry.rs",
+    "server/router.rs",
+    "server/stats.rs",
+    "server/wal.rs",
+];
+
+const ATOMIC_VARIANTS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// Line ranges (1-based, inclusive) covered by `#[cfg(test)]` /
+/// `#[test]` items — brace-matched on the masked text.
+pub fn test_ranges(s: &Scanned) -> Vec<(usize, usize)> {
+    let mask = &s.mask;
+    let n = mask.len();
+    let mut ranges = Vec::new();
+    for marker in ["#[cfg(test)]", "#[test]"] {
+        let mut start = 0;
+        while let Some(p) = memfind(mask, marker.as_bytes(), start) {
+            start = p + 1;
+            // skip to the item's opening brace; a `;` first means no body
+            let mut j = p + marker.len();
+            while j < n && mask[j] != b'{' && mask[j] != b';' {
+                j += 1;
+            }
+            if j >= n || mask[j] == b';' {
+                continue;
+            }
+            let mut depth = 0i64;
+            let mut k = j;
+            while k < n {
+                if mask[k] == b'{' {
+                    depth += 1;
+                } else if mask[k] == b'}' {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                k += 1;
+            }
+            ranges.push((line_of(mask, p), line_of(mask, k.min(n.saturating_sub(1)))));
+        }
+    }
+    ranges
+}
+
+fn in_ranges(ranges: &[(usize, usize)], line: usize) -> bool {
+    ranges.iter().any(|&(lo, hi)| lo <= line && line <= hi)
+}
+
+/// True when any of `markers` appears in a comment on `line` or in the
+/// contiguous comment/attribute/statement-continuation block above it.
+pub fn marker_near(s: &Scanned, line: usize, markers: &[&str]) -> bool {
+    let hit = |l: usize| s.comments_on_line(l).iter().any(|part| markers.iter().any(|m| part.contains(m)));
+    if hit(line) {
+        return true;
+    }
+    let mut l = line.saturating_sub(1);
+    while l >= 1 {
+        let raw = s.raw_line(l).trim().to_string();
+        let masked = s.mask_line(l).trim().to_string();
+        let is_comment_line = !raw.is_empty() && masked.is_empty();
+        let is_attr_line = masked.starts_with("#[") || masked.starts_with("#![");
+        // A statement continued onto the flagged line (`let x =` /
+        // open paren / trailing comma ...) — keep walking up to the
+        // comment above the statement's first line.
+        let is_continuation = !masked.is_empty()
+            && "=(,{+|&].".contains(masked.chars().last().unwrap_or(' '))
+            && !is_attr_line;
+        if !(is_comment_line || is_attr_line || is_continuation) {
+            return false;
+        }
+        if hit(l) {
+            return true;
+        }
+        l -= 1;
+    }
+    false
+}
+
+/// Parse every `lint: allow(<rule>): <reason>` annotation into the
+/// `(line, rule)` suppression set. Malformed allows (unknown rule,
+/// missing reason) are reported as `allow-syntax` violations.
+pub fn parse_allows(s: &Scanned, path: &str, out: &mut Vec<Violation>) -> BTreeSet<(usize, String)> {
+    let mut allows = BTreeSet::new();
+    for (start, ctext) in &s.comments {
+        // Allows live in working `//` comments only; doc comments
+        // (`///x` -> "/x", `//!x` -> "!x", `/**x*/` -> "*x") merely
+        // *describe* the grammar and stay inert.
+        if matches!(ctext.as_bytes().first(), Some(b'/' | b'!' | b'*')) {
+            continue;
+        }
+        for (k, part) in ctext.split('\n').enumerate() {
+            let line = start + k;
+            let Some(p) = part.find("lint: allow(") else { continue };
+            let rest = &part[p + "lint: allow(".len()..];
+            let Some(close) = rest.find(')') else {
+                out.push(Violation::new(
+                    "allow-syntax",
+                    path,
+                    line,
+                    "malformed lint: allow annotation (missing ')')",
+                ));
+                continue;
+            };
+            let rule = rest[..close].trim();
+            let tail = rest[close + 1..].trim();
+            if !RULES.contains(&rule) {
+                out.push(Violation::new(
+                    "allow-syntax",
+                    path,
+                    line,
+                    &format!("lint: allow names unknown rule '{rule}'"),
+                ));
+                continue;
+            }
+            if !tail.starts_with(':') || tail[1..].trim().is_empty() {
+                out.push(Violation::new(
+                    "allow-syntax",
+                    path,
+                    line,
+                    &format!("lint: allow({rule}) carries no reason — write 'lint: allow({rule}): <why>'"),
+                ));
+                continue;
+            }
+            allows.insert((line, rule.to_string()));
+            // Suppression extends through the rest of the comment
+            // block to the first code line below it.
+            let mut l = line + 1;
+            loop {
+                let raw_empty = s.raw_line(l).trim().is_empty();
+                let mask_empty = s.mask_line(l).trim().is_empty();
+                allows.insert((l, rule.to_string()));
+                if !raw_empty && mask_empty {
+                    l += 1; // still inside the comment block
+                    continue;
+                }
+                break;
+            }
+        }
+    }
+    allows
+}
+
+/// True when the `.unwrap()` whose `.` sits at `dot_pos` follows a
+/// `lock()`/`read()`/`write()`/`wait*()` call — unwrapping lock
+/// poisoning propagates a *prior* panic rather than creating one, so
+/// the panic-path rule exempts it.
+pub fn receiver_is_lock(mask: &[u8], dot_pos: usize) -> bool {
+    let mut k = dot_pos as i64 - 1;
+    while k >= 0 && (mask[k as usize] as char).is_whitespace() {
+        k -= 1;
+    }
+    if k < 0 || mask[k as usize] != b')' {
+        return false;
+    }
+    let mut depth = 0i64;
+    while k >= 0 {
+        if mask[k as usize] == b')' {
+            depth += 1;
+        } else if mask[k as usize] == b'(' {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        }
+        k -= 1;
+    }
+    if k <= 0 {
+        return false;
+    }
+    let mut e = k - 1;
+    while e >= 0 && (mask[e as usize] as char).is_whitespace() {
+        e -= 1;
+    }
+    let mut b = e;
+    while b >= 0 && ident_byte(mask[b as usize]) {
+        b -= 1;
+    }
+    let name = String::from_utf8_lossy(&mask[(b + 1) as usize..(e + 1) as usize]).into_owned();
+    matches!(
+        name.as_str(),
+        "lock" | "read" | "write" | "wait" | "wait_timeout" | "wait_while" | "wait_timeout_while"
+    )
+}
+
+/// `(line, token)` for every `boba_<word>` token in a text file.
+pub fn boba_tokens(text: &str) -> Vec<(usize, String)> {
+    let t = text.as_bytes();
+    let n = t.len();
+    let mut out = Vec::new();
+    let mut i = 0;
+    let mut line = 1;
+    while i < n {
+        if t[i] == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if t[i..].starts_with(b"boba_") && (i == 0 || !ident_byte(t[i - 1])) {
+            let mut j = i;
+            while j < n && ident_byte(t[j]) {
+                j += 1;
+            }
+            out.push((line, String::from_utf8_lossy(&t[i..j]).into_owned()));
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// The `for fam in ... do` family list in ci.sh → `(names, gate_line)`.
+pub fn parse_ci_family_gate(text: &str) -> Option<(Vec<String>, usize)> {
+    let p = text.find("for fam in")?;
+    let gate_line = line_of(text.as_bytes(), p);
+    let q = text[p..].find("do").map(|r| r + p)?;
+    let seg = &text[p + "for fam in".len()..q];
+    Some((boba_tokens(seg).into_iter().map(|(_, t)| t).collect(), gate_line))
+}
+
+/// Names in a `<!-- marker:begin -->` … `<!-- marker:end -->` fenced
+/// markdown table — rows shaped `| \`name\` | … |`, with any `:PARAM` /
+/// `{labels}` suffix stripped. Returns `(name, line)` pairs.
+pub fn parse_marked_table(text: &str, marker: &str) -> Option<Vec<(String, usize)>> {
+    let begin = text.find(&format!("<!-- {marker}:begin -->"))?;
+    let end = text.find(&format!("<!-- {marker}:end -->"))?;
+    if end < begin {
+        return None;
+    }
+    let mut out = Vec::new();
+    let base_line = line_of(text.as_bytes(), begin);
+    for (i, line) in text[begin..end].split('\n').enumerate() {
+        let t = line.trim();
+        if let Some(rest) = t.strip_prefix("| `") {
+            let Some(close) = rest.find('`') else { continue };
+            let mut name = &rest[..close];
+            for sep in [':', '{'] {
+                if let Some(cut) = name.find(sep) {
+                    name = &name[..cut];
+                }
+            }
+            out.push((name.to_string(), base_line + i));
+        }
+    }
+    Some(out)
+}
+
+/// Names in obs/chaos.rs's `KNOWN_POINTS: &[&str]` const, minus the
+/// `test-*` points the unit tests arm to exercise table mechanics
+/// (they are hooked by nothing and don't belong in the fault table).
+pub fn parse_points_const(s: &Scanned) -> Option<Vec<String>> {
+    let mask = &s.mask;
+    let p = memfind(mask, b"KNOWN_POINTS: &[&str]", 0)?;
+    let b = memfind(mask, b"[", p + "KNOWN_POINTS: &[&str]".len())?;
+    let e = memfind(mask, b"]", b)?;
+    let raw = s.text.as_bytes();
+    let mut out = Vec::new();
+    // string contents are masked; read them from the raw text via quote positions
+    let mut k = b;
+    while k < e {
+        if raw[k] == b'"' {
+            let mut j = k + 1;
+            while j < e && raw[j] != b'"' {
+                j += 1;
+            }
+            let name = String::from_utf8_lossy(&raw[k + 1..j]).into_owned();
+            if !name.starts_with("test-") {
+                out.push(name);
+            }
+            k = j + 1;
+        } else {
+            k += 1;
+        }
+    }
+    Some(out)
+}
+
+/// Run every rule over `input`, returning all violations (sorted by
+/// file, then line).
+pub fn lint(input: &LintInput) -> Vec<Violation> {
+    let mut v: Vec<Violation> = Vec::new();
+    let scanned: Vec<(&str, Scanned)> =
+        input.sources.iter().map(|f| (f.path.as_str(), Scanned::new(&f.text))).collect();
+    let tranges: Vec<Vec<(usize, usize)>> = scanned.iter().map(|(_, s)| test_ranges(s)).collect();
+    let allows: Vec<BTreeSet<(usize, String)>> =
+        scanned.iter().map(|(p, s)| parse_allows(s, p, &mut v)).collect();
+
+    let mut emitted_families: Vec<(String, String, usize)> = Vec::new();
+    let mut atomic_defs: Vec<(String, String)> = Vec::new();
+
+    for (idx, (path, s)) in scanned.iter().enumerate() {
+        let mask = &s.mask;
+        let tr = &tranges[idx];
+        let emit = |rule: &str, line: usize, msg: &str, v: &mut Vec<Violation>| {
+            if allows[idx].contains(&(line, rule.to_string())) {
+                return;
+            }
+            v.push(Violation::new(rule, path, line, msg));
+        };
+
+        // ---- unsafe-safety ----
+        for p in find_token(mask, "unsafe") {
+            let line = line_of(mask, p);
+            if !UNSAFE_OK.contains(path) {
+                emit("unsafe-safety", line, "`unsafe` outside the modules whitelisted to own it", &mut v);
+            }
+            if !marker_near(s, line, &["SAFETY:", "# Safety"]) {
+                emit(
+                    "unsafe-safety",
+                    line,
+                    "`unsafe` without an immediately preceding `// SAFETY:` comment",
+                    &mut v,
+                );
+            }
+        }
+
+        // ---- raw-spawn ----
+        if !SPAWN_OK.contains(path) {
+            for tok in ["thread::spawn", "thread::scope", "thread::Builder"] {
+                for p in find_sub(mask, tok) {
+                    let line = line_of(mask, p);
+                    if in_ranges(tr, line) {
+                        continue;
+                    }
+                    emit(
+                        "raw-spawn",
+                        line,
+                        &format!("raw `{tok}` outside the pool — kernel parallelism goes through parallel::pool"),
+                        &mut v,
+                    );
+                }
+            }
+        }
+
+        // ---- panic-path ----
+        if PANIC_PATH_FILES.contains(path) {
+            for tok in [".unwrap()", ".expect(", "panic!", "unreachable!"] {
+                let mut start = 0;
+                while let Some(p) = memfind(mask, tok.as_bytes(), start) {
+                    start = p + 1;
+                    let line = line_of(mask, p);
+                    if in_ranges(tr, line) {
+                        continue;
+                    }
+                    if tok == ".unwrap()" && receiver_is_lock(mask, p) {
+                        continue; // lock-poisoning unwrap: propagates a prior panic
+                    }
+                    emit(
+                        "panic-path",
+                        line,
+                        &format!(
+                            "`{}` on the request path — answer with a status code, not an abort",
+                            tok.trim_matches('.')
+                        ),
+                        &mut v,
+                    );
+                }
+            }
+        }
+
+        // ---- atomic-ordering ----
+        for variant in ATOMIC_VARIANTS {
+            let tok = format!("Ordering::{variant}");
+            for p in find_token(mask, &tok) {
+                let line = line_of(mask, p);
+                if in_ranges(tr, line) {
+                    continue;
+                }
+                if *variant == "Relaxed" && RELAXED_COUNTER_OK.contains(path) {
+                    continue;
+                }
+                if !marker_near(s, line, &["ordering:"]) {
+                    emit(
+                        "atomic-ordering",
+                        line,
+                        &format!("`{tok}` without an `// ordering:` comment naming its pairing"),
+                        &mut v,
+                    );
+                }
+            }
+        }
+
+        // ---- metrics-drift: collect emitted families ----
+        let mut start = 0;
+        while let Some(p) = memfind(mask, b"family(", start) {
+            start = p + 1;
+            if p > 0 && ident_byte(mask[p - 1]) {
+                continue;
+            }
+            let line = line_of(mask, p);
+            if in_ranges(tr, line) {
+                continue;
+            }
+            let mut j = p + "family(".len();
+            while j < mask.len() && (mask[j] as char).is_whitespace() {
+                j += 1;
+            }
+            if j < mask.len() && mask[j] == b'"' {
+                // read from the RAW text (string contents are masked out)
+                let raw = s.text.as_bytes();
+                let mut k = j + 1;
+                let mut name = Vec::new();
+                while k < raw.len() && raw[k] != b'"' {
+                    name.push(raw[k]);
+                    k += 1;
+                }
+                let name = String::from_utf8_lossy(&name).into_owned();
+                if name.starts_with("boba_") {
+                    emitted_families.push((name, path.to_string(), line));
+                }
+            }
+        }
+
+        // ---- ablation-reach: collect *_atomic fn defs ----
+        for p in find_token(mask, "fn") {
+            let mut j = p + 2;
+            while j < mask.len() && (mask[j] as char).is_whitespace() {
+                j += 1;
+            }
+            let b = j;
+            while j < mask.len() && ident_byte(mask[j]) {
+                j += 1;
+            }
+            let name = String::from_utf8_lossy(&mask[b..j]).into_owned();
+            if name.ends_with("_atomic") {
+                atomic_defs.push((name, path.to_string()));
+            }
+        }
+    }
+
+    // ---- ablation-reach: references ----
+    for (name, def_path) in &atomic_defs {
+        for (idx, (path, s)) in scanned.iter().enumerate() {
+            if *path == def_path.as_str() || *path == "coordinator/repro.rs" {
+                continue;
+            }
+            for p in find_token(&s.mask, name) {
+                let line = line_of(&s.mask, p);
+                if in_ranges(&tranges[idx], line) {
+                    continue;
+                }
+                if allows[idx].contains(&(line, "ablation-reach".to_string())) {
+                    continue;
+                }
+                v.push(Violation::new(
+                    "ablation-reach",
+                    path,
+                    line,
+                    &format!("nondeterministic ablation kernel `{name}` referenced outside benches/repro"),
+                ));
+            }
+        }
+    }
+
+    // ---- metrics-drift ----
+    let mut emitted: Vec<String> = Vec::new();
+    for (name, _, _) in &emitted_families {
+        if !emitted.contains(name) {
+            emitted.push(name.clone());
+        }
+    }
+    emitted.sort();
+    if let Some(ci) = &input.ci_sh {
+        match parse_ci_family_gate(ci) {
+            None => v.push(Violation::new(
+                "metrics-drift",
+                "ci.sh",
+                0,
+                "ci.sh has no `for fam in ... do` metrics gate list",
+            )),
+            Some((fams, gate_line)) => {
+                for name in &emitted {
+                    if !fams.contains(name) {
+                        v.push(Violation::new(
+                            "metrics-drift",
+                            "ci.sh",
+                            gate_line,
+                            &format!("emitted family `{name}` missing from the ci.sh exposition gate"),
+                        ));
+                    }
+                }
+                let mut seen = BTreeSet::new();
+                for name in &fams {
+                    if seen.insert(name.clone()) && !emitted.contains(name) {
+                        v.push(Violation::new(
+                            "metrics-drift",
+                            "ci.sh",
+                            gate_line,
+                            &format!("ci.sh exposition gate greps `{name}`, which no code emits"),
+                        ));
+                    }
+                }
+            }
+        }
+        // stray boba_ tokens anywhere in ci.sh must be emitted families
+        for (ln, tok) in boba_tokens(ci) {
+            if !emitted.contains(&tok) {
+                v.push(Violation::new(
+                    "metrics-drift",
+                    "ci.sh",
+                    ln,
+                    &format!("ci.sh references `{tok}`, which no code emits"),
+                ));
+            }
+        }
+    }
+    if let Some(arch) = &input.architecture_md {
+        match parse_marked_table(arch, "lint:metrics-families") {
+            None => v.push(Violation::new(
+                "metrics-drift",
+                "docs/ARCHITECTURE.md",
+                0,
+                "ARCHITECTURE.md lacks the `lint:metrics-families` marked table",
+            )),
+            Some(doc_fams) => {
+                let names: Vec<&String> = doc_fams.iter().map(|(n, _)| n).collect();
+                for name in &emitted {
+                    if !names.contains(&name) {
+                        v.push(Violation::new(
+                            "metrics-drift",
+                            "docs/ARCHITECTURE.md",
+                            0,
+                            &format!("emitted family `{name}` missing from the ARCHITECTURE.md families table"),
+                        ));
+                    }
+                }
+                for (name, ln) in &doc_fams {
+                    if !emitted.contains(name) {
+                        v.push(Violation::new(
+                            "metrics-drift",
+                            "docs/ARCHITECTURE.md",
+                            *ln,
+                            &format!("ARCHITECTURE.md documents family `{name}`, which no code emits"),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- chaos-drift ----
+    let chaos = scanned.iter().find(|(p, _)| *p == "obs/chaos.rs");
+    if let (Some((_, chaos)), Some(arch)) = (chaos, &input.architecture_md) {
+        match parse_points_const(chaos) {
+            None => v.push(Violation::new(
+                "chaos-drift",
+                "obs/chaos.rs",
+                0,
+                "obs/chaos.rs has no `KNOWN_POINTS: &[&str]` const to check",
+            )),
+            Some(points) => match parse_marked_table(arch, "lint:chaos-points") {
+                None => v.push(Violation::new(
+                    "chaos-drift",
+                    "docs/ARCHITECTURE.md",
+                    0,
+                    "ARCHITECTURE.md lacks the `lint:chaos-points` marked fault table",
+                )),
+                Some(doc_pts) => {
+                    let names: Vec<&String> = doc_pts.iter().map(|(n, _)| n).collect();
+                    for pt in &points {
+                        if !names.contains(&pt) {
+                            v.push(Violation::new(
+                                "chaos-drift",
+                                "docs/ARCHITECTURE.md",
+                                0,
+                                &format!("chaos point `{pt}` missing from the ARCHITECTURE.md fault table"),
+                            ));
+                        }
+                    }
+                    for (name, ln) in &doc_pts {
+                        if !points.contains(name) {
+                            v.push(Violation::new(
+                                "chaos-drift",
+                                "docs/ARCHITECTURE.md",
+                                *ln,
+                                &format!("ARCHITECTURE.md fault table lists `{name}`, which obs/chaos.rs does not define"),
+                            ));
+                        }
+                    }
+                }
+            },
+        }
+    }
+
+    v.sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+    v
+}
+
+fn find_sub(mask: &[u8], tok: &str) -> Vec<usize> {
+    // identical to find_token; kept separate for tokens containing `::`
+    // (word-boundary check applies to both edges of the whole token).
+    find_token(mask, tok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lex::Scanned;
+
+    #[test]
+    fn lock_receiver_detection() {
+        let s = Scanned::new("fn f() { m.lock().unwrap(); x.unwrap(); cv.wait(g).unwrap(); }");
+        let mut dots = Vec::new();
+        let mut start = 0;
+        while let Some(p) = memfind(&s.mask, b".unwrap()", start) {
+            dots.push(p);
+            start = p + 1;
+        }
+        assert_eq!(dots.len(), 3);
+        assert!(receiver_is_lock(&s.mask, dots[0]));
+        assert!(!receiver_is_lock(&s.mask, dots[1]));
+        assert!(receiver_is_lock(&s.mask, dots[2]));
+    }
+
+    #[test]
+    fn marked_table_strips_label_suffixes() {
+        let md = "x\n<!-- lint:metrics-families:begin -->\n\
+                  | `boba_a_total` | counter |\n\
+                  | `boba_b_seconds{stage}` | histogram |\n\
+                  <!-- lint:metrics-families:end -->\n";
+        let rows = parse_marked_table(md, "lint:metrics-families").expect("markers found");
+        let names: Vec<&str> = rows.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["boba_a_total", "boba_b_seconds"]);
+    }
+
+    #[test]
+    fn ci_gate_extracts_families() {
+        let sh = "#!/bin/sh\nfor fam in boba_a_total boba_b_seconds; do\n  grep $fam m\ndone\n";
+        let (fams, line) = parse_ci_family_gate(sh).expect("gate found");
+        assert_eq!(fams, ["boba_a_total", "boba_b_seconds"]);
+        assert_eq!(line, 2);
+    }
+
+    #[test]
+    fn points_const_skips_test_points() {
+        let s = Scanned::new("const KNOWN_POINTS: &[&str] = &[\"conn-drop\", \"test-point\"];\n");
+        assert_eq!(parse_points_const(&s).expect("const found"), ["conn-drop"]);
+    }
+
+    #[test]
+    fn cfg_test_ranges_brace_match() {
+        let s = Scanned::new("fn a() {}\n#[cfg(test)]\nmod t {\n    fn b() {}\n}\nfn c() {}\n");
+        let r = test_ranges(&s);
+        assert_eq!(r.len(), 1);
+        assert!(in_ranges(&r, 3) && in_ranges(&r, 5) && !in_ranges(&r, 1) && !in_ranges(&r, 6));
+    }
+}

@@ -42,6 +42,10 @@ const PF_DIST: usize = 32;
 #[inline(always)]
 fn prefetch<T>(arr: &[T], idx: usize) {
     #[cfg(target_arch = "x86_64")]
+    // SAFETY: _mm_prefetch is a non-faulting hint — the address is
+    // never dereferenced, so even an out-of-range `idx` (callers pass
+    // in-bounds ids) could not fault; `add` on a one-past-the-end
+    // pointer is the worst case and is only computed, never read.
     unsafe {
         core::arch::x86_64::_mm_prefetch(
             arr.as_ptr().add(idx) as *const i8,
@@ -260,6 +264,9 @@ where
                     // blocks are disjoint across chunk iterations.
                     unsafe { *row_ptr_ptr.get().add(v) = acc };
                     for r in 0..p {
+                        // SAFETY: slot (r, v) is visited once — v is
+                        // owned by this block and r iterates each
+                        // partition's private counter row exactly once.
                         let slot = unsafe { &mut *counts_ptr.get().add(r * n + v) };
                         let c = *slot;
                         // Block totals are < m < 4G, so the offset fits.
@@ -267,6 +274,7 @@ where
                         acc += c as u64;
                     }
                 }
+                // SAFETY: block b is owned by exactly one chunk iteration.
                 unsafe { *sums_ptr.get().add(b) = acc };
             }
         });

@@ -217,6 +217,10 @@ impl StreamingIngest {
         let batch = batch.max(1);
         let (tx, rx) = mpsc::sync_channel(in_flight.max(1));
         let n = coo.n();
+        // lint: allow(raw-spawn): the ingest producer is an I/O-bound
+        // streamer that must not occupy a compute-pool worker for the
+        // whole ingest; it blocks on the bounded channel, which would
+        // deadlock the pool's helper-barrier dispatch model.
         let handle = std::thread::spawn(move || {
             let m = coo.m();
             let mut at = 0;

@@ -63,6 +63,12 @@
 //!             writes BENCH_repro.json + docs/RESULTS.md
 //!   spmv-pjrt [--dataset N] [--pallas]           SpMV through the AOT artifacts
 //!                                                (needs the `pjrt` build feature)
+//!   lint      [--root DIR] [--json]  run the repo-invariant static
+//!             analyzer over rust/src + ci.sh + docs/ARCHITECTURE.md
+//!             (unsafe-safety, raw-spawn, panic-path, atomic-ordering,
+//!             metrics-drift, chaos-drift, ablation-reach); prints an
+//!             aligned table (or a JSON document with --json) and exits
+//!             nonzero when violations remain
 //!
 //! Common options: --seed (default 42), --scale quick|full (or BOBA_SCALE),
 //! --heavy false (or BOBA_HEAVY=0) to skip Gorder/RCM in figure drivers.
@@ -334,10 +340,11 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         Some("fig6") => println!("{}", experiments::fig6(seed).render()),
         Some("fig7") => println!("{}", experiments::fig7(seed).render()),
         Some("spmv-pjrt") => spmv_pjrt(args, seed)?,
+        Some("lint") => lint_cmd(args)?,
         _ => {
             eprintln!(
                 "usage: boba <datasets|generate|convert-bcoo|reorder|convert|run|pipeline|\
-                 serve|loadgen|repro|table1|table3|fig4|fig5|fig6|fig7|spmv-pjrt> [options]\n\
+                 serve|loadgen|repro|table1|table3|fig4|fig5|fig6|fig7|spmv-pjrt|lint> [options]\n\
                  (see rust/src/main.rs header for options)"
             );
         }
@@ -572,6 +579,42 @@ fn loadgen_churn(
         std::fs::remove_dir_all(&wal_dir).ok();
     }
     Ok(section)
+}
+
+/// The `lint` subcommand: load the tree (from `--root`, or by walking
+/// up to the repo root), run every rule, and report. Violations exit
+/// nonzero so CI can require the stage.
+fn lint_cmd(args: &Args) -> anyhow::Result<()> {
+    use boba::analysis;
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => {
+            let cwd = std::env::current_dir().context("reading the working directory")?;
+            analysis::find_root(&cwd)
+                .context("not inside the repo (no ancestor with ROADMAP.md + rust/src) — pass --root DIR")?
+        }
+    };
+    let input = analysis::load_tree(&root)
+        .with_context(|| format!("loading the tree under {}", root.display()))?;
+    let violations = analysis::lint(&input);
+    if args.flag("json") {
+        println!("{}", analysis::render_json(&violations));
+    } else if violations.is_empty() {
+        println!(
+            "boba lint: clean ({} files, {} rules)",
+            input.sources.len(),
+            analysis::RULES.len(),
+        );
+    } else {
+        print!("{}", analysis::render_table(&violations));
+    }
+    anyhow::ensure!(
+        violations.is_empty(),
+        "{} lint violation(s) — annotate with `// lint: allow(<rule>): <reason>` \
+         only where the invariant genuinely does not apply",
+        violations.len(),
+    );
+    Ok(())
 }
 
 /// Load a graph from `--in FILE` or build `--dataset NAME` (default

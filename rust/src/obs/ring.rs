@@ -54,11 +54,20 @@ impl TraceRing {
 
     /// Publish a completed trace, displacing the oldest when full.
     pub fn push(&self, trace: Arc<Trace>) {
+        // ordering: Relaxed — slot claim is a pure counter; publication
+        // safety comes from the slot swap below, not from head.
         let at = self.head.fetch_add(1, Ordering::Relaxed) % self.slots.len();
         let fresh = Arc::into_raw(trace) as *mut Trace;
+        // ordering: AcqRel — Release publishes the fully-built trace to
+        // the reader's Acquire swap in `recent`; Acquire pairs with the
+        // reader's CAS put-back so the displaced pointer's refcount
+        // history is visible before we drop it.
         let old = self.slots[at].swap(fresh, Ordering::AcqRel);
         if !old.is_null() {
-            // Reclaim the displaced trace's refcount.
+            // SAFETY: the swap transferred sole ownership of the
+            // displaced slot's refcount to us; nobody else can reclaim
+            // this pointer (a reader that still holds the trace holds
+            // its own clone).
             unsafe { drop(Arc::from_raw(old)) };
         }
         self.pushed.fetch_add(1, Ordering::Relaxed);
@@ -70,6 +79,9 @@ impl TraceRing {
     /// traces.
     pub fn recent(&self, n: usize) -> Vec<Arc<Trace>> {
         let cap = self.slots.len();
+        // ordering: Acquire — pairs with writers' AcqRel slot swaps so
+        // the head position we start walking from is no newer than the
+        // slot contents we will observe.
         let head = self.head.load(Ordering::Acquire);
         let mut out = Vec::with_capacity(n.min(cap));
         for back in 1..=cap {
@@ -77,14 +89,24 @@ impl TraceRing {
                 break;
             }
             let at = (head + cap - (back % cap)) % cap;
+            // ordering: AcqRel — Acquire pairs with the writer's Release
+            // swap in `push` so the trace body is fully visible; Release
+            // publishes our null takeover to concurrent readers/writers.
             let raw = self.slots[at].swap(std::ptr::null_mut(), Ordering::AcqRel);
             if raw.is_null() {
                 continue;
             }
             // Borrow: clone the Arc, then try to put the original back.
+            // SAFETY: the swap transferred the slot's refcount to us —
+            // `raw` came from `Arc::into_raw` in `push` (or our own
+            // put-back below) and no other thread holds this reference.
             let owned = unsafe { Arc::from_raw(raw) };
             out.push(owned.clone());
             let back_in = Arc::into_raw(owned) as *mut Trace;
+            // ordering: AcqRel on success — Release hands the refcount
+            // back through the slot (pairs with `push`'s Acquire);
+            // Relaxed on failure — we learned nothing we act on beyond
+            // "a writer lapped us", and `back_in` stays thread-local.
             if self.slots[at]
                 .compare_exchange(
                     std::ptr::null_mut(),
@@ -95,6 +117,9 @@ impl TraceRing {
                 .is_err()
             {
                 // A writer lapped us; the newer trace keeps the slot.
+                // SAFETY: the CAS failed, so the slot never took
+                // `back_in` — the refcount we meant to hand back is
+                // still ours to release.
                 unsafe { drop(Arc::from_raw(back_in)) };
             }
         }
@@ -105,8 +130,14 @@ impl TraceRing {
 impl Drop for TraceRing {
     fn drop(&mut self) {
         for slot in &self.slots {
+            // ordering: AcqRel — Acquire any in-flight publication
+            // before reclaiming; &mut self means no new writers, but a
+            // trace published just before drop must be fully visible.
             let raw = slot.swap(std::ptr::null_mut(), Ordering::AcqRel);
             if !raw.is_null() {
+                // SAFETY: exclusive access (&mut self) — the slot's
+                // refcount is the last reference routed through the
+                // ring; readers that cloned keep their own Arcs.
                 unsafe { drop(Arc::from_raw(raw)) };
             }
         }

@@ -201,8 +201,8 @@ where
 pub fn par_concat<T: Copy + Send + Sync>(chunks: &[Vec<T>]) -> Vec<T> {
     gathered(
         &chunks.iter().map(|c| c.as_slice()).collect::<Vec<_>>(),
-        // SAFETY (of the write inside): delegated to `gathered`, which
-        // hands each chunk an exclusive destination region. memcpy
+        // SAFETY: the write is delegated to `gathered`, which hands
+        // each chunk an exclusive destination region. memcpy
         // specialization: one copy_nonoverlapping per chunk instead of
         // per-element stores.
         |chunk, dst| unsafe {
@@ -298,6 +298,8 @@ where
             // the take() and the result write are exclusive.
             let job = unsafe { (*jobs_ptr.get().add(i)).take().expect("job claimed once") };
             let out = job();
+            // SAFETY: index i was claimed exclusively by the cursor
+            // above — no other worker writes results[i].
             unsafe {
                 *out_ptr.get().add(i) = Some(out);
             }
@@ -310,7 +312,11 @@ where
 /// A Send+Sync raw-pointer wrapper for disjoint-chunk writes.
 #[derive(Clone, Copy)]
 pub(crate) struct SendPtr<T>(pub *mut T);
+// SAFETY: SendPtr carries no aliasing claim of its own — every user
+// must (and does) guarantee disjoint writes; the wrapper only moves the
+// raw address across threads, which is sound for any `*mut T`.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: sharing the wrapper only shares the address value; see Send.
 unsafe impl<T> Sync for SendPtr<T> {}
 impl<T> SendPtr<T> {
     #[inline]

@@ -57,6 +57,8 @@ struct FnPtr(*const (dyn Fn(usize) + Sync));
 // SAFETY: the pointee is `Sync` (shared across workers by design) and the
 // latch protocol guarantees it outlives every dereference.
 unsafe impl Send for FnPtr {}
+// SAFETY: same argument as Send — the pointee is `Sync`, so shared
+// references to it may be dereferenced from any worker concurrently.
 unsafe impl Sync for FnPtr {}
 
 /// Latch state of one dispatch generation.
@@ -272,8 +274,9 @@ pub(crate) fn dispatch(helpers: usize, f: &(dyn Fn(usize) + Sync)) {
         f(0);
         return;
     }
-    // Erase the closure's lifetime; soundness is the latch protocol (see
-    // the module docs).
+    // SAFETY: lifetime erasure only — `close_and_wait` below blocks
+    // until every helper has left the closure, so the borrow of `f`
+    // outlives all dereferences (the latch protocol in the module docs).
     let func: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
     let task = Arc::new(Task::new(FnPtr(func as *const _)));
     pool.submit(task.clone(), helpers);

@@ -111,6 +111,8 @@ const PF_DIST: usize = 32;
 #[inline(always)]
 fn prefetch_u32(arr: &[u32], idx: usize) {
     #[cfg(target_arch = "x86_64")]
+    // SAFETY: _mm_prefetch is a non-faulting hint — the address is
+    // never dereferenced; callers pass vertex ids < n = arr.len().
     unsafe {
         core::arch::x86_64::_mm_prefetch(
             arr.as_ptr().add(idx) as *const i8,

@@ -244,6 +244,8 @@ impl TiledCsr {
                     }
                 }
             }
+            // SAFETY: same exclusivity argument as the read above —
+            // this caller owns `row` for the duration of the tile.
             unsafe { *y.get().add(row) = acc };
         }
     }

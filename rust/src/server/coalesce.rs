@@ -177,6 +177,9 @@ fn execute_batch(graph: &PreparedGraph, batch: &[(u64, BatchQuery)]) -> Vec<Batc
                 .iter()
                 .map(|(_, q)| match q {
                     BatchQuery::Spmv { seed } => *seed,
+                    // lint: allow(panic-path): structurally dead —
+                    // groups are keyed on Kind, so a mixed group is a
+                    // coalescer bug, unreachable from request data.
                     _ => unreachable!("mixed kinds in one group"),
                 })
                 .collect();
@@ -190,6 +193,9 @@ fn execute_batch(graph: &PreparedGraph, batch: &[(u64, BatchQuery)]) -> Vec<Batc
                 .iter()
                 .map(|(_, q)| match q {
                     BatchQuery::Sssp { source } => *source,
+                    // lint: allow(panic-path): structurally dead —
+                    // groups are keyed on Kind, so a mixed group is a
+                    // coalescer bug, unreachable from request data.
                     _ => unreachable!("mixed kinds in one group"),
                 })
                 .collect();

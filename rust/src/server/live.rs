@@ -292,10 +292,14 @@ pub fn digest(base: &PreparedGraph, delta: &DeltaOverlay) -> u64 {
 /// compaction holds the slot or the overlay is empty. See the module
 /// docs for the staged protocol and its crash windows.
 pub fn compact(registry: &GraphRegistry, live: &Arc<LiveGraph>) -> Result<bool> {
+    // ordering: SeqCst — the compaction slot latch; pairs with the
+    // release store below and with `/readyz`'s load so at most one
+    // compactor runs and its staged effects are totally ordered.
     if live.compacting.swap(true, Ordering::SeqCst) {
         return Ok(false);
     }
     let out = compact_inner(registry, live);
+    // ordering: SeqCst — releases the slot; pairs with the swap above.
     live.compacting.store(false, Ordering::SeqCst);
     out
 }
@@ -387,6 +391,10 @@ pub fn maybe_compact_bg(registry: &Arc<GraphRegistry>, live: &Arc<LiveGraph>) {
     let registry = registry.clone();
     let live = live.clone();
     registry.clone().compaction_started();
+    // lint: allow(raw-spawn): background compaction is a long-running,
+    // fire-and-forget job; parking it on the compute pool would steal a
+    // kernel worker for the entire BOBA re-run and risk deadlock when
+    // compaction itself dispatches pool work.
     let spawned = std::thread::Builder::new()
         .name("boba-compact".to_string())
         .spawn(move || {

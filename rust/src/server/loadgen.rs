@@ -310,6 +310,10 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
     let gap_s = if cfg.target_qps > 0.0 { conns as f64 / cfg.target_qps } else { 0.0 };
 
     let sw = Stopwatch::start();
+    // lint: allow(raw-spawn): loadgen is the *client* side — its
+    // connection threads spend their lives blocked on sockets and must
+    // not compete with (or deadlock) the server's compute pool inside
+    // the same process during self-tests.
     let outs: Vec<WorkerOut> = std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for w in 0..conns {
@@ -348,6 +352,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Report> {
                 };
                 loop {
                     // Claim up to `batch` queries from the shared budget.
+                    // ordering: SeqCst (both) — the budget is the only
+                    // cross-thread handshake between loadgen workers;
+                    // total order keeps claimed counts exact.
                     let take = match remaining.fetch_update(
                         Ordering::SeqCst,
                         Ordering::SeqCst,

@@ -243,6 +243,9 @@ impl Server {
     /// coalesced queries answer with an error); idle keep-alive
     /// connections are abandoned to their read timeout.
     pub fn shutdown(self) {
+        // ordering: SeqCst — the shutdown flag; pairs with the worker
+        // loops' SeqCst loads so a worker woken by the connect below is
+        // guaranteed to observe the flag before its next accept.
         self.shutdown.store(true, Ordering::SeqCst);
         self.coalescer.shutdown();
         self.admission.shutdown();
@@ -265,6 +268,9 @@ fn worker_loop(
     read_timeout: Duration,
 ) {
     loop {
+        // ordering: SeqCst — pairs with `Server::shutdown`'s store (see
+        // there); both checks below must see a flag set before the
+        // wake-up connect.
         if shutdown.load(Ordering::SeqCst) {
             return;
         }
@@ -272,8 +278,10 @@ fn worker_loop(
             Ok((s, _peer)) => s,
             Err(_) => continue,
         };
+        // ordering: SeqCst — same pairing; this accept may be the
+        // wake-up connection `Server::shutdown` made.
         if shutdown.load(Ordering::SeqCst) {
-            return; // the wake-up connection itself
+            return;
         }
         // Errors on one connection never take the worker down.
         let _ = serve_connection(stream, &router, &shutdown, read_timeout);
@@ -299,6 +307,8 @@ fn serve_connection(
     let mut writer = stream.try_clone().context("cloning stream")?;
     let mut reader = BufReader::new(stream);
     loop {
+        // ordering: SeqCst — pairs with `Server::shutdown`'s store;
+        // in-flight keep-alive connections stop at a request boundary.
         if shutdown.load(Ordering::SeqCst) {
             return Ok(());
         }

@@ -817,12 +817,17 @@ impl GraphRegistry {
     /// synchronously at server start (before the accept loop) so the
     /// very first `/readyz` already reports `recovering`.
     pub fn set_recovering(&self, n: usize) {
+        // ordering: SeqCst — the readiness gauge; pairs with the
+        // decrements and `/readyz`'s load so readiness flips exactly
+        // once all replays observed by this store have finished.
         self.recovering.store(n, Ordering::SeqCst);
     }
 
     /// One graph finished (or abandoned) replay.
     pub fn dec_recovering(&self) {
         // Saturating: recovery may call this after an early set_recovering(0).
+        // ordering: SeqCst (both) — pairs with set_recovering's store
+        // and recovering()'s load; see set_recovering.
         let _ = self.recovering.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
             Some(v.saturating_sub(1))
         });
@@ -830,6 +835,7 @@ impl GraphRegistry {
 
     /// Graphs still replaying their WAL.
     pub fn recovering(&self) -> usize {
+        // ordering: SeqCst — pairs with set_recovering/dec_recovering.
         self.recovering.load(Ordering::SeqCst)
     }
 

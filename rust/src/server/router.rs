@@ -292,10 +292,7 @@ impl Router {
         if req.query.contains("format=text") {
             return Response::text(200, self.stats.render_text());
         }
-        let mut body = match self.stats.to_json() {
-            Json::Obj(pairs) => pairs,
-            _ => unreachable!(),
-        };
+        let mut body = self.stats.to_json().into_obj_pairs();
         body.push(("registry".to_string(), self.registry.stats_json()));
         body.push(("coalescer".to_string(), self.coalescer.stats_json()));
         body.push(("admission".to_string(), self.admission.to_json()));
@@ -574,10 +571,7 @@ impl Router {
             .list()
             .iter()
             .map(|g| {
-                let mut pairs = match g.to_json() {
-                    Json::Obj(p) => p,
-                    _ => unreachable!(),
-                };
+                let mut pairs = g.to_json().into_obj_pairs();
                 if let Some(l) = self.registry.live_graph(&g.id) {
                     pairs.push(("live".to_string(), l.to_json()));
                 }
@@ -721,10 +715,7 @@ impl Router {
             .to_string();
         match self.registry.get_or_prepare(&dataset, &scheme) {
             Ok((g, cached)) => {
-                let mut pairs = match g.to_json() {
-                    Json::Obj(p) => p,
-                    _ => unreachable!(),
-                };
+                let mut pairs = g.to_json().into_obj_pairs();
                 pairs.push(("cached".to_string(), Json::Bool(cached)));
                 let status = if cached { 200 } else { 201 };
                 Response::json(status, Json::Obj(pairs).render())
@@ -799,8 +790,7 @@ impl Router {
             return deadline_response("deadline exceeded during kernel execution");
         }
         let mut pairs = match result {
-            Ok(Json::Obj(p)) => p,
-            Ok(_) => unreachable!("queries return objects"),
+            Ok(j) => j.into_obj_pairs(),
             Err(e) => return Response::error(422, &format!("{e:#}")),
         };
         graph.queries.fetch_add(1, Ordering::Relaxed);
@@ -938,16 +928,24 @@ impl Router {
                 .render(),
             );
         }
-        // Tile the homogeneous groups: one kernel pass per tile.
-        let spmv_idx: Vec<usize> = plans
+        // Tile the homogeneous groups: one kernel pass per tile. The
+        // slot index carries its plan's payload, so the tile loops
+        // below need no (panicking) re-match against `plans`.
+        let spmv_idx: Vec<(usize, Option<u64>)> = plans
             .iter()
             .enumerate()
-            .filter_map(|(i, p)| matches!(p, Plan::Spmv { .. }).then_some(i))
+            .filter_map(|(i, p)| match p {
+                Plan::Spmv { seed } => Some((i, *seed)),
+                _ => None,
+            })
             .collect();
-        let sssp_idx: Vec<usize> = plans
+        let sssp_idx: Vec<(usize, u32)> = plans
             .iter()
             .enumerate()
-            .filter_map(|(i, p)| matches!(p, Plan::Sssp { .. }).then_some(i))
+            .filter_map(|(i, p)| match p {
+                Plan::Sssp { source } => Some((i, *source)),
+                _ => None,
+            })
             .collect();
         let mut results: Vec<Option<Json>> = (0..plans.len()).map(|_| None).collect();
         for tile in spmv_idx.chunks(spmm::MAX_RHS) {
@@ -958,19 +956,10 @@ impl Router {
                 self.admission.note_deadline_hit();
                 return deadline_response("deadline exceeded between batch tiles");
             }
-            let seeds: Vec<Option<u64>> = tile
-                .iter()
-                .map(|&i| match plans[i] {
-                    Plan::Spmv { seed } => seed,
-                    _ => unreachable!(),
-                })
-                .collect();
+            let seeds: Vec<Option<u64>> = tile.iter().map(|&(_, seed)| seed).collect();
             self.coalescer.spmv_widths().record(tile.len());
-            for (&i, digest) in tile.iter().zip(coalesce::run_spmv_tile(&graph, &seeds)) {
-                let q = match plans[i] {
-                    Plan::Spmv { seed } => BatchQuery::Spmv { seed },
-                    _ => unreachable!(),
-                };
+            for (&(i, seed), digest) in tile.iter().zip(coalesce::run_spmv_tile(&graph, &seeds)) {
+                let q = BatchQuery::Spmv { seed };
                 results[i] = Some(with_query_name(
                     "spmv",
                     coalesced_json(q, BatchOut::Spmv { digest }, tile.len()),
@@ -982,21 +971,12 @@ impl Router {
                 self.admission.note_deadline_hit();
                 return deadline_response("deadline exceeded between batch tiles");
             }
-            let sources: Vec<u32> = tile
-                .iter()
-                .map(|&i| match plans[i] {
-                    Plan::Sssp { source } => source,
-                    _ => unreachable!(),
-                })
-                .collect();
+            let sources: Vec<u32> = tile.iter().map(|&(_, source)| source).collect();
             self.coalescer.sssp_widths().record(tile.len());
-            for (&i, (digest, reached)) in
+            for (&(i, source), (digest, reached)) in
                 tile.iter().zip(coalesce::run_sssp_tile(&graph, &sources))
             {
-                let q = match plans[i] {
-                    Plan::Sssp { source } => BatchQuery::Sssp { source },
-                    _ => unreachable!(),
-                };
+                let q = BatchQuery::Sssp { source };
                 results[i] = Some(with_query_name(
                     "sssp",
                     coalesced_json(q, BatchOut::Sssp { digest, reached }, tile.len()),
@@ -1031,7 +1011,15 @@ impl Router {
         }
         let count = plans.len();
         graph.queries.fetch_add(count as u64, Ordering::Relaxed);
-        let rows: Vec<Json> = results.into_iter().map(|r| r.expect("every slot filled")).collect();
+        // Every plan kind routes through exactly one of the loops above;
+        // a hole is a router bug, answered as a 500, not an abort.
+        let mut rows = Vec::with_capacity(results.len());
+        for r in results {
+            match r {
+                Some(v) => rows.push(v),
+                None => return Response::error(500, "internal error: batch slot left unfilled"),
+            }
+        }
         Response::json(
             200,
             Json::obj(vec![
@@ -1092,10 +1080,7 @@ fn deadline_response(detail: &str) -> Response {
 /// Prefix a per-query result object with its query name (batch rows
 /// are self-describing).
 fn with_query_name(name: &str, j: Json) -> Json {
-    let mut pairs = match j {
-        Json::Obj(p) => p,
-        _ => unreachable!("queries return objects"),
-    };
+    let mut pairs = j.into_obj_pairs();
     pairs.insert(0, ("query".to_string(), Json::Str(name.to_string())));
     Json::Obj(pairs)
 }
@@ -1137,6 +1122,10 @@ fn coalesced_json(q: BatchQuery, out: BatchOut, width: usize) -> Json {
             ("reached", Json::Num(reached as f64)),
             ("batch_width", Json::Num(width as f64)),
         ]),
+        // lint: allow(panic-path): structurally dead — every answer is
+        // produced from the very BatchQuery that keys it (tile loops
+        // and coalescer groups are homogeneous by construction), so no
+        // request data can reach this arm.
         _ => unreachable!("kind mismatch between query and answer"),
     }
 }

@@ -160,6 +160,15 @@ fn encode_record(seq: u64, ops: &[WalOp]) -> Vec<u8> {
     rec
 }
 
+/// Copy `N` bytes at `off` into a fixed array. Callers bound-check the
+/// slice first, so the length always matches; going through
+/// `copy_from_slice` keeps the decode path free of `unwrap()`.
+fn le<const N: usize>(b: &[u8], off: usize) -> [u8; N] {
+    let mut out = [0u8; N];
+    out.copy_from_slice(&b[off..off + N]);
+    out
+}
+
 fn decode_payload(payload: &[u8]) -> Result<(u64, Vec<WalOp>)> {
     if payload.len() < PAYLOAD_HEADER_BYTES {
         bail!("payload shorter than its header");
@@ -167,8 +176,8 @@ fn decode_payload(payload: &[u8]) -> Result<(u64, Vec<WalOp>)> {
     if payload[0] != RECORD_VERSION {
         bail!("unsupported record version {}", payload[0]);
     }
-    let seq = u64::from_le_bytes(payload[1..9].try_into().unwrap());
-    let nops = u32::from_le_bytes(payload[9..13].try_into().unwrap()) as usize;
+    let seq = u64::from_le_bytes(le(payload, 1));
+    let nops = u32::from_le_bytes(le(payload, 9)) as usize;
     if nops > MAX_OPS_PER_RECORD || payload.len() != PAYLOAD_HEADER_BYTES + nops * OP_BYTES {
         bail!("op count {nops} disagrees with payload length {}", payload.len());
     }
@@ -177,9 +186,9 @@ fn decode_payload(payload: &[u8]) -> Result<(u64, Vec<WalOp>)> {
         let o = PAYLOAD_HEADER_BYTES + i * OP_BYTES;
         ops.push(WalOp {
             kind: payload[o],
-            u: u32::from_le_bytes(payload[o + 1..o + 5].try_into().unwrap()),
-            v: u32::from_le_bytes(payload[o + 5..o + 9].try_into().unwrap()),
-            w: f32::from_le_bytes(payload[o + 9..o + 13].try_into().unwrap()),
+            u: u32::from_le_bytes(le(payload, o + 1)),
+            v: u32::from_le_bytes(le(payload, o + 5)),
+            w: f32::from_le_bytes(le(payload, o + 9)),
         });
     }
     Ok((seq, ops))
@@ -439,14 +448,14 @@ pub fn scan(dir: &Path, key: &str, shutdown: &AtomicBool, repair: bool) -> Resul
             if bytes.len() - off < HEADER_BYTES {
                 break Some((off, "short header"));
             }
-            let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+            let len = u32::from_le_bytes(le(&bytes, off)) as usize;
             if len < PAYLOAD_HEADER_BYTES || len > MAX_PAYLOAD_BYTES {
                 break Some((off, "implausible record length"));
             }
             if bytes.len() - off - HEADER_BYTES < len {
                 break Some((off, "short payload"));
             }
-            let sum = u64::from_le_bytes(bytes[off + 4..off + 12].try_into().unwrap());
+            let sum = u64::from_le_bytes(le(&bytes, off + 4));
             let payload = &bytes[off + HEADER_BYTES..off + HEADER_BYTES + len];
             if fnv64(payload) != sum {
                 break Some((off, "checksum mismatch"));

@@ -32,6 +32,17 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Consume into an object's pairs. Total: a non-object value comes
+    /// back as a single `("value", v)` pair, so callers that extend a
+    /// known-object JSON with extra fields never need a panicking match
+    /// arm (the serve path's panic-path lint rule).
+    pub fn into_obj_pairs(self) -> Vec<(String, Json)> {
+        match self {
+            Json::Obj(pairs) => pairs,
+            other => vec![("value".to_string(), other)],
+        }
+    }
+
     /// Member lookup on objects.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {

@@ -1,0 +1,393 @@
+//! Conformance suite for `boba lint`: one fixture pair per rule (the
+//! violation fires; the documented remedy silences it), the escape
+//! hatch grammar, masking soundness (strings/comments never
+//! false-positive), and the capstone — the real tree is clean.
+
+use boba::analysis::{self, LintInput, SourceFile};
+use std::path::Path;
+
+fn src(path: &str, text: &str) -> SourceFile {
+    SourceFile { path: path.to_string(), text: text.to_string() }
+}
+
+fn input(sources: Vec<SourceFile>) -> LintInput {
+    LintInput { sources, ci_sh: None, architecture_md: None }
+}
+
+fn rules_fired(input: &LintInput) -> Vec<String> {
+    analysis::lint(input).into_iter().map(|v| v.rule).collect()
+}
+
+// ---- unsafe-safety ----
+
+#[test]
+fn unsafe_outside_whitelist_and_without_safety_comment_fires() {
+    let v = analysis::lint(&input(vec![src(
+        "graph/mod.rs",
+        "pub fn f(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n",
+    )]));
+    // both facets fire: wrong module AND no SAFETY comment
+    assert_eq!(v.len(), 2, "{}", analysis::render_table(&v));
+    assert!(v.iter().all(|x| x.rule == "unsafe-safety" && x.line == 2));
+}
+
+#[test]
+fn unsafe_with_safety_comment_in_whitelisted_module_passes() {
+    let v = analysis::lint(&input(vec![src(
+        "obs/ring.rs",
+        "pub fn f(p: *const u32) -> u32 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}\n",
+    )]));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+#[test]
+fn rustdoc_safety_section_counts_for_unsafe_fns() {
+    // `# Safety` in the doc comment above an `unsafe fn` is the idiom
+    // rustdoc itself expects; the rule accepts it as the annotation.
+    let v = analysis::lint(&input(vec![src(
+        "parallel/mod.rs",
+        "/// Reads through the pointer.\n///\n/// # Safety\n/// `p` must be valid for reads.\npub unsafe fn f(p: *const u32) -> u32 {\n    *p\n}\n",
+    )]));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+#[test]
+fn safety_comment_reaches_over_statement_continuation_lines() {
+    // The annotation sits above the statement; the `unsafe` token is on
+    // a continuation line (the statement opened with `=` above it).
+    let v = analysis::lint(&input(vec![src(
+        "obs/ring.rs",
+        "pub fn f(p: *const u32) -> u32 {\n    // SAFETY: caller guarantees p is valid.\n    let x =\n        unsafe { *p };\n    x\n}\n",
+    )]));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+// ---- raw-spawn ----
+
+#[test]
+fn raw_spawn_outside_pool_fires() {
+    let v = analysis::lint(&input(vec![src(
+        "coordinator/mod.rs",
+        "use std::thread;\npub fn go() {\n    thread::spawn(|| {});\n}\n",
+    )]));
+    assert_eq!(v.len(), 1, "{}", analysis::render_table(&v));
+    assert_eq!(v[0].rule, "raw-spawn");
+    assert_eq!(v[0].line, 3);
+}
+
+#[test]
+fn raw_spawn_in_whitelisted_file_or_test_passes() {
+    let v = analysis::lint(&input(vec![
+        src("parallel/pool.rs", "use std::thread;\npub fn go() {\n    thread::spawn(|| {});\n}\n"),
+        src(
+            "coordinator/mod.rs",
+            "#[cfg(test)]\nmod tests {\n    use std::thread;\n    #[test]\n    fn t() {\n        thread::spawn(|| {}).join().ok();\n    }\n}\n",
+        ),
+    ]));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+// ---- panic-path ----
+
+#[test]
+fn unwrap_on_request_path_fires() {
+    let fired = rules_fired(&input(vec![src(
+        "server/router.rs",
+        "pub fn handle(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+    )]));
+    assert_eq!(fired, vec!["panic-path"]);
+}
+
+#[test]
+fn lock_poisoning_unwrap_is_exempt() {
+    // Unwrapping a Mutex/Condvar result propagates a *prior* panic —
+    // the carve-out the rule documents.
+    let v = analysis::lint(&input(vec![src(
+        "server/router.rs",
+        "use std::sync::Mutex;\npub fn peek(m: &Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n",
+    )]));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+#[test]
+fn panic_in_test_block_of_request_path_file_passes() {
+    let v = analysis::lint(&input(vec![src(
+        "server/wal.rs",
+        "pub fn ok() {}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        Some(1u32).unwrap();\n        panic!(\"only in tests\");\n    }\n}\n",
+    )]));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+#[test]
+fn non_request_path_files_may_unwrap() {
+    let v = analysis::lint(&input(vec![src(
+        "coordinator/experiments.rs",
+        "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+    )]));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+// ---- atomic-ordering ----
+
+#[test]
+fn acquire_without_ordering_comment_fires() {
+    let fired = rules_fired(&input(vec![src(
+        "graph/mod.rs",
+        "use std::sync::atomic::{AtomicUsize, Ordering};\npub fn f(a: &AtomicUsize) -> usize {\n    a.load(Ordering::Acquire)\n}\n",
+    )]));
+    assert_eq!(fired, vec!["atomic-ordering"]);
+}
+
+#[test]
+fn ordering_comment_silences_the_rule() {
+    let v = analysis::lint(&input(vec![src(
+        "graph/mod.rs",
+        "use std::sync::atomic::{AtomicUsize, Ordering};\npub fn f(a: &AtomicUsize) -> usize {\n    // ordering: pairs with the Release store in publish().\n    a.load(Ordering::Acquire)\n}\n",
+    )]));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+#[test]
+fn relaxed_counter_whitelist_needs_no_annotation() {
+    let v = analysis::lint(&input(vec![src(
+        "obs/hist.rs",
+        "use std::sync::atomic::{AtomicU64, Ordering};\npub fn bump(c: &AtomicU64) {\n    c.fetch_add(1, Ordering::Relaxed);\n}\n",
+    )]));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+#[test]
+fn relaxed_outside_counter_whitelist_still_needs_annotation() {
+    let fired = rules_fired(&input(vec![src(
+        "graph/mod.rs",
+        "use std::sync::atomic::{AtomicU64, Ordering};\npub fn bump(c: &AtomicU64) {\n    c.fetch_add(1, Ordering::Relaxed);\n}\n",
+    )]));
+    assert_eq!(fired, vec!["atomic-ordering"]);
+}
+
+#[test]
+fn std_cmp_ordering_never_matches() {
+    // `Ordering::Less` is std::cmp, not atomics — must not fire.
+    let v = analysis::lint(&input(vec![src(
+        "graph/mod.rs",
+        "use std::cmp::Ordering;\npub fn f(a: u32, b: u32) -> bool {\n    a.cmp(&b) == Ordering::Less\n}\n",
+    )]));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+// ---- the allow escape hatch ----
+
+#[test]
+fn allow_with_reason_suppresses_named_rule_on_next_code_line() {
+    let v = analysis::lint(&input(vec![src(
+        "coordinator/mod.rs",
+        "use std::thread;\npub fn go() {\n    // lint: allow(raw-spawn): long-running I/O thread, not kernel work.\n    thread::spawn(|| {});\n}\n",
+    )]));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+#[test]
+fn allow_suppression_spans_its_comment_block() {
+    // A multi-line justification: the allow is on the first comment
+    // line, the violation two comment lines further down.
+    let v = analysis::lint(&input(vec![src(
+        "coordinator/mod.rs",
+        "use std::thread;\npub fn go() {\n    // lint: allow(raw-spawn): this producer blocks on a bounded\n    // channel for its whole life; parking it on the pool would\n    // deadlock the helper-barrier dispatch model.\n    thread::spawn(|| {});\n}\n",
+    )]));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+#[test]
+fn allow_without_reason_is_rejected_and_does_not_suppress() {
+    let fired = rules_fired(&input(vec![src(
+        "coordinator/mod.rs",
+        "use std::thread;\npub fn go() {\n    // lint: allow(raw-spawn)\n    thread::spawn(|| {});\n}\n",
+    )]));
+    // the bare allow is itself a violation AND the spawn still fires
+    assert!(fired.contains(&"allow-syntax".to_string()), "{fired:?}");
+    assert!(fired.contains(&"raw-spawn".to_string()), "{fired:?}");
+}
+
+#[test]
+fn allow_naming_unknown_rule_is_rejected() {
+    let fired = rules_fired(&input(vec![src(
+        "coordinator/mod.rs",
+        "// lint: allow(no-such-rule): whatever\npub fn f() {}\n",
+    )]));
+    assert_eq!(fired, vec!["allow-syntax"]);
+}
+
+#[test]
+fn allow_only_suppresses_the_named_rule() {
+    // An allow(panic-path) does nothing for a raw-spawn finding.
+    let fired = rules_fired(&input(vec![src(
+        "coordinator/mod.rs",
+        "use std::thread;\npub fn go() {\n    // lint: allow(panic-path): wrong rule named here.\n    thread::spawn(|| {});\n}\n",
+    )]));
+    assert_eq!(fired, vec!["raw-spawn"]);
+}
+
+// ---- masking soundness ----
+
+#[test]
+fn tokens_inside_strings_and_comments_never_fire() {
+    let v = analysis::lint(&input(vec![src(
+        "graph/mod.rs",
+        concat!(
+            "// unsafe thread::spawn .unwrap() Ordering::Acquire — all in a comment\n",
+            "pub fn f() -> String {\n",
+            "    let a = \"unsafe { thread::spawn }\";\n",
+            "    let b = r#\"x.unwrap() panic! Ordering::SeqCst\"#;\n",
+            "    /* unreachable! in a block comment */\n",
+            "    format!(\"{a}{b}\")\n",
+            "}\n",
+        ),
+    )]));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+// ---- ablation-reach ----
+
+#[test]
+fn atomic_kernel_referenced_outside_repro_fires() {
+    let fired = rules_fired(&input(vec![
+        src("algos/pagerank.rs", "pub fn pagerank_atomic() {}\n"),
+        src("coordinator/pipeline.rs", "pub fn run() {\n    crate::algos::pagerank::pagerank_atomic();\n}\n"),
+    ]));
+    assert_eq!(fired, vec!["ablation-reach"]);
+}
+
+#[test]
+fn atomic_kernel_reachable_from_repro_and_tests_passes() {
+    let v = analysis::lint(&input(vec![
+        src("algos/pagerank.rs", "pub fn pagerank_atomic() {}\n"),
+        src("coordinator/repro.rs", "pub fn t4() {\n    crate::algos::pagerank::pagerank_atomic();\n}\n"),
+        src(
+            "metrics/mod.rs",
+            "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        crate::algos::pagerank::pagerank_atomic();\n    }\n}\n",
+        ),
+    ]));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+// ---- metrics-drift ----
+
+fn metrics_fixture(ci_gate: &str, doc_row: &str) -> LintInput {
+    LintInput {
+        sources: vec![src(
+            "server/router.rs",
+            "pub fn expose(p: &mut crate::obs::Page) {\n    p.family(\"boba_x_total\", \"counter\");\n}\n",
+        )],
+        ci_sh: Some(format!("#!/bin/sh\nfor fam in {ci_gate}; do\n  grep -q \"^$fam\" m.txt\ndone\n")),
+        architecture_md: Some(format!(
+            "# Arch\n\n<!-- lint:metrics-families:begin -->\n| family | type |\n|---|---|\n{doc_row}\n<!-- lint:metrics-families:end -->\n",
+        )),
+    }
+}
+
+#[test]
+fn matching_code_ci_and_docs_pass() {
+    // the fixture's Page type doesn't exist, but the linter is lexical
+    let v = analysis::lint(&metrics_fixture("boba_x_total", "| `boba_x_total` | counter |"));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+#[test]
+fn family_missing_from_ci_gate_fires() {
+    let v = analysis::lint(&metrics_fixture("", "| `boba_x_total` | counter |"));
+    assert_eq!(v.len(), 1, "{}", analysis::render_table(&v));
+    assert_eq!(v[0].rule, "metrics-drift");
+    assert_eq!(v[0].file, "ci.sh");
+}
+
+#[test]
+fn docs_row_for_unemitted_family_fires() {
+    let v = analysis::lint(&metrics_fixture(
+        "boba_x_total",
+        "| `boba_x_total` | counter |\n| `boba_ghost_total` | counter |",
+    ));
+    assert_eq!(v.len(), 1, "{}", analysis::render_table(&v));
+    assert_eq!(v[0].rule, "metrics-drift");
+    assert_eq!(v[0].file, "docs/ARCHITECTURE.md");
+}
+
+#[test]
+fn doc_label_and_param_suffixes_are_stripped() {
+    let v = analysis::lint(&metrics_fixture("boba_x_total", "| `boba_x_total{kind}` | counter |"));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+// ---- chaos-drift ----
+
+fn chaos_fixture(points: &str, doc_rows: &str) -> LintInput {
+    LintInput {
+        sources: vec![src(
+            "obs/chaos.rs",
+            format!("const KNOWN_POINTS: &[&str] = &[{points}];\n").as_str(),
+        )],
+        ci_sh: None,
+        // the metrics table is present-but-empty: no fixture source
+        // emits a family, so it stays consistent and out of the way
+        architecture_md: Some(format!(
+            "# Arch\n\n<!-- lint:metrics-families:begin -->\n<!-- lint:metrics-families:end -->\n\n<!-- lint:chaos-points:begin -->\n| point | effect |\n|---|---|\n{doc_rows}\n<!-- lint:chaos-points:end -->\n",
+        )),
+    }
+}
+
+#[test]
+fn chaos_points_matching_fault_table_pass() {
+    let v = analysis::lint(&chaos_fixture(
+        "\"conn-drop\", \"wal-io-error\", \"test-point\"",
+        "| `conn-drop` | closes the socket |\n| `wal-io-error` | fails the append |",
+    ));
+    assert!(v.is_empty(), "{}", analysis::render_table(&v));
+}
+
+#[test]
+fn undocumented_chaos_point_fires() {
+    let v = analysis::lint(&chaos_fixture(
+        "\"conn-drop\", \"wal-io-error\"",
+        "| `conn-drop` | closes the socket |",
+    ));
+    assert_eq!(v.len(), 1, "{}", analysis::render_table(&v));
+    assert_eq!(v[0].rule, "chaos-drift");
+}
+
+#[test]
+fn fault_table_row_without_a_point_fires() {
+    let v = analysis::lint(&chaos_fixture(
+        "\"conn-drop\"",
+        "| `conn-drop` | closes the socket |\n| `ghost-fault` | nothing |",
+    ));
+    assert_eq!(v.len(), 1, "{}", analysis::render_table(&v));
+    assert_eq!(v[0].rule, "chaos-drift");
+}
+
+// ---- output formats ----
+
+#[test]
+fn json_document_shape() {
+    let v = analysis::lint(&input(vec![src(
+        "server/router.rs",
+        "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+    )]));
+    let doc = boba::util::Json::parse(&analysis::render_json(&v)).expect("valid JSON");
+    assert_eq!(doc.get("version").and_then(|j| j.as_str()), Some("boba-lint/1"));
+    assert_eq!(doc.get("count").and_then(|j| j.as_u64()), Some(1));
+}
+
+// ---- the capstone: the real tree is clean ----
+
+#[test]
+fn real_tree_has_zero_violations() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .to_path_buf();
+    let input = analysis::load_tree(&root).expect("tree loads");
+    assert!(input.sources.len() > 40, "tree walk found only {} files", input.sources.len());
+    assert!(input.ci_sh.is_some(), "ci.sh missing");
+    assert!(input.architecture_md.is_some(), "docs/ARCHITECTURE.md missing");
+    let v = analysis::lint(&input);
+    assert!(v.is_empty(), "the tree must lint clean:\n{}", analysis::render_table(&v));
+}
